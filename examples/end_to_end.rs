@@ -1,0 +1,134 @@
+//! End-to-end driver: the full system on a real (synthetic-analog)
+//! workload, proving all layers compose, and reporting the paper's
+//! headline metrics. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example end_to_end
+//! ```
+//!
+//! Stages:
+//!   1. scaling sweep on the Covertype analog (Fig. 4.2 shape): fitted
+//!      log-log slope of exact-kernel time/memory vs N — the headline
+//!      "near-linear, slope well below 2" claim;
+//!   2. factored-vs-naive crossover (the O(N²T) baseline);
+//!   3. kernel-weighted prediction sanity (Table I.1 shape: GAP ≈ forest);
+//!   4. leaf-coordinate embedding vs raw embedding (Fig. 4.3 shape);
+//!   5. coordinator materialization with backpressure metrics;
+//!   6. if artifacts/ exists: the XLA serving path (L1 Pallas tile via
+//!      PJRT) cross-checked against the sparse path.
+
+use forest_kernels::bench_support::loglog_slope;
+use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
+use forest_kernels::data::registry;
+use forest_kernels::experiments::{fig42, fig43, measure_kernel_cost};
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::runtime::Runtime;
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+
+fn main() {
+    let spec = registry::by_name("covertype").unwrap();
+    let trees = 40;
+
+    // ---- 1. scaling sweep -------------------------------------------------
+    println!("== 1. exact-kernel scaling (covertype analog, RF-GAP, T={trees}) ==");
+    println!("N\tsecs\tMB\tnnz\tλ̄");
+    let sizes = [4096usize, 8192, 16384, 32768];
+    let mut xs = vec![];
+    let mut ts = vec![];
+    let mut ms = vec![];
+    for &n in &sizes {
+        let data = spec.generate(n, 42);
+        let cfg = TrainConfig { n_trees: trees, seed: 7, ..Default::default() };
+        let forest = Forest::train(&data, &cfg);
+        let c = measure_kernel_cost(&forest, &data, ProximityKind::RfGap);
+        println!(
+            "{n}\t{:.3}\t{:.1}\t{}\t{:.1}",
+            c.secs_total(),
+            c.bytes as f64 / 1e6,
+            c.nnz,
+            c.lambda
+        );
+        xs.push(n as f64);
+        ts.push(c.secs_total());
+        ms.push(c.bytes as f64);
+    }
+    let (t_slope, m_slope) = (loglog_slope(&xs, &ts), loglog_slope(&xs, &ms));
+    println!("time slope = {t_slope:.2}, memory slope = {m_slope:.2} (paper: well below 2)");
+    assert!(t_slope < 1.9, "scaling regression: time slope {t_slope}");
+
+    // ---- 2. naive crossover ----------------------------------------------
+    println!("\n== 2. factored vs naive O(N²T) ==");
+    println!("N\tnaive_s\tfactored_s\tspeedup");
+    for n in [512usize, 1024, 2048, 4096] {
+        let naive = fig42::naive_cost(n, "covertype", trees, 3);
+        let data = spec.generate(n, 3);
+        let forest =
+            Forest::train(&data, &TrainConfig { n_trees: trees, seed: 3, ..Default::default() });
+        let c = measure_kernel_cost(&forest, &data, ProximityKind::Original);
+        println!("{n}\t{naive:.3}\t{:.3}\t{:.1}x", c.secs_total(), naive / c.secs_total());
+    }
+
+    // ---- 3. prediction sanity ----------------------------------------------
+    println!("\n== 3. kernel-weighted prediction (Table I.1 shape) ==");
+    let data = spec.generate(20_000, 5);
+    let (train, test) = data.train_test_split(0.1, 6);
+    let forest =
+        Forest::train(&train, &TrainConfig { n_trees: trees, seed: 9, ..Default::default() });
+    let forest_acc = forest.accuracy(&test);
+    print!("forest\t{forest_acc:.3}");
+    for kind in [ProximityKind::RfGap, ProximityKind::OobSeparable, ProximityKind::Kerf] {
+        let kernel = ForestKernel::fit(&forest, &train, kind);
+        let preds = predict::predict_oos(&kernel, &kernel.oos_query_map(&forest, &test));
+        print!("\t{}={:.3}", kind.name(), predict::accuracy(&preds, &test.y));
+    }
+    println!();
+
+    // ---- 4. embedding ------------------------------------------------------
+    println!("\n== 4. leaf vs raw embedding (Fig. 4.3 shape, pbmc analog) ==");
+    let pb = registry::by_name("pbmc").unwrap().generate(4_000, 8);
+    let (etr, ete) = pb.train_test_split(0.2, 9);
+    let res = fig43::run(
+        &etr,
+        &ete,
+        &fig43::Fig43Config { pca_dims: 16, n_trees: 30, seed: 10, ..Default::default() },
+    );
+    fig43::print(&res, "embedding pipelines");
+
+    // ---- 5. coordinator ----------------------------------------------------
+    println!("\n== 5. coordinator materialization ==");
+    let kernel = ForestKernel::fit(&forest, &train, ProximityKind::RfGap);
+    let cfg = CoordinatorConfig { stripe_rows: 2048, n_workers: 2, queue_depth: 3 };
+    let (p, metrics) = coordinator::materialize_to_csr(&kernel, &cfg);
+    let (jobs, nnz, busy) = metrics.snapshot();
+    println!("stripes={jobs} nnz={nnz} worker-busy={busy:.2}s (P: {}×{})", p.n_rows, p.n_cols);
+
+    // ---- 6. XLA serving path ------------------------------------------------
+    println!("\n== 6. PJRT serving path (L1 Pallas tile) ==");
+    match Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            let gal = GalleryService::new(&rt, &forest, &train, ProximityKind::RfGap).unwrap();
+            let queries = test.head(128);
+            let t0 = std::time::Instant::now();
+            let scores = gal.score(&forest, &queries).unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            // Cross-check against the sparse path.
+            let qn = kernel.oos_query_map(&forest, &queries);
+            let cross = kernel.cross_proximity(&qn).to_dense();
+            let max_err = scores
+                .iter()
+                .zip(&cross)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            println!(
+                "scored {}×{} via XLA tiles in {secs:.3}s ({:.0} q/s); max |xla - sparse| = {max_err:.2e}",
+                queries.n,
+                gal.n_ref,
+                queries.n as f64 / secs
+            );
+            assert!(max_err < 1e-4);
+        }
+        Err(e) => println!("artifacts not built, skipping XLA stage: {e}"),
+    }
+
+    println!("\nend_to_end complete.");
+}

@@ -1,0 +1,79 @@
+//! OOS serving demo: batched proximity scoring against a gallery via
+//! the AOT-compiled Pallas tile kernel on the PJRT runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example oos_serving
+//! ```
+//!
+//! Simulates a stream of single-query requests, batches them into
+//! fixed-size tiles (the coordinator's batching policy), executes each
+//! batch on the XLA executable, and reports latency percentiles and
+//! throughput — the serving-shaped view of the SWLC kernel (prototype
+//! search / similarity-based prediction).
+
+use forest_kernels::coordinator::gallery::GalleryService;
+use forest_kernels::data::registry;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::runtime::Runtime;
+use forest_kernels::swlc::ProximityKind;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!("artifacts: {:?}", rt.names());
+
+    let spec = registry::by_name("signmnist").unwrap();
+    let data = spec.generate(6_000, 21);
+    let (train, test) = data.train_test_split(0.25, 22);
+    let forest =
+        Forest::train(&train, &TrainConfig { n_trees: 50, seed: 23, ..Default::default() });
+    let gal = GalleryService::new(&rt, &forest, &train, ProximityKind::RfGap)?;
+    println!(
+        "gallery: {} refs, tile {:?}, {} classes",
+        gal.n_ref, gal.tile, gal.n_classes
+    );
+
+    // Simulated request stream: batches of `batch` queries.
+    let batch = gal.tile.0; // one query tile per batch
+    let n_batches = (test.n / batch).min(8);
+    let mut latencies = vec![];
+    let mut correct = 0usize;
+    let mut served = 0usize;
+    let t_all = std::time::Instant::now();
+    for b in 0..n_batches {
+        let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+        let queries = test.subset(&idx);
+        let t0 = std::time::Instant::now();
+        let scores = gal.score(&forest, &queries)?;
+        let preds = gal.vote(&scores, queries.n);
+        latencies.push(t0.elapsed().as_secs_f64());
+        for (p, y) in preds.iter().zip(&queries.y) {
+            if *p as f32 == *y {
+                correct += 1;
+            }
+        }
+        served += queries.n;
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    println!(
+        "served {served} queries in {total:.2}s → {:.0} q/s | batch latency p50={:.3}s p95={:.3}s | vote-acc {:.3}",
+        served as f64 / total,
+        pct(0.5),
+        pct(0.95),
+        correct as f64 / served as f64
+    );
+
+    // Prototype search: top-3 most proximal training samples for a few
+    // queries (the Tan et al. prototype use-case).
+    let few = test.head(3);
+    let scores = gal.score(&forest, &few)?;
+    for (i, row) in gal.top_k(&scores, few.n, 3).iter().enumerate() {
+        let labels: Vec<u32> = row.iter().map(|&(j, _)| gal.labels[j as usize]).collect();
+        println!(
+            "query {i} (class {}) → prototypes {:?} with classes {:?}",
+            few.y[i], row, labels
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: train a forest, fit an SWLC kernel, and use it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers the 4-step API: (1) generate/load data, (2) train a forest,
+//! (3) fit a `ForestKernel` (factors only — no N×N matrix), (4) consume
+//! it: full sparse kernel, out-of-sample proximities, and
+//! proximity-weighted prediction.
+
+use forest_kernels::data::registry;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+
+fn main() {
+    // (1) A Covertype-like dataset analog (54 features, 7 classes).
+    let spec = registry::by_name("covertype").unwrap();
+    let data = spec.generate(6_000, 42);
+    let (train, test) = data.train_test_split(0.1, 1);
+    println!("train N={} test N={} d={} classes={}", train.n, test.n, train.d, train.n_classes);
+
+    // (2) A standard random forest.
+    let forest = Forest::train(&train, &TrainConfig { n_trees: 60, seed: 7, ..Default::default() });
+    println!(
+        "forest: T={} L={} h̄={:.1} test-acc={:.3}",
+        forest.n_trees(),
+        forest.n_leaves_total(),
+        forest.mean_depth(),
+        forest.accuracy(&test)
+    );
+
+    // (3) Fit the RF-GAP kernel in factored form: P = Q·Wᵀ, never dense.
+    let kernel = ForestKernel::fit(&forest, &train, ProximityKind::RfGap);
+    println!(
+        "factors: Q nnz={} W nnz={} ({} KB total), λ̄={:.1}",
+        kernel.q.nnz(),
+        kernel.w.nnz(),
+        kernel.factor_bytes() / 1024,
+        kernel.ctx.mean_lambda()
+    );
+
+    // (4a) The exact sparse proximity matrix (Prop. 3.6).
+    let p = kernel.proximity_matrix();
+    println!(
+        "P: {}×{} with nnz={} ({:.3}% dense)",
+        p.n_rows,
+        p.n_cols,
+        p.nnz(),
+        100.0 * p.nnz() as f64 / (p.n_rows as f64 * p.n_cols as f64)
+    );
+    let (cols, vals) = p.row(0);
+    println!("sample 0 is proximal to {} others; top entry {:?}", cols.len(), {
+        let mut best = (0u32, 0f32);
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c != 0 && v > best.1 {
+                best = (c, v);
+            }
+        }
+        best
+    });
+
+    // (4b) OOS proximities + proximity-weighted prediction (App. I).
+    let q_new = kernel.oos_query_map(&forest, &test);
+    let preds = predict::predict_oos(&kernel, &q_new);
+    println!(
+        "GAP proximity-weighted test-acc = {:.3} (forest {:.3})",
+        predict::accuracy(&preds, &test.y),
+        forest.accuracy(&test)
+    );
+}

@@ -1,0 +1,139 @@
+"""AOT lowering: jax (L2, calling L1 Pallas) -> HLO text -> artifacts/.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Each model entry point is lowered at a small set of fixed shapes (one
+compiled PJRT executable per variant on the Rust side). A
+``manifest.json`` records, for every artifact, the input/output dtypes
+and shapes so the Rust runtime can validate calls at load time.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (run from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (BQ, BR, T) variants of the dense proximity tile. The coordinator picks
+# the variant matching its configured block size; trees are padded to the
+# next T with zero weights / -1 sentinel leaves.
+PROX_SHAPES = [(128, 128, 64), (256, 256, 64), (256, 256, 128)]
+# (BQ, BR, T, C) for the fused predict tile.
+PREDICT_SHAPES = [(256, 256, 64, 16)]
+# (N_slab, L, K) for the Leaf-PCA power step.
+POWER_SHAPES = [(256, 1024, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tupled(fn):
+    """Wrap so the lowered module returns a 1-tuple (rust: to_tuple1)."""
+
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def variants():
+    """Yield (name, fn, [ShapeDtypeStruct...]) for every artifact."""
+    for bq, br, t in PROX_SHAPES:
+        yield (
+            f"prox_{bq}x{br}x{t}",
+            _tupled(model.proximity_block),
+            [
+                _spec((bq, t), jnp.int32),
+                _spec((bq, t), jnp.float32),
+                _spec((br, t), jnp.int32),
+                _spec((br, t), jnp.float32),
+            ],
+        )
+    for bq, br, t, c in PREDICT_SHAPES:
+        yield (
+            f"predict_{bq}x{br}x{t}x{c}",
+            _tupled(model.block_predict),
+            [
+                _spec((bq, t), jnp.int32),
+                _spec((bq, t), jnp.float32),
+                _spec((br, t), jnp.int32),
+                _spec((br, t), jnp.float32),
+                _spec((br, c), jnp.float32),
+            ],
+        )
+    for n, l, k in POWER_SHAPES:
+        yield (
+            f"power_{n}x{l}x{k}",
+            _tupled(model.leaf_pca_power),
+            [_spec((n, l), jnp.float32), _spec((l, k), jnp.float32)],
+        )
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs in variants():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_aval = jax.eval_shape(fn, *specs)[0]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs
+                ],
+                "output": {
+                    "dtype": str(out_aval.dtype),
+                    "shape": list(out_aval.shape),
+                },
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts",
+        help="artifact output directory (or a path ending in .hlo.txt, "
+        "in which case its directory is used)",
+    )
+    args = ap.parse_args()
+    out = args.out
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out) or "."
+    lower_all(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from . import ref  # noqa: F401
+from .power_step import power_step  # noqa: F401
+from .swlc_block import swlc_block  # noqa: F401

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: Gram power-iteration step for Leaf-PCA.
+
+Computes one un-normalized subspace-iteration step on a dense slab of the
+leaf-incidence matrix Q (rows = samples, cols = leaves):
+
+    out = A^T (A @ V),   A: f32[N, L],  V: f32[L, K]
+
+which is the inner loop of the randomized-SVD / power-iteration route to
+the Leaf-PCA embedding of Sec. 4.3 (the spectrum of P = Q Q^T equals the
+squared singular spectrum of Q, so spectral methods run on Q directly).
+
+The grid walks row-blocks of A; each program computes Y_i = A_i V on the
+MXU, then accumulates A_i^T Y_i into the single shared output tile. The
+output BlockSpec maps every grid step to block (0, 0), so the tile stays
+VMEM-resident across the sequential grid — the standard Pallas
+revisit-accumulate pattern. V is kept whole in VMEM (L*K*4 bytes; the
+AOT shapes keep this under ~4 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_step_kernel(a_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # f32[BB, L]
+    v = v_ref[...]  # f32[L, K]
+    y = jnp.dot(a, v, preferred_element_type=jnp.float32)  # MXU
+    o_ref[...] += jnp.dot(a.T, y, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def power_step(a, v, *, block_rows: int = 128):
+    """out = A^T (A @ V) with A tiled by row blocks.
+
+    Args:
+      a: f32[N, L] dense leaf-incidence slab (weighted; T-sparse rows but
+         stored dense for the accelerator path).
+      v: f32[L, K] current subspace.
+      block_rows: row-tile size.
+
+    Returns:
+      f32[L, K].
+    """
+    n, l = a.shape
+    k = v.shape[1]
+    pad = (-n) % block_rows
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    pn = a.shape[0]
+    return pl.pallas_call(
+        _power_step_kernel,
+        grid=(pn // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, k), jnp.float32),
+        interpret=True,
+    )(a, v)

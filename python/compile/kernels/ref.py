@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations the pytest suite checks the
+Pallas kernels (and the lowered HLO artifacts) against. They mirror the
+math of the paper exactly:
+
+  SWLC block (Def. 3.1):
+      P[i, j] = sum_t q[i, t] * w[j, t] * 1[leaf_q[i, t] == leaf_w[j, t]]
+
+  Leaf-PCA power step (Sec. 4.3): one subspace-iteration step
+      V <- Q^T (Q V)
+  computed densely on a block of the leaf-incidence matrix.
+
+  Proximity-weighted vote (App. I):
+      score[i, c] = sum_j P[i, j] * 1[y[j] == c]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def swlc_block_ref(leaf_q, q, leaf_w, w):
+    """Dense SWLC proximity block.
+
+    Args:
+      leaf_q: int32[BQ, T] leaf ids of query samples, one column per tree.
+      q:      f32[BQ, T] query-side weights q_t(x_i).
+      leaf_w: int32[BR, T] leaf ids of reference samples.
+      w:      f32[BR, T] reference-side weights w_t(x_j).
+
+    Returns:
+      f32[BQ, BR] with P[i, j] = sum_t q[i,t] w[j,t] 1[leaf match].
+    """
+    # [BQ, 1, T] == [1, BR, T] -> [BQ, BR, T]
+    match = (leaf_q[:, None, :] == leaf_w[None, :, :]).astype(q.dtype)
+    return jnp.einsum("it,jt,ijt->ij", q, w, match)
+
+
+def power_step_ref(qblock, v):
+    """One dense Gram power-iteration step on a leaf-incidence block.
+
+    Args:
+      qblock: f32[B, L] dense slice of the (row-sample) leaf matrix Q.
+      v:      f32[L, K] current subspace.
+
+    Returns:
+      f32[L, K] = qblock^T (qblock @ v), the un-normalized power step.
+    """
+    return qblock.T @ (qblock @ v)
+
+
+def weighted_vote_ref(p, onehot_y):
+    """Proximity-weighted class scores.
+
+    Args:
+      p:        f32[BQ, BR] proximity block.
+      onehot_y: f32[BR, C] one-hot labels of the reference samples.
+
+    Returns:
+      f32[BQ, C] accumulated class scores.
+    """
+    return p @ onehot_y

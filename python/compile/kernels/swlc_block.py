@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: dense SWLC proximity block.
+
+Computes, for a query block of BQ samples and a reference block of BR
+samples over a forest with T trees,
+
+    P[i, j] = sum_t q[i, t] * w[j, t] * 1[leaf_q[i, t] == leaf_w[j, t]]
+
+which is Definition 3.1 of the paper restricted to a (BQ, BR) tile. This
+kernel is the coordinator's dense-block fast path: the globally sparse
+product stays in Rust (Gustavson SpGEMM), but hot (query x gallery)
+tiles — OOS scoring against a gallery, or the densest leaf-collision
+blocks — are evaluated densely here.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+(query, reference) plane; each program keeps the (BQ, T) / (BR, T)
+leaf-id and weight panels VMEM-resident and runs a VPU mask-accumulate
+over trees in chunks of TREE_CHUNK, materializing only a
+(BQ, BR, TREE_CHUNK) mask slab at a time. An MXU one-hot-matmul
+formulation exists but wastes FLOPs for L >> T, so we stay on the VPU.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of trees processed per inner step. Bounds the mask slab to
+# BQ * BR * TREE_CHUNK * 4 bytes of VMEM scratch (for 128x128x8: 512 KiB).
+TREE_CHUNK = 8
+
+
+def _swlc_block_kernel(leaf_q_ref, q_ref, leaf_w_ref, w_ref, o_ref):
+    """One (BQ, BR) tile: mask-accumulate over the tree axis."""
+    leaf_q = leaf_q_ref[...]  # int32[BQ, T]
+    qv = q_ref[...]  # f32[BQ, T]
+    leaf_w = leaf_w_ref[...]  # int32[BR, T]
+    wv = w_ref[...]  # f32[BR, T]
+
+    bq, t_total = qv.shape
+    br = wv.shape[0]
+    n_chunks = (t_total + TREE_CHUNK - 1) // TREE_CHUNK
+
+    def body(c, acc):
+        t0 = c * TREE_CHUNK
+        lq = jax.lax.dynamic_slice_in_dim(leaf_q, t0, TREE_CHUNK, axis=1)
+        lw = jax.lax.dynamic_slice_in_dim(leaf_w, t0, TREE_CHUNK, axis=1)
+        qc = jax.lax.dynamic_slice_in_dim(qv, t0, TREE_CHUNK, axis=1)
+        wc = jax.lax.dynamic_slice_in_dim(wv, t0, TREE_CHUNK, axis=1)
+        # [BQ, BR, TC] equality mask; fma-accumulate on the VPU.
+        match = lq[:, None, :] == lw[None, :, :]
+        contrib = jnp.where(match, qc[:, None, :] * wc[None, :, :], 0.0)
+        return acc + jnp.sum(contrib, axis=-1)
+
+    acc = jnp.zeros((bq, br), jnp.float32)
+    acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+    o_ref[...] = acc
+
+
+def _pad_axis(x, mult, axis, fill):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_r"))
+def swlc_block(leaf_q, q, leaf_w, w, *, block_q: int = 128, block_r: int = 128):
+    """Dense SWLC proximity block via the Pallas tile kernel.
+
+    Args:
+      leaf_q: int32[NQ, T] global leaf ids of query samples per tree.
+      q:      f32[NQ, T] query weights q_t(x_i); 0 encodes "no collision
+              contribution" (e.g. in-bag samples under OOB querying).
+      leaf_w: int32[NR, T] leaf ids of reference samples.
+      w:      f32[NR, T] reference weights w_t(x_j).
+      block_q, block_r: tile sizes for the Pallas grid.
+
+    Returns:
+      f32[NQ, NR] proximity block.
+    """
+    nq, t_total = q.shape
+    nr = w.shape[0]
+    # Pad the tree axis to a TREE_CHUNK multiple and the sample axes to
+    # tile multiples. Padded query/reference rows carry distinct negative
+    # leaf sentinels so they can never collide with anything real (or
+    # with each other).
+    leaf_q = _pad_axis(_pad_axis(leaf_q, TREE_CHUNK, 1, -1), block_q, 0, -1)
+    leaf_w = _pad_axis(_pad_axis(leaf_w, TREE_CHUNK, 1, -2), block_r, 0, -2)
+    q = _pad_axis(_pad_axis(q, TREE_CHUNK, 1, 0.0), block_q, 0, 0.0)
+    w = _pad_axis(_pad_axis(w, TREE_CHUNK, 1, 0.0), block_r, 0, 0.0)
+    pq, pt = q.shape
+    pr = w.shape[0]
+
+    grid = (pq // block_q, pr // block_r)
+    out = pl.pallas_call(
+        _swlc_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, pt), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, pt), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, pt), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_r, pt), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pq, pr), jnp.float32),
+        interpret=True,
+    )(leaf_q, q, leaf_w, w)
+    return out[:nq, :nr]

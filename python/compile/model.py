@@ -1,0 +1,48 @@
+"""L2 jax model: the compute graphs the Rust coordinator executes via PJRT.
+
+Three graphs, all calling the L1 Pallas kernels:
+
+  * ``proximity_block`` — dense SWLC proximity tile (Def. 3.1) for a
+    (query-block x reference-block) job; the coordinator's dense fast
+    path and the OOS gallery-scoring path.
+  * ``block_predict`` — fused proximity tile + proximity-weighted class
+    vote (App. I): scores = P_block @ onehot(y_ref).
+  * ``leaf_pca_power`` — one Gram power-iteration step V <- Q^T(QV) on a
+    dense leaf-incidence slab, the inner loop of Leaf-PCA (Sec. 4.3).
+
+Everything here is build-time only: ``aot.py`` lowers these functions at
+fixed shapes to HLO text which the Rust runtime loads; Python is never on
+the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import power_step, swlc_block
+
+
+def proximity_block(leaf_q, q, leaf_w, w):
+    """Dense SWLC proximity tile P[i,j] = sum_t q_it w_jt 1[leaf match]."""
+    return swlc_block(leaf_q, q, leaf_w, w)
+
+
+def block_predict(leaf_q, q, leaf_w, w, onehot_y):
+    """Proximity-weighted class scores for a query block.
+
+    Args:
+      leaf_q, q: int32/f32[BQ, T] query leaf ids and weights.
+      leaf_w, w: int32/f32[BR, T] reference leaf ids and weights.
+      onehot_y:  f32[BR, C] one-hot labels of the reference block.
+
+    Returns:
+      f32[BQ, C] un-normalized class scores (accumulated across reference
+      blocks by the coordinator, normalized there by the row sums).
+    """
+    p = swlc_block(leaf_q, q, leaf_w, w)
+    return jnp.dot(p, onehot_y, preferred_element_type=jnp.float32)
+
+
+def leaf_pca_power(a, v):
+    """One un-normalized subspace iteration step V <- A^T (A V)."""
+    return power_step(a, v)

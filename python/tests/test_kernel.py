@@ -1,0 +1,162 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+#
+# The Pallas kernels (interpret=True) are checked against the pure-jnp
+# oracles in compile.kernels.ref, including a hypothesis sweep over
+# shapes, leaf-id ranges, block sizes, and degenerate weights.
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import power_step, swlc_block
+from compile.kernels import ref
+
+
+def _random_case(rng, nq, nr, t, n_leaves):
+    leaf_q = rng.integers(0, n_leaves, (nq, t)).astype(np.int32)
+    leaf_w = rng.integers(0, n_leaves, (nr, t)).astype(np.int32)
+    q = rng.normal(size=(nq, t)).astype(np.float32)
+    w = rng.normal(size=(nr, t)).astype(np.float32)
+    return leaf_q, q, leaf_w, w
+
+
+def _assert_matches_ref(leaf_q, q, leaf_w, w, **blocks):
+    got = swlc_block(
+        jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w), **blocks
+    )
+    exp = ref.swlc_block_ref(
+        jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+class TestSwlcBlock:
+    def test_exact_tiles(self):
+        rng = np.random.default_rng(1)
+        _assert_matches_ref(*_random_case(rng, 32, 32, 8, 4), block_q=16, block_r=16)
+
+    def test_ragged_tiles(self):
+        rng = np.random.default_rng(2)
+        _assert_matches_ref(*_random_case(rng, 37, 53, 11, 6), block_q=16, block_r=16)
+
+    def test_single_tree(self):
+        rng = np.random.default_rng(3)
+        _assert_matches_ref(*_random_case(rng, 9, 7, 1, 3), block_q=8, block_r=8)
+
+    def test_all_collide(self):
+        # Every sample in the same leaf of every tree: P = q @ w^T.
+        rng = np.random.default_rng(4)
+        t = 5
+        leaf = np.zeros((12, t), np.int32)
+        q = rng.normal(size=(12, t)).astype(np.float32)
+        w = rng.normal(size=(12, t)).astype(np.float32)
+        got = swlc_block(
+            jnp.asarray(leaf), jnp.asarray(q), jnp.asarray(leaf), jnp.asarray(w),
+            block_q=8, block_r=8,
+        )
+        np.testing.assert_allclose(np.asarray(got), q @ w.T, rtol=1e-5, atol=1e-5)
+
+    def test_no_collisions(self):
+        # Disjoint leaf id ranges => identically zero.
+        rng = np.random.default_rng(5)
+        leaf_q = rng.integers(0, 10, (14, 6)).astype(np.int32)
+        leaf_w = rng.integers(100, 110, (10, 6)).astype(np.int32)
+        q = rng.normal(size=(14, 6)).astype(np.float32)
+        w = rng.normal(size=(10, 6)).astype(np.float32)
+        got = swlc_block(
+            jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w),
+            block_q=8, block_r=8,
+        )
+        assert np.all(np.asarray(got) == 0.0)
+
+    def test_zero_weights_mask_collisions(self):
+        # q == 0 encodes "sample contributes nothing in this tree"
+        # (e.g. in-bag under OOB querying) even when leaves collide.
+        leaf = np.zeros((4, 3), np.int32)
+        q = np.zeros((4, 3), np.float32)
+        w = np.ones((4, 3), np.float32)
+        got = swlc_block(
+            jnp.asarray(leaf), jnp.asarray(q), jnp.asarray(leaf), jnp.asarray(w),
+            block_q=4, block_r=4,
+        )
+        assert np.all(np.asarray(got) == 0.0)
+
+    def test_symmetric_case_is_symmetric_psd(self):
+        # q == w => Gram kernel (Cor. 3.7): symmetric PSD.
+        rng = np.random.default_rng(6)
+        leaf = rng.integers(0, 5, (20, 7)).astype(np.int32)
+        q = np.abs(rng.normal(size=(20, 7))).astype(np.float32)
+        p = np.asarray(
+            swlc_block(
+                jnp.asarray(leaf), jnp.asarray(q), jnp.asarray(leaf), jnp.asarray(q),
+                block_q=8, block_r=8,
+            )
+        )
+        np.testing.assert_allclose(p, p.T, rtol=1e-5, atol=1e-6)
+        eig = np.linalg.eigvalsh(p)
+        assert eig.min() > -1e-4
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nq=st.integers(1, 40),
+        nr=st.integers(1, 40),
+        t=st.integers(1, 20),
+        n_leaves=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+        bq=st.sampled_from([4, 8, 16]),
+        br=st.sampled_from([4, 8, 16]),
+    )
+    def test_hypothesis_sweep(self, nq, nr, t, n_leaves, seed, bq, br):
+        rng = np.random.default_rng(seed)
+        _assert_matches_ref(
+            *_random_case(rng, nq, nr, t, n_leaves), block_q=bq, block_r=br
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_weight_dtype_f32_extremes(self, seed):
+        # Tiny and large weight magnitudes survive the accumulate.
+        rng = np.random.default_rng(seed)
+        leaf_q, q, leaf_w, w = _random_case(rng, 10, 10, 6, 3)
+        q *= np.float32(1e-4)
+        w *= np.float32(1e4)
+        _assert_matches_ref(leaf_q, q, leaf_w, w, block_q=8, block_r=8)
+
+
+class TestPowerStep:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        a = rng.normal(size=(70, 40)).astype(np.float32)
+        v = rng.normal(size=(40, 5)).astype(np.float32)
+        got = power_step(jnp.asarray(a), jnp.asarray(v), block_rows=16)
+        exp = ref.power_step_ref(jnp.asarray(a), jnp.asarray(v))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-3
+        )
+
+    def test_single_block(self):
+        rng = np.random.default_rng(8)
+        a = rng.normal(size=(16, 12)).astype(np.float32)
+        v = rng.normal(size=(12, 3)).astype(np.float32)
+        got = power_step(jnp.asarray(a), jnp.asarray(v), block_rows=16)
+        np.testing.assert_allclose(
+            np.asarray(got), a.T @ (a @ v), rtol=1e-4, atol=1e-3
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 64),
+        l=st.integers(1, 32),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, l, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(n, l)).astype(np.float32)
+        v = rng.normal(size=(l, k)).astype(np.float32)
+        got = power_step(jnp.asarray(a), jnp.asarray(v), block_rows=16)
+        exp = a.T @ (a @ v)
+        np.testing.assert_allclose(np.asarray(got), exp, rtol=1e-3, atol=1e-2)

@@ -1,0 +1,105 @@
+# pytest: L2 model graphs + AOT manifest shape checks.
+#
+# Validates (a) that the model entry points (which call the Pallas
+# kernels) match their pure-jnp oracles, and (b) that every AOT variant
+# traces to the shapes recorded in the manifest without executing a full
+# lowering per test run.
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _case(rng, nq, nr, t, c, n_leaves=8):
+    leaf_q = rng.integers(0, n_leaves, (nq, t)).astype(np.int32)
+    leaf_w = rng.integers(0, n_leaves, (nr, t)).astype(np.int32)
+    q = rng.normal(size=(nq, t)).astype(np.float32)
+    w = rng.normal(size=(nr, t)).astype(np.float32)
+    y = rng.integers(0, c, nr)
+    onehot = np.eye(c, dtype=np.float32)[y]
+    return leaf_q, q, leaf_w, w, onehot
+
+
+class TestModel:
+    def test_proximity_block_matches_ref(self):
+        rng = np.random.default_rng(0)
+        leaf_q, q, leaf_w, w, _ = _case(rng, 20, 30, 9, 4)
+        got = model.proximity_block(
+            jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w)
+        )
+        exp = ref.swlc_block_ref(
+            jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w)
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+    def test_block_predict_matches_composed_ref(self):
+        rng = np.random.default_rng(1)
+        leaf_q, q, leaf_w, w, onehot = _case(rng, 15, 25, 7, 5)
+        got = model.block_predict(
+            jnp.asarray(leaf_q),
+            jnp.asarray(q),
+            jnp.asarray(leaf_w),
+            jnp.asarray(w),
+            jnp.asarray(onehot),
+        )
+        p = ref.swlc_block_ref(
+            jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w)
+        )
+        exp = ref.weighted_vote_ref(p, jnp.asarray(onehot))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+    def test_block_predict_row_sums_are_class_mass(self):
+        # Sum of class scores per query == row sum of the proximity block.
+        rng = np.random.default_rng(2)
+        leaf_q, q, leaf_w, w, onehot = _case(rng, 10, 40, 6, 3)
+        scores = np.asarray(
+            model.block_predict(
+                jnp.asarray(leaf_q),
+                jnp.asarray(q),
+                jnp.asarray(leaf_w),
+                jnp.asarray(w),
+                jnp.asarray(onehot),
+            )
+        )
+        p = np.asarray(
+            ref.swlc_block_ref(
+                jnp.asarray(leaf_q), jnp.asarray(q), jnp.asarray(leaf_w), jnp.asarray(w)
+            )
+        )
+        np.testing.assert_allclose(scores.sum(1), p.sum(1), rtol=1e-4, atol=1e-4)
+
+    def test_leaf_pca_power_matches_ref(self):
+        rng = np.random.default_rng(3)
+        a = rng.normal(size=(48, 24)).astype(np.float32)
+        v = rng.normal(size=(24, 4)).astype(np.float32)
+        got = model.leaf_pca_power(jnp.asarray(a), jnp.asarray(v))
+        exp = ref.power_step_ref(jnp.asarray(a), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-3)
+
+
+class TestAotVariants:
+    @pytest.mark.parametrize("name,fn,specs", list(aot.variants()), ids=lambda v: str(v)[:40])
+    def test_variant_shapes_trace(self, name, fn, specs):
+        out = jax.eval_shape(fn, *specs)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].dtype == jnp.float32
+
+    def test_manifest_covers_all_variants(self, tmp_path):
+        # Full lowering is exercised once here (it is fast) and the
+        # manifest is checked against eval_shape ground truth.
+        manifest = aot.lower_all(str(tmp_path))
+        names = {a["name"] for a in manifest["artifacts"]}
+        assert names == {name for name, _, _ in aot.variants()}
+        for entry, (name, fn, specs) in zip(
+            manifest["artifacts"], aot.variants()
+        ):
+            out = jax.eval_shape(fn, *specs)[0]
+            assert entry["output"]["shape"] == list(out.shape)
+            assert (tmp_path / entry["file"]).exists()
+            head = (tmp_path / entry["file"]).read_text()[:200]
+            assert "HloModule" in head

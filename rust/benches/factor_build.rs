@@ -1,0 +1,33 @@
+//! Bench: context θ build + sparse factor construction (the O(NT h̄)
+//! stage of §3.3), per proximity kind.
+
+use forest_kernels::bench_support::bench;
+use forest_kernels::data::registry;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::swlc::{kernel::incidence_matrix, weights, EnsembleContext, ProximityKind};
+
+fn main() {
+    let n = 16384;
+    let data = registry::by_name("covertype").unwrap().generate(n, 1);
+    let forest = Forest::train(&data, &TrainConfig { n_trees: 50, seed: 2, ..Default::default() });
+    bench(&format!("context_build N={n} T=50"), 3, || EnsembleContext::build(&forest, &data));
+    let ctx = EnsembleContext::build(&forest, &data);
+    for kind in [
+        ProximityKind::Original,
+        ProximityKind::Kerf,
+        ProximityKind::OobSeparable,
+        ProximityKind::RfGap,
+        ProximityKind::InstanceHardness,
+    ] {
+        bench(&format!("factors {}", kind.name()), 3, || {
+            let spec = weights::assign(kind, &ctx);
+            let q = incidence_matrix(&ctx.leaf_of, &spec.q, ctx.n, ctx.t, ctx.l);
+            let w = if spec.symmetric {
+                q.clone()
+            } else {
+                incidence_matrix(&ctx.leaf_of, &spec.w, ctx.n, ctx.t, ctx.l)
+            };
+            (q, w.transpose())
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: the headline comparison — exact factored kernel vs the naive
+//! O(N²T) all-pairs evaluation, with the crossover and speedup curve.
+
+use forest_kernels::data::registry;
+use forest_kernels::experiments::{fig42, measure_kernel_cost};
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::swlc::ProximityKind;
+
+fn main() {
+    let t = 32;
+    println!("N\tnaive_s\tfactored_s\tspeedup");
+    for n in [512usize, 1024, 2048, 4096, 8192] {
+        let naive = fig42::naive_cost(n, "covertype", t, 3);
+        let data = registry::by_name("covertype").unwrap().generate(n, 3);
+        let forest = Forest::train(&data, &TrainConfig { n_trees: t, seed: 3, ..Default::default() });
+        let c = measure_kernel_cost(&forest, &data, ProximityKind::Original);
+        println!("{n}\t{naive:.4}\t{:.4}\t{:.1}x", c.secs_total(), naive / c.secs_total());
+    }
+}

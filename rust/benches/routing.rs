@@ -1,0 +1,21 @@
+//! Bench: forest routing (the ℓ_t maps, O(N·T·h̄)) and prediction.
+
+use forest_kernels::bench_support::bench;
+use forest_kernels::data::registry;
+use forest_kernels::forest::{Forest, TrainConfig};
+
+fn main() {
+    for (name, n, t) in [("covertype", 32768usize, 50usize), ("higgs", 65536, 32)] {
+        let data = registry::by_name(name).unwrap().generate(n, 1);
+        let forest = Forest::train(
+            &data,
+            &TrainConfig { n_trees: t, seed: 2, max_samples: Some(50_000), ..Default::default() },
+        );
+        let binned = forest.binner.bin(&data);
+        bench(&format!("bin {name} N={n}"), 3, || forest.binner.bin(&data));
+        let median = bench(&format!("route {name} N={n} T={t} h̄={:.1}", forest.mean_depth()), 3, || {
+            forest.apply_binned(&binned)
+        });
+        println!("  -> {:.1} M leaf-lookups/s", (n * t) as f64 / median / 1e6);
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: PJRT execution of the AOT Pallas proximity tile vs the same
+//! tile evaluated by a plain Rust loop. (The Pallas kernel is lowered
+//! with interpret=True — CPU wallclock is NOT a TPU perf proxy; this
+//! bench tracks dispatch + marshalling overhead of the serving path.)
+
+use forest_kernels::bench_support::bench;
+use forest_kernels::rng::Rng;
+use forest_kernels::runtime::Runtime;
+
+fn main() {
+    let Ok(rt) = Runtime::load(std::path::Path::new("artifacts")) else {
+        println!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let (bq, br, t) = (128, 128, 64);
+    let mut rng = Rng::new(1);
+    let leaf_q: Vec<i32> = (0..bq * t).map(|_| rng.gen_range(50) as i32).collect();
+    let leaf_w: Vec<i32> = (0..br * t).map(|_| rng.gen_range(50) as i32).collect();
+    let q: Vec<f32> = (0..bq * t).map(|_| rng.next_f32()).collect();
+    let w: Vec<f32> = (0..br * t).map(|_| rng.next_f32()).collect();
+    let xla = bench("xla prox tile 128x128x64", 10, || {
+        rt.prox_block(bq, br, t, &leaf_q, &q, &leaf_w, &w).unwrap()
+    });
+    let rust = bench("rust prox tile 128x128x64", 10, || {
+        let mut out = vec![0f32; bq * br];
+        for i in 0..bq {
+            for j in 0..br {
+                let mut acc = 0f32;
+                for tt in 0..t {
+                    if leaf_q[i * t + tt] == leaf_w[j * t + tt] {
+                        acc += q[i * t + tt] * w[j * t + tt];
+                    }
+                }
+                out[i * br + j] = acc;
+            }
+        }
+        out
+    });
+    println!("  -> xla/rust ratio {:.2} (interpret-mode Pallas; see DESIGN.md §Hardware-Adaptation)", xla / rust);
+}

@@ -1,0 +1,24 @@
+//! Bench: Gustavson SpGEMM on SWLC-shaped factors — the paper's core
+//! cost center (§3.3). Reports measured time vs the predicted
+//! N·T·λ̄ flop count, i.e. effective flops/s of the accumulate loop.
+
+use forest_kernels::bench_support::bench;
+use forest_kernels::data::registry;
+use forest_kernels::experiments::train_for;
+use forest_kernels::forest::TrainConfig;
+use forest_kernels::sparse::{spgemm, spgemm_nnz_flops};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+
+fn main() {
+    for (n, t) in [(8192usize, 32usize), (16384, 32), (16384, 64)] {
+        let data = registry::by_name("covertype").unwrap().generate(n, 1);
+        let cfg = TrainConfig { n_trees: t, seed: 2, ..Default::default() };
+        let forest = train_for(&data, ProximityKind::Kerf, &cfg);
+        let k = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+        let flops = spgemm_nnz_flops(&k.q, k.w_transpose());
+        let median = bench(&format!("spgemm N={n} T={t} flops={flops}"), 3, || {
+            spgemm(&k.q, k.w_transpose())
+        });
+        println!("  -> {:.1} Mflops/s effective", flops as f64 / median / 1e6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Measurement helpers shared by the figure/table harnesses.
+
+use std::time::Instant;
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Current process peak RSS in bytes (Linux, /proc/self/status VmHWM).
+pub fn peak_rss_bytes() -> usize {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: usize = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Current RSS in bytes (VmRSS).
+pub fn rss_bytes() -> usize {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: usize = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Least-squares slope of log(y) vs log(x) — the "fitted linear
+/// regression slope" the paper annotates on its log-log scaling plots.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in pts {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den
+}
+
+/// Geometric sequence of sample sizes `start, 2·start, …, ≤ max`.
+pub fn doubling_sizes(start: usize, max: usize) -> Vec<usize> {
+    let mut out = vec![];
+    let mut n = start;
+    while n <= max {
+        out.push(n);
+        n *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_power_law_recovered() {
+        let xs: Vec<f64> = vec![1e3, 1e4, 1e5, 1e6];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(1.5)).collect();
+        assert!((loglog_slope(&xs, &ys) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_of_linear_is_one() {
+        let xs: Vec<f64> = vec![2.0, 4.0, 8.0, 16.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rss_measured_positive() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn doubling_sizes_doubles() {
+        assert_eq!(doubling_sizes(1000, 8000), vec![1000, 2000, 4000, 8000]);
+    }
+
+    #[test]
+    fn timer_returns_result() {
+        let (v, secs) = time(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}
+
+/// Micro-bench helper for the `harness = false` benches: runs `f`
+/// `iters` times and prints min/median wall time with a label.
+pub fn bench<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    println!("{label}: median {:.4}s min {:.4}s ({} iters)", median, times[0], iters);
+    median
+}

@@ -1,0 +1,198 @@
+//! XLA-backed dense gallery scoring: the OOS serving path.
+//!
+//! A gallery holds the reference-side panels (per-tree leaf ids and
+//! SWLC weights of the training samples). Incoming query blocks are
+//! routed through the forest, given OOS query weights (Remark 3.9),
+//! padded to the AOT tile shape, and scored against every gallery tile
+//! by the compiled Pallas proximity kernel (`prox_{BQ}x{BR}x{T}`). This
+//! is the "dense fast path" of DESIGN.md: the request path is pure Rust
+//! + PJRT — Python never runs.
+
+use crate::data::Dataset;
+use crate::forest::Forest;
+use crate::runtime::Runtime;
+use crate::swlc::{weights, EnsembleContext, ProximityKind};
+use anyhow::{anyhow, Result};
+
+/// Dense reference-side gallery with tile-padded panels.
+pub struct GalleryService<'a> {
+    runtime: &'a Runtime,
+    pub kind: ProximityKind,
+    /// Tile shape `(BQ, BR, T_pad)` chosen from the loaded artifacts.
+    pub tile: (usize, usize, usize),
+    pub n_ref: usize,
+    pub t: usize,
+    /// Padded gallery panels: per tile `g`, `BR×T_pad` leaf ids / weights.
+    leaves: Vec<i32>,
+    weights: Vec<f32>,
+    n_tiles: usize,
+    /// Reference labels (for proximity-weighted voting).
+    pub labels: Vec<u32>,
+    pub n_classes: usize,
+}
+
+impl<'a> GalleryService<'a> {
+    /// Build the gallery from a trained forest and its training set.
+    pub fn new(
+        runtime: &'a Runtime,
+        forest: &Forest,
+        train: &Dataset,
+        kind: ProximityKind,
+    ) -> Result<GalleryService<'a>> {
+        let ctx = EnsembleContext::build(forest, train);
+        let spec = weights::assign(kind, &ctx);
+        let (n, t) = (ctx.n, ctx.t);
+        let tile = runtime
+            .best_prox_variant(1, 1, t)
+            .ok_or_else(|| anyhow!("no prox artifact can hold T={t} trees"))?;
+        let (_bq, br, t_pad) = tile;
+        let n_tiles = n.div_ceil(br);
+
+        // Pad gallery to n_tiles*BR rows and T_pad trees. Padded rows get
+        // leaf -2 / weight 0; padded trees get leaf -2 / weight 0 too —
+        // query padding uses -1, so no phantom collisions are possible.
+        let mut leaves = vec![-2i32; n_tiles * br * t_pad];
+        let mut wts = vec![0f32; n_tiles * br * t_pad];
+        for i in 0..n {
+            let dst = i * t_pad;
+            for tt in 0..t {
+                leaves[dst + tt] = ctx.leaf(i, tt) as i32;
+                wts[dst + tt] = spec.w[i * t + tt];
+            }
+        }
+        Ok(GalleryService {
+            runtime,
+            kind,
+            tile,
+            n_ref: n,
+            t,
+            leaves,
+            weights: wts,
+            n_tiles,
+            labels: ctx.y.clone(),
+            n_classes: ctx.n_classes,
+        })
+    }
+
+    /// Route and score a query block against the whole gallery.
+    /// Returns the dense `n_q × n_ref` proximity block.
+    pub fn score(&self, forest: &Forest, queries: &Dataset) -> Result<Vec<f32>> {
+        let n_q = queries.n;
+        let (bq, br, t_pad) = self.tile;
+        // Route queries and build padded panels with OOS weights.
+        let leaf_new = forest.apply(queries);
+        let ctx_stub = ProxQueryPanels::build(self.kind, forest, &leaf_new, n_q, self.t, t_pad, bq);
+
+        let mut out = vec![0f32; n_q * self.n_ref];
+        let q_tiles = n_q.div_ceil(bq);
+        for qt in 0..q_tiles {
+            let ql = &ctx_stub.leaves[qt * bq * t_pad..(qt + 1) * bq * t_pad];
+            let qw = &ctx_stub.weights[qt * bq * t_pad..(qt + 1) * bq * t_pad];
+            for gt in 0..self.n_tiles {
+                let gl = &self.leaves[gt * br * t_pad..(gt + 1) * br * t_pad];
+                let gw = &self.weights[gt * br * t_pad..(gt + 1) * br * t_pad];
+                let tile_out = self.runtime.prox_block(bq, br, t_pad, ql, qw, gl, gw)?;
+                // Scatter the valid region into the output.
+                for i in 0..bq {
+                    let gi = qt * bq + i;
+                    if gi >= n_q {
+                        break;
+                    }
+                    for j in 0..br {
+                        let gj = gt * br + j;
+                        if gj >= self.n_ref {
+                            break;
+                        }
+                        out[gi * self.n_ref + gj] = tile_out[i * br + j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Top-k most proximal gallery entries per query row.
+    pub fn top_k(&self, scores: &[f32], n_q: usize, k: usize) -> Vec<Vec<(u32, f32)>> {
+        let mut out = Vec::with_capacity(n_q);
+        for i in 0..n_q {
+            let row = &scores[i * self.n_ref..(i + 1) * self.n_ref];
+            let mut idx: Vec<(u32, f32)> =
+                row.iter().enumerate().map(|(j, &v)| (j as u32, v)).collect();
+            let kk = k.min(idx.len());
+            idx.select_nth_unstable_by(kk - 1, |a, b| b.1.partial_cmp(&a.1).unwrap());
+            idx.truncate(kk);
+            idx.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            out.push(idx);
+        }
+        out
+    }
+
+    /// Proximity-weighted class votes from a dense score block.
+    pub fn vote(&self, scores: &[f32], n_q: usize) -> Vec<u32> {
+        let c = self.n_classes;
+        let mut preds = Vec::with_capacity(n_q);
+        for i in 0..n_q {
+            let row = &scores[i * self.n_ref..(i + 1) * self.n_ref];
+            let mut acc = vec![0f64; c];
+            for (j, &v) in row.iter().enumerate() {
+                acc[self.labels[j] as usize] += v as f64;
+            }
+            preds.push(crate::forest::argmax(&acc) as u32);
+        }
+        preds
+    }
+}
+
+/// Query-side padded panels.
+struct ProxQueryPanels {
+    leaves: Vec<i32>,
+    weights: Vec<f32>,
+}
+
+impl ProxQueryPanels {
+    fn build(
+        kind: ProximityKind,
+        forest: &Forest,
+        leaf_new: &[u32],
+        n_q: usize,
+        t: usize,
+        t_pad: usize,
+        bq: usize,
+    ) -> ProxQueryPanels {
+        // OOS query weights need only T and tree weights from the
+        // context; build a minimal stub via the public API.
+        let q_tiles = n_q.div_ceil(bq);
+        let mut leaves = vec![-1i32; q_tiles * bq * t_pad];
+        let mut wts = vec![0f32; q_tiles * bq * t_pad];
+        let qw = oos_query_weights(kind, forest, t, n_q);
+        for i in 0..n_q {
+            let dst = i * t_pad;
+            for tt in 0..t {
+                leaves[dst + tt] = leaf_new[i * t + tt] as i32;
+                wts[dst + tt] = qw[i * t + tt];
+            }
+        }
+        ProxQueryPanels { leaves, weights: wts }
+    }
+}
+
+/// OOS query weights without a full context (Remark 3.9 conventions).
+/// KeRF needs leaf masses, so the gallery path supports the schemes
+/// whose query side is leaf-independent; KeRF queries fall back to
+/// original weighting (its reference side still carries the leaf-mass
+/// normalization via the *gallery* weights).
+fn oos_query_weights(kind: ProximityKind, forest: &Forest, t: usize, n_q: usize) -> Vec<f32> {
+    let v = match kind {
+        ProximityKind::Original | ProximityKind::OobSeparable | ProximityKind::Kerf => {
+            1.0 / (t as f32).sqrt()
+        }
+        ProximityKind::RfGap | ProximityKind::InstanceHardness => 1.0 / t as f32,
+        ProximityKind::Boosted => {
+            let total: f32 = forest.tree_weights.iter().sum();
+            return (0..n_q * t)
+                .map(|k| (forest.tree_weights[k % t] / total).sqrt())
+                .collect();
+        }
+    };
+    vec![v; n_q * t]
+}

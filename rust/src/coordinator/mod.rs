@@ -1,0 +1,250 @@
+//! The block coordinator: sharded kernel materialization with bounded
+//! queues, plus the XLA-backed dense gallery path.
+//!
+//! The paper's pipeline is "build factors once, then stream products".
+//! For N×N materialization the coordinator partitions the query rows
+//! into stripes, fans them out to a worker pool over a *bounded* job
+//! channel (backpressure: a slow sink throttles the producers instead
+//! of buffering the whole kernel), and streams completed stripes to the
+//! caller's sink in order. For OOS serving it batches query requests
+//! into fixed-size tiles executed on the PJRT runtime (the L1 Pallas
+//! tile kernel) — see [`gallery`].
+//!
+//! Built on std threads + `sync_channel` (the offline vendor set has no
+//! tokio; on this 1-core testbed an async reactor would buy nothing —
+//! DESIGN.md §Substitutions).
+
+pub mod gallery;
+
+use crate::sparse::{spgemm, Csr};
+use crate::swlc::ForestKernel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Query rows per stripe job.
+    pub stripe_rows: usize,
+    /// Worker threads.
+    pub n_workers: usize,
+    /// Bounded queue depth (jobs in flight) — the backpressure knob.
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { stripe_rows: 4096, n_workers: 2, queue_depth: 4 }
+    }
+}
+
+/// Shared counters exposed after a run.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    pub jobs: AtomicU64,
+    pub nnz: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> (u64, u64, f64) {
+        (
+            self.jobs.load(Ordering::Relaxed),
+            self.nnz.load(Ordering::Relaxed),
+            self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+/// One completed stripe of the proximity matrix: rows
+/// `[row_start, row_start + rows.n_rows)` over all N columns.
+pub struct Stripe {
+    pub row_start: usize,
+    pub rows: Csr,
+}
+
+/// Materialize the full training kernel `P = Q Wᵀ` stripe by stripe,
+/// invoking `sink` for every stripe **in row order**. Returns metrics.
+///
+/// The sink runs on the caller thread; jobs flow through a bounded
+/// channel so at most `queue_depth` stripes are ever buffered.
+pub fn materialize_kernel(
+    kernel: &ForestKernel,
+    cfg: &CoordinatorConfig,
+    mut sink: impl FnMut(Stripe),
+) -> Metrics {
+    let metrics = Metrics::default();
+    let n = kernel.q.n_rows;
+    let stripe = cfg.stripe_rows.max(1);
+    let n_jobs = n.div_ceil(stripe);
+
+    std::thread::scope(|scope| {
+        let (job_tx, job_rx) = sync_channel::<usize>(cfg.queue_depth);
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+        let (res_tx, res_rx) = sync_channel::<Stripe>(cfg.queue_depth);
+
+        for _ in 0..cfg.n_workers.max(1) {
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let metrics = &metrics;
+            scope.spawn(move || loop {
+                let job = { job_rx.lock().unwrap().recv() };
+                let Ok(j) = job else { break };
+                let t0 = std::time::Instant::now();
+                let row_start = j * stripe;
+                let row_end = (row_start + stripe).min(n);
+                let rows = stripe_product(kernel, row_start, row_end);
+                metrics.jobs.fetch_add(1, Ordering::Relaxed);
+                metrics.nnz.fetch_add(rows.nnz() as u64, Ordering::Relaxed);
+                metrics
+                    .busy_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if res_tx.send(Stripe { row_start, rows }).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+
+        // Producer: enqueue job ids (blocks when the queue is full —
+        // that is the backpressure). Run it on its own thread so the
+        // caller thread can drain results.
+        scope.spawn(move || {
+            for j in 0..n_jobs {
+                if job_tx.send(j).is_err() {
+                    break;
+                }
+            }
+        });
+
+        // Reorder results so the sink sees stripes in row order.
+        let mut pending: std::collections::BTreeMap<usize, Stripe> =
+            std::collections::BTreeMap::new();
+        let mut next_row = 0usize;
+        for s in res_rx {
+            pending.insert(s.row_start, s);
+            while let Some(s) = pending.remove(&next_row) {
+                next_row += s.rows.n_rows;
+                sink(s);
+            }
+        }
+        while let Some(s) = pending.remove(&next_row) {
+            next_row += s.rows.n_rows;
+            sink(s);
+        }
+    });
+    metrics
+}
+
+/// Compute one stripe `P[row_start..row_end, :]` by Gustavson over the
+/// factor rows (same cost model as the monolithic product, §3.3).
+fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Csr {
+    // Build a view of Q's stripe as a small CSR borrowing the data.
+    let q = &kernel.q;
+    let lo = q.indptr[row_start];
+    let hi = q.indptr[row_end];
+    let qs = Csr {
+        n_rows: row_end - row_start,
+        n_cols: q.n_cols,
+        indptr: q.indptr[row_start..=row_end].iter().map(|&p| p - lo).collect(),
+        indices: q.indices[lo..hi].to_vec(),
+        data: q.data[lo..hi].to_vec(),
+    };
+    let mut p = spgemm(&qs, kernel.w_transpose());
+    if kernel.kind == crate::swlc::ProximityKind::OobSeparable {
+        // Remark G.2 on the stripe's diagonal block.
+        for i in 0..p.n_rows {
+            let gcol = (row_start + i) as u32;
+            let (a, b) = (p.indptr[i], p.indptr[i + 1]);
+            if let Ok(k) = p.indices[a..b].binary_search(&gcol) {
+                p.data[a + k] = 1.0;
+            }
+            // If absent we leave it: `materialize` consumers that need
+            // exact OOB diagonals use `ForestKernel::proximity_matrix`.
+        }
+    }
+    p
+}
+
+/// Materialize the whole kernel into one CSR via the coordinator
+/// (convenience used by tests and benches to compare against
+/// `ForestKernel::proximity_matrix`).
+pub fn materialize_to_csr(kernel: &ForestKernel, cfg: &CoordinatorConfig) -> (Csr, Metrics) {
+    let n = kernel.q.n_rows;
+    let mut indptr = vec![0usize];
+    let mut indices = vec![];
+    let mut data = vec![];
+    let metrics = materialize_kernel(kernel, cfg, |s| {
+        let base = *indptr.last().unwrap();
+        for r in 0..s.rows.n_rows {
+            indptr.push(base + s.rows.indptr[r + 1]);
+        }
+        indices.extend_from_slice(&s.rows.indices);
+        data.extend_from_slice(&s.rows.data);
+    });
+    (
+        Csr { n_rows: n, n_cols: kernel.w.n_rows, indptr, indices, data },
+        metrics,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{Forest, TrainConfig};
+    use crate::swlc::ProximityKind;
+
+    fn fixture(n: usize) -> ForestKernel {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.0, 3);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 10, seed: 4, ..Default::default() });
+        ForestKernel::fit(&f, &data, ProximityKind::Kerf)
+    }
+
+    #[test]
+    fn coordinator_matches_monolithic_product() {
+        let k = fixture(150);
+        let cfg = CoordinatorConfig { stripe_rows: 32, n_workers: 3, queue_depth: 2 };
+        let (p, metrics) = materialize_to_csr(&k, &cfg);
+        let expect = k.proximity_matrix();
+        assert_eq!(p.to_dense(), expect.to_dense());
+        let (jobs, nnz, _) = metrics.snapshot();
+        assert_eq!(jobs, 150usize.div_ceil(32) as u64);
+        assert_eq!(nnz, expect.nnz() as u64);
+    }
+
+    #[test]
+    fn stripes_arrive_in_row_order() {
+        let k = fixture(100);
+        let cfg = CoordinatorConfig { stripe_rows: 17, n_workers: 4, queue_depth: 2 };
+        let mut seen = vec![];
+        materialize_kernel(&k, &cfg, |s| seen.push((s.row_start, s.rows.n_rows)));
+        let mut expect_start = 0;
+        for &(start, rows) in &seen {
+            assert_eq!(start, expect_start);
+            expect_start += rows;
+        }
+        assert_eq!(expect_start, 100);
+    }
+
+    #[test]
+    fn single_worker_single_stripe_edge_cases() {
+        let k = fixture(40);
+        for cfg in [
+            CoordinatorConfig { stripe_rows: 1000, n_workers: 1, queue_depth: 1 },
+            CoordinatorConfig { stripe_rows: 1, n_workers: 2, queue_depth: 1 },
+        ] {
+            let (p, _) = materialize_to_csr(&k, &cfg);
+            assert_eq!(p.to_dense(), k.proximity_matrix().to_dense());
+        }
+    }
+
+    #[test]
+    fn metrics_busy_time_positive() {
+        let k = fixture(80);
+        let (_, m) = materialize_to_csr(&k, &CoordinatorConfig::default());
+        let (_, _, busy) = m.snapshot();
+        assert!(busy >= 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Datasets: the in-memory representation plus deterministic synthetic
+//! analogs of the paper's evaluation datasets.
+//!
+//! The paper's experiments run on 11 public datasets (Table F.1). Those
+//! corpora are not available here, so `registry` provides synthetic
+//! analogs with matching feature dimension and class count, generated
+//! from seeded low-rank Gaussian class manifolds (see `synth`). The
+//! scaling experiments (§4.2, App. H) only require data whose induced
+//! forests have realistic leaf-occupancy profiles, which this family
+//! provides; accuracy tables are shape checks, not absolute
+//! reproductions (see DESIGN.md §Substitutions).
+
+pub mod registry;
+pub mod synth;
+
+use crate::rng::Rng;
+
+/// A dense row-major dataset. `n_classes == 0` means regression targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    /// Labels: class index as f32 (classification) or real target.
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, d: usize, n_classes: usize) -> Dataset {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n);
+        Dataset { x, y, n, d, n_classes }
+    }
+
+    /// Feature value of sample `i`, feature `f`.
+    #[inline]
+    pub fn x(&self, i: usize, f: usize) -> f32 {
+        self.x[i * self.d + f]
+    }
+
+    /// Row slice of sample `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Materialize a subset by (possibly repeated) indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, n: idx.len(), d: self.d, n_classes: self.n_classes }
+    }
+
+    /// First `n` samples (generators shuffle, so this is a random subset).
+    pub fn head(&self, n: usize) -> Dataset {
+        let idx: Vec<usize> = (0..n.min(self.n)).collect();
+        self.subset(&idx)
+    }
+
+    /// Stratified train/test split: `test_frac` of each class goes to the
+    /// test set (plain random split for regression).
+    pub fn train_test_split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed);
+        let mut train_idx = vec![];
+        let mut test_idx = vec![];
+        if self.n_classes > 0 {
+            let mut per_class: Vec<Vec<usize>> = vec![vec![]; self.n_classes];
+            for i in 0..self.n {
+                per_class[self.y[i] as usize].push(i);
+            }
+            for mut idx in per_class {
+                rng.shuffle(&mut idx);
+                let n_test = ((idx.len() as f64) * test_frac).round() as usize;
+                test_idx.extend_from_slice(&idx[..n_test]);
+                train_idx.extend_from_slice(&idx[n_test..]);
+            }
+        } else {
+            let mut idx: Vec<usize> = (0..self.n).collect();
+            rng.shuffle(&mut idx);
+            let n_test = ((self.n as f64) * test_frac).round() as usize;
+            test_idx.extend_from_slice(&idx[..n_test]);
+            train_idx.extend_from_slice(&idx[n_test..]);
+        }
+        // Restore deterministic order within each side.
+        train_idx.sort_unstable();
+        test_idx.sort_unstable();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Class frequencies (classification).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &y in &self.y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        synth::gaussian_blobs(100, 4, 4, 2.0, 0)
+    }
+
+    #[test]
+    fn accessors_consistent() {
+        let d = toy();
+        assert_eq!(d.n, 100);
+        assert_eq!(d.row(3)[1], d.x(3, 1));
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let d = toy();
+        let s = d.subset(&[5, 7]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.row(0), d.row(5));
+        assert_eq!(s.y[1], d.y[7]);
+    }
+
+    #[test]
+    fn split_is_stratified_and_partitions() {
+        let d = toy();
+        let (tr, te) = d.train_test_split(0.25, 1);
+        assert_eq!(tr.n + te.n, d.n);
+        let tr_counts = tr.class_counts();
+        let te_counts = te.class_counts();
+        for c in 0..d.n_classes {
+            let frac = te_counts[c] as f64 / (tr_counts[c] + te_counts[c]) as f64;
+            assert!((frac - 0.25).abs() < 0.11, "class {c}: {frac}");
+        }
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy();
+        let (a, _) = d.train_test_split(0.3, 9);
+        let (b, _) = d.train_test_split(0.3, 9);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn class_counts_sum_to_n() {
+        let d = toy();
+        assert_eq!(d.class_counts().iter().sum::<usize>(), d.n);
+    }
+}

@@ -1,0 +1,244 @@
+//! Seeded synthetic dataset generators.
+//!
+//! Two families:
+//!
+//! * [`gaussian_blobs`] — isotropic Gaussian clusters, one per class.
+//!   Simple, separable; used throughout unit tests.
+//! * [`class_manifolds`] — the workhorse behind the paper-dataset
+//!   analogs: each class is a mixture of low-rank Gaussian "manifolds"
+//!   (latent `z ~ N(0, I_k)` pushed through a random linear map with a
+//!   mild quadratic warp), plus pure-noise nuisance dimensions. This
+//!   yields datasets where forests grow realistic, unbalanced partitions
+//!   and leaf occupancies — the property the scaling experiments
+//!   (§4.2 / App. H) actually exercise — while keeping classes
+//!   learnable but not trivially so.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Isotropic Gaussian blob per class; centers i.i.d. `N(0, sep²)`.
+pub fn gaussian_blobs(n: usize, d: usize, n_classes: usize, sep: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<f64> = (0..n_classes * d).map(|_| rng.next_normal() * sep).collect();
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % n_classes;
+        y.push(c as f32);
+        for f in 0..d {
+            x.push((centers[c * d + f] + rng.next_normal()) as f32);
+        }
+    }
+    // Shuffle rows so head() is a random subset.
+    shuffle_rows(&mut x, &mut y, d, &mut rng);
+    Dataset::new(x, y, d, n_classes)
+}
+
+/// Parameters of the manifold generator (see module docs).
+#[derive(Clone, Debug)]
+pub struct ManifoldSpec {
+    pub d: usize,
+    pub n_classes: usize,
+    /// Latent dimension of each class manifold.
+    pub latent: usize,
+    /// Sub-clusters per class (multi-modal classes).
+    pub modes: usize,
+    /// Fraction of features that are informative (rest pure noise).
+    pub informative_frac: f64,
+    /// Class-center separation scale.
+    pub sep: f64,
+    /// Label noise: fraction of samples with a random label.
+    pub label_noise: f64,
+    /// Amplitude of the nuisance (uninformative) dimensions relative to
+    /// unit informative noise. When > 1 the nuisance is additionally
+    /// *low-rank* (shared random factors across nuisance dims), modeling
+    /// raw-pixel geometry where unsupervised variance is dominated by
+    /// task-irrelevant but *structured* variation (lighting/style) — the
+    /// regime where the paper's leaf coordinates pay off (§4.3). At 1.0
+    /// the nuisance is plain i.i.d. noise.
+    pub noise_scale: f64,
+}
+
+impl Default for ManifoldSpec {
+    fn default() -> Self {
+        ManifoldSpec {
+            d: 20,
+            n_classes: 2,
+            latent: 8,
+            modes: 2,
+            informative_frac: 0.75,
+            sep: 1.6,
+            label_noise: 0.05,
+            noise_scale: 1.0,
+        }
+    }
+}
+
+/// Generate `n` samples from a [`ManifoldSpec`].
+pub fn class_manifolds(n: usize, spec: &ManifoldSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let d = spec.d;
+    let k = spec.latent.min(d).max(1);
+    let d_info = ((d as f64 * spec.informative_frac).round() as usize).clamp(1, d);
+    let n_modes = spec.n_classes * spec.modes;
+
+    // Per-mode: center (informative dims) + linear map W (d_info × k).
+    let mut centers = vec![0f32; n_modes * d_info];
+    let mut maps = vec![0f32; n_modes * d_info * k];
+    for m in 0..n_modes {
+        for f in 0..d_info {
+            centers[m * d_info + f] = (rng.next_normal() * spec.sep) as f32;
+        }
+        for v in &mut maps[m * d_info * k..(m + 1) * d_info * k] {
+            *v = (rng.next_normal() / (k as f64).sqrt()) as f32;
+        }
+    }
+
+    // Structured (low-rank) nuisance factors for noise_scale > 1: one
+    // global map shared by all classes, so the dominant unsupervised
+    // variance is task-irrelevant.
+    let structured = spec.noise_scale > 1.0;
+    let d_noise = d - d_info;
+    let noise_map: Vec<f32> = if structured {
+        (0..d_noise * k)
+            .map(|_| (rng.next_normal() / (k as f64).sqrt()) as f32)
+            .collect()
+    } else {
+        vec![]
+    };
+
+    let mut x = vec![0f32; n * d];
+    let mut y = Vec::with_capacity(n);
+    let mut z = vec![0f32; k];
+    let mut zn = vec![0f32; k];
+    for i in 0..n {
+        let c = i % spec.n_classes;
+        let mode = c * spec.modes + rng.gen_range(spec.modes);
+        for zi in z.iter_mut() {
+            *zi = rng.next_normal() as f32;
+        }
+        let row = &mut x[i * d..(i + 1) * d];
+        let w = &maps[mode * d_info * k..(mode + 1) * d_info * k];
+        let ctr = &centers[mode * d_info..(mode + 1) * d_info];
+        for f in 0..d_info {
+            let mut v = ctr[f];
+            let wf = &w[f * k..(f + 1) * k];
+            for (j, &zj) in z.iter().enumerate() {
+                v += wf[j] * z[j] + 0.15 * wf[j] * zj * z[(j + 1) % k]; // mild quadratic warp
+            }
+            row[f] = v + 0.3 * rng.next_normal() as f32;
+        }
+        if structured {
+            for zi in zn.iter_mut() {
+                *zi = rng.next_normal() as f32;
+            }
+            let ns = spec.noise_scale as f32;
+            for f in d_info..d {
+                let wf = &noise_map[(f - d_info) * k..(f - d_info + 1) * k];
+                let mut v = 0f32;
+                for (j, &znj) in zn.iter().enumerate() {
+                    v += wf[j] * znj;
+                }
+                row[f] = ns * v + 0.3 * rng.next_normal() as f32;
+            }
+        } else {
+            for f in d_info..d {
+                row[f] = (spec.noise_scale * rng.next_normal()) as f32; // nuisance dims
+            }
+        }
+        let label = if spec.label_noise > 0.0 && rng.next_f64() < spec.label_noise {
+            rng.gen_range(spec.n_classes)
+        } else {
+            c
+        };
+        y.push(label as f32);
+    }
+    shuffle_rows(&mut x, &mut y, d, &mut rng);
+    Dataset::new(x, y, d, spec.n_classes)
+}
+
+fn shuffle_rows(x: &mut [f32], y: &mut [f32], d: usize, rng: &mut Rng) {
+    let n = y.len();
+    for i in (1..n).rev() {
+        let j = rng.gen_range(i + 1);
+        if i != j {
+            y.swap(i, j);
+            for f in 0..d {
+                x.swap(i * d + f, j * d + f);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::{Forest, TrainConfig};
+
+    #[test]
+    fn blobs_shapes_and_balance() {
+        let d = gaussian_blobs(120, 6, 3, 2.0, 1);
+        assert_eq!((d.n, d.d, d.n_classes), (120, 6, 3));
+        let counts = d.class_counts();
+        assert_eq!(counts, vec![40, 40, 40]);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = class_manifolds(200, &ManifoldSpec::default(), 7);
+        let b = class_manifolds(200, &ManifoldSpec::default(), 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = class_manifolds(200, &ManifoldSpec::default(), 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn manifolds_learnable_but_not_trivial() {
+        let spec = ManifoldSpec { d: 16, n_classes: 3, ..Default::default() };
+        let data = class_manifolds(1500, &spec, 3);
+        let (train, test) = data.train_test_split(0.3, 1);
+        let f = Forest::train(&train, &TrainConfig { n_trees: 40, seed: 2, ..Default::default() });
+        let acc = f.accuracy(&test);
+        // Learnable well above chance (1/3) but below perfect (label noise).
+        assert!(acc > 0.6, "acc={acc}");
+        assert!(acc < 0.999, "acc={acc}");
+    }
+
+    #[test]
+    fn nuisance_dims_are_uninformative() {
+        let spec = ManifoldSpec {
+            d: 10,
+            n_classes: 2,
+            informative_frac: 0.5,
+            label_noise: 0.0,
+            ..Default::default()
+        };
+        let data = class_manifolds(2000, &spec, 5);
+        // Correlation of the last (noise) feature with the label ~ 0.
+        let my: f64 = data.y.iter().map(|&v| v as f64).sum::<f64>() / data.n as f64;
+        let mx: f64 = (0..data.n).map(|i| data.x(i, 9) as f64).sum::<f64>() / data.n as f64;
+        let mut cov = 0f64;
+        let mut vx = 0f64;
+        let mut vy = 0f64;
+        for i in 0..data.n {
+            let dx = data.x(i, 9) as f64 - mx;
+            let dy = data.y[i] as f64 - my;
+            cov += dx * dy;
+            vx += dx * dx;
+            vy += dy * dy;
+        }
+        let corr = cov / (vx.sqrt() * vy.sqrt());
+        assert!(corr.abs() < 0.08, "corr={corr}");
+    }
+
+    #[test]
+    fn label_noise_rate_respected() {
+        let spec = ManifoldSpec { label_noise: 0.0, ..Default::default() };
+        let clean = class_manifolds(500, &spec, 9);
+        // With zero label noise, class balance is exact.
+        let counts = clean.class_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 500);
+        assert!(counts.iter().all(|&c| c == 250));
+    }
+}

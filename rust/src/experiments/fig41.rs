@@ -1,0 +1,70 @@
+//! Fig. 4.1: asymptotic separability of the OOB normalization.
+//!
+//! Mean ± std of `R(x,x') = S(x,x') / (S(x)S(x')/T)` on the
+//! SignMNIST (A–K) analog, sweeping the number of trees T and the
+//! training fraction. Prop. G.1 predicts R → r_N/p_N² = 1 − O(1/N)
+//! from below as T grows.
+
+use crate::data::registry;
+use crate::forest::{Forest, TrainConfig};
+use crate::swlc::naive::oob_ratio_stats;
+use crate::swlc::EnsembleContext;
+
+pub struct Fig41Row {
+    pub frac: f64,
+    pub n: usize,
+    pub t: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Prop. G.1's deterministic limit r_N/p_N².
+    pub limit: f64,
+}
+
+pub fn run(base_n: usize, fracs: &[f64], trees: &[usize], seed: u64) -> Vec<Fig41Row> {
+    let full = registry::signmnist_ak(base_n, seed);
+    let mut rows = vec![];
+    for &frac in fracs {
+        let n = ((base_n as f64) * frac).round() as usize;
+        let data = full.head(n);
+        for &t in trees {
+            let forest = Forest::train(
+                &data,
+                &TrainConfig { n_trees: t, seed: seed ^ (t as u64), ..Default::default() },
+            );
+            let ctx = EnsembleContext::build(&forest, &data);
+            let stats = oob_ratio_stats(&ctx, 50_000, seed ^ 0xF161);
+            let nn = n as f64;
+            let limit = (1.0 - 1.0 / (nn - 1.0).powi(2)).powf(nn);
+            rows.push(Fig41Row { frac, n, t, mean: stats.mean, std: stats.std, limit });
+        }
+    }
+    rows
+}
+
+pub fn print(rows: &[Fig41Row]) {
+    println!("# Fig 4.1 — mean ratio R = S(x,x')/(S(x)S(x')/T), SignMNIST(A-K) analog");
+    println!("frac\tN\tT\tmean_R\tstd_R\tlimit_rN_pN2");
+    for r in rows {
+        println!(
+            "{:.2}\t{}\t{}\t{:.4}\t{:.4}\t{:.6}",
+            r.frac, r.n, r.t, r.mean, r.std, r.limit
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_below_one_and_tighter_with_n() {
+        let rows = run(1200, &[0.2, 1.0], &[80], 1);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.mean > 0.6 && r.mean <= 1.02, "mean={}", r.mean);
+            assert!(r.limit < 1.0 && r.limit > 0.99);
+        }
+        // Larger N ⇒ mean closer to 1 (allow small sampling slack).
+        assert!(rows[1].mean >= rows[0].mean - 0.03, "{} vs {}", rows[1].mean, rows[0].mean);
+    }
+}

@@ -1,0 +1,235 @@
+//! Fig. 4.2 + App. H (Fig. H.1): log-log runtime & memory scaling of
+//! exact kernel computation with sample size, across datasets,
+//! proximity methods, minimum leaf sizes, forest kinds, and depth caps.
+//! Also the naive-baseline comparison the quadratic claim is made
+//! against.
+
+use super::{measure_kernel_cost, train_for, KernelCost};
+use crate::bench_support::{doubling_sizes, loglog_slope};
+use crate::data::registry;
+use crate::forest::{ForestKind, TrainConfig};
+use crate::swlc::ProximityKind;
+
+/// Which ablation axis to sweep (the panels of Fig. 4.2 / H.1).
+#[derive(Clone, Debug)]
+pub enum Axis {
+    /// Fig 4.2-top: across datasets.
+    Dataset(Vec<String>),
+    /// Fig 4.2-middle: across proximity definitions (on Covertype).
+    Method(Vec<ProximityKind>),
+    /// Fig 4.2-bottom: across min leaf sizes (on Covertype).
+    MinLeaf(Vec<usize>),
+    /// Fig H.1 row 2: RF vs ExtraTrees.
+    ForestKind(Vec<ForestKind>),
+    /// Fig H.1 bottom: max tree depth caps (None = unconstrained).
+    Depth(Vec<Option<usize>>),
+}
+
+pub struct Series {
+    pub label: String,
+    pub points: Vec<KernelCost>,
+    pub time_slope: f64,
+    pub mem_slope: f64,
+}
+
+pub struct SweepConfig {
+    pub min_n: usize,
+    pub max_n: usize,
+    pub n_trees: usize,
+    pub seed: u64,
+    /// Default dataset for non-dataset axes (paper: Covertype).
+    pub dataset: String,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            min_n: 4096,
+            max_n: 65536,
+            n_trees: 50,
+            seed: 7,
+            dataset: "covertype".into(),
+        }
+    }
+}
+
+pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
+    let sizes = doubling_sizes(cfg.min_n, cfg.max_n);
+    let mut out = vec![];
+    match axis {
+        Axis::Dataset(names) => {
+            for name in names {
+                let spec = registry::by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+                out.push(run_series(
+                    name.clone(),
+                    &sizes,
+                    |n, seed| spec.generate(n, seed),
+                    ProximityKind::RfGap,
+                    &base_cfg(cfg, None, 1, ForestKind::RandomForest),
+                ));
+            }
+        }
+        Axis::Method(kinds) => {
+            let spec = registry::by_name(&cfg.dataset).unwrap();
+            for &kind in kinds {
+                out.push(run_series(
+                    kind.name().to_string(),
+                    &sizes,
+                    |n, seed| spec.generate(n, seed),
+                    kind,
+                    &base_cfg(cfg, None, 1, ForestKind::RandomForest),
+                ));
+            }
+        }
+        Axis::MinLeaf(leafs) => {
+            let spec = registry::by_name(&cfg.dataset).unwrap();
+            for &ml in leafs {
+                out.push(run_series(
+                    format!("nmin={ml}"),
+                    &sizes,
+                    |n, seed| spec.generate(n, seed),
+                    ProximityKind::RfGap,
+                    &base_cfg(cfg, None, ml, ForestKind::RandomForest),
+                ));
+            }
+        }
+        Axis::ForestKind(kinds) => {
+            let spec = registry::by_name(&cfg.dataset).unwrap();
+            for &fk in kinds {
+                let kind = if fk == ForestKind::RandomForest {
+                    ProximityKind::RfGap
+                } else {
+                    ProximityKind::Kerf // ET has no OOB; KeRF is the symmetric default
+                };
+                out.push(run_series(
+                    format!("{fk:?}"),
+                    &sizes,
+                    |n, seed| spec.generate(n, seed),
+                    kind,
+                    &base_cfg(cfg, None, 1, fk),
+                ));
+            }
+        }
+        Axis::Depth(depths) => {
+            let spec = registry::by_name(&cfg.dataset).unwrap();
+            for &d in depths {
+                out.push(run_series(
+                    match d {
+                        Some(d) => format!("d={d}"),
+                        None => "d=None".into(),
+                    },
+                    &sizes,
+                    |n, seed| spec.generate(n, seed),
+                    ProximityKind::RfGap,
+                    &base_cfg(cfg, d, 1, ForestKind::RandomForest),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn base_cfg(cfg: &SweepConfig, max_depth: Option<usize>, min_leaf: usize, fk: ForestKind) -> TrainConfig {
+    TrainConfig {
+        kind: fk,
+        n_trees: cfg.n_trees,
+        max_depth,
+        min_samples_leaf: min_leaf,
+        seed: cfg.seed,
+        // Bound per-tree training cost at large N (training is excluded
+        // from the measurements; the partition statistics at the routed
+        // scale are what matters).
+        max_samples: Some(100_000),
+        ..Default::default()
+    }
+}
+
+fn run_series(
+    label: String,
+    sizes: &[usize],
+    gen: impl Fn(usize, u64) -> crate::data::Dataset,
+    kind: ProximityKind,
+    tc: &TrainConfig,
+) -> Series {
+    let mut points = vec![];
+    for &n in sizes {
+        let data = gen(n, tc.seed ^ (n as u64));
+        let forest = train_for(&data, kind, tc);
+        points.push(measure_kernel_cost(&forest, &data, kind));
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.n as f64).collect();
+    let ts: Vec<f64> = points.iter().map(|p| p.secs_total()).collect();
+    let ms: Vec<f64> = points.iter().map(|p| p.bytes as f64).collect();
+    Series { label, time_slope: loglog_slope(&xs, &ts), mem_slope: loglog_slope(&xs, &ms), points }
+}
+
+/// Naive O(N²T) baseline cost at small N (the crossover reference).
+pub fn naive_cost(n: usize, dataset: &str, n_trees: usize, seed: u64) -> f64 {
+    let spec = registry::by_name(dataset).unwrap();
+    let data = spec.generate(n, seed);
+    let tc = TrainConfig { n_trees, seed, ..Default::default() };
+    let forest = train_for(&data, ProximityKind::Original, &tc);
+    let ctx = crate::swlc::EnsembleContext::build(&forest, &data);
+    let t0 = std::time::Instant::now();
+    let p = crate::swlc::naive::naive_proximity(ProximityKind::Original, &ctx);
+    std::hint::black_box(&p);
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn print(series: &[Series], title: &str) {
+    println!("# {title}");
+    println!("series\tN\tsecs_ctx\tsecs_factor\tsecs_prod\tsecs_total\tMB\tnnz\tlambda\th_bar");
+    for s in series {
+        for p in &s.points {
+            println!(
+                "{}\t{}\t{:.4}\t{:.4}\t{:.4}\t{:.4}\t{:.1}\t{}\t{:.1}\t{:.1}",
+                s.label,
+                p.n,
+                p.secs_context,
+                p.secs_factors,
+                p.secs_product,
+                p.secs_total(),
+                p.bytes as f64 / 1e6,
+                p.nnz,
+                p.lambda,
+                p.depth
+            );
+        }
+    }
+    println!("\nseries\ttime_slope\tmem_slope");
+    for s in series {
+        println!("{}\t{:.3}\t{:.3}", s.label, s.time_slope, s.mem_slope);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_sweep_runs_and_slopes_subquadratic() {
+        let cfg = SweepConfig { min_n: 1024, max_n: 4096, n_trees: 16, ..Default::default() };
+        let series = run(
+            &Axis::Method(vec![ProximityKind::Original, ProximityKind::OobSeparable]),
+            &cfg,
+        );
+        assert_eq!(series.len(), 2);
+        for s in &series {
+            assert_eq!(s.points.len(), 3);
+            assert!(s.time_slope < 1.9, "{}: slope {}", s.label, s.time_slope);
+            assert!(s.mem_slope < 1.7, "{}: mem slope {}", s.label, s.mem_slope);
+        }
+        // OOB-querying schemes produce sparser kernels than full collisions.
+        let nnz_orig: usize = series[0].points.iter().map(|p| p.nnz).sum();
+        let nnz_oob: usize = series[1].points.iter().map(|p| p.nnz).sum();
+        assert!(nnz_oob < nnz_orig, "oob nnz {nnz_oob} !< original nnz {nnz_orig}");
+    }
+
+    #[test]
+    fn naive_baseline_is_quadratic_shaped() {
+        let t1 = naive_cost(400, "covertype", 8, 3);
+        let t2 = naive_cost(1600, "covertype", 8, 3);
+        // 4x N ⇒ ~16x naive time; accept anything clearly super-linear.
+        assert!(t2 / t1 > 6.0, "t1={t1} t2={t2}");
+    }
+}

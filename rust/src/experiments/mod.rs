@@ -1,0 +1,94 @@
+//! Experiment harnesses: one module per paper figure/table.
+//!
+//! Each harness regenerates the rows/series of its figure or table
+//! (DESIGN.md's experiment index) and prints them as TSV so the shapes
+//! — slopes, orderings, crossovers — can be compared against the paper.
+//! The CLI (`repro bench-*`) and the examples are thin wrappers over
+//! these functions.
+
+pub mod fig41;
+pub mod fig42;
+pub mod fig43;
+pub mod tablei1;
+
+use crate::data::Dataset;
+use crate::forest::{Forest, TrainConfig};
+use crate::swlc::{ForestKernel, ProximityKind};
+
+/// Timing/memory breakdown for one exact-kernel construction, mirroring
+/// what the paper measures in §4.2 ("cached metadata, query maps, and
+/// the resulting sparse kernel; forest training excluded").
+#[derive(Clone, Debug)]
+pub struct KernelCost {
+    pub n: usize,
+    /// Context θ build (routing + leaf aggregation).
+    pub secs_context: f64,
+    /// Weight tables + sparse factors Q/W (+ Wᵀ).
+    pub secs_factors: f64,
+    /// The sparse product Q·Wᵀ.
+    pub secs_product: f64,
+    /// Explicit bytes of factors + kernel (exact accounting).
+    pub bytes: usize,
+    /// nnz of the resulting kernel.
+    pub nnz: usize,
+    /// Measured λ̄ (mean same-leaf population).
+    pub lambda: f64,
+    /// Predicted SpGEMM flops N·T·λ̄ (§3.3).
+    pub flops: u64,
+    /// Mean tree depth h̄.
+    pub depth: f64,
+}
+
+impl KernelCost {
+    pub fn secs_total(&self) -> f64 {
+        self.secs_context + self.secs_factors + self.secs_product
+    }
+}
+
+/// Measure the exact-kernel construction cost on `data` with a trained
+/// forest (training excluded from all timings, as in the paper).
+pub fn measure_kernel_cost(forest: &Forest, data: &Dataset, kind: ProximityKind) -> KernelCost {
+    use crate::bench_support::time;
+    let (ctx, secs_context) = time(|| crate::swlc::EnsembleContext::build(forest, data));
+    let lambda = ctx.mean_lambda();
+    let t0 = std::time::Instant::now();
+    let spec = crate::swlc::weights::assign(kind, &ctx);
+    let qm = crate::swlc::kernel::incidence_matrix(&ctx.leaf_of, &spec.q, ctx.n, ctx.t, ctx.l);
+    let wm = if spec.symmetric {
+        qm.clone()
+    } else {
+        crate::swlc::kernel::incidence_matrix(&ctx.leaf_of, &spec.w, ctx.n, ctx.t, ctx.l)
+    };
+    let wt = wm.transpose();
+    let secs_factors = t0.elapsed().as_secs_f64();
+    let flops = crate::sparse::spgemm_nnz_flops(&qm, &wt);
+    let (p, secs_product) = time(|| crate::sparse::spgemm(&qm, &wt));
+    let bytes = qm.mem_bytes() + wm.mem_bytes() + wt.mem_bytes() + p.mem_bytes();
+    KernelCost {
+        n: data.n,
+        secs_context,
+        secs_factors,
+        secs_product,
+        bytes,
+        nnz: p.nnz(),
+        lambda,
+        flops,
+        depth: forest.mean_depth(),
+    }
+}
+
+/// Train a forest for a scaling point (helper shared by harnesses).
+pub fn train_for(data: &Dataset, kind: ProximityKind, cfg: &TrainConfig) -> Forest {
+    let mut cfg = cfg.clone();
+    if kind == ProximityKind::Boosted {
+        cfg.kind = crate::forest::ForestKind::GradientBoosting;
+        cfg.criterion = crate::forest::Criterion::Mse;
+        cfg.max_depth = cfg.max_depth.or(Some(6));
+    }
+    Forest::train(data, &cfg)
+}
+
+/// Fit the full kernel object (for prediction-oriented harnesses).
+pub fn fit_kernel(forest: &Forest, data: &Dataset, kind: ProximityKind) -> ForestKernel {
+    ForestKernel::fit(forest, data, kind)
+}

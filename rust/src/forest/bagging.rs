@@ -1,0 +1,143 @@
+//! Bagged ensembles: RandomForest and ExtraTrees.
+//!
+//! RandomForest draws a bootstrap per tree and records the in-bag
+//! multiplicities `c_t(x)` — the context the OOB and RF-GAP weight
+//! schemes (App. B.3/B.4) consume. ExtraTrees uses the whole training
+//! set per tree (no bootstrap, sklearn default) with random-threshold
+//! splits.
+
+use super::binning::{BinnedData, Binner};
+use super::tree::{BuildParams, Targets, TreeBuilder};
+use super::{Forest, ForestKind, SplitMode, TrainConfig};
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+pub fn train_bagged(data: &Dataset, binned: &BinnedData, binner: Binner, cfg: &TrainConfig) -> Forest {
+    let n = data.n;
+    let y_class: Vec<u32>;
+    let targets = if data.n_classes > 0 {
+        y_class = data.y.iter().map(|&v| v as u32).collect();
+        Targets::Classification { y: &y_class, n_classes: data.n_classes }
+    } else {
+        Targets::Regression { values: &data.y }
+    };
+
+    let mode = match cfg.kind {
+        ForestKind::ExtraTrees => SplitMode::Random,
+        _ => SplitMode::Best,
+    };
+    let params = BuildParams {
+        max_depth: cfg.max_depth.unwrap_or(usize::MAX),
+        min_samples_leaf: cfg.min_samples_leaf,
+        mtry: cfg.max_features.resolve(data.d),
+        criterion: cfg.criterion,
+        mode,
+        n_bins: cfg.n_bins,
+    };
+    let bootstrap = cfg.kind == ForestKind::RandomForest;
+    let n_draws = cfg.max_samples.unwrap_or(n).min(n * 4);
+
+    let root_rng = Rng::new(cfg.seed);
+    let mut builder = TreeBuilder::new();
+    let mut trees = Vec::with_capacity(cfg.n_trees);
+    let mut inbag: Vec<Vec<u16>> = Vec::new();
+    let mut leaf_offsets = vec![0u32];
+
+    let mut samples: Vec<u32> = Vec::with_capacity(n_draws);
+    for t in 0..cfg.n_trees {
+        let mut rng = root_rng.derive(t as u64 + 1);
+        samples.clear();
+        if bootstrap {
+            let counts = rng.bootstrap_counts(n, n_draws);
+            let mut bag = vec![0u16; n];
+            for (i, &c) in counts.iter().enumerate() {
+                debug_assert!(c < u16::MAX as u32);
+                bag[i] = c as u16;
+                for _ in 0..c {
+                    samples.push(i as u32);
+                }
+            }
+            inbag.push(bag);
+        } else {
+            samples.extend(0..n as u32);
+        }
+        let tree = builder.build(binned, &targets, &mut samples, &params, &mut rng);
+        leaf_offsets.push(leaf_offsets.last().unwrap() + tree.n_leaves as u32);
+        trees.push(tree);
+    }
+
+    let n_trees = trees.len();
+    Forest {
+        kind: cfg.kind,
+        trees,
+        binner,
+        leaf_offsets,
+        inbag,
+        tree_weights: vec![1.0; n_trees],
+        n_classes: data.n_classes,
+        init_score: 0.0,
+        learning_rate: 1.0,
+        n_train: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::MaxFeatures;
+
+    #[test]
+    fn rf_oob_fraction_near_e_inv() {
+        let data = synth::gaussian_blobs(500, 4, 2, 2.0, 1);
+        let cfg = TrainConfig { n_trees: 10, seed: 2, ..Default::default() };
+        let f = Forest::train(&data, &cfg);
+        let mut oob_frac = 0.0;
+        for bag in &f.inbag {
+            oob_frac += bag.iter().filter(|&&c| c == 0).count() as f64 / 500.0;
+        }
+        oob_frac /= 10.0;
+        // (1 - 1/N)^N -> e^-1 ≈ 0.3679
+        assert!((oob_frac - 0.3679).abs() < 0.05, "oob_frac={oob_frac}");
+    }
+
+    #[test]
+    fn max_samples_caps_draws() {
+        let data = synth::gaussian_blobs(300, 4, 2, 2.0, 3);
+        let cfg = TrainConfig { n_trees: 3, max_samples: Some(100), seed: 4, ..Default::default() };
+        let f = Forest::train(&data, &cfg);
+        for bag in &f.inbag {
+            assert_eq!(bag.iter().map(|&c| c as usize).sum::<usize>(), 100);
+        }
+    }
+
+    #[test]
+    fn extratrees_no_inbag_bookkeeping() {
+        let data = synth::gaussian_blobs(200, 4, 2, 2.0, 5);
+        let cfg = TrainConfig {
+            kind: ForestKind::ExtraTrees,
+            n_trees: 4,
+            max_features: MaxFeatures::All,
+            seed: 6,
+            ..Default::default()
+        };
+        let f = Forest::train(&data, &cfg);
+        assert!(f.inbag.is_empty());
+        assert_eq!(f.tree_weights, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn trees_differ_across_seeds_within_forest() {
+        let data = synth::gaussian_blobs(400, 6, 3, 1.5, 7);
+        let cfg = TrainConfig { n_trees: 2, seed: 8, ..Default::default() };
+        let f = Forest::train(&data, &cfg);
+        // Different bootstraps ⇒ the two trees route at least some
+        // samples to different partitions (structure sizes may collide,
+        // leaf *assignments* almost surely cannot).
+        assert_ne!(f.trees[0].nodes.len(), 1);
+        let binned = f.binner.bin(&data);
+        let a: Vec<u32> = (0..data.n).map(|i| f.trees[0].apply_binned(binned.row(i))).collect();
+        let b: Vec<u32> = (0..data.n).map(|i| f.trees[1].apply_binned(binned.row(i))).collect();
+        assert_ne!(a, b);
+    }
+}

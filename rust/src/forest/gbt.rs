@@ -1,0 +1,199 @@
+//! Gradient-boosted trees (least-squares and binary logistic).
+//!
+//! Provides the "sequential forest via gradient boosting" ensemble
+//! context of App. B.6: each tree carries a nonnegative weight `w_t`
+//! reflecting its contribution to the additive model, consumed by the
+//! boosted SWLC proximity. We use `w_t = λ · RMS(leaf values of tree t)`
+//! — an empirical per-tree contribution magnitude in the spirit of
+//! Tan et al. [46] (the paper's reference for boosted proximities).
+
+use super::binning::{BinnedData, Binner};
+use super::tree::{BuildParams, Targets, TreeBuilder};
+use super::{Criterion, Forest, ForestKind, SplitMode, TrainConfig};
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+pub fn train_gbt(data: &Dataset, binned: &BinnedData, binner: Binner, cfg: &TrainConfig) -> Forest {
+    assert!(
+        data.n_classes == 0 || data.n_classes == 2,
+        "GBT supports regression or binary classification (got {} classes); \
+         multiclass boosting is out of scope (documented in DESIGN.md)",
+        data.n_classes
+    );
+    let n = data.n;
+    let binary = data.n_classes == 2;
+    let lr = cfg.learning_rate;
+
+    // Initial score: log-odds (binary) or target mean (regression).
+    let init_score = if binary {
+        let pos = data.y.iter().filter(|&&v| v >= 0.5).count() as f64;
+        let p = (pos / n as f64).clamp(1e-6, 1.0 - 1e-6);
+        (p / (1.0 - p)).ln() as f32
+    } else {
+        (data.y.iter().map(|&v| v as f64).sum::<f64>() / n as f64) as f32
+    };
+
+    let params = BuildParams {
+        max_depth: cfg.max_depth.unwrap_or(6), // boosting wants shallow trees
+        min_samples_leaf: cfg.min_samples_leaf,
+        mtry: cfg.max_features.resolve(data.d),
+        criterion: Criterion::Mse,
+        mode: SplitMode::Best,
+        n_bins: cfg.n_bins,
+    };
+
+    let root_rng = Rng::new(cfg.seed);
+    let mut builder = TreeBuilder::new();
+    let mut trees = Vec::with_capacity(cfg.n_trees);
+    let mut tree_weights = Vec::with_capacity(cfg.n_trees);
+    let mut leaf_offsets = vec![0u32];
+
+    let mut score = vec![init_score; n];
+    let mut residual = vec![0f32; n];
+    let mut samples: Vec<u32> = Vec::with_capacity(n);
+    let mut leaf_of = vec![0u32; n];
+
+    for t in 0..cfg.n_trees {
+        let mut rng = root_rng.derive(t as u64 + 1);
+        // Pseudo-residuals: negative gradient of the loss at current F.
+        if binary {
+            for i in 0..n {
+                let p = sigmoid(score[i]);
+                residual[i] = data.y[i] - p;
+            }
+        } else {
+            for i in 0..n {
+                residual[i] = data.y[i] - score[i];
+            }
+        }
+
+        samples.clear();
+        samples.extend(0..n as u32);
+        let targets = Targets::Regression { values: &residual };
+        let mut tree = builder.build(binned, &targets, &mut samples, &params, &mut rng);
+
+        // Leaf values: Newton step for logistic loss (sum r / sum p(1-p));
+        // least-squares leaves already hold the mean residual.
+        for i in 0..n {
+            leaf_of[i] = tree.apply_binned(binned.row(i));
+        }
+        if binary {
+            let mut num = vec![0f64; tree.n_leaves];
+            let mut den = vec![0f64; tree.n_leaves];
+            for i in 0..n {
+                let l = leaf_of[i] as usize;
+                let p = sigmoid(score[i]) as f64;
+                num[l] += residual[i] as f64;
+                den[l] += (p * (1.0 - p)).max(1e-12);
+            }
+            for l in 0..tree.n_leaves {
+                tree.leaf_stats[l] = (num[l] / den[l]).clamp(-4.0, 4.0) as f32;
+            }
+        }
+
+        // Update scores and record the tree's additive contribution.
+        let mut ss = 0f64;
+        for i in 0..n {
+            let v = tree.leaf_stats[leaf_of[i] as usize];
+            score[i] += lr * v;
+        }
+        for l in 0..tree.n_leaves {
+            let v = tree.leaf_stats[l] as f64;
+            ss += v * v;
+        }
+        let w_t = (lr as f64 * (ss / tree.n_leaves.max(1) as f64).sqrt()).max(1e-12) as f32;
+        tree_weights.push(w_t);
+
+        leaf_offsets.push(leaf_offsets.last().unwrap() + tree.n_leaves as u32);
+        trees.push(tree);
+    }
+
+    Forest {
+        kind: ForestKind::GradientBoosting,
+        trees,
+        binner,
+        leaf_offsets,
+        inbag: vec![],
+        tree_weights,
+        n_classes: data.n_classes,
+        init_score,
+        learning_rate: lr,
+        n_train: n,
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn gbt_cfg(n_trees: usize, seed: u64) -> TrainConfig {
+        TrainConfig {
+            kind: ForestKind::GradientBoosting,
+            n_trees,
+            max_depth: Some(4),
+            criterion: Criterion::Mse,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn regression_loss_decreases_with_rounds() {
+        let mut data = synth::gaussian_blobs(300, 4, 2, 2.0, 1);
+        data.n_classes = 0; // treat labels as a regression target
+        let mse = |f: &Forest| {
+            let preds = f.predict(&data);
+            preds
+                .iter()
+                .zip(&data.y)
+                .map(|(p, y)| ((p - y) as f64).powi(2))
+                .sum::<f64>()
+                / data.n as f64
+        };
+        let f5 = Forest::train(&data, &gbt_cfg(5, 2));
+        let f80 = Forest::train(&data, &gbt_cfg(80, 2));
+        assert!(mse(&f80) < mse(&f5), "{} !< {}", mse(&f80), mse(&f5));
+        assert!(mse(&f80) < 0.12, "mse={}", mse(&f80));
+    }
+
+    #[test]
+    fn binary_classification_learns() {
+        let data = synth::gaussian_blobs(400, 5, 2, 2.0, 3);
+        let f = Forest::train(&data, &gbt_cfg(40, 4));
+        assert!(f.accuracy(&data) > 0.95, "acc={}", f.accuracy(&data));
+    }
+
+    #[test]
+    fn tree_weights_positive_and_shrinking_trend() {
+        let data = synth::gaussian_blobs(400, 5, 2, 2.0, 5);
+        let f = Forest::train(&data, &gbt_cfg(30, 6));
+        assert!(f.tree_weights.iter().all(|&w| w > 0.0));
+        // Later trees fit smaller residuals: average of last 5 weights
+        // should be below average of first 5.
+        let first: f32 = f.tree_weights[..5].iter().sum();
+        let last: f32 = f.tree_weights[25..].iter().sum();
+        assert!(last < first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn init_score_is_log_odds() {
+        let data = synth::gaussian_blobs(200, 3, 2, 2.0, 7);
+        let pos = data.y.iter().filter(|&&v| v >= 0.5).count() as f64 / 200.0;
+        let f = Forest::train(&data, &gbt_cfg(2, 8));
+        let expect = (pos / (1.0 - pos)).ln() as f32;
+        assert!((f.init_score - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiclass")]
+    fn multiclass_rejected() {
+        let data = synth::gaussian_blobs(100, 3, 3, 2.0, 9);
+        Forest::train(&data, &gbt_cfg(2, 10));
+    }
+}

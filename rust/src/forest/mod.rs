@@ -1,0 +1,419 @@
+//! From-scratch decision forests.
+//!
+//! The paper treats the ensemble as a given "ensemble context" `(T, θ)`
+//! produced by any standard forest learner (scikit-learn in their
+//! implementation). We build the learners themselves: CART trees over
+//! **quantile-binned** features (256 bins, the LightGBM-style histogram
+//! trick, giving `O(node_size + bins·classes)` split search), bagged
+//! random forests with full in-bag/OOB bookkeeping (needed by the OOB
+//! and RF-GAP weight schemes of App. B), extremely randomized trees
+//! (Fig. H.1's RF-vs-ET ablation), and gradient-boosted trees with
+//! per-tree weights (the boosted proximity of App. B.6).
+
+mod bagging;
+mod binning;
+mod gbt;
+mod tree;
+
+pub use binning::{BinnedData, Binner};
+pub use tree::{BuildParams, Node, Targets, Tree, TreeBuilder, LEAF};
+
+/// Split search strategy: exhaustive best cut (CART) or a single random
+/// cut per candidate feature (ExtraTrees).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitMode {
+    Best,
+    Random,
+}
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Which ensemble algorithm to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForestKind {
+    /// Breiman random forest: bootstrap + best-split CART.
+    RandomForest,
+    /// Extremely randomized trees: no bootstrap, random thresholds.
+    ExtraTrees,
+    /// Gradient-boosted trees (binary logistic or least-squares).
+    GradientBoosting,
+}
+
+/// Split quality criterion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    Gini,
+    Entropy,
+    /// Mean squared error (regression / boosting residuals).
+    Mse,
+}
+
+/// How many features to consider per split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MaxFeatures {
+    Sqrt,
+    All,
+    Fraction(f32),
+}
+
+impl MaxFeatures {
+    pub fn resolve(&self, d: usize) -> usize {
+        match self {
+            MaxFeatures::Sqrt => ((d as f64).sqrt().ceil() as usize).clamp(1, d),
+            MaxFeatures::All => d,
+            MaxFeatures::Fraction(f) => (((d as f32) * f).ceil() as usize).clamp(1, d),
+        }
+    }
+}
+
+/// Forest training hyperparameters (mirrors the knobs the paper ablates:
+/// `n_trees` = T, `max_depth` = d, `min_samples_leaf` = n_min).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub kind: ForestKind,
+    pub n_trees: usize,
+    pub max_depth: Option<usize>,
+    pub min_samples_leaf: usize,
+    pub max_features: MaxFeatures,
+    pub criterion: Criterion,
+    /// Draws per bootstrap; `None` = N (classic bagging). Smaller values
+    /// (sklearn's `max_samples`) bound per-tree training cost at large N.
+    pub max_samples: Option<usize>,
+    /// Histogram bins per feature (≤ 256).
+    pub n_bins: usize,
+    /// GBT only: shrinkage.
+    pub learning_rate: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            kind: ForestKind::RandomForest,
+            n_trees: 100,
+            max_depth: None,
+            min_samples_leaf: 1,
+            max_features: MaxFeatures::Sqrt,
+            criterion: Criterion::Gini,
+            max_samples: None,
+            n_bins: 256,
+            learning_rate: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// A trained ensemble: trees, the global leaf indexing of §2.2, per-tree
+/// in-bag multiplicities (the `c_t` of App. B.4; 0 ⇒ out-of-bag), and
+/// per-tree additive weights (GBT).
+pub struct Forest {
+    pub kind: ForestKind,
+    pub trees: Vec<Tree>,
+    pub binner: Binner,
+    /// `leaf_offsets[t]` = global index of leaf 0 of tree `t`;
+    /// `leaf_offsets[T]` = L, the total leaf count.
+    pub leaf_offsets: Vec<u32>,
+    /// Per-tree in-bag multiplicities over the training set, length N
+    /// each. Empty for ExtraTrees/GBT (no bootstrap ⇒ every sample
+    /// in-bag once).
+    pub inbag: Vec<Vec<u16>>,
+    /// Per-tree weight in the additive model (GBT); 1 for bagged kinds.
+    pub tree_weights: Vec<f32>,
+    /// Number of classes (0 ⇒ regression).
+    pub n_classes: usize,
+    /// GBT binary classification: initial log-odds.
+    pub init_score: f32,
+    /// GBT shrinkage used at prediction time (1.0 for bagged kinds).
+    pub learning_rate: f32,
+    pub n_train: usize,
+}
+
+impl Forest {
+    /// Train an ensemble on a dataset according to `cfg`.
+    pub fn train(data: &Dataset, cfg: &TrainConfig) -> Forest {
+        let binner = Binner::fit(data, cfg.n_bins, &mut Rng::new(cfg.seed ^ 0xB1AAED));
+        let binned = binner.bin(data);
+        match cfg.kind {
+            ForestKind::RandomForest | ForestKind::ExtraTrees => {
+                bagging::train_bagged(data, &binned, binner, cfg)
+            }
+            ForestKind::GradientBoosting => gbt::train_gbt(data, &binned, binner, cfg),
+        }
+    }
+
+    /// Total number of leaves L across the ensemble.
+    pub fn n_leaves_total(&self) -> usize {
+        *self.leaf_offsets.last().unwrap() as usize
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Average tree height h̄ (max depth per tree, averaged).
+    pub fn mean_depth(&self) -> f64 {
+        self.trees.iter().map(|t| t.depth as f64).sum::<f64>() / self.trees.len().max(1) as f64
+    }
+
+    /// Route every sample of `data` through every tree: returns the
+    /// sample-major `N×T` matrix of **global** leaf ids
+    /// (`out[i*T + t] = ℓ_t(x_i)`), the `ℓ_t` maps of §2.2. Cost O(N·T·h̄).
+    pub fn apply(&self, data: &Dataset) -> Vec<u32> {
+        let binned = self.binner.bin(data);
+        self.apply_binned(&binned)
+    }
+
+    /// As [`Forest::apply`] but over pre-binned rows.
+    pub fn apply_binned(&self, binned: &BinnedData) -> Vec<u32> {
+        let (n, t_total) = (binned.n, self.trees.len());
+        let mut out = vec![0u32; n * t_total];
+        for i in 0..n {
+            let row = binned.row(i);
+            let dst = &mut out[i * t_total..(i + 1) * t_total];
+            for (t, tree) in self.trees.iter().enumerate() {
+                dst[t] = self.leaf_offsets[t] + tree.apply_binned(row);
+            }
+        }
+        out
+    }
+
+    /// Ensemble prediction for one binned row: classification returns the
+    /// argmax class as f32; regression/GBT returns the additive score.
+    pub fn predict_row(&self, row: &[u8]) -> f32 {
+        match self.kind {
+            ForestKind::GradientBoosting => {
+                // NOTE: `tree_weights` are the *proximity* weights of
+                // App. B.6; prediction uses the additive model directly,
+                // i.e. shrinkage × leaf value.
+                let mut f = self.init_score;
+                for tree in &self.trees {
+                    let leaf = tree.apply_binned(row) as usize;
+                    f += self.learning_rate * tree.leaf_stats[leaf];
+                }
+                if self.n_classes == 2 {
+                    // logistic: class = 1[σ(f) > .5] = 1[f > 0]
+                    (f > 0.0) as u32 as f32
+                } else {
+                    f
+                }
+            }
+            _ => {
+                if self.n_classes == 0 {
+                    let mut acc = 0f64;
+                    for tree in &self.trees {
+                        acc += tree.leaf_stats[tree.apply_binned(row) as usize] as f64;
+                    }
+                    (acc / self.trees.len() as f64) as f32
+                } else {
+                    let c = self.n_classes;
+                    let mut votes = vec![0f64; c];
+                    for tree in &self.trees {
+                        let leaf = tree.apply_binned(row) as usize;
+                        let stats = &tree.leaf_stats[leaf * c..(leaf + 1) * c];
+                        let total: f32 = stats.iter().sum();
+                        if total > 0.0 {
+                            for (vk, &s) in votes.iter_mut().zip(stats) {
+                                *vk += (s / total) as f64;
+                            }
+                        }
+                    }
+                    argmax(&votes) as f32
+                }
+            }
+        }
+    }
+
+    /// Predictions for a whole dataset.
+    pub fn predict(&self, data: &Dataset) -> Vec<f32> {
+        let binned = self.binner.bin(data);
+        (0..binned.n).map(|i| self.predict_row(binned.row(i))).collect()
+    }
+
+    /// Classification accuracy against the dataset labels.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let preds = self.predict(data);
+        let hits = preds
+            .iter()
+            .zip(&data.y)
+            .filter(|(p, y)| (**p - **y).abs() < 0.5)
+            .count();
+        hits as f64 / data.n.max(1) as f64
+    }
+
+    /// OOB class votes (bagged classifiers only): for each training
+    /// sample, soft votes aggregated over trees where it is out-of-bag.
+    /// Returns an `N × C` row-major matrix; rows that were never OOB are
+    /// all-zero. RF-GAP's defining property is that proximity-weighted
+    /// prediction reproduces the argmax of these votes.
+    pub fn oob_votes(&self, binned: &BinnedData) -> Vec<f64> {
+        assert!(self.n_classes >= 2, "oob_votes requires classification");
+        assert!(!self.inbag.is_empty(), "oob_votes requires bootstrap bookkeeping");
+        let c = self.n_classes;
+        let mut votes = vec![0f64; binned.n * c];
+        for (tree, inbag) in self.trees.iter().zip(&self.inbag) {
+            for i in 0..binned.n {
+                if inbag[i] == 0 {
+                    let leaf = tree.apply_binned(binned.row(i)) as usize;
+                    let stats = &tree.leaf_stats[leaf * c..(leaf + 1) * c];
+                    let total: f32 = stats.iter().sum();
+                    if total > 0.0 {
+                        for k in 0..c {
+                            votes[i * c + k] += (stats[k] / total) as f64;
+                        }
+                    }
+                }
+            }
+        }
+        votes
+    }
+}
+
+pub(crate) fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn toy(n: usize, seed: u64) -> Dataset {
+        synth::gaussian_blobs(n, 5, 3, 2.5, seed)
+    }
+
+    #[test]
+    fn rf_fits_separable_data() {
+        let data = toy(400, 1);
+        let cfg = TrainConfig { n_trees: 20, seed: 3, ..Default::default() };
+        let f = Forest::train(&data, &cfg);
+        assert_eq!(f.n_trees(), 20);
+        assert!(f.accuracy(&data) > 0.95, "acc={}", f.accuracy(&data));
+    }
+
+    #[test]
+    fn extratrees_fit() {
+        let data = toy(400, 2);
+        let cfg = TrainConfig {
+            kind: ForestKind::ExtraTrees,
+            n_trees: 20,
+            seed: 4,
+            ..Default::default()
+        };
+        let f = Forest::train(&data, &cfg);
+        assert!(f.inbag.is_empty());
+        assert!(f.accuracy(&data) > 0.9, "acc={}", f.accuracy(&data));
+    }
+
+    #[test]
+    fn gbt_binary_fit() {
+        let data = synth::gaussian_blobs(400, 4, 2, 2.5, 5);
+        let cfg = TrainConfig {
+            kind: ForestKind::GradientBoosting,
+            n_trees: 30,
+            max_depth: Some(4),
+            criterion: Criterion::Mse,
+            seed: 6,
+            ..Default::default()
+        };
+        let f = Forest::train(&data, &cfg);
+        assert!(f.accuracy(&data) > 0.9, "acc={}", f.accuracy(&data));
+        assert!(f.tree_weights.iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn leaf_offsets_partition_global_index_space() {
+        let data = toy(200, 7);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 8, seed: 1, ..Default::default() });
+        assert_eq!(f.leaf_offsets.len(), 9);
+        for t in 0..8 {
+            assert_eq!(
+                f.leaf_offsets[t + 1] - f.leaf_offsets[t],
+                f.trees[t].n_leaves as u32
+            );
+        }
+    }
+
+    #[test]
+    fn apply_returns_leaves_in_tree_range() {
+        let data = toy(150, 8);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 5, seed: 2, ..Default::default() });
+        let leaves = f.apply(&data);
+        assert_eq!(leaves.len(), 150 * 5);
+        for i in 0..150 {
+            for t in 0..5 {
+                let g = leaves[i * 5 + t];
+                assert!(g >= f.leaf_offsets[t] && g < f.leaf_offsets[t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_is_deterministic() {
+        let data = toy(100, 9);
+        let cfg = TrainConfig { n_trees: 6, seed: 11, ..Default::default() };
+        let f1 = Forest::train(&data, &cfg);
+        let f2 = Forest::train(&data, &cfg);
+        assert_eq!(f1.apply(&data), f2.apply(&data));
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let data = toy(500, 10);
+        let f = Forest::train(
+            &data,
+            &TrainConfig { n_trees: 5, max_depth: Some(3), seed: 1, ..Default::default() },
+        );
+        for t in &f.trees {
+            assert!(t.depth <= 3, "depth={}", t.depth);
+            assert!(t.n_leaves <= 8);
+        }
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let data = toy(300, 11);
+        let min = 20;
+        let f = Forest::train(
+            &data,
+            &TrainConfig { n_trees: 5, min_samples_leaf: min, seed: 1, ..Default::default() },
+        );
+        // Every leaf must hold >= min in-bag draws: check via routing the
+        // bootstrap multiset.
+        let binned = f.binner.bin(&data);
+        for (t, tree) in f.trees.iter().enumerate() {
+            let mut counts = vec![0usize; tree.n_leaves];
+            for i in 0..data.n {
+                let leaf = tree.apply_binned(binned.row(i)) as usize;
+                counts[leaf] += f.inbag[t][i] as usize;
+            }
+            for (leaf, &c) in counts.iter().enumerate() {
+                assert!(c >= min, "tree {t} leaf {leaf} has {c} < {min}");
+            }
+        }
+    }
+
+    #[test]
+    fn inbag_counts_sum_to_draws() {
+        let data = toy(256, 12);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 4, seed: 9, ..Default::default() });
+        for inbag in &f.inbag {
+            let total: usize = inbag.iter().map(|&c| c as usize).sum();
+            assert_eq!(total, 256);
+        }
+    }
+
+    #[test]
+    fn max_features_resolution() {
+        assert_eq!(MaxFeatures::Sqrt.resolve(54), 8);
+        assert_eq!(MaxFeatures::All.resolve(10), 10);
+        assert_eq!(MaxFeatures::Fraction(0.5).resolve(10), 5);
+        assert_eq!(MaxFeatures::Fraction(0.01).resolve(10), 1);
+    }
+}

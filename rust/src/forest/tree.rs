@@ -1,0 +1,642 @@
+//! CART decision trees over binned features.
+//!
+//! One builder serves all three ensemble kinds: best-split search
+//! (RandomForest, GBT) and random-threshold search (ExtraTrees) share
+//! the same per-node histogram; Gini / entropy (classification) and MSE
+//! (regression & boosting residuals) share the same scan loop. The
+//! builder operates on a *multiset* of sample indices, so bootstrap
+//! multiplicities come for free (an in-bag sample drawn twice simply
+//! appears twice).
+
+use super::binning::BinnedData;
+use super::{Criterion, SplitMode};
+use crate::rng::Rng;
+
+/// Sentinel feature id marking a leaf node.
+pub const LEAF: u16 = u16::MAX;
+
+/// One tree node. Internal: `row[feature] <= threshold` goes `left`,
+/// else `right` (child node indices). Leaf: `feature == LEAF` and
+/// `left` holds the tree-local leaf id.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub feature: u16,
+    pub threshold: u8,
+    pub left: u32,
+    pub right: u32,
+}
+
+/// A trained tree plus per-leaf statistics.
+///
+/// `leaf_stats` layout: classification ⇒ `n_leaves × C` class counts
+/// (bootstrap-weighted); regression ⇒ `n_leaves` leaf values.
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub n_leaves: usize,
+    pub leaf_stats: Vec<f32>,
+    pub depth: usize,
+}
+
+impl Tree {
+    /// Route one binned row to its tree-local leaf id — the `ℓ_t` map of
+    /// §2.2 (O(h) pointer chase).
+    #[inline]
+    pub fn apply_binned(&self, row: &[u8]) -> u32 {
+        let mut node = 0usize;
+        loop {
+            let n = unsafe { self.nodes.get_unchecked(node) };
+            if n.feature == LEAF {
+                return n.left;
+            }
+            node = if row[n.feature as usize] <= n.threshold { n.left } else { n.right } as usize;
+        }
+    }
+}
+
+/// Training targets.
+pub enum Targets<'a> {
+    /// Class labels in `0..n_classes`.
+    Classification { y: &'a [u32], n_classes: usize },
+    /// Real-valued targets (regression trees / boosting residuals).
+    Regression { values: &'a [f32] },
+}
+
+/// Per-tree build parameters (resolved from `TrainConfig`).
+pub struct BuildParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub mtry: usize,
+    pub criterion: Criterion,
+    pub mode: SplitMode,
+    pub n_bins: usize,
+}
+
+struct Work {
+    node: u32,
+    start: usize,
+    end: usize,
+    depth: usize,
+}
+
+const N_BINS_MAX: usize = 256;
+const EPS_GAIN: f64 = 1e-9;
+
+/// Scratch-carrying tree builder; reusable across trees of an ensemble.
+pub struct TreeBuilder {
+    /// class histogram: [bin * C + k], cleared lazily via `touched`.
+    hist: Vec<u32>,
+    /// regression: per-bin (sum, count).
+    hist_sum: Vec<f64>,
+    hist_cnt: Vec<u32>,
+    touched: Vec<u16>,
+    feat_pool: Vec<u16>,
+}
+
+impl TreeBuilder {
+    pub fn new() -> Self {
+        TreeBuilder {
+            hist: vec![],
+            hist_sum: vec![0.0; N_BINS_MAX],
+            hist_cnt: vec![0; N_BINS_MAX],
+            touched: Vec::with_capacity(N_BINS_MAX),
+            feat_pool: vec![],
+        }
+    }
+
+    /// Build a tree on the multiset `samples` (indices into `bins`,
+    /// repeats = bootstrap multiplicity). `samples` is permuted in place.
+    pub fn build(
+        &mut self,
+        bins: &BinnedData,
+        targets: &Targets,
+        samples: &mut [u32],
+        p: &BuildParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        let n_classes = match targets {
+            Targets::Classification { n_classes, .. } => *n_classes,
+            Targets::Regression { .. } => 0,
+        };
+        if n_classes > 0 {
+            self.hist.resize(N_BINS_MAX * n_classes, 0);
+        }
+        if self.feat_pool.len() != bins.d {
+            self.feat_pool = (0..bins.d as u16).collect();
+        }
+
+        let mut nodes: Vec<Node> = vec![Node { feature: LEAF, threshold: 0, left: 0, right: 0 }];
+        let mut leaf_stats: Vec<f32> = vec![];
+        let mut n_leaves = 0usize;
+        let mut max_depth_seen = 0usize;
+
+        let mut stack = vec![Work { node: 0, start: 0, end: samples.len(), depth: 0 }];
+        while let Some(w) = stack.pop() {
+            max_depth_seen = max_depth_seen.max(w.depth);
+            let seg = &samples[w.start..w.end];
+            let size = seg.len();
+
+            let split = if w.depth >= p.max_depth || size < 2 * p.min_samples_leaf || size < 2 {
+                None
+            } else {
+                self.find_split(bins, targets, seg, p, rng)
+            };
+
+            match split {
+                Some((feature, threshold, _gain)) => {
+                    let mid = partition(bins, &mut samples[w.start..w.end], feature, threshold)
+                        + w.start;
+                    debug_assert!(mid > w.start && mid < w.end);
+                    let left_id = nodes.len() as u32;
+                    nodes.push(Node { feature: LEAF, threshold: 0, left: 0, right: 0 });
+                    let right_id = nodes.len() as u32;
+                    nodes.push(Node { feature: LEAF, threshold: 0, left: 0, right: 0 });
+                    nodes[w.node as usize] =
+                        Node { feature: feature as u16, threshold, left: left_id, right: right_id };
+                    stack.push(Work { node: left_id, start: w.start, end: mid, depth: w.depth + 1 });
+                    stack.push(Work { node: right_id, start: mid, end: w.end, depth: w.depth + 1 });
+                }
+                None => {
+                    // Finalize a leaf: record stats, assign local id.
+                    let leaf_id = n_leaves as u32;
+                    n_leaves += 1;
+                    nodes[w.node as usize] =
+                        Node { feature: LEAF, threshold: 0, left: leaf_id, right: 0 };
+                    match targets {
+                        Targets::Classification { y, n_classes } => {
+                            let base = leaf_stats.len();
+                            leaf_stats.resize(base + n_classes, 0.0);
+                            for &s in seg {
+                                leaf_stats[base + y[s as usize] as usize] += 1.0;
+                            }
+                        }
+                        Targets::Regression { values } => {
+                            let sum: f64 = seg.iter().map(|&s| values[s as usize] as f64).sum();
+                            leaf_stats.push((sum / size.max(1) as f64) as f32);
+                        }
+                    }
+                }
+            }
+        }
+        Tree { nodes, n_leaves, leaf_stats, depth: max_depth_seen }
+    }
+
+    /// Best (feature, threshold, gain) over `mtry` sampled features, or
+    /// `None` if the node is pure / no admissible split improves.
+    fn find_split(
+        &mut self,
+        bins: &BinnedData,
+        targets: &Targets,
+        seg: &[u32],
+        p: &BuildParams,
+        rng: &mut Rng,
+    ) -> Option<(usize, u8, f64)> {
+        // Purity check + parent score.
+        let parent_score = match targets {
+            Targets::Classification { y, n_classes } => {
+                let mut counts = vec![0u32; *n_classes];
+                for &s in seg {
+                    counts[y[s as usize] as usize] += 1;
+                }
+                if counts.iter().any(|&c| c as usize == seg.len()) {
+                    return None; // pure
+                }
+                class_score(&counts, seg.len(), p.criterion)
+            }
+            Targets::Regression { values } => {
+                let (mut sum, mut sumsq) = (0f64, 0f64);
+                for &s in seg {
+                    let v = values[s as usize] as f64;
+                    sum += v;
+                    sumsq += v * v;
+                }
+                if sumsq - sum * sum / (seg.len() as f64) < 1e-12 {
+                    return None; // constant target
+                }
+                sum * sum / seg.len() as f64
+            }
+        };
+
+        // Sample the feature subset (partial Fisher–Yates over the pool).
+        let d = bins.d;
+        let mtry = p.mtry.min(d);
+        for i in 0..mtry {
+            let j = i + rng.gen_range(d - i);
+            self.feat_pool.swap(i, j);
+        }
+
+        let mut best: Option<(usize, u8, f64)> = None;
+        for fi in 0..mtry {
+            let f = self.feat_pool[fi] as usize;
+            let cand = match targets {
+                Targets::Classification { y, n_classes } => {
+                    self.scan_feature_class(bins, y, *n_classes, seg, f, p, rng)
+                }
+                Targets::Regression { values } => self.scan_feature_reg(bins, values, seg, f, p, rng),
+            };
+            if let Some((thr, score)) = cand {
+                let gain = score - parent_score;
+                if gain > EPS_GAIN && best.map_or(true, |(_, _, g)| gain > g) {
+                    best = Some((f, thr, gain));
+                }
+            }
+        }
+        best
+    }
+
+    /// Classification scan: returns (threshold, children score) where
+    /// score = Σ_child Σ_k c_k²/n_child (Gini) or -Σ_child n_child·H_child
+    /// (entropy); both are "larger is better" with the matching parent
+    /// score convention in `find_split`.
+    fn scan_feature_class(
+        &mut self,
+        bins: &BinnedData,
+        y: &[u32],
+        c: usize,
+        seg: &[u32],
+        f: usize,
+        p: &BuildParams,
+        rng: &mut Rng,
+    ) -> Option<(u8, f64)> {
+        // Build per-bin class histogram, clearing lazily.
+        self.touched.clear();
+        for &s in seg {
+            let b = bins.bins[s as usize * bins.d + f] as usize;
+            let slot = b * c;
+            let occupied = self.hist[slot..slot + c].iter().any(|&v| v != 0);
+            if !occupied {
+                self.touched.push(b as u16);
+            }
+            self.hist[slot + y[s as usize] as usize] += 1;
+        }
+        self.touched.sort_unstable();
+        let result = self.eval_class_thresholds(c, seg.len(), p, rng);
+        // Clear touched bins for the next feature.
+        for &b in &self.touched {
+            let slot = b as usize * c;
+            self.hist[slot..slot + c].fill(0);
+        }
+        result
+    }
+
+    fn eval_class_thresholds(
+        &self,
+        c: usize,
+        n: usize,
+        p: &BuildParams,
+        rng: &mut Rng,
+    ) -> Option<(u8, f64)> {
+        if self.touched.len() < 2 {
+            return None;
+        }
+        let total: Vec<u32> = (0..c)
+            .map(|k| self.touched.iter().map(|&b| self.hist[b as usize * c + k]).sum())
+            .collect();
+
+        let thr_choice: Option<u8> = match p.mode {
+            SplitMode::Best => None,
+            SplitMode::Random => {
+                // ExtraTrees: a single random cut in [lo, hi).
+                let lo = *self.touched.first().unwrap();
+                let hi = *self.touched.last().unwrap();
+                Some((lo + rng.gen_range((hi - lo) as usize) as u16) as u8)
+            }
+        };
+
+        let mut left = vec![0u32; c];
+        let mut nl: usize;
+        let mut best: Option<(u8, f64)> = None;
+        for (i, &b) in self.touched.iter().enumerate() {
+            if i == self.touched.len() - 1 {
+                break;
+            }
+            let slot = b as usize * c;
+            for k in 0..c {
+                left[k] += self.hist[slot + k];
+            }
+            nl = left.iter().map(|&v| v as usize).sum();
+            let nr = n - nl;
+            if nl < p.min_samples_leaf || nr < p.min_samples_leaf {
+                continue;
+            }
+            let thr = b as u8;
+            if let Some(tc) = thr_choice {
+                // Random mode: evaluate only at the drawn cut. The drawn
+                // cut may fall between occupied bins; the effective split
+                // is at the largest occupied bin ≤ tc, which is exactly
+                // the boundary we pass through here.
+                let next = self.touched[i + 1] as u8;
+                if !(thr <= tc && tc < next) {
+                    continue;
+                }
+            }
+            let right: Vec<u32> = (0..c).map(|k| total[k] - left[k]).collect();
+            let score =
+                class_score(&left, nl, p.criterion) + class_score(&right, nr, p.criterion);
+            if best.map_or(true, |(_, s)| score > s) {
+                best = Some((thr, score));
+            }
+        }
+        best
+    }
+
+    /// Regression scan (MSE): score = Σ_child sum²/n_child.
+    fn scan_feature_reg(
+        &mut self,
+        bins: &BinnedData,
+        values: &[f32],
+        seg: &[u32],
+        f: usize,
+        p: &BuildParams,
+        rng: &mut Rng,
+    ) -> Option<(u8, f64)> {
+        self.touched.clear();
+        for &s in seg {
+            let b = bins.bins[s as usize * bins.d + f] as usize;
+            if self.hist_cnt[b] == 0 {
+                self.touched.push(b as u16);
+            }
+            self.hist_cnt[b] += 1;
+            self.hist_sum[b] += values[s as usize] as f64;
+        }
+        self.touched.sort_unstable();
+
+        let result = (|| {
+            if self.touched.len() < 2 {
+                return None;
+            }
+            let total_sum: f64 = self.touched.iter().map(|&b| self.hist_sum[b as usize]).sum();
+            let n = seg.len();
+
+            let thr_choice: Option<u8> = match p.mode {
+                SplitMode::Best => None,
+                SplitMode::Random => {
+                    let lo = *self.touched.first().unwrap();
+                    let hi = *self.touched.last().unwrap();
+                    Some((lo + rng.gen_range((hi - lo) as usize) as u16) as u8)
+                }
+            };
+
+            let mut lsum = 0f64;
+            let mut ln = 0usize;
+            let mut best: Option<(u8, f64)> = None;
+            for (i, &b) in self.touched.iter().enumerate() {
+                if i == self.touched.len() - 1 {
+                    break;
+                }
+                lsum += self.hist_sum[b as usize];
+                ln += self.hist_cnt[b as usize] as usize;
+                let rn = n - ln;
+                if ln < p.min_samples_leaf || rn < p.min_samples_leaf {
+                    continue;
+                }
+                let thr = b as u8;
+                if let Some(tc) = thr_choice {
+                    let next = self.touched[i + 1] as u8;
+                    if !(thr <= tc && tc < next) {
+                        continue;
+                    }
+                }
+                let rsum = total_sum - lsum;
+                let score = lsum * lsum / ln as f64 + rsum * rsum / rn as f64;
+                if best.map_or(true, |(_, s)| score > s) {
+                    best = Some((thr, score));
+                }
+            }
+            best
+        })();
+
+        for &b in &self.touched {
+            self.hist_cnt[b as usize] = 0;
+            self.hist_sum[b as usize] = 0.0;
+        }
+        result
+    }
+}
+
+impl Default for TreeBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// "Larger is better" class purity score: Gini ⇒ Σ c²/n,
+/// entropy ⇒ Σ c·log(c/n) (= -n·H, so summing children and comparing to
+/// the parent value is exactly information gain scaled by n).
+fn class_score(counts: &[u32], n: usize, criterion: Criterion) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    match criterion {
+        Criterion::Gini => {
+            let s: f64 = counts.iter().map(|&c| (c as f64) * (c as f64)).sum();
+            s / n as f64
+        }
+        Criterion::Entropy | Criterion::Mse => {
+            let nf = n as f64;
+            counts
+                .iter()
+                .filter(|&&c| c > 0)
+                .map(|&c| (c as f64) * ((c as f64) / nf).ln())
+                .sum()
+        }
+    }
+}
+
+/// In-place partition of a sample segment by `bin[f] <= thr`; returns the
+/// split point (count of left samples).
+fn partition(bins: &BinnedData, seg: &mut [u32], f: usize, thr: u8) -> usize {
+    let d = bins.d;
+    let (mut i, mut j) = (0usize, seg.len());
+    while i < j {
+        if bins.bins[seg[i] as usize * d + f] <= thr {
+            i += 1;
+        } else {
+            j -= 1;
+            seg.swap(i, j);
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::Binner;
+
+    fn setup(n: usize, d: usize, c: usize, seed: u64) -> (BinnedData, Vec<u32>) {
+        let data = synth::gaussian_blobs(n, d, c, 2.5, seed);
+        let binner = Binner::fit(&data, 256, &mut Rng::new(seed));
+        let y: Vec<u32> = data.y.iter().map(|&v| v as u32).collect();
+        (binner.bin(&data), y)
+    }
+
+    fn params() -> BuildParams {
+        BuildParams {
+            max_depth: usize::MAX,
+            min_samples_leaf: 1,
+            mtry: 3,
+            criterion: Criterion::Gini,
+            mode: SplitMode::Best,
+            n_bins: 256,
+        }
+    }
+
+    fn leaf_purity(tree: &Tree, bins: &BinnedData, y: &[u32], c: usize) -> f64 {
+        let mut hits = 0usize;
+        for i in 0..bins.n {
+            let leaf = tree.apply_binned(bins.row(i)) as usize;
+            let stats = &tree.leaf_stats[leaf * c..(leaf + 1) * c];
+            let pred = stats
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as u32 == y[i] {
+                hits += 1;
+            }
+        }
+        hits as f64 / bins.n as f64
+    }
+
+    #[test]
+    fn hand_built_tree_routes() {
+        // root: f0 <= 3 -> leaf0 else (f1 <= 1 -> leaf1 else leaf2)
+        let tree = Tree {
+            nodes: vec![
+                Node { feature: 0, threshold: 3, left: 1, right: 2 },
+                Node { feature: LEAF, threshold: 0, left: 0, right: 0 },
+                Node { feature: 1, threshold: 1, left: 3, right: 4 },
+                Node { feature: LEAF, threshold: 0, left: 1, right: 0 },
+                Node { feature: LEAF, threshold: 0, left: 2, right: 0 },
+            ],
+            n_leaves: 3,
+            leaf_stats: vec![],
+            depth: 2,
+        };
+        assert_eq!(tree.apply_binned(&[0, 0]), 0);
+        assert_eq!(tree.apply_binned(&[3, 9]), 0);
+        assert_eq!(tree.apply_binned(&[4, 0]), 1);
+        assert_eq!(tree.apply_binned(&[4, 2]), 2);
+    }
+
+    #[test]
+    fn fits_separable_blobs_to_purity() {
+        let (bins, y) = setup(300, 4, 3, 42);
+        let targets = Targets::Classification { y: &y, n_classes: 3 };
+        let mut samples: Vec<u32> = (0..300).collect();
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &params(), &mut Rng::new(1));
+        assert!(tree.n_leaves >= 3);
+        assert!(leaf_purity(&tree, &bins, &y, 3) > 0.98);
+    }
+
+    #[test]
+    fn entropy_criterion_also_fits() {
+        let (bins, y) = setup(300, 4, 3, 43);
+        let targets = Targets::Classification { y: &y, n_classes: 3 };
+        let mut samples: Vec<u32> = (0..300).collect();
+        let mut p = params();
+        p.criterion = Criterion::Entropy;
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &p, &mut Rng::new(1));
+        assert!(leaf_purity(&tree, &bins, &y, 3) > 0.98);
+    }
+
+    #[test]
+    fn random_mode_builds_working_tree() {
+        let (bins, y) = setup(400, 4, 2, 44);
+        let targets = Targets::Classification { y: &y, n_classes: 2 };
+        let mut samples: Vec<u32> = (0..400).collect();
+        let mut p = params();
+        p.mode = SplitMode::Random;
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &p, &mut Rng::new(2));
+        assert!(leaf_purity(&tree, &bins, &y, 2) > 0.9);
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let (bins, y) = setup(500, 4, 3, 45);
+        let targets = Targets::Classification { y: &y, n_classes: 3 };
+        let mut samples: Vec<u32> = (0..500).collect();
+        let mut p = params();
+        p.max_depth = 2;
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &p, &mut Rng::new(3));
+        assert!(tree.depth <= 2);
+        assert!(tree.n_leaves <= 4);
+    }
+
+    #[test]
+    fn min_leaf_enforced() {
+        let (bins, y) = setup(400, 4, 2, 46);
+        let targets = Targets::Classification { y: &y, n_classes: 2 };
+        let mut samples: Vec<u32> = (0..400).collect();
+        let mut p = params();
+        p.min_samples_leaf = 30;
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &p, &mut Rng::new(4));
+        let mut counts = vec![0usize; tree.n_leaves];
+        for i in 0..400 {
+            counts[tree.apply_binned(bins.row(i)) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 30), "{counts:?}");
+    }
+
+    #[test]
+    fn regression_tree_reduces_sse() {
+        let n = 300;
+        let data = synth::gaussian_blobs(n, 3, 2, 3.0, 47);
+        let binner = Binner::fit(&data, 256, &mut Rng::new(5));
+        let bins = binner.bin(&data);
+        // Target = class label as a real value: perfectly learnable.
+        let vals: Vec<f32> = data.y.clone();
+        let targets = Targets::Regression { values: &vals };
+        let mut samples: Vec<u32> = (0..n as u32).collect();
+        let mut p = params();
+        p.criterion = Criterion::Mse;
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &p, &mut Rng::new(6));
+        let sse: f64 = (0..n)
+            .map(|i| {
+                let leaf = tree.apply_binned(bins.row(i)) as usize;
+                let e = (tree.leaf_stats[leaf] - vals[i]) as f64;
+                e * e
+            })
+            .sum();
+        assert!(sse / (n as f64) < 0.05, "mse={}", sse / n as f64);
+    }
+
+    #[test]
+    fn leaf_ids_are_dense() {
+        let (bins, y) = setup(200, 3, 2, 48);
+        let targets = Targets::Classification { y: &y, n_classes: 2 };
+        let mut samples: Vec<u32> = (0..200).collect();
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &params(), &mut Rng::new(7));
+        let mut seen = vec![false; tree.n_leaves];
+        for node in &tree.nodes {
+            if node.feature == LEAF {
+                seen[node.left as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Classification stats have n_leaves * C entries.
+        assert_eq!(tree.leaf_stats.len(), tree.n_leaves * 2);
+    }
+
+    #[test]
+    fn multiset_duplicates_weight_leaves() {
+        let (bins, y) = setup(100, 3, 2, 49);
+        let targets = Targets::Classification { y: &y, n_classes: 2 };
+        // Sample 0 drawn 5 times.
+        let mut samples: Vec<u32> = (0..100).collect();
+        samples.extend([0, 0, 0, 0]);
+        let mut b = TreeBuilder::new();
+        let tree = b.build(&bins, &targets, &mut samples, &params(), &mut Rng::new(8));
+        let total: f32 = tree.leaf_stats.iter().sum();
+        assert_eq!(total, 104.0);
+    }
+}

@@ -1,0 +1,51 @@
+//! # forest-kernels
+//!
+//! A scalable implementation of **Separable Weighted Leaf-Collision
+//! (SWLC) forest proximities** — the framework of *"Revisiting Forest
+//! Proximities via Sparse Leaf-Incidence Kernels"* — built as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's central result (Prop. 3.6): every SWLC proximity
+//! `P(x,x') = Σ_t q_t(x) w_t(x') 1[ℓ_t(x)=ℓ_t(x')]` factors exactly as
+//! `P = Qᵀ W` over sparse leaf-incidence matrices whose columns carry at
+//! most `T` nonzeros, so the full N×N proximity matrix is computable in
+//! `O(NT(h̄+λ̄))` time instead of `O(N²T)`.
+//!
+//! ## Layout
+//!
+//! * [`rng`] — deterministic SplitMix64/PCG-style RNG used everywhere.
+//! * [`sparse`] — CSR matrices, Gustavson SpGEMM, SpMV/SpMM.
+//! * [`forest`] — from-scratch decision forests: CART trees over binned
+//!   features, random forests (bootstrap + OOB bookkeeping), extremely
+//!   randomized trees, and gradient-boosted trees.
+//! * [`data`] — deterministic synthetic analogs of the paper's datasets.
+//! * [`swlc`] — the paper's contribution: ensemble context θ, the weight
+//!   assignments of App. B (original, KeRF, separable OOB, RF-GAP,
+//!   instance-hardness, boosted), sparse factor construction, the exact
+//!   factored kernel, naive baselines, OOS extension, and
+//!   proximity-weighted prediction.
+//! * [`spectral`] — dense/sparse subspace iteration (Leaf PCA), kNN
+//!   graphs, and UMAP/PHATE-analog embeddings on leaf coordinates.
+//! * [`runtime`] — PJRT CPU client loading the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` (L1 Pallas + L2 jax).
+//! * [`coordinator`] — the block coordinator: shards kernel
+//!   materialization into (query × reference) block jobs over an async
+//!   worker pool with bounded queues (backpressure) and metrics.
+//! * [`bench_support`] — measurement helpers (wall time, peak RSS,
+//!   log-log slope fits) shared by the figure/table harnesses.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod forest;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod spectral;
+pub mod swlc;
+
+pub use data::Dataset;
+pub use forest::{Forest, ForestKind, TrainConfig};
+pub use sparse::Csr;
+pub use swlc::{ForestKernel, ProximityKind};

@@ -1,0 +1,496 @@
+//! `repro` — the forest-kernels CLI.
+//!
+//! Subcommands cover the whole pipeline (train → kernel → embed →
+//! predict → serve) plus one `bench-*` harness per paper figure/table
+//! (see DESIGN.md's experiment index). Arguments are `--key value`
+//! flags parsed by the tiny in-repo parser (the offline vendor set has
+//! no clap).
+
+use anyhow::{anyhow, bail, Result};
+use forest_kernels::bench_support::{peak_rss_bytes, time};
+use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
+use forest_kernels::data::registry;
+use forest_kernels::experiments::{fig41, fig42, fig43, tablei1};
+use forest_kernels::forest::{Forest, ForestKind, TrainConfig};
+use forest_kernels::runtime::Runtime;
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal `--key value` flag parser; positional args collected in order.
+struct Args {
+    flags: HashMap<String, String>,
+    #[allow(dead_code)]
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = vec![];
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "\
+repro — sparse leaf-incidence forest kernels (SWLC)
+
+USAGE: repro <command> [--flags]
+
+Pipeline commands:
+  datasets                                 print the Table F.1 dataset analogs
+  train    --dataset covertype --n 20000 --trees 50 [--kind rf|et|gbt]
+  kernel   --dataset covertype --n 20000 --trees 50 --method gap
+  predict  --dataset covertype --n 20000 --trees 50 --method gap
+  embed    --dataset pbmc --n 5000 [--pca-dims 24]
+  serve    --dataset covertype --n 5000 --queries 256 [--artifacts artifacts]
+
+Paper harnesses (DESIGN.md experiment index):
+  bench-fig41    [--base-n 8000 --seed 1]
+  bench-fig42    --axis dataset|method|minleaf|kind|depth
+                 [--min-n 4096 --max-n 65536 --trees 50 --dataset covertype]
+  bench-figh1    [--min-n 4096 --max-n 32768]  (all four ablation rows)
+  bench-fig43    [--dataset fashionmnist --n 12000 --test-n 2000]
+  bench-tablei1  [--sizes 16384,32768,65536 --trees 50]
+  bench-naive    [--n 2048]  (factored vs naive crossover)
+  bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
+                 impurity-enriched vs learned tree-weight kernels)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "datasets" => cmd_datasets(),
+        "train" => cmd_train(args),
+        "kernel" => cmd_kernel(args),
+        "predict" => cmd_predict(args),
+        "embed" => cmd_embed(args),
+        "serve" => cmd_serve(args),
+        "bench-fig41" => cmd_fig41(args),
+        "bench-fig42" => cmd_fig42(args),
+        "bench-figh1" => cmd_figh1(args),
+        "bench-fig43" => cmd_fig43(args),
+        "bench-tablei1" => cmd_tablei1(args),
+        "bench-naive" => cmd_naive(args),
+        "bench-learned" => cmd_learned(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}
+
+fn load_data(args: &Args) -> Result<(forest_kernels::Dataset, String)> {
+    let name = args.str_or("dataset", "covertype").to_string();
+    let spec = registry::by_name(&name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let n = args.usize_or("n", spec.default_n.min(20_000));
+    let seed = args.u64_or("seed", 42);
+    Ok((spec.generate(n, seed), name))
+}
+
+fn train_cfg(args: &Args) -> TrainConfig {
+    let kind = match args.str_or("kind", "rf") {
+        "et" => ForestKind::ExtraTrees,
+        "gbt" => ForestKind::GradientBoosting,
+        _ => ForestKind::RandomForest,
+    };
+    TrainConfig {
+        kind,
+        n_trees: args.usize_or("trees", 50),
+        max_depth: args.get("depth").and_then(|v| v.parse().ok()),
+        min_samples_leaf: args.usize_or("min-leaf", 1),
+        max_samples: Some(args.usize_or("max-samples", 100_000)),
+        seed: args.u64_or("seed", 42),
+        criterion: if args.str_or("kind", "rf") == "gbt" {
+            forest_kernels::forest::Criterion::Mse
+        } else {
+            forest_kernels::forest::Criterion::Gini
+        },
+        ..Default::default()
+    }
+}
+
+fn method(args: &Args) -> Result<ProximityKind> {
+    let m = args.str_or("method", "gap");
+    ProximityKind::from_name(m).ok_or_else(|| anyhow!("unknown method {m}"))
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("# Dataset analogs (cf. paper Table F.1)");
+    println!("name\tpaper_N\tdefault_N\tfeatures\tclasses");
+    for s in registry::registry() {
+        println!("{}\t{}\t{}\t{}\t{}", s.name, s.paper_n, s.default_n, s.d, s.n_classes);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let cfg = train_cfg(args);
+    let (forest, secs) = time(|| Forest::train(&data, &cfg));
+    println!(
+        "{name}: N={} d={} C={} | T={} L={} h̄={:.1} | train {secs:.2}s | train-acc {:.4}",
+        data.n,
+        data.d,
+        data.n_classes,
+        forest.n_trees(),
+        forest.n_leaves_total(),
+        forest.mean_depth(),
+        forest.accuracy(&data)
+    );
+    Ok(())
+}
+
+fn cmd_kernel(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let cfg = train_cfg(args);
+    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+    let cost = forest_kernels::experiments::measure_kernel_cost(&forest, &data, kind);
+    println!(
+        "{name} N={} method={} | ctx {:.3}s factors {:.3}s product {:.3}s total {:.3}s | \
+         {:.1} MB, nnz={} λ̄={:.1} flops={} | peak RSS {:.1} MB",
+        cost.n,
+        kind.name(),
+        cost.secs_context,
+        cost.secs_factors,
+        cost.secs_product,
+        cost.secs_total(),
+        cost.bytes as f64 / 1e6,
+        cost.nnz,
+        cost.lambda,
+        cost.flops,
+        peak_rss_bytes() as f64 / 1e6,
+    );
+    // Also exercise the coordinator path and report its metrics.
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let cc = CoordinatorConfig::default();
+    let (_, metrics) = coordinator::materialize_to_csr(&kernel, &cc);
+    let (jobs, nnz, busy) = metrics.snapshot();
+    println!("coordinator: {jobs} stripe jobs, nnz={nnz}, worker-busy {busy:.3}s");
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let (train, test) = data.train_test_split(0.1, args.u64_or("seed", 42) ^ 0x5EED);
+    let cfg = train_cfg(args);
+    let forest = forest_kernels::experiments::train_for(&train, kind, &cfg);
+    let kernel = ForestKernel::fit(&forest, &train, kind);
+    let qn = kernel.oos_query_map(&forest, &test);
+    let preds = predict::predict_oos(&kernel, &qn);
+    println!(
+        "{name}: forest test-acc {:.4} | {}-weighted test-acc {:.4}",
+        forest.accuracy(&test),
+        kind.name(),
+        predict::accuracy(&preds, &test.y)
+    );
+    Ok(())
+}
+
+fn cmd_embed(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let (train, test) = data.train_test_split(0.15, args.u64_or("seed", 42) ^ 0xE3BED);
+    let cfg = fig43::Fig43Config {
+        pca_dims: args.usize_or("pca-dims", 24),
+        n_trees: args.usize_or("trees", 40),
+        seed: args.u64_or("seed", 42),
+        ..Default::default()
+    };
+    let results = fig43::run(&train, &test, &cfg);
+    fig43::print(&results, &format!("embed pipelines on {name}"));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let runtime = Runtime::load(&artifacts)?;
+    println!("loaded artifacts: {:?}", runtime.names());
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let n_q = args.usize_or("queries", 256);
+    let (train, test) = data.train_test_split(0.2, 77);
+    let queries = test.head(n_q.min(test.n));
+    let cfg = train_cfg(args);
+    let forest = forest_kernels::experiments::train_for(&train, kind, &cfg);
+    let gal = GalleryService::new(&runtime, &forest, &train, kind)?;
+    let (scores, secs) = time(|| gal.score(&forest, &queries));
+    let scores = scores?;
+    let preds = gal.vote(&scores, queries.n);
+    let acc = preds
+        .iter()
+        .zip(&queries.y)
+        .filter(|(p, y)| **p as f32 == **y)
+        .count() as f64
+        / queries.n as f64;
+    let top = gal.top_k(&scores, queries.n.min(3), 3);
+    println!(
+        "{name}: scored {} queries × {} gallery in {secs:.3}s \
+         ({:.1} q/s, tile {:?}) | vote-acc {acc:.4}",
+        queries.n,
+        gal.n_ref,
+        queries.n as f64 / secs,
+        gal.tile,
+    );
+    for (i, row) in top.iter().enumerate() {
+        println!("  query {i} top-3 prototypes: {row:?}");
+    }
+    Ok(())
+}
+
+fn cmd_fig41(args: &Args) -> Result<()> {
+    let base_n = args.usize_or("base-n", 8000);
+    let rows = fig41::run(
+        base_n,
+        &[0.05, 0.1, 0.2, 0.35, 0.5],
+        &[60, 80, 100, 125, 150],
+        args.u64_or("seed", 1),
+    );
+    fig41::print(&rows);
+    Ok(())
+}
+
+fn fig42_sweep(args: &Args) -> fig42::SweepConfig {
+    fig42::SweepConfig {
+        min_n: args.usize_or("min-n", 4096),
+        max_n: args.usize_or("max-n", 65536),
+        n_trees: args.usize_or("trees", 50),
+        seed: args.u64_or("seed", 7),
+        dataset: args.str_or("dataset", "covertype").to_string(),
+    }
+}
+
+fn cmd_fig42(args: &Args) -> Result<()> {
+    let cfg = fig42_sweep(args);
+    let axis = match args.str_or("axis", "method") {
+        "dataset" => fig42::Axis::Dataset(
+            args.str_or(
+                "datasets",
+                "airlines,covertype,higgs,susy,pbmc,tvnews,tissuemnist,fashionmnist,signmnist",
+            )
+            .split(',')
+            .map(String::from)
+            .collect(),
+        ),
+        "method" => fig42::Axis::Method(vec![
+            ProximityKind::Original,
+            ProximityKind::Kerf,
+            ProximityKind::OobSeparable,
+            ProximityKind::RfGap,
+        ]),
+        "minleaf" => fig42::Axis::MinLeaf(vec![1, 5, 10, 25, 50]),
+        "kind" => fig42::Axis::ForestKind(vec![ForestKind::RandomForest, ForestKind::ExtraTrees]),
+        "depth" => fig42::Axis::Depth(vec![None, Some(20), Some(14), Some(10)]),
+        other => bail!("unknown axis {other}"),
+    };
+    let series = fig42::run(&axis, &cfg);
+    fig42::print(&series, &format!("Fig 4.2 axis={}", args.str_or("axis", "method")));
+    Ok(())
+}
+
+fn cmd_figh1(args: &Args) -> Result<()> {
+    // Fig H.1: the four ablation rows on both Airlines and Covertype.
+    for dataset in ["airlines", "covertype"] {
+        for (axis_name, axis) in [
+            (
+                "method",
+                fig42::Axis::Method(vec![
+                    ProximityKind::Original,
+                    ProximityKind::Kerf,
+                    ProximityKind::OobSeparable,
+                    ProximityKind::RfGap,
+                ]),
+            ),
+            (
+                "kind",
+                fig42::Axis::ForestKind(vec![ForestKind::RandomForest, ForestKind::ExtraTrees]),
+            ),
+            ("minleaf", fig42::Axis::MinLeaf(vec![1, 10, 50])),
+            ("depth", fig42::Axis::Depth(vec![None, Some(20), Some(14), Some(10)])),
+        ] {
+            let mut cfg = fig42_sweep(args);
+            cfg.dataset = dataset.to_string();
+            let series = fig42::run(&axis, &cfg);
+            fig42::print(&series, &format!("Fig H.1 {dataset} row={axis_name}"));
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig43(args: &Args) -> Result<()> {
+    let name = args.str_or("dataset", "fashionmnist");
+    let spec = registry::by_name(name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let n = args.usize_or("n", 12_000);
+    let test_n = args.usize_or("test-n", 2_000);
+    let all = spec.generate(n + test_n, args.u64_or("seed", 11));
+    let train = all.head(n);
+    let test = all.subset(&(n..n + test_n).collect::<Vec<_>>());
+    let cfg = fig43::Fig43Config {
+        pca_dims: args.usize_or("pca-dims", 24),
+        n_trees: args.usize_or("trees", 40),
+        seed: args.u64_or("seed", 11),
+        ..Default::default()
+    };
+    let results = fig43::run(&train, &test, &cfg);
+    fig43::print(&results, &format!("Fig 4.3 — {name} N={n} test={test_n}"));
+    Ok(())
+}
+
+fn cmd_tablei1(args: &Args) -> Result<()> {
+    let sizes: Vec<usize> = args
+        .str_or("sizes", "16384,32768,65536")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let rows = tablei1::run(
+        &["airlines", "covertype"],
+        &sizes,
+        args.usize_or("trees", 50),
+        args.u64_or("seed", 9),
+    );
+    tablei1::print(&rows);
+    Ok(())
+}
+
+fn cmd_naive(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "covertype");
+    let trees = args.usize_or("trees", 32);
+    println!("# factored vs naive O(N²T) (dataset={dataset}, T={trees})");
+    println!("N\tnaive_s\tfactored_s\tspeedup");
+    let mut n = 256usize;
+    let max = args.usize_or("n", 4096);
+    while n <= max {
+        let naive = fig42::naive_cost(n, dataset, trees, 3);
+        let spec = registry::by_name(dataset).unwrap();
+        let data = spec.generate(n, 3);
+        let cfg = TrainConfig { n_trees: trees, seed: 3, ..Default::default() };
+        let forest = Forest::train(&data, &cfg);
+        let cost = forest_kernels::experiments::measure_kernel_cost(
+            &forest,
+            &data,
+            ProximityKind::Original,
+        );
+        println!("{n}\t{naive:.4}\t{:.4}\t{:.1}x", cost.secs_total(), naive / cost.secs_total());
+        n *= 2;
+    }
+    Ok(())
+}
+
+fn cmd_learned(args: &Args) -> Result<()> {
+    // §5 ablation: does enriching/learning the weighting improve the
+    // proximity-weighted predictor over the fixed schemes, with the
+    // forest topology held fixed?
+    use forest_kernels::swlc::custom;
+    use forest_kernels::swlc::{kernel::incidence_matrix, weights, EnsembleContext};
+    let (data, name) = load_data(args)?;
+    let (train, test) = data.train_test_split(0.15, args.u64_or("seed", 42) ^ 0x1EA2);
+    let cfg = train_cfg(args);
+    let forest = Forest::train(&train, &cfg);
+    let ctx = EnsembleContext::build(&forest, &train);
+
+    println!("# §5 ablation on {name} (N={} T={})", train.n, ctx.t);
+    println!("kernel\ttrain_acc\ttest_acc");
+    // `oos_weight(tree, routed_leaf)` recomputes the symmetric scheme's
+    // query weight for an unseen sample (leaf-dependent schemes need the
+    // routed leaf, not a copied training row).
+    let eval = |label: &str,
+                spec: &forest_kernels::swlc::WeightSpec,
+                oos_weight: &dyn Fn(usize, u32) -> f32| {
+        let q = incidence_matrix(&ctx.leaf_of, &spec.q, ctx.n, ctx.t, ctx.l);
+        let w = if spec.symmetric {
+            q.clone()
+        } else {
+            incidence_matrix(&ctx.leaf_of, &spec.w, ctx.n, ctx.t, ctx.l)
+        };
+        let m = predict::leaf_class_mass(&w, &ctx.y, ctx.n_classes);
+        let tr_scores = predict::class_scores(&q, &m, ctx.n_classes);
+        let tr = predict::accuracy(
+            &predict::argmax_scores(&tr_scores, ctx.n_classes, 0),
+            &train.y,
+        );
+        // OOS: route test samples, reuse the same per-tree weights
+        // (symmetric schemes only in this ablation).
+        let leaf_new = forest.apply(&test);
+        let mut qn_tab = vec![0f32; test.n * ctx.t];
+        for i in 0..test.n {
+            for tt in 0..ctx.t {
+                qn_tab[i * ctx.t + tt] = oos_weight(tt, leaf_new[i * ctx.t + tt]);
+            }
+        }
+        let qn = incidence_matrix(&leaf_new, &qn_tab, test.n, ctx.t, ctx.l);
+        let te_scores = predict::class_scores(&qn, &m, ctx.n_classes);
+        let te = predict::accuracy(
+            &predict::argmax_scores(&te_scores, ctx.n_classes, 0),
+            &test.y,
+        );
+        println!("{label}\t{tr:.4}\t{te:.4}");
+        te
+    };
+
+    let sqrt_t_inv = 1.0 / (ctx.t as f32).sqrt();
+    let uniform = weights::assign(ProximityKind::Original, &ctx);
+    eval("original(uniform)", &uniform, &|_, _| sqrt_t_inv);
+    let enriched = custom::impurity_kerf(&ctx);
+    let imp = custom::leaf_impurity(&ctx);
+    let tf = ctx.t as f32;
+    let leaf_mass = ctx.leaf_mass.clone();
+    eval("impurity-kerf", &enriched, &move |_, leaf| {
+        let g = leaf as usize;
+        ((1.0 - imp[g]).max(0.0) / (tf * leaf_mass[g])).sqrt()
+    });
+    let alpha = custom::learn_tree_weights(&ctx, args.usize_or("epochs", 15), 0.5);
+    let learned = custom::learned_weight_spec(&ctx, &alpha);
+    let total: f32 = alpha.iter().sum();
+    let alpha_oos = alpha.clone();
+    eval("learned-alpha", &learned, &move |tt, _| (alpha_oos[tt] / total).sqrt());
+    let (amin, amax) = alpha.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &a| (lo.min(a), hi.max(a)));
+    println!("alpha range: [{amin:.3}, {amax:.3}] over {} trees", alpha.len());
+    Ok(())
+}

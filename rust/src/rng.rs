@@ -1,0 +1,189 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Everything stochastic in the library (bootstrap resampling, feature
+//! subsampling, synthetic data, randomized SVD test matrices, SGD
+//! negative sampling) flows through this small PCG-style generator so
+//! that every experiment is exactly reproducible from a `u64` seed.
+
+/// A PCG-XSH-RR 64/32-ish generator built on the SplitMix64 stream.
+///
+/// Not cryptographic; chosen for speed, a 2^64 period, and trivially
+/// splittable seeding (`Rng::derive`) so parallel substreams never
+/// overlap in practice.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Two different seeds give
+    /// statistically independent streams.
+    pub fn new(seed: u64) -> Self {
+        // Run the seed through SplitMix64 once so small seeds (0, 1, 2…)
+        // do not produce correlated early outputs.
+        let mut r = Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) };
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent substream, e.g. one per tree.
+    pub fn derive(&self, stream: u64) -> Rng {
+        Rng::new(self.state ^ stream.wrapping_mul(0xD1342543DE82EF95).wrapping_add(0x63652362_u64))
+    }
+
+    /// Next raw 64-bit value (SplitMix64 output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift (unbiased enough
+    /// for simulation purposes; bias < 2^-32 for n << 2^32).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (((self.next_u64() >> 32) * n as u64) >> 32) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// branch-free enough for data generation).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_range(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Bootstrap: draw `n_draws` samples with replacement from `0..n`,
+    /// returning per-index multiplicities (the in-bag counts `c_t` of
+    /// App. B.4). Indices with count 0 are out-of-bag.
+    pub fn bootstrap_counts(&mut self, n: usize, n_draws: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; n];
+        for _ in 0..n_draws {
+            counts[self.gen_range(n)] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn gen_range_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.gen_range(13);
+            assert!(v < 13);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(11);
+        let mean: f64 = (0..50_000).map(|_| r.next_f64()).sum::<f64>() / 50_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn bootstrap_counts_sum_to_draws() {
+        let mut r = Rng::new(17);
+        let counts = r.bootstrap_counts(100, 100);
+        assert_eq!(counts.iter().sum::<u32>(), 100);
+        // OOB fraction should be near (1-1/N)^N ≈ e^-1 ≈ 0.3679 (Prop. G.1's p_N).
+        let oob = counts.iter().filter(|&&c| c == 0).count();
+        assert!((15..=55).contains(&oob), "oob={oob}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(19);
+        let mut idx = r.sample_indices(50, 20);
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 20);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn derived_streams_are_independent() {
+        let root = Rng::new(99);
+        let mut s1 = root.derive(1);
+        let mut s2 = root.derive(2);
+        let a: Vec<u64> = (0..10).map(|_| s1.next_u64()).collect();
+        let b: Vec<u64> = (0..10).map(|_| s2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+}

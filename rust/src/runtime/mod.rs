@@ -1,0 +1,262 @@
+//! PJRT runtime: load and execute the AOT HLO-text artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 jax graphs (which call the L1
+//! Pallas kernels) to HLO *text* — the interchange the bundled
+//! xla_extension 0.5.1 accepts (jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids it rejects). This module compiles every
+//! artifact in the manifest once on the PJRT CPU client and exposes
+//! typed execution; Python never runs on the request path.
+
+pub mod json;
+
+use anyhow::{anyhow, bail, Context, Result};
+use json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Tensor signature of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest entry missing dtype"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest entry missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: name, HLO file, and its I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// A typed input tensor for execution.
+pub enum Tensor<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Tensor<'_> {
+    fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32(_) => "float32",
+            Tensor::I32(_) => "int32",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// The PJRT runtime: one compiled executable per manifest artifact.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: HashMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
+}
+
+/// Parse `manifest.json` from an artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+    if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+        bail!("unsupported manifest format (want hlo-text)");
+    }
+    let arts = j
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+    arts.iter()
+        .map(|a| {
+            Ok(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                output: TensorSpec::from_json(
+                    a.get("output").ok_or_else(|| anyhow!("artifact missing output"))?,
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Runtime {
+    /// Compile every artifact in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let specs = load_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = HashMap::new();
+        for spec in specs {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&spec.file))
+                .with_context(|| format!("loading HLO text {}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", spec.name))?;
+            execs.insert(spec.name.clone(), (exe, spec));
+        }
+        Ok(Runtime { client, execs })
+    }
+
+    /// Names of the loaded executables.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.execs.get(name).map(|(_, s)| s)
+    }
+
+    /// Execute artifact `name` with shape/dtype-checked inputs; returns
+    /// the flat f32 output (all our graphs return one f32 tensor,
+    /// lowered as a 1-tuple).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        let (exe, spec) = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; loaded: {:?}", self.names()))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.dtype() != ts.dtype {
+                bail!("{name}: input {i} dtype {} != manifest {}", t.dtype(), ts.dtype);
+            }
+            if t.len() != ts.numel() {
+                bail!("{name}: input {i} has {} elements, manifest wants {:?}", t.len(), ts.shape);
+            }
+            literals.push(t.to_literal(&ts.shape)?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // aot.py lowers with return_tuple=True
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Convenience: run a `prox_{BQ}x{BR}x{T}` proximity tile.
+    pub fn prox_block(
+        &self,
+        bq: usize,
+        br: usize,
+        t: usize,
+        leaf_q: &[i32],
+        q: &[f32],
+        leaf_w: &[i32],
+        w: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = format!("prox_{bq}x{br}x{t}");
+        self.execute(
+            &name,
+            &[Tensor::I32(leaf_q), Tensor::F32(q), Tensor::I32(leaf_w), Tensor::F32(w)],
+        )
+    }
+
+    /// Pick the smallest available prox variant that fits `(bq, br, t)`
+    /// (caller pads up). Returns `(BQ, BR, T)`.
+    pub fn best_prox_variant(&self, bq: usize, br: usize, t: usize) -> Option<(usize, usize, usize)> {
+        let mut best: Option<(usize, usize, usize)> = None;
+        for name in self.execs.keys() {
+            if let Some(rest) = name.strip_prefix("prox_") {
+                let dims: Vec<usize> =
+                    rest.split('x').filter_map(|p| p.parse().ok()).collect();
+                if dims.len() == 3 && dims[0] >= bq && dims[1] >= br && dims[2] >= t {
+                    let cand = (dims[0], dims[1], dims[2]);
+                    if best.map_or(true, |b| cand.0 * cand.1 * cand.2 < b.0 * b.1 * b.2) {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need compiled artifacts live in
+    // rust/tests/runtime_artifacts.rs; here we cover the manifest layer.
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec { dtype: "float32".into(), shape: vec![4, 8] };
+        assert_eq!(t.numel(), 32);
+    }
+
+    #[test]
+    fn manifest_parsing_roundtrip() {
+        let dir = std::env::temp_dir().join("fk_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "artifacts": [
+                {"name": "a", "file": "a.hlo.txt",
+                 "inputs": [{"dtype": "int32", "shape": [2, 3]}],
+                 "output": {"dtype": "float32", "shape": [2, 2]}}]}"#,
+        )
+        .unwrap();
+        let specs = load_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].inputs[0].shape, vec![2, 3]);
+        assert_eq!(specs[0].output.dtype, "float32");
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let dir = std::env::temp_dir().join("fk_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_manifest(&dir).is_err());
+    }
+}

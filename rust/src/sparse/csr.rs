@@ -1,0 +1,395 @@
+//! Compressed Sparse Row matrices.
+
+/// A CSR matrix over `f32` values with `u32` column indices.
+///
+/// `u32` indices cap the column dimension at ~4.29e9, comfortably above
+/// the largest leaf space we target (L ≈ N·T with N = 10M, T = 100 would
+/// overflow; the library asserts on construction), while halving index
+/// memory versus `usize` — index traffic dominates SpGEMM bandwidth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row pointer array, length `n_rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, length `nnz`, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, length `nnz`.
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    /// An all-zero matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        assert!(n_cols <= u32::MAX as usize, "column dim {n_cols} overflows u32");
+        Csr { n_rows, n_cols, indptr: vec![0; n_rows + 1], indices: vec![], data: vec![] }
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// The (indices, values) slice of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.data[a..b])
+    }
+
+    /// Assemble from COO triplets; duplicate coordinates are summed.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, u32, f32)],
+    ) -> Self {
+        assert!(n_cols <= u32::MAX as usize);
+        let mut counts = vec![0usize; n_rows + 1];
+        for &(r, c, _) in triplets {
+            debug_assert!(r < n_rows && (c as usize) < n_cols);
+            counts[r + 1] += 1;
+        }
+        for i in 0..n_rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; triplets.len()];
+        let mut data = vec![0f32; triplets.len()];
+        let mut cursor = counts;
+        for &(r, c, v) in triplets {
+            let k = cursor[r];
+            indices[k] = c;
+            data[k] = v;
+            cursor[r] += 1;
+        }
+        let mut m = Csr { n_rows, n_cols, indptr, indices, data };
+        m.sort_and_dedup_rows();
+        m
+    }
+
+    /// Build a CSR with a known uniform row arity by pushing rows in
+    /// order. `fill(i, push)` must call `push(col, val)` for each entry
+    /// of row `i` (duplicates allowed; summed). This is the fast path
+    /// for leaf-incidence matrices where every row has ≤ T entries.
+    pub fn from_rows<F>(n_rows: usize, n_cols: usize, per_row_hint: usize, mut fill: F) -> Self
+    where
+        F: FnMut(usize, &mut dyn FnMut(u32, f32)),
+    {
+        assert!(n_cols <= u32::MAX as usize);
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::with_capacity(n_rows * per_row_hint);
+        let mut data = Vec::with_capacity(n_rows * per_row_hint);
+        indptr.push(0);
+        for i in 0..n_rows {
+            let start = indices.len();
+            {
+                let mut push = |c: u32, v: f32| {
+                    debug_assert!((c as usize) < n_cols);
+                    indices.push(c);
+                    data.push(v);
+                };
+                fill(i, &mut push);
+            }
+            // Sort + merge duplicates within the fresh row.
+            let row_len = indices.len() - start;
+            if row_len > 1 {
+                let mut perm: Vec<usize> = (0..row_len).collect();
+                perm.sort_unstable_by_key(|&k| indices[start + k]);
+                let idx_sorted: Vec<u32> = perm.iter().map(|&k| indices[start + k]).collect();
+                let val_sorted: Vec<f32> = perm.iter().map(|&k| data[start + k]).collect();
+                indices.truncate(start);
+                data.truncate(start);
+                for (c, v) in idx_sorted.into_iter().zip(val_sorted) {
+                    if indices.len() > start && *indices.last().unwrap() == c {
+                        *data.last_mut().unwrap() += v;
+                    } else {
+                        indices.push(c);
+                        data.push(v);
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { n_rows, n_cols, indptr, indices, data }
+    }
+
+    fn sort_and_dedup_rows(&mut self) {
+        let mut new_indices = Vec::with_capacity(self.indices.len());
+        let mut new_data = Vec::with_capacity(self.data.len());
+        let mut new_indptr = Vec::with_capacity(self.n_rows + 1);
+        new_indptr.push(0);
+        for i in 0..self.n_rows {
+            let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+            let mut row: Vec<(u32, f32)> =
+                self.indices[a..b].iter().copied().zip(self.data[a..b].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for (c, v) in row {
+                if new_indptr.last() != Some(&new_indices.len())
+                    && new_indices.len() > *new_indptr.last().unwrap()
+                    && *new_indices.last().unwrap() == c
+                {
+                    *new_data.last_mut().unwrap() += v;
+                } else {
+                    new_indices.push(c);
+                    new_data.push(v);
+                }
+            }
+            new_indptr.push(new_indices.len());
+        }
+        self.indices = new_indices;
+        self.data = new_data;
+        self.indptr = new_indptr;
+    }
+
+    /// Transpose (CSR of the transposed matrix) by counting sort — O(nnz).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0f32; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.n_rows {
+            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+            for k in a..b {
+                let c = self.indices[k] as usize;
+                let dst = cursor[c];
+                indices[dst] = r as u32;
+                data[dst] = self.data[k];
+                cursor[c] += 1;
+            }
+        }
+        assert!(self.n_rows <= u32::MAX as usize);
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, data }
+    }
+
+    /// Dense representation (row-major) — tests and small blocks only.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_rows * self.n_cols];
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out[r * self.n_cols + c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// y = A·x (dense vector).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_cols);
+        debug_assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0f32;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Y = A·X where X is dense column-major `n_cols × k` (`X[c*k + j]`
+    /// layout, i.e. row-major with `k` contiguous per row). Output is the
+    /// same layout, `n_rows × k`. This layout keeps the k-loop contiguous,
+    /// which is what subspace iteration wants.
+    pub fn spmm(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_cols * k);
+        debug_assert_eq!(y.len(), self.n_rows * k);
+        y.fill(0.0);
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let out = &mut y[r * k..(r + 1) * k];
+            for (&c, &v) in cols.iter().zip(vals) {
+                let xr = &x[c as usize * k..c as usize * k + k];
+                for j in 0..k {
+                    out[j] += v * xr[j];
+                }
+            }
+        }
+    }
+
+    /// Yᵀ-accumulate: Y += Aᵀ·X with X `n_rows × k`, Y `n_cols × k`
+    /// (both row-major-k). Used by the Gram power step `Qᵀ(QV)` without
+    /// materializing the transpose.
+    pub fn spmm_t(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_rows * k);
+        debug_assert_eq!(y.len(), self.n_cols * k);
+        y.fill(0.0);
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let xr = &x[r * k..(r + 1) * k];
+            for (&c, &v) in cols.iter().zip(vals) {
+                let out = &mut y[c as usize * k..c as usize * k + k];
+                for j in 0..k {
+                    out[j] += v * xr[j];
+                }
+            }
+        }
+    }
+
+    /// Per-row sums (used for kernel row-normalization in prediction).
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.n_rows).map(|r| self.row(r).1.iter().sum()).collect()
+    }
+
+    /// Extract a dense block `rows × cols` (tests / coordinator assembly).
+    pub fn dense_block(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Vec<f32> {
+        let (rn, cn) = (rows.len(), cols.len());
+        let mut out = vec![0f32; rn * cn];
+        for (ri, r) in rows.clone().enumerate() {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let c = c as usize;
+                if c >= cols.start && c < cols.end {
+                    out[ri * cn + (c - cols.start)] += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Memory footprint of the stored representation in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Check structural invariants (sorted rows, bounds). Test helper.
+    pub fn check(&self) -> Result<(), String> {
+        if self.indptr.len() != self.n_rows + 1 {
+            return Err("indptr length".into());
+        }
+        if *self.indptr.last().unwrap() != self.nnz() || self.data.len() != self.nnz() {
+            return Err("nnz mismatch".into());
+        }
+        for r in 0..self.n_rows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at {r}"));
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.n_cols {
+                    return Err(format!("col out of bounds in row {r}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn triplets_roundtrip() {
+        let m = sample();
+        m.check().unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.to_dense(), vec![1., 0., 2., 0., 0., 0., 3., 4., 0.]);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let m = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (0, 1, 2.5), (1, 0, -1.0)]);
+        m.check().unwrap();
+        assert_eq!(m.to_dense(), vec![0., 3.5, -1., 0.]);
+    }
+
+    #[test]
+    fn from_rows_matches_triplets() {
+        let trip = &[(0usize, 2u32, 1.0f32), (0, 0, 2.0), (1, 1, 3.0), (1, 1, 1.0)];
+        let a = Csr::from_triplets(2, 3, trip);
+        let b = Csr::from_rows(2, 3, 2, |i, push| {
+            for &(r, c, v) in trip {
+                if r == i {
+                    push(c, v);
+                }
+            }
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let t = m.transpose();
+        t.check().unwrap();
+        assert_eq!(t.to_dense(), vec![1., 0., 3., 0., 0., 4., 2., 0., 0.]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0f32; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn spmm_matches_spmv_per_column() {
+        let m = sample();
+        let k = 2;
+        // X columns: [1,2,3] and [0,1,0] in row-major-k layout.
+        let x = [1.0, 0.0, 2.0, 1.0, 3.0, 0.0];
+        let mut y = vec![0f32; 3 * k];
+        m.spmm(&x, k, &mut y);
+        assert_eq!(y, vec![7.0, 0.0, 0.0, 0.0, 11.0, 4.0]);
+    }
+
+    #[test]
+    fn spmm_t_matches_transpose_spmm() {
+        let m = sample();
+        let k = 2;
+        let x = [1.0, 1.0, 0.0, 2.0, 1.0, 0.0]; // 3×2
+        let mut y1 = vec![0f32; 3 * k];
+        m.spmm_t(&x, k, &mut y1);
+        let mut y2 = vec![0f32; 3 * k];
+        m.transpose().spmm(&x, k, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn dense_block_extracts() {
+        let m = sample();
+        assert_eq!(m.dense_block(0..2, 1..3), vec![0., 2., 0., 0.]);
+        assert_eq!(m.dense_block(2..3, 0..2), vec![3., 4.]);
+    }
+
+    #[test]
+    fn row_sums_ok() {
+        assert_eq!(sample().row_sums(), vec![3.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::zeros(4, 5);
+        m.check().unwrap();
+        assert_eq!(m.nnz(), 0);
+        let mut y = vec![1f32; 4];
+        m.spmv(&[0.0; 5], &mut y);
+        assert_eq!(y, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Sparse linear algebra substrate.
+//!
+//! The paper reduces forest-proximity computation to sparse products over
+//! leaf-incidence matrices (`P = QᵀW`, Prop. 3.6), whose cost model —
+//! "the product is accumulated only through shared non-zero column
+//! indices" (§3.3) — is exactly the cost of Gustavson's row-wise SpGEMM.
+//! This module provides the CSR representation and the kernels the SWLC
+//! layer is built on: triplet→CSR assembly, transpose, SpGEMM with both
+//! dense-scratch and hash-map accumulators, SpMV/SpMM, and row/column
+//! scaling.
+
+mod csr;
+mod ops;
+mod spgemm;
+
+pub use csr::Csr;
+pub use ops::{scale_cols, scale_rows};
+pub use spgemm::{spgemm, spgemm_nnz_flops};

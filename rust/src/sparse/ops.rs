@@ -1,0 +1,62 @@
+//! Row/column scaling and misc. sparse utilities.
+//!
+//! Weight assignments in the SWLC family factor into per-sample and
+//! per-leaf terms (App. B): per-sample terms are row scalings of the
+//! binary leaf-incidence matrix, per-leaf terms are column scalings.
+//! Expressing them this way lets every scheme share one incidence build.
+
+use super::Csr;
+
+/// In-place `A ← diag(s)·A` (scale row `i` by `s[i]`).
+pub fn scale_rows(a: &mut Csr, s: &[f32]) {
+    assert_eq!(s.len(), a.n_rows);
+    for r in 0..a.n_rows {
+        let (lo, hi) = (a.indptr[r], a.indptr[r + 1]);
+        let f = s[r];
+        for v in &mut a.data[lo..hi] {
+            *v *= f;
+        }
+    }
+}
+
+/// In-place `A ← A·diag(s)` (scale column `j` by `s[j]`).
+pub fn scale_cols(a: &mut Csr, s: &[f32]) {
+    assert_eq!(s.len(), a.n_cols);
+    for k in 0..a.indices.len() {
+        a.data[k] *= s[a.indices[k] as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn row_scaling() {
+        let mut m = sample();
+        scale_rows(&mut m, &[2.0, -1.0]);
+        assert_eq!(m.to_dense(), vec![2., 0., 4., 0., -3., 0.]);
+    }
+
+    #[test]
+    fn col_scaling() {
+        let mut m = sample();
+        scale_cols(&mut m, &[0.0, 10.0, 0.5]);
+        assert_eq!(m.to_dense(), vec![0., 0., 1., 0., 30., 0.]);
+    }
+
+    #[test]
+    fn scalings_commute() {
+        let mut a = sample();
+        scale_rows(&mut a, &[2.0, 3.0]);
+        scale_cols(&mut a, &[1.0, 2.0, 3.0]);
+        let mut b = sample();
+        scale_cols(&mut b, &[1.0, 2.0, 3.0]);
+        scale_rows(&mut b, &[2.0, 3.0]);
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+}

@@ -1,0 +1,233 @@
+//! Gustavson row-wise sparse–sparse matrix multiplication.
+//!
+//! `spgemm(A, B)` computes `C = A·B` touching, for each row `i` of `A`,
+//! only the rows of `B` indexed by `A`'s nonzero columns — exactly the
+//! "computation restricted to samples that collide in leaves" mechanism
+//! the paper attributes to SciPy (§3.3). For `P = Q_rows · Wᵀ_rows`
+//! (both stored sample-major), the flop count is
+//! `Σ_i Σ_t n_{t, ℓ_t(x_i)} = N·T·λ̄` — the paper's λ̄ cost model.
+
+use super::Csr;
+
+/// Dense-scratch (SPA) accumulator Gustavson SpGEMM: `C = A·B`.
+///
+/// Keeps an `n_cols(B)`-sized value array + occupancy list. The scratch
+/// is allocated once and reset per row in O(row nnz), so the total cost
+/// is O(flops + nnz(C) log) (the log from per-row sorting of the
+/// occupancy list to keep CSR rows ordered).
+pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
+    let n_out_cols = b.n_cols;
+    let mut scratch = vec![0f32; n_out_cols];
+    // Row-stamped occupancy: `stamp[c] == row+1` ⇔ column c is live in
+    // the current row. (A `value == 0.0` sentinel would double-push a
+    // column whose partial sum cancels to exactly zero mid-row, and
+    // would force a scratch clear per row.)
+    let mut stamp = vec![0u32; n_out_cols];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut radix_tmp: Vec<u32> = Vec::new();
+    // §Perf: SWLC kernels have a duplication factor flops/nnz ≈ 1, so
+    // per-row key sorting dominates the accumulate loop. An LSD
+    // radix-256 on the u32 keys (values are gathered from the scratch
+    // afterwards, so only keys move) beats the comparison sort ~2× on
+    // the λ̄·T-sized rows this workload produces.
+    let key_bytes = (32 - (n_out_cols.max(2) as u32 - 1).leading_zeros()).div_ceil(8) as usize;
+
+    let mut indptr = Vec::with_capacity(a.n_rows + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    indptr.push(0usize);
+
+    assert!(a.n_rows < u32::MAX as usize);
+    for i in 0..a.n_rows {
+        let row_stamp = i as u32 + 1;
+        let (acols, avals) = a.row(i);
+        for (&ac, &av) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(ac as usize);
+            for (&bc, &bv) in bcols.iter().zip(bvals) {
+                let c = bc as usize;
+                let st = unsafe { stamp.get_unchecked_mut(c) };
+                let slot = unsafe { scratch.get_unchecked_mut(c) };
+                if *st != row_stamp {
+                    *st = row_stamp;
+                    *slot = av * bv;
+                    touched.push(bc);
+                } else {
+                    *slot += av * bv;
+                }
+            }
+        }
+        if touched.len() < 64 {
+            touched.sort_unstable();
+        } else {
+            radix_sort_u32(&mut touched, &mut radix_tmp, key_bytes);
+        }
+        for &c in &touched {
+            // Keep exact zeros produced by cancellation: they are real
+            // collisions with zero weight and dropping them would make
+            // nnz structure depend on weight values. (Entries never
+            // touched are genuinely structural zeros.)
+            indices.push(c);
+            data.push(scratch[c as usize]);
+        }
+        touched.clear();
+        indptr.push(indices.len());
+    }
+    Csr { n_rows: a.n_rows, n_cols: n_out_cols, indptr, indices, data }
+}
+
+/// In-place LSD radix-256 sort of `keys`, using `tmp` as the ping-pong
+/// buffer; only the lowest `key_bytes` bytes are significant.
+fn radix_sort_u32(keys: &mut Vec<u32>, tmp: &mut Vec<u32>, key_bytes: usize) {
+    let n = keys.len();
+    tmp.resize(n, 0);
+    let mut src_is_keys = true;
+    for pass in 0..key_bytes {
+        let shift = pass * 8;
+        let mut counts = [0u32; 256];
+        {
+            let src: &[u32] = if src_is_keys { keys } else { tmp };
+            for &k in src {
+                counts[((k >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        // Skip passes where all keys share the byte (common for the
+        // high byte): nothing would move.
+        if counts.iter().any(|&c| c as usize == n) {
+            continue;
+        }
+        let mut pos = [0u32; 256];
+        let mut acc = 0u32;
+        for b in 0..256 {
+            pos[b] = acc;
+            acc += counts[b];
+        }
+        if src_is_keys {
+            scatter_by_byte(keys.as_slice(), tmp.as_mut_slice(), shift, &mut pos);
+        } else {
+            scatter_by_byte(tmp.as_slice(), keys.as_mut_slice(), shift, &mut pos);
+        }
+        src_is_keys = !src_is_keys;
+    }
+    if !src_is_keys {
+        keys.copy_from_slice(&tmp[..n]);
+    }
+}
+
+#[inline]
+fn scatter_by_byte(src: &[u32], dst: &mut [u32], shift: usize, pos: &mut [u32; 256]) {
+    for &k in src {
+        let b = ((k >> shift) & 0xFF) as usize;
+        dst[pos[b] as usize] = k;
+        pos[b] += 1;
+    }
+}
+
+/// Predicted SpGEMM work: (flops, nnz upper bound) of `A·B` without
+/// computing it — `flops = Σ_i Σ_{k∈row_i(A)} nnz(B_k)`. For the SWLC
+/// kernel this equals `N·T·λ̄`, the quantity of the paper's §3.3 cost
+/// model, so benches report it alongside wall time.
+pub fn spgemm_nnz_flops(a: &Csr, b: &Csr) -> u64 {
+    let mut flops = 0u64;
+    for i in 0..a.n_rows {
+        let (acols, _) = a.row(i);
+        for &ac in acols {
+            flops += (b.indptr[ac as usize + 1] - b.indptr[ac as usize]) as u64;
+        }
+    }
+    flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dense_mul(a: &Csr, b: &Csr) -> Vec<f32> {
+        let (m, k, n) = (a.n_rows, a.n_cols, b.n_cols);
+        let (da, db) = (a.to_dense(), b.to_dense());
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let v = da[i * k + p];
+                if v != 0.0 {
+                    for j in 0..n {
+                        c[i * n + j] += v * db[p * n + j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut trip = vec![];
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.next_f64() < density {
+                    trip.push((r, c as u32, rng.next_normal() as f32));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, &trip)
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let a = random_csr(&mut rng, 13, 7, 0.3);
+            let b = random_csr(&mut rng, 7, 11, 0.3);
+            let c = spgemm(&a, &b);
+            c.check().unwrap();
+            let exp = dense_mul(&a, &b);
+            let got = c.to_dense();
+            for (g, e) in got.iter().zip(&exp) {
+                assert!((g - e).abs() < 1e-4, "{g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(&mut rng, 9, 9, 0.4);
+        let eye = Csr::from_triplets(9, 9, &(0..9).map(|i| (i, i as u32, 1.0)).collect::<Vec<_>>());
+        assert_eq!(spgemm(&a, &eye).to_dense(), a.to_dense());
+        assert_eq!(spgemm(&eye, &a).to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn empty_rows_and_cols() {
+        let a = Csr::zeros(4, 3);
+        let b = Csr::zeros(3, 5);
+        let c = spgemm(&a, &b);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!((c.n_rows, c.n_cols), (4, 5));
+    }
+
+    #[test]
+    fn flops_counts_collisions() {
+        // A row with k nonzeros against B rows of length m each => k*m flops.
+        let a = Csr::from_triplets(1, 3, &[(0, 0, 1.0), (0, 2, 1.0)]);
+        let b = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 1, 1.0), (2, 2, 1.0), (2, 3, 1.0), (2, 0, 1.0)],
+        );
+        assert_eq!(spgemm_nnz_flops(&a, &b), 2 + 3);
+    }
+
+    #[test]
+    fn gram_product_is_symmetric() {
+        let mut rng = Rng::new(7);
+        let q = random_csr(&mut rng, 12, 20, 0.2);
+        let p = spgemm(&q, &q.transpose());
+        let d = p.to_dense();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((d[i * 12 + j] - d[j * 12 + i]).abs() < 1e-4);
+            }
+        }
+    }
+}

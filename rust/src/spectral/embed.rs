@@ -1,0 +1,360 @@
+//! Nonlinear 2-D embeddings on kNN graphs: the UMAP-analog (fuzzy
+//! attraction/repulsion SGD over a PCA init) and the PHATE-analog
+//! (adaptive-bandwidth diffusion maps).
+//!
+//! These are deliberately compact re-implementations of the *mechanism*
+//! each method contributes — neighbor-graph attraction/repulsion for
+//! UMAP, diffusion-operator spectral coordinates for PHATE — since the
+//! original libraries are unavailable here and Fig. 4.3's claim ("leaf
+//! coordinates improve every DR pipeline") is about the pipelines'
+//! inputs, not their specific force curves (DESIGN.md §Substitutions).
+
+use super::knn::{knn_cross_exact, KnnGraph};
+use super::subspace::symmetric_topk;
+use crate::rng::Rng;
+use crate::sparse::Csr;
+
+/// Fuzzy edge weights from a kNN graph, UMAP-style: for each point,
+/// `w_ij = exp(-(d_ij - ρ_i)/σ_i)` with `ρ_i` the distance to the
+/// nearest neighbor and `σ_i` the mean excess distance. Returns a COO
+/// edge list (i, j, w) with weights in (0, 1].
+pub fn fuzzy_edges(graph: &KnnGraph) -> Vec<(u32, u32, f32)> {
+    let (n, k) = (graph.n, graph.k);
+    let mut edges = Vec::with_capacity(n * k);
+    for i in 0..n {
+        let dists = &graph.dists[i * k..(i + 1) * k];
+        let rho = dists[0];
+        let sigma = (dists.iter().map(|&d| (d - rho).max(0.0)).sum::<f32>() / k as f32).max(1e-6);
+        for j in 0..k {
+            let w = (-(dists[j] - rho).max(0.0) / sigma).exp();
+            edges.push((i as u32, graph.neighbors[i * k + j], w));
+        }
+    }
+    edges
+}
+
+/// Attraction/repulsion SGD refinement of a 2-D layout (UMAP-analog).
+///
+/// * attraction along fuzzy kNN edges with the `1/(1+d²)` kernel,
+/// * repulsion against uniformly sampled negatives,
+/// * linearly decaying learning rate, clipped updates.
+///
+/// `fixed_prefix` points are held in place (used to embed test points
+/// against a frozen training layout).
+pub fn sgd_refine(
+    coords: &mut [f32],
+    n: usize,
+    edges: &[(u32, u32, f32)],
+    epochs: usize,
+    lr0: f32,
+    neg_samples: usize,
+    fixed_prefix: usize,
+    seed: u64,
+) {
+    assert_eq!(coords.len(), n * 2);
+    let mut rng = Rng::new(seed);
+    let clip = 4.0f32;
+    for epoch in 0..epochs {
+        let lr = lr0 * (1.0 - epoch as f32 / epochs.max(1) as f32).max(0.05);
+        for &(i, j, w) in edges {
+            let (i, j) = (i as usize, j as usize);
+            let dx = coords[i * 2] - coords[j * 2];
+            let dy = coords[i * 2 + 1] - coords[j * 2 + 1];
+            let d2 = dx * dx + dy * dy;
+            // Attractive gradient of log(1/(1+d²)) scaled by edge weight.
+            let g = (-2.0 * w / (1.0 + d2)).max(-clip);
+            let (gx, gy) = ((g * dx).clamp(-clip, clip), (g * dy).clamp(-clip, clip));
+            if i >= fixed_prefix {
+                coords[i * 2] += lr * gx;
+                coords[i * 2 + 1] += lr * gy;
+            }
+            if j >= fixed_prefix {
+                coords[j * 2] -= lr * gx;
+                coords[j * 2 + 1] -= lr * gy;
+            }
+            // Negative sampling: push i away from random points.
+            if i >= fixed_prefix {
+                for _ in 0..neg_samples {
+                    let r = rng.gen_range(n);
+                    if r == i {
+                        continue;
+                    }
+                    let dx = coords[i * 2] - coords[r * 2];
+                    let dy = coords[i * 2 + 1] - coords[r * 2 + 1];
+                    let d2 = dx * dx + dy * dy;
+                    let g = (2.0 / ((0.1 + d2) * (1.0 + d2))).min(clip);
+                    coords[i * 2] += (lr * g * dx).clamp(-clip, clip);
+                    coords[i * 2 + 1] += (lr * g * dy).clamp(-clip, clip);
+                }
+            }
+        }
+    }
+}
+
+/// Full UMAP-analog: fuzzy kNN edges + SGD from a (provided) 2-D init —
+/// typically the top-2 PCA scores scaled to unit RMS.
+pub fn umap_like(init: &[f32], n: usize, graph: &KnnGraph, epochs: usize, seed: u64) -> Vec<f32> {
+    let mut coords = normalize_init(init, n);
+    let edges = fuzzy_edges(graph);
+    sgd_refine(&mut coords, n, &edges, epochs, 0.25, 3, 0, seed);
+    coords
+}
+
+/// Embed new points against a frozen reference layout: attach each query
+/// at the fuzzy-weighted mean of its k nearest reference points (in the
+/// *input* space used to build the reference graph), then run a few SGD
+/// epochs with the reference points fixed.
+pub fn embed_oos(
+    ref_inputs: &[f32],
+    ref_coords: &[f32],
+    n_ref: usize,
+    query_inputs: &[f32],
+    n_query: usize,
+    dim_in: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let cross = knn_cross_exact(query_inputs, n_query, ref_inputs, n_ref, dim_in, k);
+    let mut out = vec![0f32; n_query * 2];
+    for i in 0..n_query {
+        let dists = &cross.dists[i * k..(i + 1) * k];
+        let rho = dists[0];
+        let sigma = (dists.iter().map(|&d| (d - rho).max(0.0)).sum::<f32>() / k as f32).max(1e-6);
+        let mut wx = 0f64;
+        let mut wy = 0f64;
+        let mut ws = 0f64;
+        for j in 0..k {
+            let w = ((-(dists[j] - rho).max(0.0) / sigma).exp()) as f64;
+            let p = cross.neighbors[i * k + j] as usize;
+            wx += w * ref_coords[p * 2] as f64;
+            wy += w * ref_coords[p * 2 + 1] as f64;
+            ws += w;
+        }
+        out[i * 2] = (wx / ws) as f32;
+        out[i * 2 + 1] = (wy / ws) as f32;
+    }
+    // Optional local refinement: combined layout with refs fixed.
+    let mut combined = Vec::with_capacity((n_ref + n_query) * 2);
+    combined.extend_from_slice(ref_coords);
+    combined.extend_from_slice(&out);
+    let edges: Vec<(u32, u32, f32)> = (0..n_query)
+        .flat_map(|i| {
+            let dists = &cross.dists[i * k..(i + 1) * k];
+            let rho = dists[0];
+            let sigma =
+                (dists.iter().map(|&d| (d - rho).max(0.0)).sum::<f32>() / k as f32).max(1e-6);
+            (0..k)
+                .map(|j| {
+                    let w = (-(dists[j] - rho).max(0.0) / sigma).exp();
+                    ((n_ref + i) as u32, cross.neighbors[i * k + j], w)
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    // Attraction-only refinement: with the reference layout frozen,
+    // repulsion would push a well-attached query off its cluster (its
+    // nearest refs are also its strongest "negatives"), so it is
+    // disabled here.
+    sgd_refine(&mut combined, n_ref + n_query, &edges, 5, 0.05, 0, n_ref, seed);
+    combined[n_ref * 2..].to_vec()
+}
+
+/// PHATE-analog: adaptive-bandwidth diffusion maps on the kNN graph.
+///
+/// Affinity `A_ij = exp(-d_ij²/(σ_i σ_j))` (symmetrized), normalized
+/// `M = D^{-1/2} A D^{-1/2}`; the top non-trivial eigenpairs give
+/// diffusion coordinates `ψ_j λ_j^t`. Returns the 2-D coordinates.
+pub fn diffusion_map(graph: &KnnGraph, t_steps: u32, iters: usize, seed: u64) -> Vec<f32> {
+    let (n, k) = (graph.n, graph.k);
+    // Adaptive bandwidths: σ_i = distance to the ⌈k/2⌉-th neighbor.
+    let mut sigma = vec![0f32; n];
+    for i in 0..n {
+        sigma[i] = graph.dists[i * k + k / 2].max(1e-6);
+    }
+    // Symmetric affinity matrix (union of directed kNN edges).
+    let mut trip: Vec<(usize, u32, f32)> = Vec::with_capacity(2 * n * k);
+    for i in 0..n {
+        for j in 0..k {
+            let p = graph.neighbors[i * k + j] as usize;
+            let d = graph.dists[i * k + j];
+            let a = (-(d * d) / (sigma[i] * sigma[p])).exp();
+            trip.push((i, p as u32, a));
+            trip.push((p, i as u32, a));
+        }
+    }
+    // from_triplets sums duplicates: halve to average the two directions.
+    for t in trip.iter_mut() {
+        t.2 *= 0.5;
+    }
+    let mut a = Csr::from_triplets(n, n, &trip);
+    // D^{-1/2} A D^{-1/2}.
+    let deg: Vec<f32> = a.row_sums();
+    let dinv: Vec<f32> = deg.iter().map(|&v| 1.0 / v.max(1e-9).sqrt()).collect();
+    crate::sparse::scale_rows(&mut a, &dinv);
+    crate::sparse::scale_cols(&mut a, &dinv);
+
+    // Top 3 eigenpairs of M: the first is the trivial √deg direction.
+    let mut tmp = vec![0f32; n];
+    let _ = &mut tmp;
+    let (vals, vecs) = symmetric_topk(n, 3, iters, seed, |x, y| {
+        let kb = x.len() / n;
+        a.spmm(x, kb, y);
+    });
+    let mut out = vec![0f32; n * 2];
+    for i in 0..n {
+        // ψ = D^{-1/2} v (diffusion-map convention), scaled by λ^t.
+        let scale0 = vals[1].max(0.0).powi(t_steps as i32);
+        let scale1 = vals[2].max(0.0).powi(t_steps as i32);
+        out[i * 2] = vecs[i * 3 + 1] * dinv[i] * scale0;
+        out[i * 2 + 1] = vecs[i * 3 + 2] * dinv[i] * scale1;
+    }
+    // Normalize to unit RMS per axis for comparability.
+    normalize_init(&out, n)
+}
+
+/// Scale a 2-D layout to zero mean and unit RMS per axis.
+pub fn normalize_init(init: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(init.len(), n * 2);
+    let mut out = init.to_vec();
+    for axis in 0..2 {
+        let mean: f64 = (0..n).map(|i| out[i * 2 + axis] as f64).sum::<f64>() / n as f64;
+        let mut var = 0f64;
+        for i in 0..n {
+            let v = out[i * 2 + axis] as f64 - mean;
+            var += v * v;
+        }
+        let scale = 1.0 / (var / n as f64).sqrt().max(1e-12);
+        for i in 0..n {
+            out[i * 2 + axis] = ((out[i * 2 + axis] as f64 - mean) * scale) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::knn::knn_exact;
+    use crate::rng::Rng;
+
+    /// Two well-separated 2-D clusters, 30 points each, plus labels.
+    fn two_clusters() -> (Vec<f32>, Vec<usize>) {
+        let mut rng = Rng::new(1);
+        let mut x = vec![];
+        let mut y = vec![];
+        for i in 0..60 {
+            let c = i % 2;
+            x.push(c as f32 * 20.0 + rng.next_normal() as f32);
+            x.push(rng.next_normal() as f32);
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    fn cluster_separation(coords: &[f32], y: &[usize]) -> f32 {
+        // Ratio of between-cluster centroid distance to mean within-
+        // cluster spread.
+        let mut cent = [[0f64; 2]; 2];
+        let mut cnt = [0f64; 2];
+        for (i, &c) in y.iter().enumerate() {
+            cent[c][0] += coords[i * 2] as f64;
+            cent[c][1] += coords[i * 2 + 1] as f64;
+            cnt[c] += 1.0;
+        }
+        for c in 0..2 {
+            cent[c][0] /= cnt[c];
+            cent[c][1] /= cnt[c];
+        }
+        let between = ((cent[0][0] - cent[1][0]).powi(2) + (cent[0][1] - cent[1][1]).powi(2)).sqrt();
+        let mut within = 0f64;
+        for (i, &c) in y.iter().enumerate() {
+            within += ((coords[i * 2] as f64 - cent[c][0]).powi(2)
+                + (coords[i * 2 + 1] as f64 - cent[c][1]).powi(2))
+            .sqrt();
+        }
+        within /= y.len() as f64;
+        (between / within.max(1e-9)) as f32
+    }
+
+    #[test]
+    fn fuzzy_edges_weights_in_unit_interval() {
+        let (x, _) = two_clusters();
+        let g = knn_exact(&x, 60, 2, 5);
+        let edges = fuzzy_edges(&g);
+        assert_eq!(edges.len(), 60 * 5);
+        assert!(edges.iter().all(|&(_, _, w)| w > 0.0 && w <= 1.0));
+        // Nearest neighbor always gets weight 1.
+        assert!(edges.chunks(5).all(|c| (c[0].2 - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn umap_like_separates_clusters() {
+        let (x, y) = two_clusters();
+        let g = knn_exact(&x, 60, 2, 5);
+        // Random init: the SGD must discover the separation from edges.
+        let mut rng = Rng::new(7);
+        let init: Vec<f32> = (0..120).map(|_| rng.next_normal() as f32).collect();
+        let coords = umap_like(&init, 60, &g, 120, 3);
+        assert!(cluster_separation(&coords, &y) > 1.5, "sep={}", cluster_separation(&coords, &y));
+    }
+
+    #[test]
+    fn diffusion_map_separates_clusters() {
+        let (x, y) = two_clusters();
+        let g = knn_exact(&x, 60, 2, 8);
+        let coords = diffusion_map(&g, 2, 40, 5);
+        assert!(cluster_separation(&coords, &y) > 1.5, "sep={}", cluster_separation(&coords, &y));
+    }
+
+    #[test]
+    fn normalize_init_unit_rms() {
+        let mut rng = Rng::new(9);
+        let init: Vec<f32> = (0..200).map(|_| 3.0 + 10.0 * rng.next_normal() as f32).collect();
+        let out = normalize_init(&init, 100);
+        for axis in 0..2 {
+            let mean: f64 = (0..100).map(|i| out[i * 2 + axis] as f64).sum::<f64>() / 100.0;
+            let rms: f64 =
+                ((0..100).map(|i| (out[i * 2 + axis] as f64).powi(2)).sum::<f64>() / 100.0).sqrt();
+            assert!(mean.abs() < 1e-4);
+            assert!((rms - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn oos_embedding_lands_near_own_cluster() {
+        let (x, y) = two_clusters();
+        let g = knn_exact(&x, 60, 2, 5);
+        // PCA-style init (the documented §4.3 pipeline shape): the input
+        // is already 2-D, so the init is the data itself. Random init is
+        // exercised by `umap_like_separates_clusters`; it can fragment
+        // clusters, which is exactly why the paper's pipelines put PCA
+        // in front.
+        let coords = umap_like(&x, 60, &g, 120, 3);
+        // Queries: one point near each cluster center in input space.
+        let queries = vec![0.0, 0.0, 20.0, 0.0];
+        let q_coords = embed_oos(&x, &coords, 60, &queries, 2, 2, 5, 13);
+        // Each query should be nearer to its cluster's centroid.
+        for (qi, cls) in [(0usize, 0usize), (1, 1)] {
+            let mut best = (f32::INFINITY, usize::MAX);
+            for c in 0..2 {
+                let mut cent = [0f32; 2];
+                let mut cnt = 0f32;
+                for (i, &yy) in y.iter().enumerate() {
+                    if yy == c {
+                        cent[0] += coords[i * 2];
+                        cent[1] += coords[i * 2 + 1];
+                        cnt += 1.0;
+                    }
+                }
+                cent[0] /= cnt;
+                cent[1] /= cnt;
+                let d = (q_coords[qi * 2] - cent[0]).powi(2)
+                    + (q_coords[qi * 2 + 1] - cent[1]).powi(2);
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assert_eq!(best.1, cls, "query {qi} landed in wrong cluster");
+        }
+    }
+}

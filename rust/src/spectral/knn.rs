@@ -1,0 +1,279 @@
+//! Approximate k-nearest-neighbor graphs via random-projection forests.
+//!
+//! The UMAP/PHATE-style pipelines of §4.3 are dominated by neighbor
+//! search and graph construction; this is that substrate. An RP forest
+//! splits points recursively on random hyperplanes (median threshold)
+//! down to small leaves; candidate neighbors are leaf cohabitants across
+//! several trees, refined by exact distance. Exact brute force is kept
+//! for small inputs and as the test oracle.
+
+use crate::rng::Rng;
+
+/// A kNN graph: `neighbors[i*k + j]` is the j-th neighbor of point i
+/// (sorted by ascending distance), `dists` the matching distances
+/// (Euclidean).
+pub struct KnnGraph {
+    pub n: usize,
+    pub k: usize,
+    pub neighbors: Vec<u32>,
+    pub dists: Vec<f32>,
+}
+
+#[inline]
+fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Exact brute-force kNN (O(n²d)); test oracle and small-input path.
+pub fn knn_exact(x: &[f32], n: usize, d: usize, k: usize) -> KnnGraph {
+    assert!(k < n, "need k < n");
+    let mut neighbors = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(n);
+    for i in 0..n {
+        cand.clear();
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..n {
+            if j != i {
+                cand.push((sqdist(xi, &x[j * d..(j + 1) * d]), j as u32));
+            }
+        }
+        cand.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        cand.truncate(k);
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (j, &(dd, idx)) in cand.iter().enumerate() {
+            neighbors[i * k + j] = idx;
+            dists[i * k + j] = dd.sqrt();
+        }
+    }
+    KnnGraph { n, k, neighbors, dists }
+}
+
+/// One random-projection tree: returns, for each point, its leaf id, plus
+/// the member list per leaf.
+fn rp_tree(x: &[f32], n: usize, d: usize, leaf_size: usize, rng: &mut Rng) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let mut leaf_of = vec![0u32; n];
+    let mut leaves: Vec<Vec<u32>> = Vec::new();
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Explicit stack of index ranges.
+    let mut proj = vec![0f32; n];
+    let mut stack: Vec<(usize, usize)> = vec![(0, n)];
+    let mut dir = vec![0f32; d];
+    while let Some((lo, hi)) = stack.pop() {
+        let size = hi - lo;
+        if size <= leaf_size.max(2) {
+            let leaf_id = leaves.len() as u32;
+            for &p in &idx[lo..hi] {
+                leaf_of[p as usize] = leaf_id;
+            }
+            leaves.push(idx[lo..hi].to_vec());
+            continue;
+        }
+        // Random unit-ish direction.
+        for v in dir.iter_mut() {
+            *v = rng.next_normal() as f32;
+        }
+        for (slot, &p) in idx[lo..hi].iter().enumerate() {
+            let xi = &x[p as usize * d..(p as usize + 1) * d];
+            proj[lo + slot] = xi.iter().zip(&dir).map(|(a, b)| a * b).sum();
+        }
+        // Median split via select_nth on (proj, idx) pairs.
+        let mut pairs: Vec<(f32, u32)> =
+            idx[lo..hi].iter().enumerate().map(|(s, &p)| (proj[lo + s], p)).collect();
+        let mid = size / 2;
+        pairs.select_nth_unstable_by(mid, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (s, &(_, p)) in pairs.iter().enumerate() {
+            idx[lo + s] = p;
+        }
+        // Degenerate projections (all equal) → just split in half.
+        stack.push((lo, lo + mid));
+        stack.push((lo + mid, hi));
+    }
+    (leaf_of, leaves)
+}
+
+/// Approximate kNN graph via an RP forest: `n_trees` trees with leaves
+/// of ≤ `leaf_size`, exact re-ranking of leaf-cohabitant candidates.
+pub fn knn_approx(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    n_trees: usize,
+    leaf_size: usize,
+    seed: u64,
+) -> KnnGraph {
+    assert!(k < n);
+    if n <= 2048 {
+        return knn_exact(x, n, d, k);
+    }
+    let root = Rng::new(seed);
+    let trees: Vec<(Vec<u32>, Vec<Vec<u32>>)> = (0..n_trees)
+        .map(|t| {
+            let mut rng = root.derive(t as u64 + 1);
+            rp_tree(x, n, d, leaf_size, &mut rng)
+        })
+        .collect();
+
+    let mut neighbors = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    let mut cand: Vec<u32> = Vec::with_capacity(n_trees * leaf_size * 2);
+    let mut scored: Vec<(f32, u32)> = Vec::with_capacity(n_trees * leaf_size * 2);
+    for i in 0..n {
+        cand.clear();
+        for (leaf_of, leaves) in &trees {
+            for &p in &leaves[leaf_of[i] as usize] {
+                if p as usize != i {
+                    cand.push(p);
+                }
+            }
+        }
+        cand.sort_unstable();
+        cand.dedup();
+        scored.clear();
+        let xi = &x[i * d..(i + 1) * d];
+        for &p in &cand {
+            scored.push((sqdist(xi, &x[p as usize * d..(p as usize + 1) * d]), p));
+        }
+        let kk = k.min(scored.len());
+        if kk > 0 {
+            scored.select_nth_unstable_by(kk - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+            scored.truncate(kk);
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        for j in 0..k {
+            // If a leaf was starved of candidates, pad with the last
+            // found neighbor (degenerate but safe).
+            let (dd, p) = if j < scored.len() {
+                scored[j]
+            } else if !scored.is_empty() {
+                scored[scored.len() - 1]
+            } else {
+                (f32::INFINITY, ((i + 1) % n) as u32)
+            };
+            neighbors[i * k + j] = p;
+            dists[i * k + j] = dd.sqrt();
+        }
+    }
+    KnnGraph { n, k, neighbors, dists }
+}
+
+/// Cross kNN: for each query row, its k nearest rows of a *reference*
+/// set (exact, used for OOS embedding attachment).
+pub fn knn_cross_exact(
+    queries: &[f32],
+    n_q: usize,
+    refs: &[f32],
+    n_r: usize,
+    d: usize,
+    k: usize,
+) -> KnnGraph {
+    assert!(k <= n_r);
+    let mut neighbors = vec![0u32; n_q * k];
+    let mut dists = vec![0f32; n_q * k];
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(n_r);
+    for i in 0..n_q {
+        cand.clear();
+        let qi = &queries[i * d..(i + 1) * d];
+        for j in 0..n_r {
+            cand.push((sqdist(qi, &refs[j * d..(j + 1) * d]), j as u32));
+        }
+        cand.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        cand.truncate(k);
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (j, &(dd, idx)) in cand.iter().enumerate() {
+            neighbors[i * k + j] = idx;
+            dists[i * k + j] = dd.sqrt();
+        }
+    }
+    KnnGraph { n: n_q, k, neighbors, dists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_points(side: usize) -> Vec<f32> {
+        // side×side unit grid in 2D.
+        let mut x = Vec::with_capacity(side * side * 2);
+        for i in 0..side {
+            for j in 0..side {
+                x.push(i as f32);
+                x.push(j as f32);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn exact_knn_on_grid_finds_adjacent_cells() {
+        let side = 5;
+        let x = grid_points(side);
+        let g = knn_exact(&x, side * side, 2, 4);
+        // Interior point (2,2) = index 12: neighbors at distance 1.
+        let nb: Vec<u32> = g.neighbors[12 * 4..13 * 4].to_vec();
+        let expect = [7u32, 11, 13, 17];
+        let mut nb_sorted = nb.clone();
+        nb_sorted.sort_unstable();
+        assert_eq!(nb_sorted, expect);
+        assert!(g.dists[12 * 4..13 * 4].iter().all(|&d| (d - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn approx_knn_high_recall_vs_exact() {
+        let mut rng = Rng::new(2);
+        let (n, d, k) = (3000, 8, 10);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let exact = knn_exact(&x, n, d, k);
+        let approx = knn_approx(&x, n, d, k, 6, 48, 3);
+        let mut hits = 0usize;
+        for i in 0..n {
+            let e: std::collections::HashSet<u32> =
+                exact.neighbors[i * k..(i + 1) * k].iter().copied().collect();
+            for &p in &approx.neighbors[i * k..(i + 1) * k] {
+                if e.contains(&p) {
+                    hits += 1;
+                }
+            }
+        }
+        let recall = hits as f64 / (n * k) as f64;
+        assert!(recall > 0.6, "recall={recall}");
+    }
+
+    #[test]
+    fn approx_never_returns_self() {
+        let mut rng = Rng::new(4);
+        let (n, d, k) = (2500, 4, 5);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let g = knn_approx(&x, n, d, k, 4, 32, 5);
+        for i in 0..n {
+            for &p in &g.neighbors[i * k..(i + 1) * k] {
+                assert_ne!(p as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_knn_identifies_identical_rows() {
+        let refs = vec![0.0, 0.0, 5.0, 5.0, 9.0, 0.0];
+        let queries = vec![5.1, 5.0, 0.0, 0.1];
+        let g = knn_cross_exact(&queries, 2, &refs, 3, 2, 1);
+        assert_eq!(g.neighbors[0], 1);
+        assert_eq!(g.neighbors[1], 0);
+    }
+
+    #[test]
+    fn small_inputs_fall_back_to_exact() {
+        let mut rng = Rng::new(6);
+        let (n, d, k) = (100, 3, 4);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let a = knn_approx(&x, n, d, k, 4, 16, 7);
+        let e = knn_exact(&x, n, d, k);
+        assert_eq!(a.neighbors, e.neighbors);
+    }
+}

@@ -1,0 +1,234 @@
+//! Small dense linear-algebra kernels: modified Gram–Schmidt QR and a
+//! cyclic Jacobi symmetric eigensolver. Matrices are row-major; the
+//! "tall" matrices of subspace iteration use the row-major-k layout
+//! (`v[i*k + j]`) shared with `Csr::spmm`.
+
+/// In-place modified Gram–Schmidt orthonormalization of the k columns of
+/// a tall `n×k` row-major matrix. Columns that vanish (rank deficiency)
+/// are replaced with zeros. Returns the column norms seen (diagnostics).
+pub fn mgs_orthonormalize(v: &mut [f32], n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(v.len(), n * k);
+    let mut norms = Vec::with_capacity(k);
+    for j in 0..k {
+        // Norm before projection: the rank-deficiency test is *relative*
+        // to it (an absolute epsilon would keep normalized round-off
+        // noise as a spurious basis vector).
+        let mut pre = 0f64;
+        for i in 0..n {
+            pre += (v[i * k + j] as f64).powi(2);
+        }
+        let pre = pre.sqrt();
+        // Two projection passes (MGS with reorthogonalization) for
+        // numerical orthogonality at f32.
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut dot = 0f64;
+                for i in 0..n {
+                    dot += v[i * k + j] as f64 * v[i * k + p] as f64;
+                }
+                let dot = dot as f32;
+                if dot != 0.0 {
+                    for i in 0..n {
+                        v[i * k + j] -= dot * v[i * k + p];
+                    }
+                }
+            }
+        }
+        let mut norm = 0f64;
+        for i in 0..n {
+            norm += (v[i * k + j] as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        norms.push(norm as f32);
+        if norm > 1e-6 * pre.max(1e-30) && norm > 1e-20 {
+            let inv = (1.0 / norm) as f32;
+            for i in 0..n {
+                v[i * k + j] *= inv;
+            }
+        } else {
+            for i in 0..n {
+                v[i * k + j] = 0.0;
+            }
+        }
+    }
+    norms
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric `k×k` matrix
+/// (row-major). Returns `(eigenvalues, eigenvectors)` with eigenvectors
+/// in the *columns* of the returned row-major matrix, sorted by
+/// descending eigenvalue.
+pub fn jacobi_eigh(a_in: &[f32], k: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(a_in.len(), k * k);
+    let mut a: Vec<f64> = a_in.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    for _sweep in 0..64 {
+        let mut off = 0f64;
+        for p in 0..k {
+            for q in (p + 1)..k {
+                off += a[p * k + q] * a[p * k + q];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = a[p * k + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * k + p];
+                let aqq = a[q * k + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of A.
+                for i in 0..k {
+                    let aip = a[i * k + p];
+                    let aiq = a[i * k + q];
+                    a[i * k + p] = c * aip - s * aiq;
+                    a[i * k + q] = s * aip + c * aiq;
+                }
+                for i in 0..k {
+                    let api = a[p * k + i];
+                    let aqi = a[q * k + i];
+                    a[p * k + i] = c * api - s * aqi;
+                    a[q * k + i] = s * api + c * aqi;
+                }
+                // Accumulate rotations into V.
+                for i in 0..k {
+                    let vip = v[i * k + p];
+                    let viq = v[i * k + q];
+                    v[i * k + p] = c * vip - s * viq;
+                    v[i * k + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    // Extract eigenpairs and sort by descending eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..k).map(|i| (a[i * k + i], i)).collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let mut vals = Vec::with_capacity(k);
+    let mut vecs = vec![0f32; k * k];
+    for (out_col, &(val, src_col)) in pairs.iter().enumerate() {
+        vals.push(val as f32);
+        for i in 0..k {
+            vecs[i * k + out_col] = v[i * k + src_col] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// `C = A·B` for small dense row-major matrices: `(m×k)·(k×n) → m×n`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let v = a[i * k + p];
+            if v != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += v * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mgs_produces_orthonormal_columns() {
+        let mut rng = Rng::new(1);
+        let (n, k) = (40, 6);
+        let mut v: Vec<f32> = (0..n * k).map(|_| rng.next_normal() as f32).collect();
+        mgs_orthonormalize(&mut v, n, k);
+        for a in 0..k {
+            for b in 0..k {
+                let mut dot = 0f64;
+                for i in 0..n {
+                    dot += v[i * k + a] as f64 * v[i * k + b] as f64;
+                }
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "({a},{b}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_handles_rank_deficiency() {
+        // Two identical columns: second must vanish.
+        let mut v = vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        mgs_orthonormalize(&mut v, 3, 2);
+        let col1_norm: f32 = (0..3).map(|i| v[i * 2 + 1] * v[i * 2 + 1]).sum();
+        assert!(col1_norm < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_recovers_known_spectrum() {
+        // diag(5, 2, -1) rotated by a known orthogonal matrix.
+        let a = vec![
+            3.0f32, 1.0, 1.0, //
+            1.0, 3.0, 1.0, //
+            1.0, 1.0, 3.0,
+        ];
+        let (vals, vecs) = jacobi_eigh(&a, 3);
+        // Known eigenvalues: 5, 2, 2.
+        assert!((vals[0] - 5.0).abs() < 1e-4);
+        assert!((vals[1] - 2.0).abs() < 1e-4);
+        assert!((vals[2] - 2.0).abs() < 1e-4);
+        // A v = λ v for the top eigenvector.
+        for i in 0..3 {
+            let av: f32 = (0..3).map(|j| a[i * 3 + j] * vecs[j * 3]).sum();
+            assert!((av - vals[0] * vecs[i * 3]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn jacobi_eigenvectors_orthonormal() {
+        let mut rng = Rng::new(3);
+        let k = 5;
+        let mut a = vec![0f32; k * k];
+        for i in 0..k {
+            for j in i..k {
+                let v = rng.next_normal() as f32;
+                a[i * k + j] = v;
+                a[j * k + i] = v;
+            }
+        }
+        let (_, vecs) = jacobi_eigh(&a, k);
+        for c1 in 0..k {
+            for c2 in 0..k {
+                let dot: f32 = (0..k).map(|i| vecs[i * k + c1] * vecs[i * k + c2]).sum();
+                let expect = if c1 == c2 { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        let a = vec![2.0f32, 0.5, 0.5, 1.0];
+        let (vals, _) = jacobi_eigh(&a, 2);
+        assert!((vals.iter().sum::<f32>() - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matmul_small_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+}

@@ -1,0 +1,99 @@
+//! Spectral methods on leaf coordinates (§4.3).
+//!
+//! The paper's point: because `P = Q Qᵀ` (symmetric case), spectral
+//! methods never need the dense kernel — they run on the sparse
+//! leaf-incidence matrix `Q` directly. This module provides the full
+//! §4.3 pipeline, from scratch:
+//!
+//! * [`linalg`] — small dense kernels: modified Gram–Schmidt QR and a
+//!   Jacobi symmetric eigensolver (the LAPACK-corner we need).
+//! * [`subspace`] — randomized subspace iteration on an implicit
+//!   symmetric PSD operator (the ARPACK-equivalent).
+//! * [`pca`] — Leaf PCA on sparse `Q` and plain PCA on dense features,
+//!   both via the same operator machinery, with implicit centering
+//!   (never materializing the centered matrix — the trick the paper
+//!   credits to sklearn's ARPACK path).
+//! * [`knn`] — random-projection-tree approximate kNN graphs (the
+//!   neighbor-search substrate UMAP/PHATE pipelines spend their time in).
+//! * [`embed`] — graph embeddings: spectral/PCA init + attraction-
+//!   repulsion SGD (UMAP-analog) and diffusion maps (PHATE-analog);
+//!   DESIGN.md §Substitutions records the mapping.
+
+pub mod embed;
+pub mod knn;
+pub mod linalg;
+pub mod pca;
+pub mod subspace;
+
+/// Embedding-quality metric used in Fig. 4.3 / App. J: classify each
+/// test point by majority vote of its k nearest *train* embedding
+/// points; ties break to the smaller class id.
+pub fn knn_accuracy(
+    train_emb: &[f32],
+    train_y: &[f32],
+    test_emb: &[f32],
+    test_y: &[f32],
+    dim: usize,
+    k: usize,
+    n_classes: usize,
+) -> f64 {
+    let n_train = train_y.len();
+    let n_test = test_y.len();
+    assert_eq!(train_emb.len(), n_train * dim);
+    assert_eq!(test_emb.len(), n_test * dim);
+    let mut hits = 0usize;
+    // Exact search is fine here: dim is 2 and this is an evaluation.
+    let mut dist_idx: Vec<(f32, u32)> = Vec::with_capacity(n_train);
+    for i in 0..n_test {
+        let qi = &test_emb[i * dim..(i + 1) * dim];
+        dist_idx.clear();
+        for j in 0..n_train {
+            let rj = &train_emb[j * dim..(j + 1) * dim];
+            let mut d = 0f32;
+            for f in 0..dim {
+                let t = qi[f] - rj[f];
+                d += t * t;
+            }
+            dist_idx.push((d, j as u32));
+        }
+        let kk = k.min(n_train);
+        dist_idx.select_nth_unstable_by(kk - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0u32; n_classes];
+        for &(_, j) in &dist_idx[..kk] {
+            votes[train_y[j as usize] as usize] += 1;
+        }
+        let pred = (0..n_classes).max_by_key(|&c| (votes[c], usize::MAX - c)).unwrap();
+        if pred as f32 == test_y[i] {
+            hits += 1;
+        }
+    }
+    hits as f64 / n_test.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_accuracy_perfect_on_separated_clusters() {
+        // Two clusters far apart in 2D.
+        let train_emb = vec![0.0, 0.0, 0.1, 0.0, 10.0, 10.0, 10.1, 10.0];
+        let train_y = vec![0.0, 0.0, 1.0, 1.0];
+        let test_emb = vec![0.05, 0.01, 9.9, 10.0];
+        let test_y = vec![0.0, 1.0];
+        let acc = knn_accuracy(&train_emb, &train_y, &test_emb, &test_y, 2, 2, 2);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn knn_accuracy_chance_on_shuffled_labels() {
+        let mut rng = crate::rng::Rng::new(1);
+        let n = 400;
+        let train_emb: Vec<f32> = (0..n * 2).map(|_| rng.next_f32()).collect();
+        let train_y: Vec<f32> = (0..n).map(|_| rng.gen_range(2) as f32).collect();
+        let test_emb: Vec<f32> = (0..100 * 2).map(|_| rng.next_f32()).collect();
+        let test_y: Vec<f32> = (0..100).map(|_| rng.gen_range(2) as f32).collect();
+        let acc = knn_accuracy(&train_emb, &train_y, &test_emb, &test_y, 2, 10, 2);
+        assert!((acc - 0.5).abs() < 0.2, "acc={acc}");
+    }
+}

@@ -1,0 +1,413 @@
+//! PCA via implicit Gram operators: Leaf PCA on the sparse incidence
+//! matrix `Q` (§4.3) and plain PCA on dense feature matrices, sharing
+//! the subspace-iteration core.
+//!
+//! Centering is implicit: the operator for the centered Gram matrix
+//! `(Q - 1μᵀ)(Q - 1μᵀ)ᵀ` is applied as
+//! `y = Q(Qᵀx - μ s) - 1·(μᵀ(Qᵀx - μ s))` with `s = 1ᵀx`, never forming
+//! the (dense!) centered matrix — the sklearn-ARPACK trick the paper
+//! leans on for sparse inputs.
+
+use super::subspace::symmetric_topk;
+use crate::sparse::Csr;
+
+/// Leaf-PCA scores: top-k principal components of the row-sample leaf
+/// matrix `Q` (N×L). Returns `(scores N×k row-major-k, eigvals)`;
+/// scores are `U·Σ` of the (optionally centered) `Q`, i.e. the kernel-PCA
+/// coordinates of the SWLC Gram kernel (Cor. 3.7).
+pub fn leaf_pca(q: &Csr, k: usize, iters: usize, center: bool, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let n = q.n_rows;
+    let l = q.n_cols;
+    let kk_max = k + 4; // subspace oversampling width used by symmetric_topk
+    let mut tmp = vec![0f32; l * kk_max];
+    // Column means μ (length L) for implicit centering.
+    let mu: Vec<f32> = if center {
+        let mut m = vec![0f32; l];
+        for r in 0..n {
+            let (cols, vals) = q.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m[c as usize] += v;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        m.iter_mut().for_each(|v| *v *= inv);
+        m
+    } else {
+        vec![]
+    };
+
+    let (vals, vecs) = symmetric_topk(n, k, iters, seed, |x, y| {
+        let kb = x.len() / n;
+        let tmp = &mut tmp[..l * kb];
+        // tmp = Qᵀ x  (L×kb)
+        q.spmm_t(x, kb, tmp);
+        if center {
+            // tmp -= μ · (1ᵀ x)
+            let mut colsum = vec![0f64; kb];
+            for i in 0..n {
+                for j in 0..kb {
+                    colsum[j] += x[i * kb + j] as f64;
+                }
+            }
+            for c in 0..l {
+                let m = mu[c];
+                if m != 0.0 {
+                    for j in 0..kb {
+                        tmp[c * kb + j] -= m * colsum[j] as f32;
+                    }
+                }
+            }
+        }
+        // y = Q tmp
+        q.spmm(tmp, kb, y);
+        if center {
+            // y -= 1 · (μᵀ tmp)
+            let mut mudot = vec![0f64; kb];
+            for c in 0..l {
+                let m = mu[c];
+                if m != 0.0 {
+                    for j in 0..kb {
+                        mudot[j] += (m * tmp[c * kb + j]) as f64;
+                    }
+                }
+            }
+            for i in 0..n {
+                for j in 0..kb {
+                    y[i * kb + j] -= mudot[j] as f32;
+                }
+            }
+        }
+    });
+
+    // Scores = V · diag(sqrt(λ)): eigenvectors of the Gram operator are
+    // the left singular vectors U, so U·Σ = V·sqrt(λ).
+    let mut scores = vecs;
+    for i in 0..n {
+        for j in 0..k {
+            scores[i * k + j] *= vals[j].max(0.0).sqrt();
+        }
+    }
+    (scores, vals)
+}
+
+/// Project *new* rows onto an existing Leaf-PCA basis: given training
+/// `(q_train, scores, vals)` and an OOS incidence map `q_new`, the OOS
+/// scores are `Q_new · V_right` where `V_right = Q_trainᵀ U Σ⁻¹ =
+/// Q_trainᵀ · scores · Σ⁻²·Σ = Q_trainᵀ scores / λ ... `; computed
+/// stably as `Q_new (Q_trainᵀ scores) diag(1/λ) · diag(sqrt(λ))
+/// = Q_new (Q_trainᵀ scores) diag(1/sqrt(λ))`.
+/// (Uncentered variant; matches `leaf_pca(center=false)`.)
+pub fn leaf_pca_project(
+    q_train: &Csr,
+    scores: &[f32],
+    vals: &[f32],
+    q_new: &Csr,
+) -> Vec<f32> {
+    let k = vals.len();
+    let n = q_train.n_rows;
+    let l = q_train.n_cols;
+    assert_eq!(scores.len(), n * k);
+    assert_eq!(q_new.n_cols, l);
+    // basis = Q_trainᵀ · scores  (L×k), then scale columns by 1/λ_j
+    // (scores = U sqrt(λ) ⇒ Qᵀ U = V_right sqrt(λ) ⇒ basis = V_right λ).
+    let mut basis = vec![0f32; l * k];
+    q_train.spmm_t(scores, k, &mut basis);
+    for c in 0..l {
+        for j in 0..k {
+            let lam = vals[j].max(1e-12);
+            basis[c * k + j] /= lam;
+        }
+    }
+    // new scores = Q_new · basis · diag(sqrt(λ)) = Q_new·V_right·sqrt(λ)…
+    // wait: OOS kernel-PCA scores are Q_new V_right = U_new Σ-coords.
+    // Training scores are U Σ = Q_train V_right, so the consistent OOS
+    // map is simply Q_new · V_right — basis already equals V_right.
+    let mut out = vec![0f32; q_new.n_rows * k];
+    q_new.spmm(&basis, k, &mut out);
+    out
+}
+
+/// Plain PCA on a dense row-major `n×d` feature matrix (centered),
+/// returning `(scores n×k, eigvals)` — the "raw" pipelines of Fig. 4.3.
+pub fn dense_pca(x: &[f32], n: usize, d: usize, k: usize, iters: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), n * d);
+    let mut mean = vec![0f64; d];
+    for i in 0..n {
+        for f in 0..d {
+            mean[f] += x[i * d + f] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mean32: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+
+    let kk_max = k + 4;
+    let mut tmp = vec![0f32; d * kk_max];
+    let (vals, vecs) = symmetric_topk(n, k, iters, seed, |v, y| {
+        let kb = v.len() / n;
+        let tmp = &mut tmp[..d * kb];
+        tmp.fill(0.0);
+        // tmp = Xcᵀ v where Xc = X - 1·meanᵀ.
+        let mut colsum = vec![0f64; kb];
+        for i in 0..n {
+            for j in 0..kb {
+                colsum[j] += v[i * kb + j] as f64;
+            }
+        }
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            let vi = &v[i * kb..(i + 1) * kb];
+            for f in 0..d {
+                let xv = xi[f];
+                if xv != 0.0 {
+                    let trow = &mut tmp[f * kb..(f + 1) * kb];
+                    for j in 0..kb {
+                        trow[j] += xv * vi[j];
+                    }
+                }
+            }
+        }
+        for f in 0..d {
+            let m = mean32[f];
+            for j in 0..kb {
+                tmp[f * kb + j] -= m * colsum[j] as f32;
+            }
+        }
+        // y = Xc tmp.
+        let mut mudot = vec![0f64; kb];
+        for f in 0..d {
+            let m = mean32[f];
+            for j in 0..kb {
+                mudot[j] += (m * tmp[f * kb + j]) as f64;
+            }
+        }
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            let yi = &mut y[i * kb..(i + 1) * kb];
+            yi.fill(0.0);
+            for f in 0..d {
+                let xv = xi[f];
+                if xv != 0.0 {
+                    let trow = &tmp[f * kb..(f + 1) * kb];
+                    for j in 0..kb {
+                        yi[j] += xv * trow[j];
+                    }
+                }
+            }
+            for j in 0..kb {
+                yi[j] -= mudot[j] as f32;
+            }
+        }
+    });
+
+    let mut scores = vecs;
+    for i in 0..n {
+        for j in 0..k {
+            scores[i * k + j] *= vals[j].max(0.0).sqrt();
+        }
+    }
+    (scores, vals)
+}
+
+/// Project new dense rows onto the training dense-PCA basis.
+pub fn dense_pca_project(
+    x_train: &[f32],
+    n: usize,
+    d: usize,
+    scores: &[f32],
+    vals: &[f32],
+    x_new: &[f32],
+) -> Vec<f32> {
+    let k = vals.len();
+    let n_new = x_new.len() / d;
+    // Column means of training data.
+    let mut mean = vec![0f32; d];
+    for i in 0..n {
+        for f in 0..d {
+            mean[f] += x_train[i * d + f];
+        }
+    }
+    mean.iter_mut().for_each(|m| *m /= n as f32);
+    // V_right λ = Xcᵀ·scores ⇒ basis = Xcᵀ scores / λ.
+    let mut basis = vec![0f32; d * k];
+    // score col sums for centering Xcᵀ = Xᵀ - mean·1ᵀ.
+    let mut ssum = vec![0f64; k];
+    for i in 0..n {
+        for j in 0..k {
+            ssum[j] += scores[i * k + j] as f64;
+        }
+    }
+    for i in 0..n {
+        let xi = &x_train[i * d..(i + 1) * d];
+        let si = &scores[i * k..(i + 1) * k];
+        for f in 0..d {
+            let xv = xi[f];
+            if xv != 0.0 {
+                for j in 0..k {
+                    basis[f * k + j] += xv * si[j];
+                }
+            }
+        }
+    }
+    for f in 0..d {
+        for j in 0..k {
+            basis[f * k + j] = (basis[f * k + j] - mean[f] * ssum[j] as f32)
+                / vals[j].max(1e-12);
+        }
+    }
+    let mut out = vec![0f32; n_new * k];
+    for i in 0..n_new {
+        let xi = &x_new[i * d..(i + 1) * d];
+        let oi = &mut out[i * k..(i + 1) * k];
+        for f in 0..d {
+            let xv = xi[f] - mean[f];
+            if xv != 0.0 {
+                for j in 0..k {
+                    oi[j] += xv * basis[f * k + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dense_pca_finds_dominant_direction() {
+        // Data stretched along (1,1)/√2 in 2D.
+        let mut rng = Rng::new(1);
+        let n = 300;
+        let mut x = vec![0f32; n * 2];
+        for i in 0..n {
+            let a = rng.next_normal() as f32 * 5.0;
+            let b = rng.next_normal() as f32 * 0.3;
+            x[i * 2] = a + b;
+            x[i * 2 + 1] = a - b;
+        }
+        let (scores, vals) = dense_pca(&x, n, 2, 2, 25, 2);
+        assert!(vals[0] / vals[1] > 30.0, "vals={vals:?}");
+        // PC1 score should correlate with x0 + x1.
+        let mut dot = 0f64;
+        let mut na = 0f64;
+        let mut nb = 0f64;
+        for i in 0..n {
+            let a = scores[i * 2] as f64;
+            let b = (x[i * 2] + x[i * 2 + 1]) as f64;
+            dot += a * b;
+            na += a * a;
+            nb += b * b;
+        }
+        assert!(dot.abs() / (na.sqrt() * nb.sqrt()) > 0.99);
+    }
+
+    #[test]
+    fn leaf_pca_matches_dense_gram_spectrum() {
+        // Small sparse Q: compare eigvals of Q Qᵀ with dense Jacobi.
+        let mut rng = Rng::new(3);
+        let mut trip = vec![];
+        let (n, l) = (25, 40);
+        for r in 0..n {
+            for c in 0..l {
+                if rng.next_f64() < 0.15 {
+                    trip.push((r, c as u32, rng.next_f32()));
+                }
+            }
+        }
+        let q = Csr::from_triplets(n, l, &trip);
+        let (_, vals) = leaf_pca(&q, 4, 40, false, 5);
+        // Dense reference.
+        let qd = q.to_dense();
+        let mut gram = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                gram[i * n + j] = (0..l).map(|c| qd[i * l + c] * qd[j * l + c]).sum();
+            }
+        }
+        let (full, _) = super::super::linalg::jacobi_eigh(&gram, n);
+        for j in 0..4 {
+            assert!(
+                (vals[j] - full[j]).abs() / full[0] < 1e-2,
+                "eig {j}: {} vs {}",
+                vals[j],
+                full[j]
+            );
+        }
+    }
+
+    #[test]
+    fn leaf_pca_scores_reproduce_gram_kernel() {
+        // With k = rank, scores·scoresᵀ ≈ Q Qᵀ (uncentered kernel PCA).
+        let mut rng = Rng::new(7);
+        let (n, l) = (20, 8); // rank <= 8
+        let mut trip = vec![];
+        for r in 0..n {
+            for c in 0..l {
+                if rng.next_f64() < 0.4 {
+                    trip.push((r, c as u32, rng.next_f32()));
+                }
+            }
+        }
+        let q = Csr::from_triplets(n, l, &trip);
+        let (scores, _) = leaf_pca(&q, 8, 60, false, 9);
+        let qd = q.to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                let gram: f32 = (0..l).map(|c| qd[i * l + c] * qd[j * l + c]).sum();
+                let rec: f32 = (0..8).map(|p| scores[i * 8 + p] * scores[j * 8 + p]).sum();
+                assert!((gram - rec).abs() < 0.05, "({i},{j}): {gram} vs {rec}");
+            }
+        }
+    }
+
+    #[test]
+    fn centered_leaf_pca_scores_have_zero_mean() {
+        let mut rng = Rng::new(11);
+        let (n, l) = (30, 20);
+        let mut trip = vec![];
+        for r in 0..n {
+            for c in 0..l {
+                if rng.next_f64() < 0.3 {
+                    trip.push((r, c as u32, 1.0f32));
+                }
+            }
+        }
+        let q = Csr::from_triplets(n, l, &trip);
+        let (scores, _) = leaf_pca(&q, 3, 40, true, 13);
+        for j in 0..3 {
+            let mean: f32 = (0..n).map(|i| scores[i * 3 + j]).sum::<f32>() / n as f32;
+            assert!(mean.abs() < 1e-3, "component {j} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn oos_projection_consistent_on_training_rows() {
+        // Projecting the training rows must reproduce the training scores.
+        let mut rng = Rng::new(15);
+        let (n, l) = (25, 30);
+        let mut trip = vec![];
+        for r in 0..n {
+            for c in 0..l {
+                if rng.next_f64() < 0.25 {
+                    trip.push((r, c as u32, rng.next_f32()));
+                }
+            }
+        }
+        let q = Csr::from_triplets(n, l, &trip);
+        let (scores, vals) = leaf_pca(&q, 3, 50, false, 17);
+        let proj = leaf_pca_project(&q, &scores, &vals, &q);
+        for i in 0..n * 3 {
+            assert!(
+                (proj[i] - scores[i]).abs() < 0.02 * vals[0].sqrt(),
+                "{}: {} vs {}",
+                i,
+                proj[i],
+                scores[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! The ensemble context θ of §2.2.
+//!
+//! Everything the App. B weight assignments need, computed in one
+//! routing pass over the training set plus local leaf aggregation —
+//! cost `O(NT h̄) + O(NT)`, never quadratic (§3.3):
+//!
+//! * global leaf ids `ℓ_t(x_i)` (sample-major `N×T`),
+//! * leaf masses `M(j)` (training samples per leaf; KeRF),
+//! * in-bag leaf masses `M_inbag(j)` (bootstrap draws per leaf; RF-GAP),
+//! * in-bag multiplicities `c_t(x_i)` and OOB tree counts `S(x_i)`,
+//! * per-tree additive weights (boosted proximity),
+//! * per-(sample, tree) leaf label-disagreement (our kDN_t; App. B.5).
+
+use crate::data::Dataset;
+use crate::forest::Forest;
+
+/// Ensemble context θ for a trained forest over its training set.
+pub struct EnsembleContext {
+    pub n: usize,
+    pub t: usize,
+    /// Total number of leaves L across the ensemble.
+    pub l: usize,
+    /// Sample-major `N×T` global leaf ids: `leaf_of[i*T + t] = ℓ_t(x_i)`.
+    pub leaf_of: Vec<u32>,
+    /// `M(j)`: number of training samples routed to leaf j (length L).
+    pub leaf_mass: Vec<f32>,
+    /// `M_inbag(j)`: bootstrap draws in leaf j (length L). Equals
+    /// `leaf_mass` when the ensemble has no bootstrap.
+    pub inbag_mass: Vec<f32>,
+    /// `c_t(x_i)` in sample-major `N×T`; empty ⇒ no bootstrap (every
+    /// sample in-bag once, never OOB).
+    pub inbag_count: Vec<u16>,
+    /// `S(x_i) = Σ_t o_t(x_i)`: number of trees where sample i is OOB.
+    pub oob_count: Vec<u32>,
+    /// Additive model weights `w_t` (GBT; all 1 for bagged kinds).
+    pub tree_weights: Vec<f32>,
+    /// Training labels as class ids (classification) — used by kDN and
+    /// proximity-weighted prediction. Empty for regression.
+    pub y: Vec<u32>,
+    pub n_classes: usize,
+}
+
+impl EnsembleContext {
+    /// Build the context by routing `data` (the training set) through
+    /// `forest` and aggregating leaf statistics.
+    pub fn build(forest: &Forest, data: &Dataset) -> EnsembleContext {
+        assert_eq!(
+            forest.n_train, data.n,
+            "context must be built on the forest's training set"
+        );
+        let (n, t) = (data.n, forest.n_trees());
+        let l = forest.n_leaves_total();
+        let leaf_of = forest.apply(data);
+
+        let mut leaf_mass = vec![0f32; l];
+        for i in 0..n {
+            for &g in &leaf_of[i * t..(i + 1) * t] {
+                leaf_mass[g as usize] += 1.0;
+            }
+        }
+
+        // Flatten per-tree in-bag vectors to sample-major N×T and
+        // accumulate in-bag leaf masses.
+        let (inbag_count, inbag_mass, oob_count) = if forest.inbag.is_empty() {
+            (vec![], leaf_mass.clone(), vec![0u32; n])
+        } else {
+            let mut ib = vec![0u16; n * t];
+            let mut im = vec![0f32; l];
+            let mut oob = vec![0u32; n];
+            for (tt, bag) in forest.inbag.iter().enumerate() {
+                for i in 0..n {
+                    let c = bag[i];
+                    ib[i * t + tt] = c;
+                    if c == 0 {
+                        oob[i] += 1;
+                    } else {
+                        im[leaf_of[i * t + tt] as usize] += c as f32;
+                    }
+                }
+            }
+            (ib, im, oob)
+        };
+
+        let y: Vec<u32> = if data.n_classes > 0 {
+            data.y.iter().map(|&v| v as u32).collect()
+        } else {
+            vec![]
+        };
+
+        EnsembleContext {
+            n,
+            t,
+            l,
+            leaf_of,
+            leaf_mass,
+            inbag_mass,
+            inbag_count,
+            oob_count,
+            tree_weights: forest.tree_weights.clone(),
+            y,
+            n_classes: data.n_classes,
+        }
+    }
+
+    /// Global leaf id of sample `i` in tree `t`.
+    #[inline]
+    pub fn leaf(&self, i: usize, t: usize) -> u32 {
+        self.leaf_of[i * self.t + t]
+    }
+
+    /// OOB indicator `o_t(x_i)`. Without bootstrap bookkeeping every
+    /// sample is in-bag, so this is `false`.
+    #[inline]
+    pub fn is_oob(&self, i: usize, t: usize) -> bool {
+        !self.inbag_count.is_empty() && self.inbag_count[i * self.t + t] == 0
+    }
+
+    /// In-bag multiplicity `c_t(x_i)` (1 when there is no bootstrap).
+    #[inline]
+    pub fn inbag(&self, i: usize, t: usize) -> u16 {
+        if self.inbag_count.is_empty() {
+            1
+        } else {
+            self.inbag_count[i * self.t + t]
+        }
+    }
+
+    /// Whether bootstrap (in-bag/OOB) information is available.
+    pub fn has_bootstrap(&self) -> bool {
+        !self.inbag_count.is_empty()
+    }
+
+    /// Per-(sample, tree) leaf label-disagreement `kDN_t(x_i)` — our
+    /// tree-local instance-hardness score (App. B.5): the fraction of
+    /// *other* training samples in `x_i`'s leaf of tree `t` whose label
+    /// differs. RFProxIH defines kDN via k-NN in the subspace of the
+    /// decision path's split features; we use the leaf population itself
+    /// as the tree-dependent neighborhood (DESIGN.md §Substitutions) —
+    /// it is the neighborhood the tree actually induces and needs no
+    /// extra parameter k.
+    pub fn leaf_disagreement(&self) -> Vec<f32> {
+        assert!(self.n_classes > 0, "kDN needs class labels");
+        // Per-leaf class histograms.
+        let c = self.n_classes;
+        let mut hist = vec![0f32; self.l * c];
+        for i in 0..self.n {
+            let yi = self.y[i] as usize;
+            for tt in 0..self.t {
+                hist[self.leaf(i, tt) as usize * c + yi] += 1.0;
+            }
+        }
+        let mut out = vec![0f32; self.n * self.t];
+        for i in 0..self.n {
+            let yi = self.y[i] as usize;
+            for tt in 0..self.t {
+                let g = self.leaf(i, tt) as usize;
+                let same = hist[g * c + yi];
+                let total = self.leaf_mass[g];
+                out[i * self.t + tt] = if total > 1.0 {
+                    (total - same) / (total - 1.0)
+                } else {
+                    0.0
+                };
+            }
+        }
+        out
+    }
+
+    /// Average leaf-collision factor λ̄ of §3.3: mean over (sample, tree)
+    /// of the population of the sample's leaf. This is the quantity that
+    /// drives the sparse-product cost `O(NT λ̄)`.
+    pub fn mean_lambda(&self) -> f64 {
+        let mut acc = 0f64;
+        for &g in &self.leaf_of {
+            acc += self.leaf_mass[g as usize] as f64;
+        }
+        acc / (self.n * self.t) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{ForestKind, TrainConfig};
+
+    fn fixture(n: usize) -> (Forest, Dataset) {
+        let data = synth::gaussian_blobs(n, 4, 3, 3.5, 5);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 12, seed: 6, ..Default::default() });
+        (f, data)
+    }
+
+    #[test]
+    fn leaf_mass_sums_to_n_per_tree() {
+        let (f, data) = fixture(200);
+        let ctx = EnsembleContext::build(&f, &data);
+        for t in 0..ctx.t {
+            let (lo, hi) = (f.leaf_offsets[t] as usize, f.leaf_offsets[t + 1] as usize);
+            let mass: f32 = ctx.leaf_mass[lo..hi].iter().sum();
+            assert_eq!(mass, 200.0);
+        }
+    }
+
+    #[test]
+    fn inbag_mass_sums_to_draws_per_tree() {
+        let (f, data) = fixture(150);
+        let ctx = EnsembleContext::build(&f, &data);
+        for t in 0..ctx.t {
+            let (lo, hi) = (f.leaf_offsets[t] as usize, f.leaf_offsets[t + 1] as usize);
+            let mass: f32 = ctx.inbag_mass[lo..hi].iter().sum();
+            assert_eq!(mass, 150.0);
+        }
+    }
+
+    #[test]
+    fn oob_counts_match_inbag_zeros() {
+        let (f, data) = fixture(100);
+        let ctx = EnsembleContext::build(&f, &data);
+        for i in 0..ctx.n {
+            let manual = (0..ctx.t).filter(|&t| ctx.inbag(i, t) == 0).count() as u32;
+            assert_eq!(ctx.oob_count[i], manual);
+            for t in 0..ctx.t {
+                assert_eq!(ctx.is_oob(i, t), ctx.inbag(i, t) == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn extratrees_context_has_no_bootstrap() {
+        let data = synth::gaussian_blobs(120, 4, 2, 2.0, 7);
+        let f = Forest::train(
+            &data,
+            &TrainConfig { kind: ForestKind::ExtraTrees, n_trees: 6, seed: 8, ..Default::default() },
+        );
+        let ctx = EnsembleContext::build(&f, &data);
+        assert!(!ctx.has_bootstrap());
+        assert!(ctx.oob_count.iter().all(|&s| s == 0));
+        assert_eq!(ctx.inbag(3, 2), 1);
+        assert_eq!(ctx.inbag_mass, ctx.leaf_mass);
+    }
+
+    #[test]
+    fn disagreement_in_unit_interval_and_low_on_pure_leaves() {
+        let (f, data) = fixture(250);
+        let ctx = EnsembleContext::build(&f, &data);
+        let dis = ctx.leaf_disagreement();
+        assert!(dis.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Unconstrained trees on separable blobs are grown ~pure on the
+        // bootstrap; the full-population disagreement stays small (a few
+        // stray OOB points per leaf at most).
+        let mean = dis.iter().sum::<f32>() / dis.len() as f32;
+        assert!(mean < 0.1, "mean disagreement {mean}");
+    }
+
+    #[test]
+    fn mean_lambda_at_least_one() {
+        let (f, data) = fixture(150);
+        let ctx = EnsembleContext::build(&f, &data);
+        assert!(ctx.mean_lambda() >= 1.0);
+        assert!(ctx.mean_lambda() <= 150.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "training set")]
+    fn rejects_wrong_dataset_size() {
+        let (f, _) = fixture(100);
+        let other = synth::gaussian_blobs(50, 4, 3, 2.0, 9);
+        EnsembleContext::build(&f, &other);
+    }
+}

@@ -1,0 +1,265 @@
+//! Extensions from the paper's §5 ("the framework opens several natural
+//! directions"): user-defined SWLC kernels, impurity-enriched
+//! proximities, and learned tree reweighting on a fixed forest topology
+//! (forest-based kernel learning à la multiple-kernel learning).
+//!
+//! Everything here stays inside the SWLC family — a custom kernel is
+//! just another `(q, w)` assignment — so the sparse factorization,
+//! OOS extension, and prediction machinery apply unchanged.
+
+use super::context::EnsembleContext;
+use super::kernel::incidence_matrix;
+use super::weights::WeightSpec;
+use crate::sparse::{spgemm, Csr};
+
+/// A user-defined SWLC proximity: any per-(sample, tree) weight pair.
+///
+/// `q_fn`/`w_fn` receive `(sample, tree, &context)` and return the
+/// weight; zeros are dropped from the factors (Remark 3.8 sparsity).
+pub struct CustomKernel;
+
+impl CustomKernel {
+    /// Build the weight tables from closures.
+    pub fn assign(
+        ctx: &EnsembleContext,
+        q_fn: impl Fn(usize, usize, &EnsembleContext) -> f32,
+        w_fn: impl Fn(usize, usize, &EnsembleContext) -> f32,
+        symmetric: bool,
+    ) -> WeightSpec {
+        let (n, t) = (ctx.n, ctx.t);
+        let mut q = vec![0f32; n * t];
+        let mut w = vec![0f32; n * t];
+        for i in 0..n {
+            for tt in 0..t {
+                q[i * t + tt] = q_fn(i, tt, ctx);
+                w[i * t + tt] = if symmetric { q[i * t + tt] } else { w_fn(i, tt, ctx) };
+            }
+        }
+        WeightSpec { q, w, symmetric }
+    }
+
+    /// Factor a custom weight spec into `(Q, Wᵀ)` and the kernel
+    /// `P = Q Wᵀ` (Prop. 3.6 for the custom member of the family).
+    pub fn factor(ctx: &EnsembleContext, spec: &WeightSpec) -> (Csr, Csr) {
+        let q = incidence_matrix(&ctx.leaf_of, &spec.q, ctx.n, ctx.t, ctx.l);
+        let w = if spec.symmetric {
+            q.clone()
+        } else {
+            incidence_matrix(&ctx.leaf_of, &spec.w, ctx.n, ctx.t, ctx.l)
+        };
+        let wt = w.transpose();
+        (q, wt)
+    }
+
+    pub fn proximity(ctx: &EnsembleContext, spec: &WeightSpec) -> Csr {
+        let (q, wt) = Self::factor(ctx, spec);
+        spgemm(&q, &wt)
+    }
+}
+
+/// Per-leaf Gini impurity over the *training* population — the
+/// "leaf-quality statistic" enrichment suggested in §5. Returns a
+/// length-L vector with `1 - Σ_k p_k²` per leaf (0 = pure).
+pub fn leaf_impurity(ctx: &EnsembleContext) -> Vec<f32> {
+    assert!(ctx.n_classes > 0, "impurity needs class labels");
+    let c = ctx.n_classes;
+    let mut hist = vec![0f32; ctx.l * c];
+    for i in 0..ctx.n {
+        let yi = ctx.y[i] as usize;
+        for tt in 0..ctx.t {
+            hist[ctx.leaf(i, tt) as usize * c + yi] += 1.0;
+        }
+    }
+    (0..ctx.l)
+        .map(|g| {
+            let m = ctx.leaf_mass[g];
+            if m <= 0.0 {
+                return 0.0;
+            }
+            let mut s = 0f32;
+            for k in 0..c {
+                let p = hist[g * c + k] / m;
+                s += p * p;
+            }
+            1.0 - s
+        })
+        .collect()
+}
+
+/// Impurity-weighted KeRF (a §5 "enriched" symmetric SWLC member):
+/// collisions in pure leaves count fully, impure leaves are
+/// down-weighted — `q = w = √((1 - gini(ℓ)) / (T·M(ℓ)))`.
+pub fn impurity_kerf(ctx: &EnsembleContext) -> WeightSpec {
+    let imp = leaf_impurity(ctx);
+    let tf = ctx.t as f32;
+    CustomKernel::assign(
+        ctx,
+        move |i, tt, ctx| {
+            let g = ctx.leaf(i, tt) as usize;
+            let purity = (1.0 - imp[g]).max(0.0);
+            (purity / (tf * ctx.leaf_mass[g])).sqrt()
+        },
+        |_, _, _| 0.0,
+        true,
+    )
+}
+
+/// Learned tree reweighting on a fixed topology (§5's "move from fixed
+/// weighting rules to learned ones"): find per-tree weights `α_t ≥ 0`
+/// so that the proximity-weighted predictor's class margins improve on
+/// the training labels, by multiplicative (exponentiated-gradient)
+/// updates — a simple multiple-kernel-learning-style scheme where each
+/// tree contributes the rank-restricted kernel `K_t`.
+///
+/// Returns the learned `α` (mean 1) to be used as tree weights in a
+/// boosted-style SWLC kernel: `q = w = √(α_t / Σ α)`.
+pub fn learn_tree_weights(ctx: &EnsembleContext, epochs: usize, lr: f32) -> Vec<f32> {
+    assert!(ctx.n_classes > 0);
+    let (n, t, c) = (ctx.n, ctx.t, ctx.n_classes);
+    // Per-tree, per-sample correctness signal: the fraction of same-leaf
+    // training samples sharing the sample's label (leaf label agreement).
+    // A tree whose partitions agree with the labels gets pushed up.
+    let mut hist = vec![0f32; ctx.l * c];
+    for i in 0..n {
+        let yi = ctx.y[i] as usize;
+        for tt in 0..t {
+            hist[ctx.leaf(i, tt) as usize * c + yi] += 1.0;
+        }
+    }
+    let mut alpha = vec![1f32; t];
+    for _ in 0..epochs {
+        // Gradient: mean margin contribution of tree t =
+        //   E_i [ p_t(y_i | leaf) - max_{k≠y} p_t(k | leaf) ].
+        for tt in 0..t {
+            let mut g = 0f64;
+            for i in 0..n {
+                let leaf = ctx.leaf(i, tt) as usize;
+                let m = ctx.leaf_mass[leaf].max(1.0);
+                let yi = ctx.y[i] as usize;
+                let own = hist[leaf * c + yi] / m;
+                let mut other = 0f32;
+                for k in 0..c {
+                    if k != yi {
+                        other = other.max(hist[leaf * c + k] / m);
+                    }
+                }
+                g += (own - other) as f64;
+            }
+            let g = (g / n as f64) as f32;
+            alpha[tt] *= (lr * g).exp();
+        }
+        // Renormalize to mean 1 (scale of the kernel is irrelevant).
+        let mean: f32 = alpha.iter().sum::<f32>() / t as f32;
+        for a in alpha.iter_mut() {
+            *a /= mean.max(1e-12);
+        }
+    }
+    alpha
+}
+
+/// SWLC weights from learned tree weights (symmetric, boosted-style).
+pub fn learned_weight_spec(ctx: &EnsembleContext, alpha: &[f32]) -> WeightSpec {
+    assert_eq!(alpha.len(), ctx.t);
+    let total: f32 = alpha.iter().sum();
+    let per_tree: Vec<f32> = alpha.iter().map(|&a| (a / total).max(0.0).sqrt()).collect();
+    CustomKernel::assign(ctx, move |_, tt, _| per_tree[tt], |_, _, _| 0.0, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{Forest, TrainConfig};
+    use crate::swlc::{naive, predict, ProximityKind};
+
+    fn fixture(n: usize, seed: u64) -> (Forest, crate::data::Dataset) {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.0, seed);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 12, seed, ..Default::default() });
+        (f, data)
+    }
+
+    #[test]
+    fn custom_reproduces_original_proximity() {
+        // A custom kernel with q = w = 1/√T must equal the built-in.
+        let (f, data) = fixture(60, 1);
+        let ctx = EnsembleContext::build(&f, &data);
+        let spec = CustomKernel::assign(
+            &ctx,
+            |_, _, ctx| 1.0 / (ctx.t as f32).sqrt(),
+            |_, _, _| 0.0,
+            true,
+        );
+        let p = CustomKernel::proximity(&ctx, &spec).to_dense();
+        let expect = naive::naive_proximity(ProximityKind::Original, &ctx);
+        for (a, b) in p.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn leaf_impurity_in_unit_interval_and_low_on_separable_data() {
+        let (f, data) = fixture(200, 2);
+        let ctx = EnsembleContext::build(&f, &data);
+        let imp = leaf_impurity(&ctx);
+        assert_eq!(imp.len(), ctx.l);
+        assert!(imp.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mean: f32 = imp.iter().sum::<f32>() / imp.len() as f32;
+        assert!(mean < 0.3, "mean impurity {mean}");
+    }
+
+    #[test]
+    fn impurity_kerf_bounded_by_kerf() {
+        // Purity factor ≤ 1 ⇒ impurity-KeRF ≤ KeRF entrywise.
+        let (f, data) = fixture(80, 3);
+        let ctx = EnsembleContext::build(&f, &data);
+        let enriched = CustomKernel::proximity(&ctx, &impurity_kerf(&ctx)).to_dense();
+        let plain = naive::naive_proximity(ProximityKind::Kerf, &ctx);
+        for (a, b) in enriched.iter().zip(&plain) {
+            assert!(*a <= b + 1e-5, "{a} > {b}");
+        }
+    }
+
+    #[test]
+    fn impurity_kerf_is_symmetric_psd_swlc() {
+        let (f, data) = fixture(50, 4);
+        let ctx = EnsembleContext::build(&f, &data);
+        let p = CustomKernel::proximity(&ctx, &impurity_kerf(&ctx)).to_dense();
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!((p[i * 50 + j] - p[j * 50 + i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn learned_weights_upweight_informative_trees() {
+        // Train on data where labels are random for half the trees'
+        // effective structure: simplest check — weights stay positive,
+        // mean 1, and the learned kernel's training prediction is at
+        // least as accurate as uniform boosted-style weights.
+        let (f, data) = fixture(300, 5);
+        let ctx = EnsembleContext::build(&f, &data);
+        let alpha = learn_tree_weights(&ctx, 10, 0.5);
+        assert_eq!(alpha.len(), ctx.t);
+        assert!(alpha.iter().all(|&a| a > 0.0));
+        let mean: f32 = alpha.iter().sum::<f32>() / alpha.len() as f32;
+        assert!((mean - 1.0).abs() < 1e-3);
+
+        let spec = learned_weight_spec(&ctx, &alpha);
+        let q = incidence_matrix(&ctx.leaf_of, &spec.q, ctx.n, ctx.t, ctx.l);
+        let m = predict::leaf_class_mass(&q, &ctx.y, ctx.n_classes);
+        let scores = predict::class_scores(&q, &m, ctx.n_classes);
+        let preds = predict::argmax_scores(&scores, ctx.n_classes, 0);
+        let acc = predict::accuracy(&preds, &data.y);
+        assert!(acc > 0.9, "learned-kernel acc {acc}");
+    }
+
+    #[test]
+    fn learned_weights_deterministic() {
+        let (f, data) = fixture(100, 6);
+        let ctx = EnsembleContext::build(&f, &data);
+        let a1 = learn_tree_weights(&ctx, 5, 0.3);
+        let a2 = learn_tree_weights(&ctx, 5, 0.3);
+        assert_eq!(a1, a2);
+    }
+}

@@ -1,0 +1,302 @@
+//! Leaf-incidence factors and the exact sparse factorization.
+//!
+//! Definition 3.3 / Prop. 3.6, in the row-sample convention of the
+//! paper's implementation (App. D): `Q, W ∈ R^{N×L}` stack the weighted
+//! leaf-incidence vectors `φ_q(x_i)` as *rows*, each with at most T
+//! nonzeros (Lemma 3.4), and the proximity matrix is the sparse product
+//! `P = Q Wᵀ` computed by Gustavson SpGEMM — cost `O(NT λ̄)` (§3.3).
+//! Out-of-sample proximities are `Q_new Wᵀ` (Remark 3.9).
+
+use super::context::EnsembleContext;
+use super::weights::{self, WeightSpec};
+use super::ProximityKind;
+use crate::data::Dataset;
+use crate::forest::Forest;
+use crate::sparse::{spgemm, spgemm_nnz_flops, Csr};
+
+/// A fitted SWLC kernel in factored form.
+pub struct ForestKernel {
+    pub kind: ProximityKind,
+    pub ctx: EnsembleContext,
+    /// Query-side map `Q ∈ R^{N×L}` (rows = `φ_q(x_i)`).
+    pub q: Csr,
+    /// Reference-side map `W ∈ R^{N×L}`; identical object to `q`'s
+    /// content when the scheme is symmetric (`Q = W`, Cor. 3.7).
+    pub w: Csr,
+    /// `Wᵀ` cached for products (L×N).
+    wt: Csr,
+    pub symmetric: bool,
+}
+
+/// Build an `N×L` leaf-incidence CSR from a sample-major leaf table and
+/// a dense `N×T` weight table, dropping zero weights (the source of the
+/// scheme-dependent sparsity of Remark 3.8).
+pub fn incidence_matrix(leaf_of: &[u32], wtab: &[f32], n: usize, t: usize, l: usize) -> Csr {
+    assert_eq!(leaf_of.len(), n * t);
+    assert_eq!(wtab.len(), n * t);
+    Csr::from_rows(n, l, t, |i, push| {
+        for tt in 0..t {
+            let v = wtab[i * t + tt];
+            if v != 0.0 {
+                push(leaf_of[i * t + tt], v);
+            }
+        }
+    })
+}
+
+impl ForestKernel {
+    /// Fit the kernel: build the context θ, the App. B weight tables,
+    /// and the sparse factors. Everything downstream (full kernel, OOS,
+    /// prediction, embedding) reuses these factors.
+    pub fn fit(forest: &Forest, data: &Dataset, kind: ProximityKind) -> ForestKernel {
+        let ctx = EnsembleContext::build(forest, data);
+        let WeightSpec { q, w, symmetric } = weights::assign(kind, &ctx);
+        let qm = incidence_matrix(&ctx.leaf_of, &q, ctx.n, ctx.t, ctx.l);
+        let wm = if symmetric {
+            qm.clone()
+        } else {
+            incidence_matrix(&ctx.leaf_of, &w, ctx.n, ctx.t, ctx.l)
+        };
+        let wt = wm.transpose();
+        ForestKernel { kind, ctx, q: qm, w: wm, wt, symmetric }
+    }
+
+    /// The exact training proximity matrix `P = Q Wᵀ` (Prop. 3.6) as a
+    /// sparse `N×N` CSR. For the separable OOB kernel the diagonal is
+    /// then forced to 1 (Remark G.2).
+    pub fn proximity_matrix(&self) -> Csr {
+        let mut p = spgemm(&self.q, &self.wt);
+        if self.kind == ProximityKind::OobSeparable {
+            set_unit_diagonal(&mut p);
+        }
+        p
+    }
+
+    /// Predicted SpGEMM work `N·T·λ̄` for the full kernel (§3.3) —
+    /// reported by the benches next to measured wall time.
+    pub fn predicted_flops(&self) -> u64 {
+        spgemm_nnz_flops(&self.q, &self.wt)
+    }
+
+    /// Route unseen samples and build their query-side map `Q_new`
+    /// (Remark 3.9; OOS samples are treated as the query argument).
+    pub fn oos_query_map(&self, forest: &Forest, newdata: &Dataset) -> Csr {
+        let leaf_new = forest.apply(newdata);
+        let q = weights::assign_oos_query(self.kind, &self.ctx, &leaf_new, newdata.n);
+        incidence_matrix(&leaf_new, &q, newdata.n, self.ctx.t, self.ctx.l)
+    }
+
+    /// Cross-proximities `Q_new Wᵀ ∈ R^{N_new×N}` against the training
+    /// gallery.
+    pub fn cross_proximity(&self, q_new: &Csr) -> Csr {
+        assert_eq!(q_new.n_cols, self.ctx.l);
+        spgemm(q_new, &self.wt)
+    }
+
+    /// Total factor memory (bytes) — the `O(NT)` term of §3.3's space
+    /// bound.
+    pub fn factor_bytes(&self) -> usize {
+        if self.symmetric {
+            self.q.mem_bytes() + self.wt.mem_bytes()
+        } else {
+            self.q.mem_bytes() + self.w.mem_bytes() + self.wt.mem_bytes()
+        }
+    }
+
+    /// Reference to the cached transpose `Wᵀ` (L×N).
+    pub fn w_transpose(&self) -> &Csr {
+        &self.wt
+    }
+}
+
+/// Force `P_ii = 1` (inserting the entry if absent). Remark G.2: OOB
+/// self-similarity is deterministically 1 and the separable surrogate
+/// must preserve that.
+pub fn set_unit_diagonal(p: &mut Csr) {
+    let n = p.n_rows.min(p.n_cols);
+    // First try in-place (diagonal entry present).
+    let mut missing = Vec::new();
+    for i in 0..n {
+        let (lo, hi) = (p.indptr[i], p.indptr[i + 1]);
+        match p.indices[lo..hi].binary_search(&(i as u32)) {
+            Ok(k) => p.data[lo + k] = 1.0,
+            Err(_) => missing.push(i),
+        }
+    }
+    if missing.is_empty() {
+        return;
+    }
+    // Rebuild with the missing diagonal entries inserted.
+    let mut indptr = Vec::with_capacity(p.n_rows + 1);
+    let mut indices = Vec::with_capacity(p.nnz() + missing.len());
+    let mut data = Vec::with_capacity(p.nnz() + missing.len());
+    indptr.push(0);
+    let mut miss_iter = missing.iter().peekable();
+    for i in 0..p.n_rows {
+        let (lo, hi) = (p.indptr[i], p.indptr[i + 1]);
+        let needs = miss_iter.peek() == Some(&&i);
+        if needs {
+            miss_iter.next();
+        }
+        let mut inserted = false;
+        for k in lo..hi {
+            let c = p.indices[k];
+            if needs && !inserted && c > i as u32 {
+                indices.push(i as u32);
+                data.push(1.0);
+                inserted = true;
+            }
+            indices.push(c);
+            data.push(p.data[k]);
+        }
+        if needs && !inserted {
+            indices.push(i as u32);
+            data.push(1.0);
+        }
+        indptr.push(indices.len());
+    }
+    p.indices = indices;
+    p.data = data;
+    p.indptr = indptr;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::TrainConfig;
+
+    fn fixture(n: usize, t: usize, seed: u64) -> (Forest, Dataset) {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.0, seed);
+        let f = Forest::train(&data, &TrainConfig { n_trees: t, seed, ..Default::default() });
+        (f, data)
+    }
+
+    #[test]
+    fn rows_are_t_sparse() {
+        // Lemma 3.4: ||φ_q(x)||_0 = ||q(x)||_0 <= T.
+        let (f, data) = fixture(80, 12, 1);
+        for kind in ProximityKind::ALL {
+            if kind == ProximityKind::Boosted {
+                continue;
+            }
+            let k = ForestKernel::fit(&f, &data, kind);
+            for i in 0..k.q.n_rows {
+                let (cols, _) = k.q.row(i);
+                assert!(cols.len() <= 12, "{kind:?} row {i}: {}", cols.len());
+            }
+        }
+    }
+
+    #[test]
+    fn original_proximity_values() {
+        // P_ij = (#trees colliding)/T; check against direct counting.
+        let (f, data) = fixture(40, 8, 2);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Original);
+        let p = k.proximity_matrix().to_dense();
+        let ctx = &k.ctx;
+        for i in 0..10 {
+            for j in 0..10 {
+                let collisions =
+                    (0..8).filter(|&t| ctx.leaf(i, t) == ctx.leaf(j, t)).count() as f32;
+                let expect = collisions / 8.0;
+                assert!(
+                    (p[i * 40 + j] - expect).abs() < 1e-5,
+                    "P[{i},{j}]={} expect {expect}",
+                    p[i * 40 + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_of_original_is_one() {
+        let (f, data) = fixture(30, 10, 3);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Original);
+        let p = k.proximity_matrix().to_dense();
+        for i in 0..30 {
+            assert!((p[i * 30 + i] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn symmetric_kinds_give_symmetric_p() {
+        let (f, data) = fixture(50, 10, 4);
+        for kind in [ProximityKind::Original, ProximityKind::Kerf, ProximityKind::OobSeparable] {
+            let k = ForestKernel::fit(&f, &data, kind);
+            let p = k.proximity_matrix().to_dense();
+            for i in 0..50 {
+                for j in 0..50 {
+                    assert!(
+                        (p[i * 50 + j] - p[j * 50 + i]).abs() < 1e-5,
+                        "{kind:?} asymmetric at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oob_diagonal_forced_to_one() {
+        let (f, data) = fixture(60, 15, 5);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::OobSeparable);
+        let p = k.proximity_matrix().to_dense();
+        for i in 0..60 {
+            assert_eq!(p[i * 60 + i], 1.0);
+        }
+    }
+
+    #[test]
+    fn gap_rows_sum_to_one() {
+        // Σ_j P_gap(i, j) = (1/S) Σ_{t oob} Σ_j c_t(j) 1[match]/M_in(ℓ) = 1
+        // whenever S(i) > 0 — the RF-GAP normalization property.
+        let (f, data) = fixture(70, 12, 6);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::RfGap);
+        let p = k.proximity_matrix();
+        let sums = p.row_sums();
+        for i in 0..70 {
+            if k.ctx.oob_count[i] > 0 {
+                assert!((sums[i] - 1.0).abs() < 1e-4, "row {i} sums to {}", sums[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn oos_cross_proximity_matches_training_block() {
+        // Querying training points through the OOS path with the same
+        // weights must reproduce the training kernel rows (Original:
+        // OOS weights == training weights).
+        let (f, data) = fixture(40, 9, 7);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Original);
+        let sub = data.head(10);
+        let qn = k.oos_query_map(&f, &sub);
+        let cross = k.cross_proximity(&qn).to_dense();
+        let full = k.proximity_matrix().to_dense();
+        for i in 0..10 {
+            for j in 0..40 {
+                assert!((cross[i * 40 + j] - full[i * 40 + j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn set_unit_diagonal_inserts_missing() {
+        let mut p = Csr::from_triplets(3, 3, &[(0, 1, 0.5), (2, 2, 0.3)]);
+        set_unit_diagonal(&mut p);
+        p.check().unwrap();
+        let d = p.to_dense();
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[4], 1.0);
+        assert_eq!(d[8], 1.0);
+        assert_eq!(d[1], 0.5);
+    }
+
+    #[test]
+    fn predicted_flops_positive_and_bounded() {
+        let (f, data) = fixture(50, 8, 8);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Original);
+        let flops = k.predicted_flops();
+        assert!(flops >= (50 * 8) as u64); // λ̄ >= 1
+        assert!(flops <= (50u64 * 50 * 8)); // never worse than dense
+    }
+}

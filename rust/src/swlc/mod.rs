@@ -1,0 +1,115 @@
+//! Separable Weighted Leaf-Collision (SWLC) proximities — the paper's
+//! contribution.
+//!
+//! Definition 3.1: `P_{q,w}(x, x') = Σ_t q_t(x) w_t(x') 1[ℓ_t(x) = ℓ_t(x')]`.
+//!
+//! * [`context`] — the ensemble context `θ`: leaf maps, leaf masses,
+//!   in-bag multiplicities, OOB counts, tree weights (§2.2).
+//! * [`weights`] — the weight assignments `(q, w)` of App. B for each
+//!   supported proximity.
+//! * [`kernel`] — leaf-incidence factors `Q, W` (Def. 3.3) and the exact
+//!   sparse factorization `P = Q Wᵀ` (Prop. 3.6; row-major sample
+//!   convention), including out-of-sample extension (Remark 3.9).
+//! * [`naive`] — the O(N²T) all-pairs baselines, including the exact
+//!   non-separable OOB proximity (App. B.3) and the Fig. 4.1 ratio
+//!   statistics.
+//! * [`predict`] — proximity-weighted prediction (App. I) straight from
+//!   the factors, never materializing P.
+//! * [`custom`] — §5 extensions: user-defined SWLC kernels,
+//!   impurity-enriched proximities, learned tree reweighting.
+
+pub mod context;
+pub mod custom;
+pub mod kernel;
+pub mod naive;
+pub mod predict;
+pub mod weights;
+
+pub use context::EnsembleContext;
+pub use kernel::ForestKernel;
+pub use weights::WeightSpec;
+
+/// Which SWLC proximity to build (App. B). OOB here is the *separable*
+/// surrogate `P̃_oob` of App. G; the exact pair-normalized OOB proximity
+/// is available as a baseline in [`naive`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProximityKind {
+    /// Breiman's original proximity: `q = w = 1/√T` (App. B.1).
+    Original,
+    /// KeRF leaf-mass normalization: `q = w = 1/√(T·M(ℓ))` (App. B.2).
+    Kerf,
+    /// Separable OOB surrogate: `q = w = o_t(x)·√T / S(x)` (App. G).
+    OobSeparable,
+    /// RF-GAP: `q = o_t(x)/S(x)`, `w = c_t(x)/M_inbag(ℓ_t(x))` (App. B.4).
+    RfGap,
+    /// Instance-hardness reweighting: `q = 1/T`, `w = 1 - kDN_t(x)`
+    /// (App. B.5; see [`context`] for the leaf-neighborhood kDN we use).
+    InstanceHardness,
+    /// Boosted-tree proximity: `q = w = √(w_t/Σ_s w_s)` (App. B.6).
+    Boosted,
+}
+
+impl ProximityKind {
+    pub const ALL: [ProximityKind; 6] = [
+        ProximityKind::Original,
+        ProximityKind::Kerf,
+        ProximityKind::OobSeparable,
+        ProximityKind::RfGap,
+        ProximityKind::InstanceHardness,
+        ProximityKind::Boosted,
+    ];
+
+    /// `q == w` ⇒ Gram kernel, symmetric PSD (Cor. 3.7).
+    pub fn symmetric(&self) -> bool {
+        matches!(
+            self,
+            ProximityKind::Original
+                | ProximityKind::Kerf
+                | ProximityKind::OobSeparable
+                | ProximityKind::Boosted
+        )
+    }
+
+    /// Whether the scheme needs bootstrap (in-bag/OOB) bookkeeping.
+    pub fn needs_bootstrap(&self) -> bool {
+        matches!(self, ProximityKind::OobSeparable | ProximityKind::RfGap)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProximityKind::Original => "original",
+            ProximityKind::Kerf => "kerf",
+            ProximityKind::OobSeparable => "oob",
+            ProximityKind::RfGap => "gap",
+            ProximityKind::InstanceHardness => "ih",
+            ProximityKind::Boosted => "boosted",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ProximityKind> {
+        Self::ALL.into_iter().find(|k| k.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in ProximityKind::ALL {
+            assert_eq!(ProximityKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ProximityKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn symmetry_flags_match_appendix_b() {
+        assert!(ProximityKind::Original.symmetric());
+        assert!(ProximityKind::Kerf.symmetric());
+        assert!(ProximityKind::OobSeparable.symmetric());
+        assert!(ProximityKind::Boosted.symmetric());
+        assert!(!ProximityKind::RfGap.symmetric());
+        assert!(!ProximityKind::InstanceHardness.symmetric());
+    }
+}

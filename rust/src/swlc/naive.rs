@@ -1,0 +1,223 @@
+//! Naive O(N²T) baselines and the exact non-separable OOB proximity.
+//!
+//! Two roles: (a) ground truth for the property tests — the factored
+//! kernel must equal the all-pairs evaluation of Def. 3.1 exactly;
+//! (b) the quadratic baseline the paper's scaling claims are measured
+//! against, plus the pairwise OOB statistics behind Fig. 4.1.
+
+use super::context::EnsembleContext;
+use super::weights::{self, WeightSpec};
+use super::ProximityKind;
+
+/// All-pairs SWLC evaluation of Def. 3.1: dense `N×N`, O(N²T) time.
+pub fn naive_proximity(kind: ProximityKind, ctx: &EnsembleContext) -> Vec<f32> {
+    let WeightSpec { q, w, .. } = weights::assign(kind, ctx);
+    let (n, t) = (ctx.n, ctx.t);
+    let mut p = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for tt in 0..t {
+                if ctx.leaf(i, tt) == ctx.leaf(j, tt) {
+                    acc += q[i * t + tt] * w[j * t + tt];
+                }
+            }
+            p[i * n + j] = acc;
+        }
+    }
+    if kind == ProximityKind::OobSeparable {
+        for i in 0..n {
+            p[i * n + i] = 1.0; // Remark G.2
+        }
+    }
+    p
+}
+
+/// The exact (non-separable) OOB proximity of App. B.3:
+/// `P_oob(x,x') = Σ_t o_t o_t' 1[match] / S(x,x')`, with `P_oob(x,x)=1`.
+/// Pairs with `S(x,x') = 0` get proximity 0.
+pub fn naive_oob_exact(ctx: &EnsembleContext) -> Vec<f32> {
+    assert!(ctx.has_bootstrap(), "exact OOB needs bootstrap bookkeeping");
+    let (n, t) = (ctx.n, ctx.t);
+    let mut p = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                p[i * n + j] = 1.0;
+                continue;
+            }
+            let mut shared = 0u32;
+            let mut collide = 0u32;
+            for tt in 0..t {
+                if ctx.is_oob(i, tt) && ctx.is_oob(j, tt) {
+                    shared += 1;
+                    if ctx.leaf(i, tt) == ctx.leaf(j, tt) {
+                        collide += 1;
+                    }
+                }
+            }
+            if shared > 0 {
+                p[i * n + j] = collide as f32 / shared as f32;
+            }
+        }
+    }
+    p
+}
+
+/// Statistics of the Fig. 4.1 ratio
+/// `R(x,x') = S(x,x') / (S(x)S(x')/T)` over distinct pairs with
+/// `S(x,x') > 0`. For large N a uniformly subsampled set of pairs is
+/// used (`max_pairs`), which is how the paper's mean ± std curves are
+/// estimated anyway.
+pub struct RatioStats {
+    pub mean: f64,
+    pub std: f64,
+    pub n_pairs: usize,
+}
+
+pub fn oob_ratio_stats(ctx: &EnsembleContext, max_pairs: usize, seed: u64) -> RatioStats {
+    assert!(ctx.has_bootstrap());
+    let (n, t) = (ctx.n, ctx.t);
+    let mut rng = crate::rng::Rng::new(seed);
+    let total_pairs = n * (n - 1) / 2;
+    let mut acc = 0f64;
+    let mut acc2 = 0f64;
+    let mut count = 0usize;
+
+    let eval_pair = |i: usize, j: usize, acc: &mut f64, acc2: &mut f64, count: &mut usize| {
+        let (si, sj) = (ctx.oob_count[i], ctx.oob_count[j]);
+        if si == 0 || sj == 0 {
+            return;
+        }
+        let mut shared = 0u32;
+        for tt in 0..t {
+            if ctx.is_oob(i, tt) && ctx.is_oob(j, tt) {
+                shared += 1;
+            }
+        }
+        if shared == 0 {
+            return;
+        }
+        let r = shared as f64 / (si as f64 * sj as f64 / t as f64);
+        *acc += r;
+        *acc2 += r * r;
+        *count += 1;
+    };
+
+    if total_pairs <= max_pairs {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                eval_pair(i, j, &mut acc, &mut acc2, &mut count);
+            }
+        }
+    } else {
+        let mut drawn = 0usize;
+        while drawn < max_pairs {
+            let i = rng.gen_range(n);
+            let j = rng.gen_range(n);
+            if i == j {
+                continue;
+            }
+            drawn += 1;
+            eval_pair(i, j, &mut acc, &mut acc2, &mut count);
+        }
+    }
+    let mean = acc / count.max(1) as f64;
+    let var = (acc2 / count.max(1) as f64 - mean * mean).max(0.0);
+    RatioStats { mean, std: var.sqrt(), n_pairs: count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{Forest, TrainConfig};
+    use crate::swlc::ForestKernel;
+
+    fn fixture(n: usize, t: usize, seed: u64) -> (Forest, crate::data::Dataset) {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.0, seed);
+        let f = Forest::train(&data, &TrainConfig { n_trees: t, seed, ..Default::default() });
+        (f, data)
+    }
+
+    #[test]
+    fn factored_equals_naive_for_all_kinds() {
+        // The core correctness statement of Prop. 3.6.
+        let (f, data) = fixture(60, 10, 1);
+        for kind in ProximityKind::ALL {
+            if kind == ProximityKind::Boosted {
+                continue; // needs GBT; covered in proptest_swlc.rs
+            }
+            let k = ForestKernel::fit(&f, &data, kind);
+            let dense = k.proximity_matrix().to_dense();
+            let naive = naive_proximity(kind, &k.ctx);
+            for (a, b) in dense.iter().zip(&naive) {
+                assert!((a - b).abs() < 1e-4, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_oob_diagonal_one_offdiag_in_unit_interval() {
+        let (f, data) = fixture(50, 20, 2);
+        let ctx = crate::swlc::EnsembleContext::build(&f, &data);
+        let p = naive_oob_exact(&ctx);
+        for i in 0..50 {
+            assert_eq!(p[i * 50 + i], 1.0);
+            for j in 0..50 {
+                assert!((0.0..=1.0).contains(&p[i * 50 + j]));
+            }
+        }
+    }
+
+    #[test]
+    fn separable_oob_tracks_exact_oob() {
+        // The surrogate should be close to the exact OOB proximity up to
+        // the 1 - O(1/N) factor of Prop. G.1 — on average within ~20%
+        // at this scale.
+        let (f, data) = fixture(150, 60, 3);
+        let ctx = crate::swlc::EnsembleContext::build(&f, &data);
+        let exact = naive_oob_exact(&ctx);
+        let sep = naive_proximity(ProximityKind::OobSeparable, &ctx);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for k in 0..exact.len() {
+            num += ((exact[k] - sep[k]) as f64).abs();
+            den += exact[k] as f64;
+        }
+        assert!(num / den < 0.25, "relative L1 gap = {}", num / den);
+    }
+
+    #[test]
+    fn ratio_stats_in_expected_band() {
+        // Prop. G.1: mean R ∈ (0, 1], approaching 1 from below.
+        let (f, data) = fixture(200, 80, 4);
+        let ctx = crate::swlc::EnsembleContext::build(&f, &data);
+        let stats = oob_ratio_stats(&ctx, 20_000, 5);
+        assert!(stats.n_pairs > 100);
+        assert!(stats.mean > 0.7 && stats.mean <= 1.05, "mean={}", stats.mean);
+        assert!(stats.std < 0.5);
+    }
+
+    #[test]
+    fn ratio_mean_increases_with_n() {
+        // The bias term is O(1/N): larger training sets ⇒ ratio closer to 1.
+        let t = 60;
+        let (f1, d1) = fixture(60, t, 6);
+        let (f2, d2) = fixture(400, t, 6);
+        let c1 = crate::swlc::EnsembleContext::build(&f1, &d1);
+        let c2 = crate::swlc::EnsembleContext::build(&f2, &d2);
+        let r1 = oob_ratio_stats(&c1, 20_000, 7).mean;
+        let r2 = oob_ratio_stats(&c2, 20_000, 7).mean;
+        assert!(r2 > r1 - 0.02, "r1={r1} r2={r2}");
+    }
+
+    #[test]
+    fn subsampled_pairs_close_to_exhaustive() {
+        let (f, data) = fixture(120, 40, 8);
+        let ctx = crate::swlc::EnsembleContext::build(&f, &data);
+        let full = oob_ratio_stats(&ctx, usize::MAX, 1);
+        let sub = oob_ratio_stats(&ctx, 3_000, 2);
+        assert!((full.mean - sub.mean).abs() < 0.05, "{} vs {}", full.mean, sub.mean);
+    }
+}

@@ -1,0 +1,192 @@
+//! Proximity-weighted prediction (App. I) computed from the factors.
+//!
+//! Class scores are `S = P·Y = Q·(Wᵀ Y)` where `Y` is the one-hot label
+//! matrix: instead of materializing the N×N kernel, we aggregate the
+//! reference map into a per-leaf class-mass table `M = Wᵀ Y ∈ R^{L×C}`
+//! (one pass over nnz(W)) and score queries by `Q·M` (one pass over
+//! nnz(Q)) — `O(NTC)` total. For RF-GAP this reproduces the forest's
+//! OOB vote ordering exactly (the defining property of [38], tested in
+//! `rust/tests/proptest_swlc.rs`).
+
+use super::kernel::ForestKernel;
+use crate::sparse::Csr;
+
+/// Per-leaf class mass `M = Wᵀ·onehot(y) ∈ R^{L×C}` (row-major).
+pub fn leaf_class_mass(w: &Csr, y: &[u32], n_classes: usize) -> Vec<f32> {
+    assert_eq!(w.n_rows, y.len());
+    let mut m = vec![0f32; w.n_cols * n_classes];
+    for j in 0..w.n_rows {
+        let cls = y[j] as usize;
+        let (cols, vals) = w.row(j);
+        for (&leaf, &v) in cols.iter().zip(vals) {
+            m[leaf as usize * n_classes + cls] += v;
+        }
+    }
+    m
+}
+
+/// Class scores `Q·M ∈ R^{NQ×C}` for an arbitrary query map.
+pub fn class_scores(q: &Csr, leaf_mass: &[f32], n_classes: usize) -> Vec<f32> {
+    assert_eq!(leaf_mass.len(), q.n_cols * n_classes);
+    let mut s = vec![0f32; q.n_rows * n_classes];
+    for i in 0..q.n_rows {
+        let (cols, vals) = q.row(i);
+        let out = &mut s[i * n_classes..(i + 1) * n_classes];
+        for (&leaf, &v) in cols.iter().zip(vals) {
+            let m = &leaf_mass[leaf as usize * n_classes..leaf as usize * n_classes + n_classes];
+            for c in 0..n_classes {
+                out[c] += v * m[c];
+            }
+        }
+    }
+    s
+}
+
+/// Argmax with deterministic tie-break (lowest class id); rows with all
+/// zero scores return `fallback`.
+pub fn argmax_scores(scores: &[f32], n_classes: usize, fallback: u32) -> Vec<u32> {
+    let n = scores.len() / n_classes;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &scores[i * n_classes..(i + 1) * n_classes];
+        let mut best = 0usize;
+        let mut any = false;
+        for (c, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                any = true;
+            }
+            if v > row[best] {
+                best = c;
+            }
+        }
+        out.push(if any { best as u32 } else { fallback });
+    }
+    out
+}
+
+/// Proximity-weighted prediction for the *training* samples (the
+/// Table I.1 quantity, left column block).
+pub fn predict_train(kernel: &ForestKernel) -> Vec<u32> {
+    let c = kernel.ctx.n_classes;
+    assert!(c >= 2, "proximity-weighted prediction needs classification labels");
+    let m = leaf_class_mass(&kernel.w, &kernel.ctx.y, c);
+    let scores = class_scores(&kernel.q, &m, c);
+    argmax_scores(&scores, c, majority_class(&kernel.ctx.y, c))
+}
+
+/// Proximity-weighted prediction for OOS queries given their query map.
+pub fn predict_oos(kernel: &ForestKernel, q_new: &Csr) -> Vec<u32> {
+    let c = kernel.ctx.n_classes;
+    assert!(c >= 2);
+    let m = leaf_class_mass(&kernel.w, &kernel.ctx.y, c);
+    let scores = class_scores(q_new, &m, c);
+    argmax_scores(&scores, c, majority_class(&kernel.ctx.y, c))
+}
+
+/// Accuracy of predicted class ids against f32 labels.
+pub fn accuracy(pred: &[u32], y: &[f32]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let hits = pred.iter().zip(y).filter(|(p, y)| **p as f32 == **y).count();
+    hits as f64 / pred.len().max(1) as f64
+}
+
+fn majority_class(y: &[u32], n_classes: usize) -> u32 {
+    let mut counts = vec![0usize; n_classes];
+    for &v in y {
+        counts[v as usize] += 1;
+    }
+    (0..n_classes).max_by_key(|&c| counts[c]).unwrap_or(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{Forest, TrainConfig};
+    use crate::swlc::ProximityKind;
+
+    fn fixture(n: usize, seed: u64) -> (Forest, crate::data::Dataset) {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.5, seed);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 30, seed, ..Default::default() });
+        (f, data)
+    }
+
+    #[test]
+    fn scores_match_materialized_kernel_times_onehot() {
+        let (f, data) = fixture(60, 1);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Kerf);
+        let c = 3;
+        let m = leaf_class_mass(&k.w, &k.ctx.y, c);
+        let scores = class_scores(&k.q, &m, c);
+        // Reference: dense P @ onehot(y).
+        let p = k.proximity_matrix().to_dense();
+        for i in 0..60 {
+            for cls in 0..c {
+                let mut expect = 0f32;
+                for j in 0..60 {
+                    if k.ctx.y[j] as usize == cls {
+                        expect += p[i * 60 + j];
+                    }
+                }
+                let got = scores[i * c + cls];
+                assert!((got - expect).abs() < 1e-3, "({i},{cls}): {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn train_prediction_is_accurate_on_separable_data() {
+        let (f, data) = fixture(300, 2);
+        for kind in [ProximityKind::Original, ProximityKind::Kerf, ProximityKind::RfGap] {
+            let k = ForestKernel::fit(&f, &data, kind);
+            let pred = predict_train(&k);
+            let acc = accuracy(&pred, &data.y);
+            assert!(acc > 0.9, "{kind:?}: acc={acc}");
+        }
+    }
+
+    #[test]
+    fn oos_prediction_generalizes() {
+        let data = synth::gaussian_blobs(500, 4, 3, 2.5, 3);
+        let (train, test) = data.train_test_split(0.2, 4);
+        let f = Forest::train(&train, &TrainConfig { n_trees: 30, seed: 5, ..Default::default() });
+        let k = ForestKernel::fit(&f, &train, ProximityKind::RfGap);
+        let qn = k.oos_query_map(&f, &test);
+        let pred = predict_oos(&k, &qn);
+        let acc = accuracy(&pred, &test.y);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn argmax_fallback_on_zero_rows() {
+        let scores = vec![0.0, 0.0, 0.5, 0.2];
+        let out = argmax_scores(&scores, 2, 1);
+        assert_eq!(out, vec![1, 0]);
+    }
+
+    #[test]
+    fn gap_prediction_matches_forest_oob_votes() {
+        // RF-GAP's defining property (design goal of [38]): the
+        // proximity-weighted predictor reproduces the forest's OOB vote
+        // argmax for every sample with at least one OOB tree.
+        let (f, data) = fixture(150, 6);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::RfGap);
+        let pred = predict_train(&k);
+        let binned = f.binner.bin(&data);
+        let votes = f.oob_votes(&binned);
+        let c = 3;
+        for i in 0..150 {
+            if k.ctx.oob_count[i] == 0 {
+                continue;
+            }
+            let row = &votes[i * c..(i + 1) * c];
+            let best = (0..c).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            // Ties can legitimately differ; require match when the vote
+            // argmax is strict.
+            let strict = (0..c).filter(|&j| (row[j] - row[best]).abs() < 1e-12).count() == 1;
+            if strict {
+                assert_eq!(pred[i], best as u32, "sample {i}: votes {row:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! The weight assignments (q, w) of App. B.
+//!
+//! Each proximity is two `N×T` weight tables; zeros encode "no
+//! contribution" and are *dropped* from the sparse factors, which is
+//! where the extra sparsity of the OOB-querying schemes comes from
+//! (Remark 3.8 / the Fig. 4.2-middle ordering).
+
+use super::context::EnsembleContext;
+use super::ProximityKind;
+
+/// Dense `N×T` weight tables for the two proximity arguments.
+/// `q[i*T + t] = q_t(x_i)`, likewise for `w`.
+pub struct WeightSpec {
+    pub q: Vec<f32>,
+    pub w: Vec<f32>,
+    pub symmetric: bool,
+}
+
+/// Compute the training-set weight tables for `kind` (App. B).
+pub fn assign(kind: ProximityKind, ctx: &EnsembleContext) -> WeightSpec {
+    if kind.needs_bootstrap() {
+        assert!(
+            ctx.has_bootstrap(),
+            "{:?} requires a bootstrap ensemble (RandomForest); \
+             ExtraTrees/GBT have no OOB samples",
+            kind
+        );
+    }
+    let (n, t) = (ctx.n, ctx.t);
+    let nt = n * t;
+    match kind {
+        ProximityKind::Original => {
+            let v = 1.0 / (t as f32).sqrt();
+            let q = vec![v; nt];
+            WeightSpec { w: q.clone(), q, symmetric: true }
+        }
+        ProximityKind::Kerf => {
+            let tf = t as f32;
+            let mut q = vec![0f32; nt];
+            for i in 0..n {
+                for tt in 0..t {
+                    let m = ctx.leaf_mass[ctx.leaf(i, tt) as usize];
+                    q[i * t + tt] = 1.0 / (tf * m).sqrt();
+                }
+            }
+            WeightSpec { w: q.clone(), q, symmetric: true }
+        }
+        ProximityKind::OobSeparable => {
+            // q_t(x) = w_t(x) = o_t(x)·√T / S(x)  (App. G); samples that
+            // are never OOB contribute nothing.
+            let sqrt_t = (t as f32).sqrt();
+            let mut q = vec![0f32; nt];
+            for i in 0..n {
+                let s = ctx.oob_count[i];
+                if s == 0 {
+                    continue;
+                }
+                let v = sqrt_t / s as f32;
+                for tt in 0..t {
+                    if ctx.is_oob(i, tt) {
+                        q[i * t + tt] = v;
+                    }
+                }
+            }
+            WeightSpec { w: q.clone(), q, symmetric: true }
+        }
+        ProximityKind::RfGap => {
+            // q_t(x) = o_t(x)/S(x): query side looks from OOB trees.
+            // w_t(x) = c_t(x)/M_inbag(ℓ_t(x)): reference side carries
+            // in-bag multiplicity over in-bag leaf mass.
+            let mut q = vec![0f32; nt];
+            let mut w = vec![0f32; nt];
+            for i in 0..n {
+                let s = ctx.oob_count[i];
+                for tt in 0..t {
+                    let c = ctx.inbag(i, tt);
+                    if c == 0 {
+                        if s > 0 {
+                            q[i * t + tt] = 1.0 / s as f32;
+                        }
+                    } else {
+                        let m = ctx.inbag_mass[ctx.leaf(i, tt) as usize];
+                        w[i * t + tt] = c as f32 / m;
+                    }
+                }
+            }
+            WeightSpec { q, w, symmetric: false }
+        }
+        ProximityKind::InstanceHardness => {
+            let q = vec![1.0 / t as f32; nt];
+            let dis = ctx.leaf_disagreement();
+            let w: Vec<f32> = dis.into_iter().map(|d| 1.0 - d).collect();
+            WeightSpec { q, w, symmetric: false }
+        }
+        ProximityKind::Boosted => {
+            let total: f32 = ctx.tree_weights.iter().sum();
+            assert!(total > 0.0, "boosted proximity needs positive tree weights");
+            let mut q = vec![0f32; nt];
+            for i in 0..n {
+                for tt in 0..t {
+                    q[i * t + tt] = (ctx.tree_weights[tt] / total).sqrt();
+                }
+            }
+            WeightSpec { w: q.clone(), q, symmetric: true }
+        }
+    }
+}
+
+/// OOS query-side weights for `n_new` unseen samples (Remark 3.9 and the
+/// query/reference convention of Lemma 3.5). Unseen samples are treated
+/// as OOB in every tree: `o_t = 1`, `S = T`.
+///
+/// `leaf_of_new` is the routed sample-major `n_new × T` global leaf
+/// table of the new samples.
+pub fn assign_oos_query(
+    kind: ProximityKind,
+    ctx: &EnsembleContext,
+    leaf_of_new: &[u32],
+    n_new: usize,
+) -> Vec<f32> {
+    let t = ctx.t;
+    assert_eq!(leaf_of_new.len(), n_new * t);
+    match kind {
+        ProximityKind::Original => vec![1.0 / (t as f32).sqrt(); n_new * t],
+        ProximityKind::Kerf => {
+            let tf = t as f32;
+            let mut q = vec![0f32; n_new * t];
+            for i in 0..n_new {
+                for tt in 0..t {
+                    // Leaf mass of the *training* population in that leaf;
+                    // empty leaves cannot occur (every leaf holds >= 1
+                    // training sample by construction).
+                    let m = ctx.leaf_mass[leaf_of_new[i * t + tt] as usize].max(1.0);
+                    q[i * t + tt] = 1.0 / (tf * m).sqrt();
+                }
+            }
+            q
+        }
+        // OOB everywhere ⇒ o_t = 1, S = T ⇒ √T/T = 1/√T.
+        ProximityKind::OobSeparable => vec![1.0 / (t as f32).sqrt(); n_new * t],
+        // RF-GAP query: o_t/S = 1/T.
+        ProximityKind::RfGap => vec![1.0 / t as f32; n_new * t],
+        ProximityKind::InstanceHardness => vec![1.0 / t as f32; n_new * t],
+        ProximityKind::Boosted => {
+            let total: f32 = ctx.tree_weights.iter().sum();
+            let mut q = vec![0f32; n_new * t];
+            for i in 0..n_new {
+                for tt in 0..t {
+                    q[i * t + tt] = (ctx.tree_weights[tt] / total).sqrt();
+                }
+            }
+            q
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::{Criterion, Forest, ForestKind, TrainConfig};
+
+    fn ctx_rf(n: usize, seed: u64) -> EnsembleContext {
+        let data = synth::gaussian_blobs(n, 4, 3, 2.0, seed);
+        let f = Forest::train(&data, &TrainConfig { n_trees: 10, seed, ..Default::default() });
+        EnsembleContext::build(&f, &data)
+    }
+
+    #[test]
+    fn original_weights_constant() {
+        let ctx = ctx_rf(80, 1);
+        let ws = assign(ProximityKind::Original, &ctx);
+        assert!(ws.symmetric);
+        let expect = 1.0 / (10f32).sqrt();
+        assert!(ws.q.iter().all(|&v| (v - expect).abs() < 1e-7));
+        assert_eq!(ws.q, ws.w);
+    }
+
+    #[test]
+    fn kerf_product_recovers_definition() {
+        // On a collision, q_t(x)·w_t(x') must equal 1/(T·M(leaf)).
+        let ctx = ctx_rf(60, 2);
+        let ws = assign(ProximityKind::Kerf, &ctx);
+        let (i, tt) = (3, 4);
+        let m = ctx.leaf_mass[ctx.leaf(i, tt) as usize];
+        let prod = ws.q[i * ctx.t + tt] * ws.w[i * ctx.t + tt];
+        assert!((prod - 1.0 / (ctx.t as f32 * m)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn oob_weights_zero_when_inbag() {
+        let ctx = ctx_rf(100, 3);
+        let ws = assign(ProximityKind::OobSeparable, &ctx);
+        for i in 0..ctx.n {
+            for tt in 0..ctx.t {
+                let v = ws.q[i * ctx.t + tt];
+                if ctx.is_oob(i, tt) {
+                    assert!(v > 0.0);
+                    assert!((v - (ctx.t as f32).sqrt() / ctx.oob_count[i] as f32).abs() < 1e-6);
+                } else {
+                    assert_eq!(v, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gap_sides_are_disjoint_per_tree() {
+        // In a given tree a sample is either OOB (query side active) or
+        // in-bag (reference side active), never both.
+        let ctx = ctx_rf(100, 4);
+        let ws = assign(ProximityKind::RfGap, &ctx);
+        assert!(!ws.symmetric);
+        for k in 0..ctx.n * ctx.t {
+            assert!(ws.q[k] == 0.0 || ws.w[k] == 0.0);
+        }
+    }
+
+    #[test]
+    fn gap_query_rows_sum_to_one_when_oob() {
+        let ctx = ctx_rf(100, 5);
+        let ws = assign(ProximityKind::RfGap, &ctx);
+        for i in 0..ctx.n {
+            let s: f32 = (0..ctx.t).map(|tt| ws.q[i * ctx.t + tt]).sum();
+            if ctx.oob_count[i] > 0 {
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            } else {
+                assert_eq!(s, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ih_reference_weights_in_unit_interval() {
+        let ctx = ctx_rf(120, 6);
+        let ws = assign(ProximityKind::InstanceHardness, &ctx);
+        assert!(ws.w.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ws.q.iter().all(|&v| (v - 0.1).abs() < 1e-7));
+    }
+
+    #[test]
+    fn boosted_weights_squared_sum_to_one() {
+        let data = synth::gaussian_blobs(150, 4, 2, 2.0, 7);
+        let f = Forest::train(
+            &data,
+            &TrainConfig {
+                kind: ForestKind::GradientBoosting,
+                n_trees: 8,
+                max_depth: Some(3),
+                criterion: Criterion::Mse,
+                seed: 8,
+                ..Default::default()
+            },
+        );
+        let ctx = EnsembleContext::build(&f, &data);
+        let ws = assign(ProximityKind::Boosted, &ctx);
+        let sumsq: f32 = (0..ctx.t).map(|tt| ws.q[tt] * ws.q[tt]).sum();
+        assert!((sumsq - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a bootstrap")]
+    fn gap_rejects_extratrees() {
+        let data = synth::gaussian_blobs(80, 4, 2, 2.0, 9);
+        let f = Forest::train(
+            &data,
+            &TrainConfig { kind: ForestKind::ExtraTrees, n_trees: 4, seed: 1, ..Default::default() },
+        );
+        let ctx = EnsembleContext::build(&f, &data);
+        assign(ProximityKind::RfGap, &ctx);
+    }
+
+    #[test]
+    fn oos_query_weights_shapes_and_values() {
+        let ctx = ctx_rf(60, 10);
+        let leaf_new: Vec<u32> = ctx.leaf_of[..5 * ctx.t].to_vec();
+        for kind in ProximityKind::ALL {
+            if kind == ProximityKind::Boosted {
+                continue; // tree_weights all 1 here; still fine but tested above
+            }
+            let q = assign_oos_query(kind, &ctx, &leaf_new, 5);
+            assert_eq!(q.len(), 5 * ctx.t);
+            assert!(q.iter().all(|&v| v > 0.0));
+        }
+    }
+}

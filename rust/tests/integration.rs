@@ -1,0 +1,125 @@
+//! Cross-module integration tests: the full train → kernel → embed →
+//! predict pipeline, the coordinator, and the experiment harnesses.
+
+use forest_kernels::coordinator::{self, CoordinatorConfig};
+use forest_kernels::data::registry;
+use forest_kernels::experiments::{fig41, measure_kernel_cost};
+use forest_kernels::forest::{Forest, ForestKind, TrainConfig};
+use forest_kernels::spectral::pca::leaf_pca;
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+
+#[test]
+fn full_pipeline_on_covertype_analog() {
+    let spec = registry::by_name("covertype").unwrap();
+    let data = spec.generate(3_000, 1);
+    let (train, test) = data.train_test_split(0.15, 2);
+    let forest = Forest::train(&train, &TrainConfig { n_trees: 30, seed: 3, ..Default::default() });
+    let forest_acc = forest.accuracy(&test);
+    assert!(forest_acc > 0.5, "forest acc {forest_acc}");
+
+    // Kernel + prediction beats chance and tracks the forest.
+    let kernel = ForestKernel::fit(&forest, &train, ProximityKind::RfGap);
+    let qn = kernel.oos_query_map(&forest, &test);
+    let preds = predict::predict_oos(&kernel, &qn);
+    let acc = predict::accuracy(&preds, &test.y);
+    assert!(acc > forest_acc - 0.05, "kernel acc {acc} vs forest {forest_acc}");
+
+    // Leaf-PCA embedding separates classes better than chance (silhouette
+    // proxy: 1-NN accuracy on the training embedding itself).
+    let (scores, vals) = leaf_pca(&kernel.q, 8, 8, false, 4);
+    assert!(vals[0] > 0.0);
+    let emb2: Vec<f32> = (0..train.n).flat_map(|i| [scores[i * 8], scores[i * 8 + 1]]).collect();
+    let self_acc = forest_kernels::spectral::knn_accuracy(
+        &emb2, &train.y, &emb2, &train.y, 2, 5, train.n_classes,
+    );
+    assert!(self_acc > 1.5 / train.n_classes as f64, "self knn acc {self_acc}");
+}
+
+#[test]
+fn coordinator_and_direct_product_agree_at_scale() {
+    let spec = registry::by_name("pbmc").unwrap();
+    let data = spec.generate(2_000, 5);
+    let forest = Forest::train(&data, &TrainConfig { n_trees: 20, seed: 6, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let direct = kernel.proximity_matrix();
+    let (coord, metrics) = coordinator::materialize_to_csr(
+        &kernel,
+        &CoordinatorConfig { stripe_rows: 256, n_workers: 3, queue_depth: 2 },
+    );
+    assert_eq!(direct.nnz(), coord.nnz());
+    assert_eq!(direct.indices, coord.indices);
+    let max_err = direct
+        .data
+        .iter()
+        .zip(&coord.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-6);
+    let (jobs, _, _) = metrics.snapshot();
+    assert_eq!(jobs, 2_000usize.div_ceil(256) as u64);
+}
+
+#[test]
+fn kernel_cost_accounting_is_consistent() {
+    let spec = registry::by_name("airlines").unwrap();
+    let data = spec.generate(4_000, 7);
+    let forest = Forest::train(&data, &TrainConfig { n_trees: 24, seed: 8, ..Default::default() });
+    let cost = measure_kernel_cost(&forest, &data, ProximityKind::RfGap);
+    assert_eq!(cost.n, 4_000);
+    assert!(cost.secs_total() > 0.0);
+    assert!(cost.lambda >= 1.0);
+    assert!(cost.nnz > 0);
+    // flops bound: at least nnz accumulates, at most dense N²T.
+    assert!(cost.flops >= cost.nnz as u64);
+    assert!(cost.flops <= (4_000u64 * 4_000 * 24));
+}
+
+#[test]
+fn fig41_harness_shapes() {
+    let rows = fig41::run(600, &[0.5, 1.0], &[40, 80], 3);
+    assert_eq!(rows.len(), 4);
+    for r in &rows {
+        assert!(r.mean > 0.5 && r.mean < 1.1, "{}", r.mean);
+        assert!(r.std >= 0.0);
+        assert!(r.limit < 1.0);
+    }
+}
+
+#[test]
+fn all_forest_kinds_support_their_kernels() {
+    let spec = registry::by_name("tvnews").unwrap(); // binary → GBT ok
+    let data = spec.generate(800, 9);
+    for (fk, kinds) in [
+        (
+            ForestKind::RandomForest,
+            vec![
+                ProximityKind::Original,
+                ProximityKind::Kerf,
+                ProximityKind::OobSeparable,
+                ProximityKind::RfGap,
+                ProximityKind::InstanceHardness,
+            ],
+        ),
+        (ForestKind::ExtraTrees, vec![ProximityKind::Original, ProximityKind::Kerf]),
+        (ForestKind::GradientBoosting, vec![ProximityKind::Boosted, ProximityKind::Kerf]),
+    ] {
+        let cfg = TrainConfig {
+            kind: fk,
+            n_trees: 10,
+            criterion: if fk == ForestKind::GradientBoosting {
+                forest_kernels::forest::Criterion::Mse
+            } else {
+                forest_kernels::forest::Criterion::Gini
+            },
+            max_depth: if fk == ForestKind::GradientBoosting { Some(4) } else { None },
+            seed: 10,
+            ..Default::default()
+        };
+        let forest = Forest::train(&data, &cfg);
+        for kind in kinds {
+            let k = ForestKernel::fit(&forest, &data, kind);
+            let p = k.proximity_matrix();
+            assert!(p.nnz() > 0, "{fk:?}/{kind:?} produced empty kernel");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Property tests for the SWLC layer — the paper's core invariants,
+//! checked over randomly generated datasets and forest configurations.
+//!
+//! Central property (Prop. 3.6): the factored kernel `Q Wᵀ` equals the
+//! naive all-pairs evaluation of Def. 3.1 for EVERY weight scheme,
+//! forest kind, and hyperparameter draw.
+
+use forest_kernels::data::{synth, Dataset};
+use forest_kernels::forest::{Criterion, Forest, ForestKind, MaxFeatures, TrainConfig};
+use forest_kernels::rng::Rng;
+use forest_kernels::swlc::{naive, predict, EnsembleContext, ForestKernel, ProximityKind};
+
+const CASES: u64 = 14;
+
+/// Random dataset + forest config (classification; binary when GBT).
+fn random_fixture(seed: u64, kind: ForestKind) -> (Dataset, TrainConfig) {
+    let mut rng = Rng::new(seed);
+    let n = 30 + rng.gen_range(80);
+    let d = 2 + rng.gen_range(6);
+    let c = if kind == ForestKind::GradientBoosting { 2 } else { 2 + rng.gen_range(3) };
+    let sep = 1.0 + rng.next_f64() * 2.5;
+    let data = synth::gaussian_blobs(n, d, c, sep, seed ^ 0x5A5A);
+    let cfg = TrainConfig {
+        kind,
+        n_trees: 3 + rng.gen_range(12),
+        max_depth: if rng.next_f64() < 0.3 { Some(2 + rng.gen_range(6)) } else { None },
+        min_samples_leaf: 1 + rng.gen_range(5),
+        max_features: if rng.next_f64() < 0.5 { MaxFeatures::Sqrt } else { MaxFeatures::All },
+        criterion: if kind == ForestKind::GradientBoosting {
+            Criterion::Mse
+        } else if rng.next_f64() < 0.5 {
+            Criterion::Gini
+        } else {
+            Criterion::Entropy
+        },
+        seed: seed ^ 0xF0F0,
+        ..Default::default()
+    };
+    (data, cfg)
+}
+
+fn assert_factored_equals_naive(kernel: &ForestKernel, seed: u64) {
+    let dense = kernel.proximity_matrix().to_dense();
+    let naive = naive::naive_proximity(kernel.kind, &kernel.ctx);
+    let n = kernel.ctx.n;
+    for i in 0..n {
+        for j in 0..n {
+            let (a, b) = (dense[i * n + j], naive[i * n + j]);
+            assert!(
+                (a - b).abs() < 1e-4,
+                "seed {seed} {:?} P[{i},{j}]: factored {a} vs naive {b}",
+                kernel.kind
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_factored_equals_naive_rf_all_schemes() {
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        for kind in [
+            ProximityKind::Original,
+            ProximityKind::Kerf,
+            ProximityKind::OobSeparable,
+            ProximityKind::RfGap,
+            ProximityKind::InstanceHardness,
+        ] {
+            let kernel = ForestKernel::fit(&forest, &data, kind);
+            assert_factored_equals_naive(&kernel, seed);
+        }
+    }
+}
+
+#[test]
+fn prop_factored_equals_naive_extratrees() {
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x777, ForestKind::ExtraTrees);
+        let forest = Forest::train(&data, &cfg);
+        for kind in [ProximityKind::Original, ProximityKind::Kerf, ProximityKind::InstanceHardness]
+        {
+            let kernel = ForestKernel::fit(&forest, &data, kind);
+            assert_factored_equals_naive(&kernel, seed);
+        }
+    }
+}
+
+#[test]
+fn prop_factored_equals_naive_boosted() {
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x999, ForestKind::GradientBoosting);
+        let forest = Forest::train(&data, &cfg);
+        let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Boosted);
+        assert_factored_equals_naive(&kernel, seed);
+        // Boosted proximity diagonal: Σ_t w_t/Σw_s = 1.
+        let p = kernel.proximity_matrix().to_dense();
+        for i in 0..data.n {
+            assert!((p[i * data.n + i] - 1.0).abs() < 1e-4, "seed {seed} diag {}", p[i * data.n + i]);
+        }
+    }
+}
+
+#[test]
+fn prop_row_t_sparsity() {
+    // Lemma 3.4: every factor row has at most T nonzeros.
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x121, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        for kind in [ProximityKind::Original, ProximityKind::RfGap, ProximityKind::OobSeparable] {
+            let k = ForestKernel::fit(&forest, &data, kind);
+            for i in 0..data.n {
+                assert!(k.q.row(i).0.len() <= cfg.n_trees, "seed {seed}");
+                assert!(k.w.row(i).0.len() <= cfg.n_trees, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_symmetric_kinds_produce_symmetric_psd_kernels() {
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x343, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        let mut rng = Rng::new(seed);
+        for kind in [ProximityKind::Original, ProximityKind::Kerf] {
+            let k = ForestKernel::fit(&forest, &data, kind);
+            let p = k.proximity_matrix().to_dense();
+            let n = data.n;
+            for i in 0..n {
+                for j in 0..n {
+                    assert!((p[i * n + j] - p[j * n + i]).abs() < 1e-5, "seed {seed}");
+                }
+            }
+            // Random quadratic forms nonnegative (Cor. 3.7).
+            for _ in 0..3 {
+                let v: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+                let mut quad = 0f64;
+                for i in 0..n {
+                    for j in 0..n {
+                        quad += (v[i] * p[i * n + j] * v[j]) as f64;
+                    }
+                }
+                assert!(quad > -1e-2, "seed {seed}: {quad}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_oos_on_training_rows_restricted_to_training_kernel() {
+    // Querying training points through the OOS path with Original
+    // weights reproduces the corresponding training-kernel rows.
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x565, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        let k = ForestKernel::fit(&forest, &data, ProximityKind::Original);
+        let m = 10.min(data.n);
+        let sub = data.head(m);
+        let qn = k.oos_query_map(&forest, &sub);
+        let cross = k.cross_proximity(&qn).to_dense();
+        let full = k.proximity_matrix().to_dense();
+        for i in 0..m {
+            for j in 0..data.n {
+                assert!(
+                    (cross[i * data.n + j] - full[i * data.n + j]).abs() < 1e-5,
+                    "seed {seed} ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gap_prediction_recovers_forest_oob_votes() {
+    // RF-GAP's design property [38]: proximity-weighted prediction
+    // equals the forest OOB-vote argmax (strict-argmax cases).
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0x787, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        let k = ForestKernel::fit(&forest, &data, ProximityKind::RfGap);
+        let preds = predict::predict_train(&k);
+        let binned = forest.binner.bin(&data);
+        let votes = forest.oob_votes(&binned);
+        let c = data.n_classes;
+        for i in 0..data.n {
+            if k.ctx.oob_count[i] == 0 {
+                continue;
+            }
+            let row = &votes[i * c..(i + 1) * c];
+            let best = (0..c).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            let strict = (0..c).filter(|&j| (row[j] - row[best]).abs() < 1e-12).count() == 1;
+            if strict {
+                assert_eq!(preds[i], best as u32, "seed {seed} sample {i}: {row:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ratio_statistic_bounded() {
+    // Fig 4.1 statistic: 0 < R <= T (trivially) and mean in (0, 1.1].
+    for seed in 0..CASES / 2 {
+        let (data, mut cfg) = random_fixture(seed ^ 0x9A9, ForestKind::RandomForest);
+        cfg.n_trees = 40;
+        let forest = Forest::train(&data, &cfg);
+        let ctx = EnsembleContext::build(&forest, &data);
+        let stats = naive::oob_ratio_stats(&ctx, 5_000, seed);
+        if stats.n_pairs > 20 {
+            assert!(stats.mean > 0.0 && stats.mean < 1.3, "seed {seed}: {}", stats.mean);
+        }
+    }
+}
+
+#[test]
+fn prop_lambda_consistent_with_flops() {
+    // predicted flops == N·T·λ̄ exactly, for full-collision schemes.
+    for seed in 0..CASES {
+        let (data, cfg) = random_fixture(seed ^ 0xBCB, ForestKind::RandomForest);
+        let forest = Forest::train(&data, &cfg);
+        let k = ForestKernel::fit(&forest, &data, ProximityKind::Original);
+        let lambda = k.ctx.mean_lambda();
+        let expect = (data.n * cfg.n_trees) as f64 * lambda;
+        let flops = k.predicted_flops() as f64;
+        assert!(
+            (flops - expect).abs() / expect < 1e-9,
+            "seed {seed}: flops {flops} vs N·T·λ̄ {expect}"
+        );
+    }
+}

@@ -1,0 +1,213 @@
+//! Integration: the PJRT runtime executes every AOT artifact and the
+//! results match Rust-side references. Requires `make artifacts`.
+//!
+//! These tests are skipped (with a loud message) if artifacts/ is
+//! missing, so `cargo test` stays runnable before the python step.
+
+use forest_kernels::coordinator::gallery::GalleryService;
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::rng::Rng;
+use forest_kernels::runtime::{Runtime, Tensor};
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Rust reference of the SWLC tile: P[i,j] = Σ_t q w 1[leaf match].
+fn prox_ref(
+    leaf_q: &[i32],
+    q: &[f32],
+    leaf_w: &[i32],
+    w: &[f32],
+    nq: usize,
+    nr: usize,
+    t: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; nq * nr];
+    for i in 0..nq {
+        for j in 0..nr {
+            let mut acc = 0f32;
+            for tt in 0..t {
+                if leaf_q[i * t + tt] == leaf_w[j * t + tt] {
+                    acc += q[i * t + tt] * w[j * t + tt];
+                }
+            }
+            out[i * nr + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("prox_128x128x64")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("power_")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("predict_")), "{names:?}");
+}
+
+#[test]
+fn prox_block_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let (bq, br, t) = (128, 128, 64);
+    let mut rng = Rng::new(1);
+    let leaf_q: Vec<i32> = (0..bq * t).map(|_| rng.gen_range(9) as i32).collect();
+    let leaf_w: Vec<i32> = (0..br * t).map(|_| rng.gen_range(9) as i32).collect();
+    let q: Vec<f32> = (0..bq * t).map(|_| rng.next_f32()).collect();
+    let w: Vec<f32> = (0..br * t).map(|_| rng.next_f32()).collect();
+    let got = rt.prox_block(bq, br, t, &leaf_q, &q, &leaf_w, &w).expect("execute");
+    let expect = prox_ref(&leaf_q, &q, &leaf_w, &w, bq, br, t);
+    assert_eq!(got.len(), expect.len());
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-4, "{g} vs {e}");
+    }
+}
+
+#[test]
+fn power_step_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let spec = rt.spec("power_256x1024x32").expect("power artifact").clone();
+    let (n, l) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.inputs[1].shape[1];
+    let mut rng = Rng::new(2);
+    let a: Vec<f32> = (0..n * l).map(|_| rng.next_normal() as f32 * 0.1).collect();
+    let v: Vec<f32> = (0..l * k).map(|_| rng.next_normal() as f32 * 0.1).collect();
+    let got = rt.execute("power_256x1024x32", &[Tensor::F32(&a), Tensor::F32(&v)]).unwrap();
+    // Reference: A^T (A V).
+    let mut av = vec![0f32; n * k];
+    for i in 0..n {
+        for c in 0..l {
+            let x = a[i * l + c];
+            if x != 0.0 {
+                for j in 0..k {
+                    av[i * k + j] += x * v[c * k + j];
+                }
+            }
+        }
+    }
+    let mut expect = vec![0f32; l * k];
+    for i in 0..n {
+        for c in 0..l {
+            let x = a[i * l + c];
+            if x != 0.0 {
+                for j in 0..k {
+                    expect[c * k + j] += x * av[i * k + j];
+                }
+            }
+        }
+    }
+    let scale: f32 = expect.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() / scale < 1e-3, "{g} vs {e}");
+    }
+}
+
+#[test]
+fn predict_tile_matches_composition() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let name = "predict_256x256x64x16";
+    let spec = rt.spec(name).expect("predict artifact").clone();
+    let (bq, t) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let br = spec.inputs[2].shape[0];
+    let c = spec.inputs[4].shape[1];
+    let mut rng = Rng::new(3);
+    let leaf_q: Vec<i32> = (0..bq * t).map(|_| rng.gen_range(7) as i32).collect();
+    let leaf_w: Vec<i32> = (0..br * t).map(|_| rng.gen_range(7) as i32).collect();
+    let q: Vec<f32> = (0..bq * t).map(|_| rng.next_f32()).collect();
+    let w: Vec<f32> = (0..br * t).map(|_| rng.next_f32()).collect();
+    let y: Vec<usize> = (0..br).map(|_| rng.gen_range(c)).collect();
+    let mut onehot = vec![0f32; br * c];
+    for (j, &cls) in y.iter().enumerate() {
+        onehot[j * c + cls] = 1.0;
+    }
+    let got = rt
+        .execute(
+            name,
+            &[
+                Tensor::I32(&leaf_q),
+                Tensor::F32(&q),
+                Tensor::I32(&leaf_w),
+                Tensor::F32(&w),
+                Tensor::F32(&onehot),
+            ],
+        )
+        .unwrap();
+    // Reference: (prox tile) @ onehot.
+    let p = prox_ref(&leaf_q, &q, &leaf_w, &w, bq, br, t);
+    for i in 0..bq {
+        for cls in 0..c {
+            let mut e = 0f32;
+            for j in 0..br {
+                if y[j] == cls {
+                    e += p[i * br + j];
+                }
+            }
+            let g = got[i * c + cls];
+            assert!((g - e).abs() < 1e-2 * e.abs().max(1.0), "({i},{cls}): {g} vs {e}");
+        }
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let bad = vec![0f32; 7];
+    assert!(rt.execute("prox_128x128x64", &[Tensor::F32(&bad)]).is_err());
+    let leaf = vec![0i32; 128 * 64];
+    let wts = vec![0f32; 128 * 64];
+    // dtype mismatch on input 0:
+    assert!(rt
+        .execute(
+            "prox_128x128x64",
+            &[Tensor::F32(&wts), Tensor::F32(&wts), Tensor::I32(&leaf), Tensor::F32(&wts)]
+        )
+        .is_err());
+}
+
+#[test]
+fn gallery_service_end_to_end_matches_sparse_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let data = synth::gaussian_blobs(600, 5, 3, 2.5, 7);
+    let (train, test) = data.train_test_split(0.1, 8);
+    let forest = Forest::train(&train, &TrainConfig { n_trees: 20, seed: 9, ..Default::default() });
+
+    // Dense XLA path.
+    let gal = GalleryService::new(&rt, &forest, &train, ProximityKind::RfGap).unwrap();
+    let scores = gal.score(&forest, &test).unwrap();
+    let dense_preds = gal.vote(&scores, test.n);
+
+    // Sparse Rust path.
+    let kernel = ForestKernel::fit(&forest, &train, ProximityKind::RfGap);
+    let qn = kernel.oos_query_map(&forest, &test);
+    let cross = kernel.cross_proximity(&qn).to_dense();
+    for i in 0..test.n {
+        for j in 0..train.n {
+            let (a, b) = (scores[i * train.n + j], cross[i * train.n + j]);
+            assert!((a - b).abs() < 1e-4, "({i},{j}): xla={a} sparse={b}");
+        }
+    }
+    let sparse_preds = predict::predict_oos(&kernel, &qn);
+    let agree = dense_preds
+        .iter()
+        .zip(&sparse_preds)
+        .filter(|(a, b)| a == b)
+        .count();
+    // Identical scores ⇒ identical argmax up to fp ties.
+    assert!(agree as f64 / test.n as f64 > 0.98, "agree={agree}/{}", test.n);
+}
