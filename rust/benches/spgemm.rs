@@ -1,24 +1,35 @@
 //! Bench: Gustavson SpGEMM on SWLC-shaped factors — the paper's core
 //! cost center (§3.3). Reports measured time vs the predicted
-//! N·T·λ̄ flop count, i.e. effective flops/s of the accumulate loop.
+//! N·T·λ̄ flop count (effective flops/s of the accumulate loop) and the
+//! serial-vs-parallel speedup on the shared exec pool.
 
 use forest_kernels::bench_support::bench;
 use forest_kernels::data::registry;
+use forest_kernels::exec;
 use forest_kernels::experiments::train_for;
 use forest_kernels::forest::TrainConfig;
-use forest_kernels::sparse::{spgemm, spgemm_nnz_flops};
+use forest_kernels::sparse::{spgemm_nnz_flops, spgemm_with_threads};
 use forest_kernels::swlc::{ForestKernel, ProximityKind};
 
 fn main() {
+    let threads = exec::threads();
     for (n, t) in [(8192usize, 32usize), (16384, 32), (16384, 64)] {
         let data = registry::by_name("covertype").unwrap().generate(n, 1);
         let cfg = TrainConfig { n_trees: t, seed: 2, ..Default::default() };
         let forest = train_for(&data, ProximityKind::Kerf, &cfg);
         let k = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
-        let flops = spgemm_nnz_flops(&k.q, k.w_transpose());
-        let median = bench(&format!("spgemm N={n} T={t} flops={flops}"), 3, || {
-            spgemm(&k.q, k.w_transpose())
+        let (flops, nnz_ub) = spgemm_nnz_flops(&k.q, k.w_transpose());
+        let serial = bench(&format!("spgemm serial N={n} T={t} flops={flops} nnz<={nnz_ub}"), 3, || {
+            spgemm_with_threads(&k.q, k.w_transpose(), 1)
         });
-        println!("  -> {:.1} Mflops/s effective", flops as f64 / median / 1e6);
+        let par = bench(&format!("spgemm {threads}-thread N={n} T={t}"), 3, || {
+            spgemm_with_threads(&k.q, k.w_transpose(), threads)
+        });
+        println!(
+            "  -> {:.1} Mflops/s serial, {:.1} Mflops/s parallel, speedup {:.2}x at {threads} threads",
+            flops as f64 / serial / 1e6,
+            flops as f64 / par / 1e6,
+            serial / par
+        );
     }
 }

@@ -104,6 +104,107 @@ mod tests {
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
     }
+
+    #[test]
+    fn bench_json_roundtrips_through_own_parser() {
+        let recs = vec![
+            BenchRecord {
+                name: "spgemm/covertype".into(),
+                n: 4096,
+                wall_secs: 0.125,
+                predicted_flops: 123456,
+                threads: 4,
+                speedup_vs_serial: 2.5,
+            },
+            BenchRecord {
+                name: "naive \"quote\"".into(),
+                n: 512,
+                wall_secs: 1.0,
+                predicted_flops: 0,
+                threads: 1,
+                speedup_vs_serial: 1.0,
+            },
+        ];
+        let path = std::env::temp_dir().join("fk_bench_records_test.json");
+        write_bench_json(&path, &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::runtime::json::Json::parse(&text).unwrap();
+        let arr = j.get("records").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("n").and_then(|v| v.as_usize()), Some(4096));
+        assert_eq!(arr[0].get("threads").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(
+            arr[1].get("name").and_then(|v| v.as_str()),
+            Some("naive \"quote\"")
+        );
+    }
+}
+
+/// One machine-readable measurement row for the perf trajectory the
+/// ROADMAP tracks (emitted as `BENCH_spgemm.json` by `bench-fig42` /
+/// `bench-naive` via `--json-out`).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Measurement label, e.g. `spgemm/covertype`.
+    pub name: String,
+    /// Problem size (N samples).
+    pub n: usize,
+    /// Wall-clock seconds of the measured stage.
+    pub wall_secs: f64,
+    /// Predicted SpGEMM flops `N·T·λ̄` (§3.3), 0 when not applicable.
+    pub predicted_flops: u64,
+    /// Worker threads the stage ran with.
+    pub threads: usize,
+    /// Parallel speedup over the serial reference (1.0 when the stage
+    /// has no serial twin).
+    pub speedup_vs_serial: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"name\": {}, \"n\": {}, \"wall_secs\": {:.6}, \"predicted_flops\": {}, \
+             \"threads\": {}, \"speedup_vs_serial\": {:.4}}}",
+            json_escape(&self.name),
+            self.n,
+            self.wall_secs,
+            self.predicted_flops,
+            self.threads,
+            self.speedup_vs_serial
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Write bench records as a JSON document (hand-rolled — the offline
+/// vendor set has no serde). Schema: `{"records": [BenchRecord…]}`.
+pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut body = String::from("{\"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        body.push_str("  ");
+        body.push_str(&r.to_json());
+        if i + 1 < records.len() {
+            body.push(',');
+        }
+        body.push('\n');
+    }
+    body.push_str("]}\n");
+    std::fs::write(path, body)
 }
 
 /// Micro-bench helper for the `harness = false` benches: runs `f`

@@ -8,11 +8,12 @@
 //! is the "dense fast path" of DESIGN.md: the request path is pure Rust
 //! + PJRT — Python never runs.
 
+use crate::anyhow;
 use crate::data::Dataset;
+use crate::error::Result;
 use crate::forest::Forest;
 use crate::runtime::Runtime;
 use crate::swlc::{weights, EnsembleContext, ProximityKind};
-use anyhow::{anyhow, Result};
 
 /// Dense reference-side gallery with tile-padded panels.
 pub struct GalleryService<'a> {

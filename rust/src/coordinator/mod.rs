@@ -3,39 +3,41 @@
 //!
 //! The paper's pipeline is "build factors once, then stream products".
 //! For N×N materialization the coordinator partitions the query rows
-//! into stripes, fans them out to a worker pool over a *bounded* job
-//! channel (backpressure: a slow sink throttles the producers instead
-//! of buffering the whole kernel), and streams completed stripes to the
-//! caller's sink in order. For OOS serving it batches query requests
-//! into fixed-size tiles executed on the PJRT runtime (the L1 Pallas
-//! tile kernel) — see [`gallery`].
+//! into stripes and runs them through the shared [`exec`] pool's
+//! [`exec::ordered_stream`]: workers claim stripe jobs from a shared
+//! counter, completed stripes flow through a *bounded* result channel
+//! (backpressure: a slow sink throttles the workers instead of
+//! buffering the whole kernel), and the sink observes stripes in row
+//! order on the caller thread. For OOS serving it batches query
+//! requests into fixed-size tiles executed on the PJRT runtime (the L1
+//! Pallas tile kernel) — see [`gallery`].
 //!
-//! Built on std threads + `sync_channel` (the offline vendor set has no
-//! tokio; on this 1-core testbed an async reactor would buy nothing —
-//! DESIGN.md §Substitutions).
+//! Before the [`exec`] layer existed this module hand-rolled its own
+//! `sync_channel` worker pool; the rewrite keeps the exact job/stripe
+//! semantics and metrics while sharing the pool abstraction with
+//! SpGEMM, transpose, and forest training.
 
 pub mod gallery;
 
-use crate::sparse::{spgemm, Csr};
+use crate::exec::{self, StreamConfig};
+use crate::sparse::{spgemm_with_threads, Csr};
 use crate::swlc::ForestKernel;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Query rows per stripe job.
     pub stripe_rows: usize,
-    /// Worker threads.
+    /// Worker threads; `0` = the shared [`exec::threads`] knob.
     pub n_workers: usize,
-    /// Bounded queue depth (jobs in flight) — the backpressure knob.
+    /// Bounded queue depth (stripes in flight) — the backpressure knob.
     pub queue_depth: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { stripe_rows: 4096, n_workers: 2, queue_depth: 4 }
+        CoordinatorConfig { stripe_rows: 4096, n_workers: 0, queue_depth: 4 }
     }
 }
 
@@ -67,8 +69,9 @@ pub struct Stripe {
 /// Materialize the full training kernel `P = Q Wᵀ` stripe by stripe,
 /// invoking `sink` for every stripe **in row order**. Returns metrics.
 ///
-/// The sink runs on the caller thread; jobs flow through a bounded
-/// channel so at most `queue_depth` stripes are ever buffered.
+/// The sink runs on the caller thread; completed stripes flow through
+/// the pool's bounded channel so at most `queue_depth` (plus one per
+/// in-flight worker) are ever buffered.
 pub fn materialize_kernel(
     kernel: &ForestKernel,
     cfg: &CoordinatorConfig,
@@ -78,67 +81,32 @@ pub fn materialize_kernel(
     let n = kernel.q.n_rows;
     let stripe = cfg.stripe_rows.max(1);
     let n_jobs = n.div_ceil(stripe);
-
-    std::thread::scope(|scope| {
-        let (job_tx, job_rx) = sync_channel::<usize>(cfg.queue_depth);
-        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
-        let (res_tx, res_rx) = sync_channel::<Stripe>(cfg.queue_depth);
-
-        for _ in 0..cfg.n_workers.max(1) {
-            let job_rx = Arc::clone(&job_rx);
-            let res_tx = res_tx.clone();
-            let metrics = &metrics;
-            scope.spawn(move || loop {
-                let job = { job_rx.lock().unwrap().recv() };
-                let Ok(j) = job else { break };
-                let t0 = std::time::Instant::now();
-                let row_start = j * stripe;
-                let row_end = (row_start + stripe).min(n);
-                let rows = stripe_product(kernel, row_start, row_end);
-                metrics.jobs.fetch_add(1, Ordering::Relaxed);
-                metrics.nnz.fetch_add(rows.nnz() as u64, Ordering::Relaxed);
-                metrics
-                    .busy_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                if res_tx.send(Stripe { row_start, rows }).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(res_tx);
-
-        // Producer: enqueue job ids (blocks when the queue is full —
-        // that is the backpressure). Run it on its own thread so the
-        // caller thread can drain results.
-        scope.spawn(move || {
-            for j in 0..n_jobs {
-                if job_tx.send(j).is_err() {
-                    break;
-                }
-            }
-        });
-
-        // Reorder results so the sink sees stripes in row order.
-        let mut pending: std::collections::BTreeMap<usize, Stripe> =
-            std::collections::BTreeMap::new();
-        let mut next_row = 0usize;
-        for s in res_rx {
-            pending.insert(s.row_start, s);
-            while let Some(s) = pending.remove(&next_row) {
-                next_row += s.rows.n_rows;
-                sink(s);
-            }
-        }
-        while let Some(s) = pending.remove(&next_row) {
-            next_row += s.rows.n_rows;
-            sink(s);
-        }
-    });
+    let pool = StreamConfig {
+        n_workers: if cfg.n_workers == 0 { exec::threads() } else { cfg.n_workers },
+        queue_depth: cfg.queue_depth.max(1),
+    };
+    exec::ordered_stream(
+        n_jobs,
+        &pool,
+        |j| {
+            let t0 = std::time::Instant::now();
+            let row_start = j * stripe;
+            let row_end = (row_start + stripe).min(n);
+            let rows = stripe_product(kernel, row_start, row_end);
+            metrics.jobs.fetch_add(1, Ordering::Relaxed);
+            metrics.nnz.fetch_add(rows.nnz() as u64, Ordering::Relaxed);
+            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            Stripe { row_start, rows }
+        },
+        |_, s| sink(s),
+    );
     metrics
 }
 
 /// Compute one stripe `P[row_start..row_end, :]` by Gustavson over the
-/// factor rows (same cost model as the monolithic product, §3.3).
+/// factor rows (same cost model as the monolithic product, §3.3). Runs
+/// single-threaded: stripes are already the coordinator's parallelism
+/// unit, so nesting the row-parallel SpGEMM would only oversubscribe.
 fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Csr {
     // Build a view of Q's stripe as a small CSR borrowing the data.
     let q = &kernel.q;
@@ -151,7 +119,7 @@ fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Cs
         indices: q.indices[lo..hi].to_vec(),
         data: q.data[lo..hi].to_vec(),
     };
-    let mut p = spgemm(&qs, kernel.w_transpose());
+    let mut p = spgemm_with_threads(&qs, kernel.w_transpose(), 1);
     if kernel.kind == crate::swlc::ProximityKind::OobSeparable {
         // Remark G.2 on the stripe's diagonal block.
         for i in 0..p.n_rows {
@@ -241,9 +209,26 @@ mod tests {
     }
 
     #[test]
-    fn metrics_busy_time_positive() {
+    fn worker_count_never_changes_the_result() {
+        let k = fixture(90);
+        let reference = materialize_to_csr(
+            &k,
+            &CoordinatorConfig { stripe_rows: 16, n_workers: 1, queue_depth: 1 },
+        )
+        .0;
+        for workers in [2usize, 4, 8] {
+            let cfg = CoordinatorConfig { stripe_rows: 16, n_workers: workers, queue_depth: 3 };
+            let (p, _) = materialize_to_csr(&k, &cfg);
+            assert_eq!(p, reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn auto_worker_default_runs() {
+        // n_workers = 0 resolves through the shared exec knob.
         let k = fixture(80);
-        let (_, m) = materialize_to_csr(&k, &CoordinatorConfig::default());
+        let (p, m) = materialize_to_csr(&k, &CoordinatorConfig::default());
+        assert_eq!(p.to_dense(), k.proximity_matrix().to_dense());
         let (_, _, busy) = m.snapshot();
         assert!(busy >= 0.0);
     }

@@ -1,0 +1,131 @@
+//! Minimal error handling for the zero-dependency build.
+//!
+//! The offline vendor set has no `anyhow`, so this module provides the
+//! small slice of it the crate uses: a string-backed [`Error`], the
+//! [`anyhow!`]/[`bail!`] macros, and a [`Context`] extension trait for
+//! annotating fallible calls. Like `anyhow::Error`, [`Error`] does not
+//! implement `std::error::Error` itself so that the blanket
+//! `From<E: std::error::Error>` conversion (what makes `?` work on
+//! `io::Error` etc.) cannot overlap the reflexive `From<Error>`.
+
+use std::fmt;
+
+/// A boxed-string error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, ctx: String) -> Error {
+        self.context.push(ctx);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, root cause last (anyhow's `{:#}`
+        // ordering, used unconditionally — the CLI prints `{e:#}`).
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::error::Error::new(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Attach context to a fallible value (the `anyhow::Context` subset the
+/// crate uses).
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(e.to_string()).push_context(ctx.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::new(e.to_string()).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_context_outermost_first() {
+        let base: Result<()> = Err(Error::new("root cause"));
+        let e = base.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: root cause");
+        assert_eq!(format!("{e:#}"), "reading manifest: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope: {}", "reason")
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+}

@@ -1,0 +1,409 @@
+//! Shared scoped parallel execution layer.
+//!
+//! Every hot path in the library — Gustavson SpGEMM, CSR transpose,
+//! incidence-factor construction, per-tree forest training, block
+//! coordination — runs on the primitives in this module instead of
+//! hand-rolling its own threads. Design constraints:
+//!
+//! * **Zero dependencies**: std `thread::scope` only (the offline
+//!   vendor set has no rayon/crossbeam).
+//! * **Deterministic results**: primitives return results in item
+//!   order, and callers partition work so per-item outputs do not
+//!   depend on chunk boundaries. Combined with per-item RNG streams
+//!   (`Rng::derive`) this makes every parallel path bitwise-identical
+//!   to its serial counterpart at any thread count.
+//! * **Per-worker scratch**: chunked primitives hand each worker one
+//!   contiguous range so scratch state (SPA accumulators, tree-builder
+//!   histograms) is allocated once per worker, not once per item.
+//! * **One thread-count knob**: [`threads`] resolves, in priority
+//!   order, the process-wide override set by [`set_threads`] (the CLI
+//!   `--threads` flag), the `FK_THREADS` environment variable, and
+//!   `std::thread::available_parallelism()`. On a 1-core host every
+//!   primitive degrades to a plain serial loop with zero spawns.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Condvar, Mutex};
+
+/// Process-wide thread-count override; 0 = unset (use env / hardware).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the global worker count (the CLI `--threads` knob). `0` clears
+/// the override back to auto-detection.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Resolve the worker count: [`set_threads`] override, else the
+/// `FK_THREADS` env var, else `available_parallelism()`, else 1.
+pub fn threads() -> usize {
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
+    if let Ok(s) = std::env::var("FK_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Worker count for a job of `n_items`, keeping at least
+/// `min_per_worker` items per worker so tiny inputs stay serial.
+pub fn workers_for(n_items: usize, min_per_worker: usize) -> usize {
+    let cap = n_items / min_per_worker.max(1);
+    threads().min(cap).max(1)
+}
+
+/// Split `0..n_items` into at most `n_chunks` contiguous balanced
+/// ranges (sizes differ by at most one; empty input ⇒ no ranges).
+pub fn chunk_ranges(n_items: usize, n_chunks: usize) -> Vec<Range<usize>> {
+    if n_items == 0 {
+        return vec![];
+    }
+    let chunks = n_chunks.max(1).min(n_items);
+    let base = n_items / chunks;
+    let rem = n_items % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for c in 0..chunks {
+        let len = base + usize::from(c < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run one task per element of `tasks`, each on its own scoped worker
+/// (task 0 runs on the calling thread), returning results **in task
+/// order**. The fixed fan-out primitive: callers size `tasks` to the
+/// worker count and carry per-worker state inside the task payload.
+pub fn parallel_tasks<S, R, F>(tasks: Vec<S>, f: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(usize, S) -> R + Sync,
+{
+    let n = tasks.len();
+    if n <= 1 {
+        return tasks.into_iter().enumerate().map(|(i, s)| f(i, s)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(n - 1);
+        let mut tasks = tasks.into_iter().enumerate();
+        let (i0, s0) = tasks.next().unwrap();
+        for (i, s) in tasks {
+            handles.push(scope.spawn(move || (i, f(i, s))));
+        }
+        out[i0] = Some(f(i0, s0));
+        for h in handles {
+            let (i, r) = h.join().expect("exec worker panicked");
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Chunked parallel-for: split `0..n_items` across at most `n_workers`
+/// contiguous ranges and run `f(worker_idx, range)` on each, returning
+/// per-range results in range order. Per-worker scratch lives inside
+/// `f` (allocated once per range, i.e. once per worker).
+pub fn parallel_ranges<R, F>(n_items: usize, n_workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    parallel_tasks(chunk_ranges(n_items, n_workers), f)
+}
+
+/// Run two independent closures concurrently (the second on a scoped
+/// worker) and return both results.
+pub fn join<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    std::thread::scope(|scope| {
+        let hb = scope.spawn(fb);
+        let a = fa();
+        (a, hb.join().expect("exec join worker panicked"))
+    })
+}
+
+/// Configuration for [`ordered_stream`]: worker fan-out plus the
+/// bounded number of completed-but-unconsumed results (backpressure).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    pub n_workers: usize,
+    pub queue_depth: usize,
+}
+
+/// Dynamic work-queue pool with **ordered streaming delivery**: workers
+/// claim job ids `0..n_jobs` from a shared counter, and `sink(job, r)`
+/// runs on the calling thread for every job **in job order**.
+///
+/// Backpressure is a hard bound: a worker may not *claim* job `j`
+/// until `j < emitted + queue_depth + n_workers`, so at most
+/// `queue_depth + n_workers` completed-but-unemitted results ever
+/// exist (in the bounded channel plus the reorder buffer combined) —
+/// a slow sink, or one slow head-of-line job, throttles the workers
+/// instead of buffering everything.
+pub fn ordered_stream<R, F, S>(n_jobs: usize, cfg: &StreamConfig, job: F, mut sink: S)
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    S: FnMut(usize, R),
+{
+    if n_jobs == 0 {
+        return;
+    }
+    let workers = cfg.n_workers.max(1).min(n_jobs);
+    if workers == 1 {
+        for j in 0..n_jobs {
+            sink(j, job(j));
+        }
+        return;
+    }
+    let window = cfg.queue_depth.max(1) + workers;
+    // Declared before the scope so spawned workers may borrow them
+    // (scoped threads outlive the body of the scope closure).
+    let next = AtomicUsize::new(0);
+    // Jobs emitted by the sink so far; guards the claim window.
+    let gate: (Mutex<usize>, Condvar) = (Mutex::new(0), Condvar::new());
+    let (tx, rx) = sync_channel::<(usize, R)>(cfg.queue_depth.max(1));
+
+    /// Unblocks the claim window on drop, so workers parked on the
+    /// gate can never outlive a sink that panicked mid-drain.
+    struct GateOpen<'a>(&'a (Mutex<usize>, Condvar));
+    impl Drop for GateOpen<'_> {
+        fn drop(&mut self) {
+            *self.0 .0.lock().unwrap() = usize::MAX;
+            self.0 .1.notify_all();
+        }
+    }
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let gate = &gate;
+            let job = &job;
+            scope.spawn(move || loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= n_jobs {
+                    break;
+                }
+                // Claim-window backpressure: wait until the sink has
+                // caught up to within `window` of this job id.
+                {
+                    let mut emitted = gate.0.lock().unwrap();
+                    while j >= emitted.saturating_add(window) {
+                        emitted = gate.1.wait(emitted).unwrap();
+                    }
+                }
+                // A send error means the receiver is gone (sink side
+                // unwound); stop quietly so the scope can join.
+                if tx.send((j, job(j))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let _open_on_exit = GateOpen(&gate);
+        // Reorder out-of-order completions so the sink observes jobs
+        // in id order. Bounded by the claim window above.
+        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        let mut next_emit = 0usize;
+        let mut emit = |next_emit: &mut usize, r: R, sink: &mut S| {
+            sink(*next_emit, r);
+            *next_emit += 1;
+            *gate.0.lock().unwrap() = *next_emit;
+            gate.1.notify_all();
+        };
+        for (j, r) in rx {
+            pending.insert(j, r);
+            while let Some(r) = pending.remove(&next_emit) {
+                emit(&mut next_emit, r, &mut sink);
+            }
+        }
+        while let Some(r) = pending.remove(&next_emit) {
+            emit(&mut next_emit, r, &mut sink);
+        }
+    });
+}
+
+/// A raw shared view of a mutable slice for scatter-style parallel
+/// writes where the caller guarantees every index is written by at
+/// most one worker (e.g. the two-pass parallel CSR transpose, or
+/// row-disjoint routing tables).
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `v` at `i`.
+    ///
+    /// # Safety
+    /// `i < len`, and no other thread reads or writes index `i` while
+    /// the `SharedSlice` is live.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        for n in [0usize, 1, 2, 7, 64, 65] {
+            for c in [1usize, 2, 3, 8, 100] {
+                let ranges = chunk_ranges(n, c);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                if !ranges.is_empty() {
+                    let min = ranges.iter().map(|r| r.len()).min().unwrap();
+                    let max = ranges.iter().map(|r| r.len()).max().unwrap();
+                    assert!(max - min <= 1, "n={n} c={c}: {min}..{max}");
+                    assert!(min >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_results_in_order() {
+        for workers in [1usize, 2, 4, 7] {
+            let parts = parallel_ranges(100, workers, |_, r| r.map(|i| i * i).sum::<usize>());
+            let total: usize = parts.iter().sum();
+            assert_eq!(total, (0..100usize).map(|i| i * i).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn parallel_tasks_preserve_task_index() {
+        let tasks: Vec<usize> = (0..9).collect();
+        let out = parallel_tasks(tasks, |i, s| {
+            assert_eq!(i, s);
+            s * 10
+        });
+        assert_eq!(out, (0..9).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_returns_both() {
+        let (a, b) = join(|| 6 * 7, || "ok");
+        assert_eq!((a, b), (42, "ok"));
+    }
+
+    #[test]
+    fn ordered_stream_delivers_all_jobs_in_order() {
+        for workers in [1usize, 2, 4] {
+            for depth in [1usize, 2, 8] {
+                let cfg = StreamConfig { n_workers: workers, queue_depth: depth };
+                let mut seen = vec![];
+                ordered_stream(37, &cfg, |j| j * 2, |j, r| {
+                    assert_eq!(r, j * 2);
+                    seen.push(j);
+                });
+                assert_eq!(seen, (0..37).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn ordered_stream_survives_slow_head_of_line() {
+        // Job 0 stalls while the pool completes later jobs; the claim
+        // window must park those workers (bounded buffering) and then
+        // drain everything in order once the head emits.
+        let cfg = StreamConfig { n_workers: 4, queue_depth: 2 };
+        let mut seen = 0usize;
+        ordered_stream(
+            64,
+            &cfg,
+            |j| {
+                if j == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                j
+            },
+            |j, r| {
+                assert_eq!(j, r);
+                assert_eq!(j, seen);
+                seen += 1;
+            },
+        );
+        assert_eq!(seen, 64);
+    }
+
+    #[test]
+    fn ordered_stream_zero_jobs_is_noop() {
+        let cfg = StreamConfig { n_workers: 4, queue_depth: 2 };
+        ordered_stream(0, &cfg, |j| j, |_, _| panic!("no jobs expected"));
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut buf = vec![0usize; 64];
+        {
+            let shared = SharedSlice::new(&mut buf);
+            parallel_ranges(64, 4, |_, r| {
+                for i in r {
+                    unsafe { shared.write(i, i + 1) };
+                }
+            });
+        }
+        assert_eq!(buf, (1..=64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workers_for_respects_floor() {
+        assert_eq!(workers_for(10, 100), 1);
+        assert!(workers_for(100_000, 1) >= 1);
+    }
+
+    #[test]
+    fn threads_env_and_override() {
+        // The override always wins; clearing falls back to >= 1.
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+}

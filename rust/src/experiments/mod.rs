@@ -61,7 +61,7 @@ pub fn measure_kernel_cost(forest: &Forest, data: &Dataset, kind: ProximityKind)
     };
     let wt = wm.transpose();
     let secs_factors = t0.elapsed().as_secs_f64();
-    let flops = crate::sparse::spgemm_nnz_flops(&qm, &wt);
+    let (flops, _nnz_ub) = crate::sparse::spgemm_nnz_flops(&qm, &wt);
     let (p, secs_product) = time(|| crate::sparse::spgemm(&qm, &wt));
     let bytes = qm.mem_bytes() + wm.mem_bytes() + wt.mem_bytes() + p.mem_bytes();
     KernelCost {
@@ -91,4 +91,56 @@ pub fn train_for(data: &Dataset, kind: ProximityKind, cfg: &TrainConfig) -> Fore
 /// Fit the full kernel object (for prediction-oriented harnesses).
 pub fn fit_kernel(forest: &Forest, data: &Dataset, kind: ProximityKind) -> ForestKernel {
     ForestKernel::fit(forest, data, kind)
+}
+
+/// Serial-vs-parallel SpGEMM comparison on one fitted kernel (reported
+/// by `bench-fig42` / `bench-naive` and the `BENCH_spgemm.json`
+/// artifact). On a 1-core host the parallel path degrades to the same
+/// serial loop, so the speedup reads ≈1.0 rather than regressing.
+#[derive(Clone, Debug)]
+pub struct SpeedupProbe {
+    pub n: usize,
+    pub threads: usize,
+    pub secs_serial: f64,
+    pub secs_parallel: f64,
+    pub flops: u64,
+}
+
+impl SpeedupProbe {
+    pub fn speedup(&self) -> f64 {
+        if self.secs_parallel > 0.0 {
+            self.secs_serial / self.secs_parallel
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Measure the kernel product `Q·Wᵀ` with 1 worker and with the shared
+/// pool's worker count (best of `iters` runs each). Takes a fitted
+/// kernel so callers that already built the factors don't pay for a
+/// second context + incidence + transpose construction.
+pub fn spgemm_speedup_probe(kernel: &ForestKernel, iters: usize) -> SpeedupProbe {
+    use crate::bench_support::time;
+    let threads = crate::exec::threads();
+    let best = |n_threads: usize| {
+        (0..iters.max(1))
+            .map(|_| {
+                let (p, secs) = time(|| {
+                    crate::sparse::spgemm_with_threads(&kernel.q, kernel.w_transpose(), n_threads)
+                });
+                std::hint::black_box(&p);
+                secs
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let secs_serial = best(1);
+    let secs_parallel = best(threads);
+    SpeedupProbe {
+        n: kernel.q.n_rows,
+        threads,
+        secs_serial,
+        secs_parallel,
+        flops: kernel.predicted_flops(),
+    }
 }

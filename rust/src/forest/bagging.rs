@@ -5,11 +5,18 @@
 //! schemes (App. B.3/B.4) consume. ExtraTrees uses the whole training
 //! set per tree (no bootstrap, sklearn default) with random-threshold
 //! splits.
+//!
+//! Trees are independent given their RNG streams, so training fans out
+//! over the shared [`crate::exec`] pool: each worker owns one
+//! contiguous tree range plus its own `TreeBuilder` scratch and sample
+//! buffer, and tree `t` always draws from `root_rng.derive(t + 1)` —
+//! the forest is bitwise-identical at any thread count.
 
 use super::binning::{BinnedData, Binner};
-use super::tree::{BuildParams, Targets, TreeBuilder};
+use super::tree::{BuildParams, Targets, Tree, TreeBuilder};
 use super::{Forest, ForestKind, SplitMode, TrainConfig};
 use crate::data::Dataset;
+use crate::exec;
 use crate::rng::Rng;
 
 pub fn train_bagged(data: &Dataset, binned: &BinnedData, binner: Binner, cfg: &TrainConfig) -> Forest {
@@ -38,31 +45,51 @@ pub fn train_bagged(data: &Dataset, binned: &BinnedData, binner: Binner, cfg: &T
     let n_draws = cfg.max_samples.unwrap_or(n).min(n * 4);
 
     let root_rng = Rng::new(cfg.seed);
-    let mut builder = TreeBuilder::new();
+    let workers = if cfg.n_threads == 0 {
+        exec::threads().min(cfg.n_trees).max(1)
+    } else {
+        cfg.n_threads.min(cfg.n_trees).max(1)
+    };
+    // One contiguous tree range per worker; builder scratch and the
+    // bootstrap sample buffer are allocated once per worker and reused
+    // across its trees.
+    let blocks: Vec<Vec<(Tree, Option<Vec<u16>>)>> =
+        exec::parallel_ranges(cfg.n_trees, workers, |_, range| {
+            let mut builder = TreeBuilder::new();
+            let mut samples: Vec<u32> = Vec::with_capacity(n_draws);
+            let mut out = Vec::with_capacity(range.len());
+            for t in range {
+                let mut rng = root_rng.derive(t as u64 + 1);
+                samples.clear();
+                let bag = if bootstrap {
+                    let counts = rng.bootstrap_counts(n, n_draws);
+                    let mut bag = vec![0u16; n];
+                    for (i, &c) in counts.iter().enumerate() {
+                        debug_assert!(c < u16::MAX as u32);
+                        bag[i] = c as u16;
+                        for _ in 0..c {
+                            samples.push(i as u32);
+                        }
+                    }
+                    Some(bag)
+                } else {
+                    samples.extend(0..n as u32);
+                    None
+                };
+                let tree = builder.build(binned, &targets, &mut samples, &params, &mut rng);
+                out.push((tree, bag));
+            }
+            out
+        });
+
     let mut trees = Vec::with_capacity(cfg.n_trees);
     let mut inbag: Vec<Vec<u16>> = Vec::new();
     let mut leaf_offsets = vec![0u32];
-
-    let mut samples: Vec<u32> = Vec::with_capacity(n_draws);
-    for t in 0..cfg.n_trees {
-        let mut rng = root_rng.derive(t as u64 + 1);
-        samples.clear();
-        if bootstrap {
-            let counts = rng.bootstrap_counts(n, n_draws);
-            let mut bag = vec![0u16; n];
-            for (i, &c) in counts.iter().enumerate() {
-                debug_assert!(c < u16::MAX as u32);
-                bag[i] = c as u16;
-                for _ in 0..c {
-                    samples.push(i as u32);
-                }
-            }
-            inbag.push(bag);
-        } else {
-            samples.extend(0..n as u32);
-        }
-        let tree = builder.build(binned, &targets, &mut samples, &params, &mut rng);
+    for (tree, bag) in blocks.into_iter().flatten() {
         leaf_offsets.push(leaf_offsets.last().unwrap() + tree.n_leaves as u32);
+        if let Some(bag) = bag {
+            inbag.push(bag);
+        }
         trees.push(tree);
     }
 

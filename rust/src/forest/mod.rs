@@ -85,6 +85,12 @@ pub struct TrainConfig {
     /// GBT only: shrinkage.
     pub learning_rate: f32,
     pub seed: u64,
+    /// Worker threads for per-tree training; `0` = the shared
+    /// [`crate::exec::threads`] knob. Any value produces the identical
+    /// ensemble: each tree consumes its own pre-seeded RNG stream
+    /// (`root_rng.derive(t + 1)`), so parallelism never reorders
+    /// randomness. (GBT is inherently sequential and ignores this.)
+    pub n_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -100,6 +106,7 @@ impl Default for TrainConfig {
             n_bins: 256,
             learning_rate: 0.1,
             seed: 0,
+            n_threads: 0,
         }
     }
 }
@@ -164,17 +171,25 @@ impl Forest {
         self.apply_binned(&binned)
     }
 
-    /// As [`Forest::apply`] but over pre-binned rows.
+    /// As [`Forest::apply`] but over pre-binned rows. Samples are
+    /// routed in parallel over the shared [`crate::exec`] pool; every
+    /// sample writes its own disjoint `T`-slot span, so the table is
+    /// identical at any thread count.
     pub fn apply_binned(&self, binned: &BinnedData) -> Vec<u32> {
         let (n, t_total) = (binned.n, self.trees.len());
         let mut out = vec![0u32; n * t_total];
-        for i in 0..n {
-            let row = binned.row(i);
-            let dst = &mut out[i * t_total..(i + 1) * t_total];
-            for (t, tree) in self.trees.iter().enumerate() {
-                dst[t] = self.leaf_offsets[t] + tree.apply_binned(row);
+        let shared = crate::exec::SharedSlice::new(&mut out);
+        crate::exec::parallel_ranges(n, crate::exec::workers_for(n, 512), |_, rows| {
+            for i in rows {
+                let row = binned.row(i);
+                for (t, tree) in self.trees.iter().enumerate() {
+                    // SAFETY: sample i exclusively owns out[i*T..(i+1)*T].
+                    unsafe {
+                        shared.write(i * t_total + t, self.leaf_offsets[t] + tree.apply_binned(row));
+                    }
+                }
             }
-        }
+        });
         out
     }
 

@@ -18,7 +18,7 @@ pub const LEAF: u16 = u16::MAX;
 /// One tree node. Internal: `row[feature] <= threshold` goes `left`,
 /// else `right` (child node indices). Leaf: `feature == LEAF` and
 /// `left` holds the tree-local leaf id.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Node {
     pub feature: u16,
     pub threshold: u8,
@@ -30,6 +30,7 @@ pub struct Node {
 ///
 /// `leaf_stats` layout: classification ⇒ `n_leaves × C` class counts
 /// (bootstrap-weighted); regression ⇒ `n_leaves` leaf values.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
     pub nodes: Vec<Node>,
     pub n_leaves: usize,

@@ -13,11 +13,23 @@
 //!
 //! ## Layout
 //!
+//! * [`exec`] — the shared scoped parallel execution layer: a chunked
+//!   parallel-for with per-worker scratch, an ordered streaming pool
+//!   with bounded-queue backpressure, and the global `--threads` /
+//!   `FK_THREADS` worker-count knob. Every hot path below (SpGEMM,
+//!   transpose, factor construction, per-tree training, the block
+//!   coordinator) runs on these primitives, and every parallel path is
+//!   bitwise-identical to its serial counterpart at any thread count.
+//! * [`error`] — zero-dependency `anyhow`-style error type + macros.
 //! * [`rng`] — deterministic SplitMix64/PCG-style RNG used everywhere.
-//! * [`sparse`] — CSR matrices, Gustavson SpGEMM, SpMV/SpMM.
+//! * [`sparse`] — CSR matrices, Gustavson SpGEMM (row-partitioned
+//!   parallel with per-worker SPA scratch), parallel counting-sort
+//!   transpose, SpMV/SpMM.
 //! * [`forest`] — from-scratch decision forests: CART trees over binned
 //!   features, random forests (bootstrap + OOB bookkeeping), extremely
-//!   randomized trees, and gradient-boosted trees.
+//!   randomized trees, and gradient-boosted trees. Bagged kinds train
+//!   trees in parallel from per-tree pre-seeded RNG streams, so the
+//!   ensemble is identical at any thread count.
 //! * [`data`] — deterministic synthetic analogs of the paper's datasets.
 //! * [`swlc`] — the paper's contribution: ensemble context θ, the weight
 //!   assignments of App. B (original, KeRF, separable OOB, RF-GAP,
@@ -27,16 +39,21 @@
 //! * [`spectral`] — dense/sparse subspace iteration (Leaf PCA), kNN
 //!   graphs, and UMAP/PHATE-analog embeddings on leaf coordinates.
 //! * [`runtime`] — PJRT CPU client loading the AOT HLO-text artifacts
-//!   produced by `python/compile/aot.py` (L1 Pallas + L2 jax).
+//!   produced by `python/compile/aot.py` (L1 Pallas + L2 jax). The XLA
+//!   backend is gated behind the `xla` cargo feature; without it the
+//!   manifest layer still works and execution returns a clear error.
 //! * [`coordinator`] — the block coordinator: shards kernel
-//!   materialization into (query × reference) block jobs over an async
-//!   worker pool with bounded queues (backpressure) and metrics.
+//!   materialization into stripe jobs over the shared [`exec`] pool's
+//!   ordered stream (bounded-queue backpressure) with metrics.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
-//!   log-log slope fits) shared by the figure/table harnesses.
+//!   log-log slope fits, machine-readable bench records) shared by the
+//!   figure/table harnesses.
 
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;
+pub mod error;
+pub mod exec;
 pub mod experiments;
 pub mod forest;
 pub mod rng;

@@ -6,9 +6,10 @@
 //! flags parsed by the tiny in-repo parser (the offline vendor set has
 //! no clap).
 
-use anyhow::{anyhow, bail, Result};
-use forest_kernels::bench_support::{peak_rss_bytes, time};
+use forest_kernels::bench_support::{peak_rss_bytes, time, write_bench_json, BenchRecord};
 use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
+use forest_kernels::error::Result;
+use forest_kernels::{anyhow, bail, exec};
 use forest_kernels::data::registry;
 use forest_kernels::experiments::{fig41, fig42, fig43, tablei1};
 use forest_kernels::forest::{Forest, ForestKind, TrainConfig};
@@ -68,6 +69,11 @@ repro — sparse leaf-incidence forest kernels (SWLC)
 
 USAGE: repro <command> [--flags]
 
+Global flags:
+  --threads N      worker threads for all parallel paths (SpGEMM, forest
+                   training, factor build, coordinator); default = cores,
+                   also settable via FK_THREADS
+
 Pipeline commands:
   datasets                                 print the Table F.1 dataset analogs
   train    --dataset covertype --n 20000 --trees 50 [--kind rf|et|gbt]
@@ -80,10 +86,11 @@ Paper harnesses (DESIGN.md experiment index):
   bench-fig41    [--base-n 8000 --seed 1]
   bench-fig42    --axis dataset|method|minleaf|kind|depth
                  [--min-n 4096 --max-n 65536 --trees 50 --dataset covertype]
+                 [--json-out BENCH_spgemm.json]  (adds serial-vs-parallel probe)
   bench-figh1    [--min-n 4096 --max-n 32768]  (all four ablation rows)
   bench-fig43    [--dataset fashionmnist --n 12000 --test-n 2000]
   bench-tablei1  [--sizes 16384,32768,65536 --trees 50]
-  bench-naive    [--n 2048]  (factored vs naive crossover)
+  bench-naive    [--n 2048] [--json-out BENCH_spgemm.json]  (factored vs naive)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
 ";
@@ -96,6 +103,9 @@ fn main() {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        exec::set_threads(n);
+    }
     if let Err(e) = dispatch(&cmd, &args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -331,6 +341,57 @@ fn cmd_fig42(args: &Args) -> Result<()> {
     };
     let series = fig42::run(&axis, &cfg);
     fig42::print(&series, &format!("Fig 4.2 axis={}", args.str_or("axis", "method")));
+
+    // Serial-vs-parallel probe of the kernel product, hard-capped at
+    // 16384 samples to stay cheap relative to the sweep (deliberately
+    // allowed to fall below --min-n rather than above the cap).
+    let probe_n = cfg.max_n.min(16384);
+    let spec = registry::by_name(&cfg.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset {}", cfg.dataset))?;
+    let data = spec.generate(probe_n, cfg.seed);
+    let tc = TrainConfig {
+        n_trees: cfg.n_trees,
+        seed: cfg.seed,
+        max_samples: Some(100_000),
+        ..Default::default()
+    };
+    let forest = Forest::train(&data, &tc);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Original);
+    let probe = forest_kernels::experiments::spgemm_speedup_probe(&kernel, 3);
+    println!(
+        "\nspgemm N={} threads={}: serial {:.4}s parallel {:.4}s speedup {:.2}x",
+        probe.n,
+        probe.threads,
+        probe.secs_serial,
+        probe.secs_parallel,
+        probe.speedup()
+    );
+
+    if let Some(path) = args.get("json-out") {
+        let mut records: Vec<BenchRecord> = vec![];
+        for s in &series {
+            for p in &s.points {
+                records.push(BenchRecord {
+                    name: format!("fig42/{}", s.label),
+                    n: p.n,
+                    wall_secs: p.secs_total(),
+                    predicted_flops: p.flops,
+                    threads: exec::threads(),
+                    speedup_vs_serial: 1.0,
+                });
+            }
+        }
+        records.push(BenchRecord {
+            name: format!("spgemm/{}", cfg.dataset),
+            n: probe.n,
+            wall_secs: probe.secs_parallel,
+            predicted_flops: probe.flops,
+            threads: probe.threads,
+            speedup_vs_serial: probe.speedup(),
+        });
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
     Ok(())
 }
 
@@ -403,12 +464,13 @@ fn cmd_naive(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "covertype");
     let trees = args.usize_or("trees", 32);
     println!("# factored vs naive O(N²T) (dataset={dataset}, T={trees})");
-    println!("N\tnaive_s\tfactored_s\tspeedup");
+    println!("N\tnaive_s\tfactored_s\tspeedup\tpar_speedup");
+    let mut records: Vec<BenchRecord> = vec![];
     let mut n = 256usize;
     let max = args.usize_or("n", 4096);
     while n <= max {
         let naive = fig42::naive_cost(n, dataset, trees, 3);
-        let spec = registry::by_name(dataset).unwrap();
+        let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
         let data = spec.generate(n, 3);
         let cfg = TrainConfig { n_trees: trees, seed: 3, ..Default::default() };
         let forest = Forest::train(&data, &cfg);
@@ -417,8 +479,35 @@ fn cmd_naive(args: &Args) -> Result<()> {
             &data,
             ProximityKind::Original,
         );
-        println!("{n}\t{naive:.4}\t{:.4}\t{:.1}x", cost.secs_total(), naive / cost.secs_total());
+        let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Original);
+        let probe = forest_kernels::experiments::spgemm_speedup_probe(&kernel, 3);
+        println!(
+            "{n}\t{naive:.4}\t{:.4}\t{:.1}x\t{:.2}x",
+            cost.secs_total(),
+            naive / cost.secs_total(),
+            probe.speedup()
+        );
+        records.push(BenchRecord {
+            name: format!("naive/{dataset}"),
+            n,
+            wall_secs: naive,
+            predicted_flops: 0,
+            threads: 1,
+            speedup_vs_serial: 1.0,
+        });
+        records.push(BenchRecord {
+            name: format!("spgemm/{dataset}"),
+            n,
+            wall_secs: probe.secs_parallel,
+            predicted_flops: probe.flops,
+            threads: probe.threads,
+            speedup_vs_serial: probe.speedup(),
+        });
         n *= 2;
+    }
+    if let Some(path) = args.get("json-out") {
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
     }
     Ok(())
 }

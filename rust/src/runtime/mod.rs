@@ -6,10 +6,17 @@
 //! 64-bit instruction ids it rejects). This module compiles every
 //! artifact in the manifest once on the PJRT CPU client and exposes
 //! typed execution; Python never runs on the request path.
+//!
+//! The XLA backend is gated behind the `xla` cargo feature (the
+//! offline build has no `xla` bindings crate): without it the manifest
+//! layer below still parses and validates, and [`Runtime::load`]
+//! returns a descriptive error instead of compiling, so every caller —
+//! CLI `serve`, the gallery service, benches — degrades gracefully.
 
 pub mod json;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{anyhow, bail};
 use json::Json;
 use std::collections::HashMap;
 use std::path::Path;
@@ -73,6 +80,7 @@ impl Tensor<'_> {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -81,13 +89,6 @@ impl Tensor<'_> {
         };
         Ok(lit.reshape(&dims)?)
     }
-}
-
-/// The PJRT runtime: one compiled executable per manifest artifact.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    execs: HashMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
 }
 
 /// Parse `manifest.json` from an artifacts directory.
@@ -130,6 +131,38 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
         .collect()
 }
 
+/// Pick the smallest spec named `prox_{BQ}x{BR}x{T}` that fits
+/// `(bq, br, t)` (caller pads up). Returns `(BQ, BR, T)`.
+fn best_prox_in<'a>(
+    names: impl Iterator<Item = &'a str>,
+    bq: usize,
+    br: usize,
+    t: usize,
+) -> Option<(usize, usize, usize)> {
+    let mut best: Option<(usize, usize, usize)> = None;
+    for name in names {
+        if let Some(rest) = name.strip_prefix("prox_") {
+            let dims: Vec<usize> = rest.split('x').filter_map(|p| p.parse().ok()).collect();
+            if dims.len() == 3 && dims[0] >= bq && dims[1] >= br && dims[2] >= t {
+                let cand = (dims[0], dims[1], dims[2]);
+                if best.map_or(true, |b| cand.0 * cand.1 * cand.2 < b.0 * b.1 * b.2) {
+                    best = Some(cand);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// The PJRT runtime: one compiled executable per manifest artifact.
+#[cfg(feature = "xla")]
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: HashMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
+}
+
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Compile every artifact in `dir` on the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {
@@ -204,20 +237,86 @@ impl Runtime {
     /// Pick the smallest available prox variant that fits `(bq, br, t)`
     /// (caller pads up). Returns `(BQ, BR, T)`.
     pub fn best_prox_variant(&self, bq: usize, br: usize, t: usize) -> Option<(usize, usize, usize)> {
-        let mut best: Option<(usize, usize, usize)> = None;
-        for name in self.execs.keys() {
-            if let Some(rest) = name.strip_prefix("prox_") {
-                let dims: Vec<usize> =
-                    rest.split('x').filter_map(|p| p.parse().ok()).collect();
-                if dims.len() == 3 && dims[0] >= bq && dims[1] >= br && dims[2] >= t {
-                    let cand = (dims[0], dims[1], dims[2]);
-                    if best.map_or(true, |b| cand.0 * cand.1 * cand.2 < b.0 * b.1 * b.2) {
-                        best = Some(cand);
-                    }
-                }
+        best_prox_in(self.execs.keys().map(|s| s.as_str()), bq, br, t)
+    }
+}
+
+/// Stub runtime for builds without the `xla` feature: the manifest
+/// layer works, loading fails with a clear message, and the execution
+/// API keeps the same shape so callers compile unchanged.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    /// Validate the manifest, then report that execution is unavailable.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let specs = load_manifest(dir)?;
+        drop(specs);
+        bail!(
+            "PJRT runtime disabled: this binary was built without the `xla` cargo feature \
+             (enable it with `cargo build --features xla` once the vendored xla bindings \
+             are available)"
+        )
+    }
+
+    /// Manifest-only construction (tests of the serving plumbing).
+    pub fn from_manifest(dir: &Path) -> Result<Runtime> {
+        let specs = load_manifest(dir)?;
+        Ok(Runtime { specs: specs.into_iter().map(|s| (s.name.clone(), s)).collect() })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        // Keep the dtype/shape validation observable even without XLA.
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; loaded: {:?}", self.names()))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (i, (t, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.dtype() != ts.dtype {
+                bail!("{name}: input {i} dtype {} != manifest {}", t.dtype(), ts.dtype);
+            }
+            if t.len() != ts.numel() {
+                bail!("{name}: input {i} has {} elements, manifest wants {:?}", t.len(), ts.shape);
             }
         }
-        best
+        bail!("cannot execute {name}: built without the `xla` feature")
+    }
+
+    pub fn prox_block(
+        &self,
+        bq: usize,
+        br: usize,
+        t: usize,
+        leaf_q: &[i32],
+        q: &[f32],
+        leaf_w: &[i32],
+        w: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = format!("prox_{bq}x{br}x{t}");
+        self.execute(
+            &name,
+            &[Tensor::I32(leaf_q), Tensor::F32(q), Tensor::I32(leaf_w), Tensor::F32(w)],
+        )
+    }
+
+    pub fn best_prox_variant(&self, bq: usize, br: usize, t: usize) -> Option<(usize, usize, usize)> {
+        best_prox_in(self.specs.keys().map(|s| s.as_str()), bq, br, t)
     }
 }
 
@@ -258,5 +357,13 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         assert!(load_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn prox_variant_selection_prefers_smallest_fit() {
+        let names = ["prox_128x128x64", "prox_64x64x64", "prox_256x256x128", "other"];
+        let got = best_prox_in(names.iter().copied(), 32, 32, 50);
+        assert_eq!(got, Some((64, 64, 64)));
+        assert_eq!(best_prox_in(names.iter().copied(), 1, 1, 200), None);
     }
 }

@@ -1,5 +1,7 @@
 //! Compressed Sparse Row matrices.
 
+use crate::exec;
+
 /// A CSR matrix over `f32` values with `u32` column indices.
 ///
 /// `u32` indices cap the column dimension at ~4.29e9, comfortably above
@@ -91,25 +93,60 @@ impl Csr {
                 };
                 fill(i, &mut push);
             }
-            // Sort + merge duplicates within the fresh row.
-            let row_len = indices.len() - start;
-            if row_len > 1 {
-                let mut perm: Vec<usize> = (0..row_len).collect();
-                perm.sort_unstable_by_key(|&k| indices[start + k]);
-                let idx_sorted: Vec<u32> = perm.iter().map(|&k| indices[start + k]).collect();
-                let val_sorted: Vec<f32> = perm.iter().map(|&k| data[start + k]).collect();
-                indices.truncate(start);
-                data.truncate(start);
-                for (c, v) in idx_sorted.into_iter().zip(val_sorted) {
-                    if indices.len() > start && *indices.last().unwrap() == c {
-                        *data.last_mut().unwrap() += v;
-                    } else {
+            finalize_row(&mut indices, &mut data, start);
+            indptr.push(indices.len());
+        }
+        Csr { n_rows, n_cols, indptr, indices, data }
+    }
+
+    /// Parallel [`Csr::from_rows`]: rows are partitioned across the
+    /// shared [`exec`] pool (so `fill` must be `Fn + Sync`), each worker
+    /// assembles a contiguous row block, and the blocks are stitched in
+    /// row order. Row contents never depend on the partition, so the
+    /// result is identical to the serial builder at any thread count.
+    /// This is the fast path for leaf-incidence factor construction.
+    pub fn from_rows_par<F>(n_rows: usize, n_cols: usize, per_row_hint: usize, fill: F) -> Self
+    where
+        F: Fn(usize, &mut dyn FnMut(u32, f32)) + Sync,
+    {
+        assert!(n_cols <= u32::MAX as usize);
+        let workers = exec::workers_for(n_rows, 512);
+        if workers == 1 {
+            return Csr::from_rows(n_rows, n_cols, per_row_hint, |i, push| fill(i, push));
+        }
+        let blocks = exec::parallel_ranges(n_rows, workers, |_, rows| {
+            let mut indptr = Vec::with_capacity(rows.len() + 1);
+            let mut indices: Vec<u32> = Vec::with_capacity(rows.len() * per_row_hint);
+            let mut data: Vec<f32> = Vec::with_capacity(rows.len() * per_row_hint);
+            indptr.push(0usize);
+            for i in rows {
+                let start = indices.len();
+                {
+                    let mut push = |c: u32, v: f32| {
+                        debug_assert!((c as usize) < n_cols);
                         indices.push(c);
                         data.push(v);
-                    }
+                    };
+                    fill(i, &mut push);
                 }
+                finalize_row(&mut indices, &mut data, start);
+                indptr.push(indices.len());
             }
-            indptr.push(indices.len());
+            (indptr, indices, data)
+        });
+        let nnz: usize = blocks.iter().map(|(_, ix, _)| ix.len()).sum();
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut data = Vec::with_capacity(nnz);
+        indptr.push(0usize);
+        for (bp, bi, bd) in blocks {
+            let base = indices.len();
+            indptr.extend(bp[1..].iter().map(|&p| base + p));
+            indices.extend_from_slice(&bi);
+            data.extend_from_slice(&bd);
+        }
+        if indptr.len() == 1 {
+            indptr.resize(n_rows + 1, 0);
         }
         Csr { n_rows, n_cols, indptr, indices, data }
     }
@@ -142,8 +179,78 @@ impl Csr {
         self.indptr = new_indptr;
     }
 
-    /// Transpose (CSR of the transposed matrix) by counting sort — O(nnz).
+    /// Transpose (CSR of the transposed matrix) by counting sort —
+    /// O(nnz), parallelized over the shared [`exec`] pool for large
+    /// inputs. Output is identical at any thread count.
     pub fn transpose(&self) -> Csr {
+        self.transpose_with_threads(exec::workers_for(self.nnz(), 1 << 15))
+    }
+
+    /// Transpose with an explicit worker count (`1` = serial reference).
+    ///
+    /// The parallel path is a two-pass counting sort: workers count
+    /// their row-range's column histogram, a serial prefix pass turns
+    /// the per-(range, column) counts into exact write cursors laid out
+    /// column-major with ranges in row order, and workers then scatter
+    /// into disjoint output positions. Because range r's cursor block
+    /// precedes range r+1's within every column, entries keep the
+    /// serial row order — the result is byte-for-byte the serial one.
+    pub fn transpose_with_threads(&self, n_threads: usize) -> Csr {
+        assert!(self.n_rows <= u32::MAX as usize);
+        let nt = n_threads.max(1).min(self.n_rows.max(1));
+        if nt == 1 || self.nnz() >= u32::MAX as usize {
+            return self.transpose_serial();
+        }
+        let ranges = exec::chunk_ranges(self.n_rows, nt);
+        // Pass 1: per-range column counts.
+        let counts: Vec<Vec<u32>> = exec::parallel_tasks(ranges.clone(), |_, r| {
+            let mut c = vec![0u32; self.n_cols];
+            for &col in &self.indices[self.indptr[r.start]..self.indptr[r.end]] {
+                c[col as usize] += 1;
+            }
+            c
+        });
+        // Serial prefix pass: counts -> global write cursors + indptr.
+        let mut starts = counts;
+        let mut indptr = vec![0usize; self.n_cols + 1];
+        let mut acc = 0usize;
+        for c in 0..self.n_cols {
+            for s in starts.iter_mut() {
+                let cnt = s[c] as usize;
+                s[c] = acc as u32;
+                acc += cnt;
+            }
+            indptr[c + 1] = acc;
+        }
+        // Pass 2: disjoint scatter.
+        let nnz = self.nnz();
+        let mut indices = vec![0u32; nnz];
+        let mut data = vec![0f32; nnz];
+        {
+            let ish = exec::SharedSlice::new(&mut indices);
+            let dsh = exec::SharedSlice::new(&mut data);
+            let tasks: Vec<_> = ranges.into_iter().zip(starts).collect();
+            exec::parallel_tasks(tasks, |_, (rows, mut cursor)| {
+                for r in rows {
+                    for k in self.indptr[r]..self.indptr[r + 1] {
+                        let c = self.indices[k] as usize;
+                        let dst = cursor[c] as usize;
+                        cursor[c] += 1;
+                        // SAFETY: cursor blocks are disjoint by
+                        // construction — every (range, column) owns its
+                        // exact output span.
+                        unsafe {
+                            ish.write(dst, r as u32);
+                            dsh.write(dst, self.data[k]);
+                        }
+                    }
+                }
+            });
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, data }
+    }
+
+    fn transpose_serial(&self) -> Csr {
         let mut counts = vec![0usize; self.n_cols + 1];
         for &c in &self.indices {
             counts[c as usize + 1] += 1;
@@ -165,7 +272,6 @@ impl Csr {
                 cursor[c] += 1;
             }
         }
-        assert!(self.n_rows <= u32::MAX as usize);
         Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, data }
     }
 
@@ -290,6 +396,29 @@ impl Csr {
     }
 }
 
+/// Sort + merge duplicate columns of the freshly pushed row starting at
+/// `start` (shared by the serial and parallel row builders).
+fn finalize_row(indices: &mut Vec<u32>, data: &mut Vec<f32>, start: usize) {
+    let row_len = indices.len() - start;
+    if row_len <= 1 {
+        return;
+    }
+    let mut perm: Vec<usize> = (0..row_len).collect();
+    perm.sort_unstable_by_key(|&k| indices[start + k]);
+    let idx_sorted: Vec<u32> = perm.iter().map(|&k| indices[start + k]).collect();
+    let val_sorted: Vec<f32> = perm.iter().map(|&k| data[start + k]).collect();
+    indices.truncate(start);
+    data.truncate(start);
+    for (c, v) in idx_sorted.into_iter().zip(val_sorted) {
+        if indices.len() > start && *indices.last().unwrap() == c {
+            *data.last_mut().unwrap() += v;
+        } else {
+            indices.push(c);
+            data.push(v);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +466,51 @@ mod tests {
         t.check().unwrap();
         assert_eq!(t.to_dense(), vec![1., 0., 3., 0., 0., 4., 2., 0., 0.]);
         assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn parallel_transpose_equals_serial() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(31);
+        for _ in 0..6 {
+            let rows = 1 + rng.gen_range(60);
+            let cols = 1 + rng.gen_range(40);
+            let mut trip = vec![];
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.next_f64() < 0.25 {
+                        trip.push((r, c as u32, rng.next_normal() as f32));
+                    }
+                }
+            }
+            let m = Csr::from_triplets(rows, cols, &trip);
+            let serial = m.transpose_with_threads(1);
+            for th in [2usize, 3, 4, 8] {
+                let par = m.transpose_with_threads(th);
+                par.check().unwrap();
+                assert_eq!(par, serial, "threads={th}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_rows_par_equals_serial() {
+        // Large enough that `from_rows_par` actually fans out on a
+        // multi-core host (it degrades to the serial builder below 512
+        // rows per worker).
+        let n_rows = 2048;
+        let n_cols = 19;
+        let fill = |i: usize, push: &mut dyn FnMut(u32, f32)| {
+            // Deterministic per-row pattern with duplicates and
+            // unsorted pushes.
+            push(((i * 7) % n_cols) as u32, i as f32);
+            push(((i * 3) % n_cols) as u32, 1.0);
+            push(((i * 7) % n_cols) as u32, 0.5);
+        };
+        let serial = Csr::from_rows(n_rows, n_cols, 3, |i, push| fill(i, push));
+        let par = Csr::from_rows_par(n_rows, n_cols, 3, fill);
+        par.check().unwrap();
+        assert_eq!(par, serial);
     }
 
     #[test]

@@ -15,4 +15,4 @@ mod spgemm;
 
 pub use csr::Csr;
 pub use ops::{scale_cols, scale_rows};
-pub use spgemm::{spgemm, spgemm_nnz_flops};
+pub use spgemm::{spgemm, spgemm_nnz_flops, spgemm_with_threads, SpaScratch};

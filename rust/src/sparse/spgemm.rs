@@ -6,26 +6,57 @@
 //! the paper attributes to SciPy (§3.3). For `P = Q_rows · Wᵀ_rows`
 //! (both stored sample-major), the flop count is
 //! `Σ_i Σ_t n_{t, ℓ_t(x_i)} = N·T·λ̄` — the paper's λ̄ cost model.
+//!
+//! Rows of `C` are independent, so the product parallelizes by row
+//! partitioning on the shared [`crate::exec`] pool: each worker owns a
+//! contiguous row range and one private SPA scratch ([`SpaScratch`]),
+//! and the per-range outputs are stitched in range order. Every row is
+//! accumulated by the same serial inner loop regardless of the
+//! partition, so the parallel output is **bitwise-identical** to the
+//! serial one at any thread count (verified by
+//! `tests/parallel_determinism.rs`).
 
 use super::Csr;
+use crate::exec;
 
-/// Dense-scratch (SPA) accumulator Gustavson SpGEMM: `C = A·B`.
+/// Per-worker sparse-accumulator (SPA) scratch for Gustavson rows.
 ///
-/// Keeps an `n_cols(B)`-sized value array + occupancy list. The scratch
-/// is allocated once and reset per row in O(row nnz), so the total cost
-/// is O(flops + nnz(C) log) (the log from per-row sorting of the
-/// occupancy list to keep CSR rows ordered).
-pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
-    assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
+/// Keeps an `n_cols(B)`-sized value array + row-stamped occupancy:
+/// `stamp[c] == row_stamp` ⇔ column c is live in the current row. (A
+/// `value == 0.0` sentinel would double-push a column whose partial sum
+/// cancels to exactly zero mid-row, and would force a scratch clear per
+/// row.) Allocated once per worker and reset per row in O(row nnz).
+pub struct SpaScratch {
+    scratch: Vec<f32>,
+    stamp: Vec<u32>,
+    touched: Vec<u32>,
+    radix_tmp: Vec<u32>,
+}
+
+impl SpaScratch {
+    pub fn new(n_out_cols: usize) -> SpaScratch {
+        SpaScratch {
+            scratch: vec![0f32; n_out_cols],
+            stamp: vec![0u32; n_out_cols],
+            touched: Vec::new(),
+            radix_tmp: Vec::new(),
+        }
+    }
+}
+
+/// One worker's share of the product: a contiguous row range of `C` as
+/// (local indptr, indices, data).
+struct RowBlock {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f32>,
+}
+
+/// Dense-scratch Gustavson over `rows` of `A`, using the worker-local
+/// `spa`. The accumulate + sort order per row is fixed, so the output
+/// for a row does not depend on which range it lands in.
+fn spgemm_rows(a: &Csr, b: &Csr, rows: std::ops::Range<usize>, spa: &mut SpaScratch) -> RowBlock {
     let n_out_cols = b.n_cols;
-    let mut scratch = vec![0f32; n_out_cols];
-    // Row-stamped occupancy: `stamp[c] == row+1` ⇔ column c is live in
-    // the current row. (A `value == 0.0` sentinel would double-push a
-    // column whose partial sum cancels to exactly zero mid-row, and
-    // would force a scratch clear per row.)
-    let mut stamp = vec![0u32; n_out_cols];
-    let mut touched: Vec<u32> = Vec::new();
-    let mut radix_tmp: Vec<u32> = Vec::new();
     // §Perf: SWLC kernels have a duplication factor flops/nnz ≈ 1, so
     // per-row key sorting dominates the accumulate loop. An LSD
     // radix-256 on the u32 keys (values are gathered from the scratch
@@ -33,47 +64,81 @@ pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
     // the λ̄·T-sized rows this workload produces.
     let key_bytes = (32 - (n_out_cols.max(2) as u32 - 1).leading_zeros()).div_ceil(8) as usize;
 
-    let mut indptr = Vec::with_capacity(a.n_rows + 1);
+    let mut indptr = Vec::with_capacity(rows.len() + 1);
     let mut indices: Vec<u32> = Vec::new();
     let mut data: Vec<f32> = Vec::new();
     indptr.push(0usize);
 
-    assert!(a.n_rows < u32::MAX as usize);
-    for i in 0..a.n_rows {
-        let row_stamp = i as u32 + 1;
+    for i in rows.clone() {
+        let row_stamp = (i - rows.start) as u32 + 1;
         let (acols, avals) = a.row(i);
         for (&ac, &av) in acols.iter().zip(avals) {
             let (bcols, bvals) = b.row(ac as usize);
             for (&bc, &bv) in bcols.iter().zip(bvals) {
                 let c = bc as usize;
-                let st = unsafe { stamp.get_unchecked_mut(c) };
-                let slot = unsafe { scratch.get_unchecked_mut(c) };
+                let st = unsafe { spa.stamp.get_unchecked_mut(c) };
+                let slot = unsafe { spa.scratch.get_unchecked_mut(c) };
                 if *st != row_stamp {
                     *st = row_stamp;
                     *slot = av * bv;
-                    touched.push(bc);
+                    spa.touched.push(bc);
                 } else {
                     *slot += av * bv;
                 }
             }
         }
-        if touched.len() < 64 {
-            touched.sort_unstable();
+        if spa.touched.len() < 64 {
+            spa.touched.sort_unstable();
         } else {
-            radix_sort_u32(&mut touched, &mut radix_tmp, key_bytes);
+            radix_sort_u32(&mut spa.touched, &mut spa.radix_tmp, key_bytes);
         }
-        for &c in &touched {
+        for &c in &spa.touched {
             // Keep exact zeros produced by cancellation: they are real
             // collisions with zero weight and dropping them would make
             // nnz structure depend on weight values. (Entries never
             // touched are genuinely structural zeros.)
             indices.push(c);
-            data.push(scratch[c as usize]);
+            data.push(spa.scratch[c as usize]);
         }
-        touched.clear();
+        spa.touched.clear();
         indptr.push(indices.len());
     }
-    Csr { n_rows: a.n_rows, n_cols: n_out_cols, indptr, indices, data }
+    RowBlock { indptr, indices, data }
+}
+
+/// SpGEMM `C = A·B` on the shared worker pool (thread count from
+/// [`exec::threads`], small inputs stay serial).
+pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
+    spgemm_with_threads(a, b, exec::workers_for(a.n_rows, 256))
+}
+
+/// SpGEMM with an explicit worker count; `n_threads = 1` is the serial
+/// reference path. Output is bitwise-identical across thread counts.
+pub fn spgemm_with_threads(a: &Csr, b: &Csr, n_threads: usize) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
+    assert!(a.n_rows < u32::MAX as usize);
+    let blocks = exec::parallel_ranges(a.n_rows, n_threads.max(1), |_, rows| {
+        let mut spa = SpaScratch::new(b.n_cols);
+        spgemm_rows(a, b, rows, &mut spa)
+    });
+
+    // Stitch the per-range blocks in row order.
+    let nnz: usize = blocks.iter().map(|blk| blk.indices.len()).sum();
+    let mut indptr = Vec::with_capacity(a.n_rows + 1);
+    let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+    let mut data: Vec<f32> = Vec::with_capacity(nnz);
+    indptr.push(0usize);
+    for blk in blocks {
+        let base = indices.len();
+        indptr.extend(blk.indptr[1..].iter().map(|&p| base + p));
+        indices.extend_from_slice(&blk.indices);
+        data.extend_from_slice(&blk.data);
+    }
+    if indptr.len() == 1 {
+        // Zero-row input: parallel_ranges produced no blocks.
+        indptr.resize(a.n_rows + 1, 0);
+    }
+    Csr { n_rows: a.n_rows, n_cols: b.n_cols, indptr, indices, data }
 }
 
 /// In-place LSD radix-256 sort of `keys`, using `tmp` as the ping-pong
@@ -123,19 +188,27 @@ fn scatter_by_byte(src: &[u32], dst: &mut [u32], shift: usize, pos: &mut [u32; 2
     }
 }
 
-/// Predicted SpGEMM work: (flops, nnz upper bound) of `A·B` without
-/// computing it — `flops = Σ_i Σ_{k∈row_i(A)} nnz(B_k)`. For the SWLC
-/// kernel this equals `N·T·λ̄`, the quantity of the paper's §3.3 cost
-/// model, so benches report it alongside wall time.
-pub fn spgemm_nnz_flops(a: &Csr, b: &Csr) -> u64 {
+/// Predicted SpGEMM work of `A·B` without computing it: returns
+/// `(flops, nnz_upper_bound)`.
+///
+/// `flops = Σ_i Σ_{k∈row_i(A)} nnz(B_k)` — for the SWLC kernel this
+/// equals `N·T·λ̄`, the quantity of the paper's §3.3 cost model, so
+/// benches report it alongside wall time. The nnz bound is
+/// `Σ_i min(row_flops_i, n_cols(B))`: every output nonzero needs at
+/// least one accumulate and a row cannot exceed the output width.
+pub fn spgemm_nnz_flops(a: &Csr, b: &Csr) -> (u64, u64) {
     let mut flops = 0u64;
+    let mut nnz_ub = 0u64;
     for i in 0..a.n_rows {
         let (acols, _) = a.row(i);
+        let mut row_flops = 0u64;
         for &ac in acols {
-            flops += (b.indptr[ac as usize + 1] - b.indptr[ac as usize]) as u64;
+            row_flops += (b.indptr[ac as usize + 1] - b.indptr[ac as usize]) as u64;
         }
+        flops += row_flops;
+        nnz_ub += row_flops.min(b.n_cols as u64);
     }
-    flops
+    (flops, nnz_ub)
 }
 
 #[cfg(test)]
@@ -189,6 +262,28 @@ mod tests {
     }
 
     #[test]
+    fn parallel_bitwise_equals_serial() {
+        let mut rng = Rng::new(21);
+        for case in 0..8 {
+            let rows = 1 + rng.gen_range(40);
+            let inner = 1 + rng.gen_range(20);
+            let cols = 1 + rng.gen_range(30);
+            let a = random_csr(&mut rng, rows, inner, 0.3);
+            let b = random_csr(&mut rng, inner, cols, 0.3);
+            let serial = spgemm_with_threads(&a, &b, 1);
+            for th in [2usize, 3, 4] {
+                let par = spgemm_with_threads(&a, &b, th);
+                par.check().unwrap();
+                assert_eq!(par.indptr, serial.indptr, "case {case} th {th}");
+                assert_eq!(par.indices, serial.indices, "case {case} th {th}");
+                let pb: Vec<u32> = par.data.iter().map(|v| v.to_bits()).collect();
+                let sb: Vec<u32> = serial.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(pb, sb, "case {case} th {th}: values not bitwise equal");
+            }
+        }
+    }
+
+    #[test]
     fn identity_is_neutral() {
         let mut rng = Rng::new(6);
         let a = random_csr(&mut rng, 9, 9, 0.4);
@@ -201,9 +296,15 @@ mod tests {
     fn empty_rows_and_cols() {
         let a = Csr::zeros(4, 3);
         let b = Csr::zeros(3, 5);
-        let c = spgemm(&a, &b);
-        assert_eq!(c.nnz(), 0);
-        assert_eq!((c.n_rows, c.n_cols), (4, 5));
+        for th in [1usize, 4] {
+            let c = spgemm_with_threads(&a, &b, th);
+            assert_eq!(c.nnz(), 0);
+            assert_eq!((c.n_rows, c.n_cols), (4, 5));
+            assert_eq!(c.indptr.len(), 5);
+        }
+        let z = spgemm_with_threads(&Csr::zeros(0, 3), &Csr::zeros(3, 5), 4);
+        assert_eq!((z.n_rows, z.n_cols, z.nnz()), (0, 5, 0));
+        assert_eq!(z.indptr, vec![0]);
     }
 
     #[test]
@@ -215,7 +316,11 @@ mod tests {
             4,
             &[(0, 0, 1.0), (0, 1, 1.0), (2, 2, 1.0), (2, 3, 1.0), (2, 0, 1.0)],
         );
-        assert_eq!(spgemm_nnz_flops(&a, &b), 2 + 3);
+        let (flops, nnz_ub) = spgemm_nnz_flops(&a, &b);
+        assert_eq!(flops, 2 + 3);
+        // The single output row is capped at n_cols(B) = 4.
+        assert_eq!(nnz_ub, 4);
+        assert!(spgemm(&a, &b).nnz() as u64 <= nnz_ub);
     }
 
     #[test]

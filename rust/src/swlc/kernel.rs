@@ -11,6 +11,7 @@ use super::context::EnsembleContext;
 use super::weights::{self, WeightSpec};
 use super::ProximityKind;
 use crate::data::Dataset;
+use crate::exec;
 use crate::forest::Forest;
 use crate::sparse::{spgemm, spgemm_nnz_flops, Csr};
 
@@ -30,11 +31,12 @@ pub struct ForestKernel {
 
 /// Build an `N×L` leaf-incidence CSR from a sample-major leaf table and
 /// a dense `N×T` weight table, dropping zero weights (the source of the
-/// scheme-dependent sparsity of Remark 3.8).
+/// scheme-dependent sparsity of Remark 3.8). Rows are assembled in
+/// parallel on the shared [`exec`] pool.
 pub fn incidence_matrix(leaf_of: &[u32], wtab: &[f32], n: usize, t: usize, l: usize) -> Csr {
     assert_eq!(leaf_of.len(), n * t);
     assert_eq!(wtab.len(), n * t);
-    Csr::from_rows(n, l, t, |i, push| {
+    Csr::from_rows_par(n, l, t, |i, push| {
         for tt in 0..t {
             let v = wtab[i * t + tt];
             if v != 0.0 {
@@ -51,13 +53,25 @@ impl ForestKernel {
     pub fn fit(forest: &Forest, data: &Dataset, kind: ProximityKind) -> ForestKernel {
         let ctx = EnsembleContext::build(forest, data);
         let WeightSpec { q, w, symmetric } = weights::assign(kind, &ctx);
-        let qm = incidence_matrix(&ctx.leaf_of, &q, ctx.n, ctx.t, ctx.l);
-        let wm = if symmetric {
-            qm.clone()
+        // Q and W are independent given the weight tables, so build them
+        // concurrently on the shared pool; Wᵀ follows (its transpose is
+        // itself row-parallel internally). For symmetric schemes the
+        // clone and the transpose of Q are likewise independent.
+        let (qm, wm, wt) = if symmetric {
+            let qm = incidence_matrix(&ctx.leaf_of, &q, ctx.n, ctx.t, ctx.l);
+            // The clone is a memcpy; the transpose (row-parallel
+            // internally) is the real work — no join needed here.
+            let wm = qm.clone();
+            let wt = qm.transpose();
+            (qm, wm, wt)
         } else {
-            incidence_matrix(&ctx.leaf_of, &w, ctx.n, ctx.t, ctx.l)
+            let (qm, wm) = exec::join(
+                || incidence_matrix(&ctx.leaf_of, &q, ctx.n, ctx.t, ctx.l),
+                || incidence_matrix(&ctx.leaf_of, &w, ctx.n, ctx.t, ctx.l),
+            );
+            let wt = wm.transpose();
+            (qm, wm, wt)
         };
-        let wt = wm.transpose();
         ForestKernel { kind, ctx, q: qm, w: wm, wt, symmetric }
     }
 
@@ -75,7 +89,7 @@ impl ForestKernel {
     /// Predicted SpGEMM work `N·T·λ̄` for the full kernel (§3.3) —
     /// reported by the benches next to measured wall time.
     pub fn predicted_flops(&self) -> u64 {
-        spgemm_nnz_flops(&self.q, &self.wt)
+        spgemm_nnz_flops(&self.q, &self.wt).0
     }
 
     /// Route unseen samples and build their query-side map `Q_new`

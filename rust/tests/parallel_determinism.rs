@@ -1,0 +1,143 @@
+//! Determinism under parallelism: every parallel hot path must produce
+//! **bitwise-identical** results to its serial twin at any thread count.
+//!
+//! Seeded-random property sweeps in the style of `proptest_sparse.rs`
+//! (the offline vendor set has no proptest crate): failures reproduce
+//! from the seed in the panic message.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, ForestKind, TrainConfig};
+use forest_kernels::rng::Rng;
+use forest_kernels::sparse::{spgemm_with_threads, Csr};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut trip = vec![];
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.next_f64() < density {
+                trip.push((r, c as u32, rng.next_normal() as f32));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, &trip)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_parallel_spgemm_bitwise_equals_serial() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0xDE7);
+        let rows = 1 + rng.gen_range(80);
+        let inner = 1 + rng.gen_range(40);
+        let cols = 1 + rng.gen_range(60);
+        let density = 0.05 + rng.next_f64() * 0.4;
+        let a = random_csr(&mut rng, rows, inner, density);
+        let b = random_csr(&mut rng, inner, cols, density);
+        let serial = spgemm_with_threads(&a, &b, 1);
+        for th in THREAD_COUNTS {
+            let par = spgemm_with_threads(&a, &b, th);
+            par.check().unwrap_or_else(|e| panic!("seed {seed} th {th}: invalid CSR: {e}"));
+            assert_eq!(par.indptr, serial.indptr, "seed {seed} th {th}: structure differs");
+            assert_eq!(par.indices, serial.indices, "seed {seed} th {th}: columns differ");
+            assert_eq!(
+                bits(&par.data),
+                bits(&serial.data),
+                "seed {seed} th {th}: values not bitwise equal"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_transpose_bitwise_equals_serial() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x7A5);
+        let rows = 1 + rng.gen_range(120);
+        let cols = 1 + rng.gen_range(70);
+        let m = random_csr(&mut rng, rows, cols, 0.05 + rng.next_f64() * 0.35);
+        let serial = m.transpose_with_threads(1);
+        for th in [2usize, 3, 4, 7] {
+            let par = m.transpose_with_threads(th);
+            par.check().unwrap_or_else(|e| panic!("seed {seed} th {th}: invalid CSR: {e}"));
+            assert_eq!(par.indptr, serial.indptr, "seed {seed} th {th}");
+            assert_eq!(par.indices, serial.indices, "seed {seed} th {th}");
+            assert_eq!(bits(&par.data), bits(&serial.data), "seed {seed} th {th}");
+        }
+    }
+}
+
+/// A forest trained with `n_threads = 4` equals one trained with
+/// `n_threads = 1`: identical trees (structure + leaf stats), OOB
+/// masks, and leaf tables.
+#[test]
+fn forest_training_identical_across_thread_counts() {
+    for (kind, seed) in [
+        (ForestKind::RandomForest, 11u64),
+        (ForestKind::RandomForest, 12),
+        (ForestKind::ExtraTrees, 13),
+    ] {
+        let data = synth::gaussian_blobs(300, 5, 3, 2.0, seed);
+        let base = TrainConfig { kind, n_trees: 12, seed, ..Default::default() };
+        let serial = Forest::train(&data, &TrainConfig { n_threads: 1, ..base.clone() });
+        for th in THREAD_COUNTS {
+            let par = Forest::train(&data, &TrainConfig { n_threads: th, ..base.clone() });
+            assert_eq!(par.trees.len(), serial.trees.len());
+            for (t, (a, b)) in par.trees.iter().zip(&serial.trees).enumerate() {
+                assert_eq!(a.nodes, b.nodes, "{kind:?} seed {seed} th {th}: tree {t} structure");
+                assert_eq!(
+                    bits(&a.leaf_stats),
+                    bits(&b.leaf_stats),
+                    "{kind:?} seed {seed} th {th}: tree {t} leaf stats"
+                );
+                assert_eq!(a.n_leaves, b.n_leaves);
+                assert_eq!(a.depth, b.depth);
+            }
+            assert_eq!(par.inbag, serial.inbag, "{kind:?} seed {seed} th {th}: OOB masks");
+            assert_eq!(par.leaf_offsets, serial.leaf_offsets, "{kind:?} seed {seed} th {th}");
+            assert_eq!(
+                par.apply(&data),
+                serial.apply(&data),
+                "{kind:?} seed {seed} th {th}: leaf tables"
+            );
+        }
+    }
+}
+
+/// End-to-end: the fitted kernel factors and the exact proximity matrix
+/// are identical whatever the global thread knob says (the knob is
+/// process-global, but since every path is bitwise-deterministic this
+/// is safe to exercise even with concurrent tests).
+#[test]
+fn kernel_fit_identical_across_global_thread_knob() {
+    use forest_kernels::swlc::{ForestKernel, ProximityKind};
+    let data = synth::gaussian_blobs(250, 4, 3, 2.0, 21);
+    let forest = Forest::train(&data, &TrainConfig { n_trees: 10, seed: 21, ..Default::default() });
+    let reference: Vec<(Csr, Csr)> = ProximityKind::ALL
+        .iter()
+        .filter(|k| **k != ProximityKind::Boosted)
+        .map(|&k| {
+            let kern = ForestKernel::fit(&forest, &data, k);
+            let p = kern.proximity_matrix();
+            (kern.q.clone(), p)
+        })
+        .collect();
+    for th in THREAD_COUNTS {
+        forest_kernels::exec::set_threads(th);
+        for (i, &k) in ProximityKind::ALL
+            .iter()
+            .filter(|k| **k != ProximityKind::Boosted)
+            .enumerate()
+        {
+            let kern = ForestKernel::fit(&forest, &data, k);
+            let p = kern.proximity_matrix();
+            assert_eq!(kern.q, reference[i].0, "{k:?} th {th}: Q factor differs");
+            assert_eq!(p, reference[i].1, "{k:?} th {th}: kernel differs");
+        }
+    }
+    forest_kernels::exec::set_threads(0);
+}

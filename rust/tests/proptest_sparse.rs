@@ -145,15 +145,18 @@ fn prop_scalings_match_diagonal_products() {
 
 #[test]
 fn prop_flops_upper_bounds_output_nnz() {
-    // Every output nonzero requires >= 1 accumulate, so nnz(C) <= flops.
+    // Every output nonzero requires >= 1 accumulate, so nnz(C) <= flops,
+    // and the predicted bound min(row flops, n_cols) tightens that.
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0xEE);
         let (m, k, n) = dims(&mut rng);
         let a = random_csr(&mut rng, m, k, 0.3);
         let b = random_csr(&mut rng, k, n, 0.3);
-        let flops = spgemm_nnz_flops(&a, &b);
+        let (flops, nnz_ub) = spgemm_nnz_flops(&a, &b);
         let c = spgemm(&a, &b);
-        assert!(c.nnz() as u64 <= flops, "seed {seed}: nnz {} > flops {flops}", c.nnz());
+        assert!(nnz_ub <= flops, "seed {seed}: bound {nnz_ub} > flops {flops}");
+        assert!(nnz_ub <= (m * n) as u64, "seed {seed}: bound exceeds dense size");
+        assert!(c.nnz() as u64 <= nnz_ub, "seed {seed}: nnz {} > bound {nnz_ub}", c.nnz());
     }
 }
 
