@@ -1,0 +1,58 @@
+//! Bench: kernel materialization sinks — in-memory CSR assembly vs the
+//! spill-to-disk shard sink vs streaming the shards back. The write
+//! path should track the CSR path (the product dominates; serialization
+//! is one sequential pass), and the scan should be I/O-bound.
+
+use forest_kernels::bench_support::{bench, peak_rss_bytes};
+use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
+use forest_kernels::coordinator::{self, CoordinatorConfig};
+use forest_kernels::data::registry;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+
+fn main() {
+    let n = 16384usize;
+    let trees = 32usize;
+    let data = registry::by_name("covertype").unwrap().generate(n, 1);
+    let cfg = TrainConfig { n_trees: trees, seed: 2, ..Default::default() };
+    let forest = Forest::train(&data, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let cc = CoordinatorConfig { stripe_rows: 2048, ..Default::default() };
+
+    bench(&format!("materialize csr N={n} T={trees}"), 3, || {
+        coordinator::materialize_to_csr(&kernel, &cc)
+    });
+
+    let dir = std::env::temp_dir().join(format!("fk-bench-mat-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    bench(&format!("materialize shards N={n} T={trees}"), 3, || {
+        // `create` clears the previous iteration's shards itself — the
+        // stale-generation sweep is an intrinsic cost of the sink.
+        let mut sink = ShardSink::create(&dir, kernel.w.n_rows, "kerf").unwrap();
+        coordinator::materialize_into(&kernel, &cc, &mut sink).unwrap();
+        sink.finish().unwrap()
+    });
+
+    bench(&format!("shard read-back scan N={n}"), 3, || {
+        let reader = ShardReader::open(&dir).unwrap();
+        let mut nnz = 0u64;
+        reader
+            .for_each_stripe(|s| {
+                nnz += s.rows.nnz() as u64;
+                Ok(())
+            })
+            .unwrap();
+        nnz
+    });
+
+    bench(&format!("materialize top-32 sparsified N={n}"), 3, || {
+        let sp = SparsifyConfig { top_k: 32, epsilon: 0.0, keep_diagonal: true };
+        let mut sink = SparsifySink::new(sp, CsrSink::new(kernel.w.n_rows));
+        coordinator::materialize_into(&kernel, &cc, &mut sink).unwrap();
+        sink.into_inner().finish()
+    });
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("peak RSS {:.1} MB", peak_rss_bytes() as f64 / 1e6);
+}

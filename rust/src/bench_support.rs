@@ -175,7 +175,9 @@ impl BenchRecord {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// Escape a string as a JSON string literal (quotes included). Shared
+/// by the bench-record writer and the shard-manifest writer.
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

@@ -16,13 +16,33 @@
 //! `sync_channel` worker pool; the rewrite keeps the exact job/stripe
 //! semantics and metrics while sharing the pool abstraction with
 //! SpGEMM, transpose, and forest training.
+//!
+//! **Sinks.** What happens to each completed stripe is abstracted
+//! behind the [`sink::KernelSink`] trait: the coordinator drives *any*
+//! consumer — the in-memory CSR assembler ([`sink::CsrSink`]), the
+//! spill-to-disk shard writer ([`shard::ShardSink`], binary stripe
+//! files + JSON manifest, format documented in [`shard`]), or the
+//! per-row top-k/ε sparsifier ([`sink::SparsifySink`]) that emits the
+//! kNN-graph-shaped kernel the spectral layer wants. Shard directories
+//! stream back in row order through [`shard::ShardReader`], which
+//! shares the [`sink::KernelSource`] read interface with in-memory
+//! CSRs — so `spectral::knn`, prediction, and the experiment drivers
+//! consume kernels larger than RAM unchanged. This sink layer is the
+//! substrate the multi-process sharding and NUMA stories build on.
+//!
+//! [`CoordinatorConfig::with_mem_budget`] sizes `stripe_rows` from a
+//! byte budget using the measured factor density, so `--mem-budget`
+//! bounds resident kernel memory regardless of N.
 
 pub mod gallery;
+pub mod shard;
+pub mod sink;
 
 use crate::exec::{self, StreamConfig};
-use crate::sparse::{spgemm_with_threads, Csr};
+use crate::sparse::{spgemm_nnz_flops, spgemm_with_threads, Csr};
 use crate::swlc::ForestKernel;
-use std::sync::atomic::{AtomicU64, Ordering};
+use sink::KernelSink;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -38,6 +58,27 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig { stripe_rows: 4096, n_workers: 0, queue_depth: 4 }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Size `stripe_rows` from a resident-memory budget (bytes) using
+    /// the kernel's *measured* factor density: the predicted SpGEMM
+    /// work `N·T·λ̄` (§3.3) upper-bounds nnz(P), so the expected stripe
+    /// footprint is `rows · (flops/N) · 8 B` (u32 index + f32 value)
+    /// plus 8 B of indptr per row. Up to `queue_depth + workers + 1`
+    /// stripes are resident at once (in flight + the one in the sink),
+    /// so the budget is divided across them. Clamped to `[1, N]`.
+    pub fn with_mem_budget(kernel: &ForestKernel, budget_bytes: usize) -> CoordinatorConfig {
+        let mut cfg = CoordinatorConfig::default();
+        let n = kernel.q.n_rows.max(1);
+        let (flops, _) = spgemm_nnz_flops(&kernel.q, kernel.w_transpose());
+        let est_row_nnz = ((flops / n as u64) as usize).max(1);
+        let row_bytes = est_row_nnz * 8 + 8;
+        let workers = if cfg.n_workers == 0 { exec::threads() } else { cfg.n_workers };
+        let in_flight = cfg.queue_depth + workers + 1;
+        cfg.stripe_rows = (budget_bytes / row_bytes / in_flight).clamp(1, n);
+        cfg
     }
 }
 
@@ -77,6 +118,19 @@ pub fn materialize_kernel(
     cfg: &CoordinatorConfig,
     mut sink: impl FnMut(Stripe),
 ) -> Metrics {
+    materialize_cancellable(kernel, cfg, &AtomicBool::new(false), |s| sink(s))
+}
+
+/// [`materialize_kernel`] with a cancellation flag: once `cancel` is
+/// set, workers stop computing products and emit empty placeholder
+/// stripes instead, so a failed sink (disk full mid-spill) does not pay
+/// for the rest of a multi-hour product. Already-claimed jobs finish.
+fn materialize_cancellable(
+    kernel: &ForestKernel,
+    cfg: &CoordinatorConfig,
+    cancel: &AtomicBool,
+    mut sink: impl FnMut(Stripe),
+) -> Metrics {
     let metrics = Metrics::default();
     let n = kernel.q.n_rows;
     let stripe = cfg.stripe_rows.max(1);
@@ -89,8 +143,11 @@ pub fn materialize_kernel(
         n_jobs,
         &pool,
         |j| {
-            let t0 = std::time::Instant::now();
             let row_start = j * stripe;
+            if cancel.load(Ordering::Relaxed) {
+                return Stripe { row_start, rows: Csr::zeros(0, 0) };
+            }
+            let t0 = std::time::Instant::now();
             let row_end = (row_start + stripe).min(n);
             let rows = stripe_product(kernel, row_start, row_end);
             metrics.jobs.fetch_add(1, Ordering::Relaxed);
@@ -101,6 +158,31 @@ pub fn materialize_kernel(
         |_, s| sink(s),
     );
     metrics
+}
+
+/// Drive the coordinator into a [`KernelSink`]: stripes are consumed in
+/// row order; the first sink error cancels the remaining stripe
+/// computation (in-flight jobs finish, later ones are skipped) and is
+/// returned.
+pub fn materialize_into<S: KernelSink>(
+    kernel: &ForestKernel,
+    cfg: &CoordinatorConfig,
+    sink: &mut S,
+) -> crate::error::Result<Metrics> {
+    let cancel = AtomicBool::new(false);
+    let mut err: Option<crate::error::Error> = None;
+    let metrics = materialize_cancellable(kernel, cfg, &cancel, |s| {
+        if err.is_none() {
+            if let Err(e) = sink.consume(s) {
+                err = Some(e);
+                cancel.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(metrics),
+    }
 }
 
 /// Compute one stripe `P[row_start..row_end, :]` by Gustavson over the
@@ -121,40 +203,23 @@ fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Cs
     };
     let mut p = spgemm_with_threads(&qs, kernel.w_transpose(), 1);
     if kernel.kind == crate::swlc::ProximityKind::OobSeparable {
-        // Remark G.2 on the stripe's diagonal block.
-        for i in 0..p.n_rows {
-            let gcol = (row_start + i) as u32;
-            let (a, b) = (p.indptr[i], p.indptr[i + 1]);
-            if let Ok(k) = p.indices[a..b].binary_search(&gcol) {
-                p.data[a + k] = 1.0;
-            }
-            // If absent we leave it: `materialize` consumers that need
-            // exact OOB diagonals use `ForestKernel::proximity_matrix`.
-        }
+        // Remark G.2 on the stripe's diagonal block: force `P_ii = 1`,
+        // inserting entries that the product left structurally absent
+        // (samples never OOB have empty factor rows). This keeps every
+        // sink path bitwise-identical to `ForestKernel::proximity_matrix`.
+        crate::swlc::kernel::set_unit_diagonal_offset(&mut p, row_start);
     }
     p
 }
 
-/// Materialize the whole kernel into one CSR via the coordinator
-/// (convenience used by tests and benches to compare against
-/// `ForestKernel::proximity_matrix`).
+/// Materialize the whole kernel into one CSR via a [`sink::CsrSink`]
+/// (convenience used by tests, benches, and small-N CLI paths to
+/// compare against `ForestKernel::proximity_matrix`).
 pub fn materialize_to_csr(kernel: &ForestKernel, cfg: &CoordinatorConfig) -> (Csr, Metrics) {
-    let n = kernel.q.n_rows;
-    let mut indptr = vec![0usize];
-    let mut indices = vec![];
-    let mut data = vec![];
-    let metrics = materialize_kernel(kernel, cfg, |s| {
-        let base = *indptr.last().unwrap();
-        for r in 0..s.rows.n_rows {
-            indptr.push(base + s.rows.indptr[r + 1]);
-        }
-        indices.extend_from_slice(&s.rows.indices);
-        data.extend_from_slice(&s.rows.data);
-    });
-    (
-        Csr { n_rows: n, n_cols: kernel.w.n_rows, indptr, indices, data },
-        metrics,
-    )
+    let mut sink = sink::CsrSink::new(kernel.w.n_rows);
+    let metrics = materialize_into(kernel, cfg, &mut sink)
+        .expect("coordinator stripes arrive in row order");
+    (sink.finish(), metrics)
 }
 
 #[cfg(test)]
@@ -221,6 +286,50 @@ mod tests {
             let (p, _) = materialize_to_csr(&k, &cfg);
             assert_eq!(p, reference, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn oob_separable_stripes_match_monolithic_bitwise() {
+        // Regression: with few trees some samples are never OOB, their
+        // kernel rows are empty, and the stripe product used to drop
+        // the forced unit diagonal that `proximity_matrix` inserts.
+        let data = synth::gaussian_blobs(150, 4, 3, 2.0, 9);
+        for n_trees in [3usize, 5, 10] {
+            let f = Forest::train(
+                &data,
+                &TrainConfig { n_trees, seed: 9, ..Default::default() },
+            );
+            let k = ForestKernel::fit(&f, &data, ProximityKind::OobSeparable);
+            let expect = k.proximity_matrix();
+            let cfg = CoordinatorConfig { stripe_rows: 16, n_workers: 3, queue_depth: 2 };
+            let (p, _) = materialize_to_csr(&k, &cfg);
+            assert_eq!(p.indptr, expect.indptr, "T={n_trees}: structure differs");
+            assert_eq!(p.indices, expect.indices, "T={n_trees}: columns differ");
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&p.data), bits(&expect.data), "T={n_trees}: values differ");
+            // And the diagonal is really all-ones.
+            let d = p.to_dense();
+            for i in 0..150 {
+                assert_eq!(d[i * 150 + i], 1.0, "T={n_trees}: diagonal at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mem_budget_picks_bounded_stripe_rows() {
+        let k = fixture(200);
+        let p = k.proximity_matrix();
+        // A budget far below the kernel's own footprint must shrink
+        // stripes below N; a huge budget must clamp to N.
+        let small = CoordinatorConfig::with_mem_budget(&k, p.mem_bytes() / 8);
+        assert!(small.stripe_rows >= 1);
+        assert!(small.stripe_rows < 200, "stripe_rows={}", small.stripe_rows);
+        let huge = CoordinatorConfig::with_mem_budget(&k, usize::MAX / 2);
+        assert_eq!(huge.stripe_rows, 200);
+        // Materializing under the small budget still reproduces the
+        // monolithic kernel exactly.
+        let (pp, _) = materialize_to_csr(&k, &small);
+        assert_eq!(pp, p);
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Out-of-core kernel shards: fixed-format binary stripe files plus a
+//! JSON manifest, written by [`ShardSink`] and streamed back in row
+//! order by [`ShardReader`].
+//!
+//! # Shard file format (`shard-NNNNN.bin`, little-endian throughout)
+//!
+//! | offset | size            | field                                  |
+//! |--------|-----------------|----------------------------------------|
+//! | 0      | 8               | magic `b"FKSHARD1"`                    |
+//! | 8      | 8 (u64)         | `row_start` — global first row         |
+//! | 16     | 8 (u64)         | `n_rows` — rows in this shard          |
+//! | 24     | 8 (u64)         | `n_cols` — global column count         |
+//! | 32     | 8 (u64)         | `nnz` — stored entries                 |
+//! | 40     | 8·(n_rows+1)    | `indptr` as u64, shard-relative        |
+//! | …      | 4·nnz           | `indices` as u32, sorted within rows   |
+//! | …      | 4·nnz           | `data` as f32 raw bits                 |
+//!
+//! Values round-trip bit-for-bit (f32 bits are stored verbatim), so a
+//! shard directory reproduces the in-memory CSR exactly.
+//!
+//! # Manifest (`manifest.json`)
+//!
+//! ```text
+//! { "format": "fk-shards-v1", "n_rows": N, "n_cols": N,
+//!   "dtype": "f32", "index_dtype": "u32", "kind": "<proximity name>",
+//!   "total_nnz": nnz,
+//!   "shards": [ {"file": "shard-00000.bin", "row_start": 0,
+//!                "n_rows": r, "nnz": z}, … ] }
+//! ```
+//!
+//! The manifest is parsed with the in-repo [`crate::runtime::json`]
+//! parser (the same one the AOT artifact manifests use), keeping the
+//! on-disk story serde-free.
+
+use super::sink::{CsrSink, KernelSink, KernelSource};
+use super::Stripe;
+use crate::bench_support::json_escape;
+use crate::error::{Context, Result};
+use crate::runtime::json::Json;
+use crate::sparse::Csr;
+use crate::{anyhow, bail};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"FKSHARD1";
+const FORMAT: &str = "fk-shards-v1";
+const HEADER_BYTES: usize = 40;
+
+/// Per-shard bookkeeping, mirrored in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub file: String,
+    pub row_start: usize,
+    pub n_rows: usize,
+    pub nnz: usize,
+}
+
+/// Spill-to-disk [`KernelSink`]: every consumed stripe becomes one
+/// shard file under `dir`; [`ShardSink::finish`] writes the manifest.
+/// Peak memory is one stripe regardless of N.
+pub struct ShardSink {
+    dir: PathBuf,
+    n_cols: usize,
+    kind: String,
+    shards: Vec<ShardMeta>,
+    rows_seen: usize,
+    nnz_total: u64,
+    bytes_written: u64,
+}
+
+impl ShardSink {
+    /// Create the shard directory, clearing any previous generation
+    /// (manifest first, then `shard-*.bin`): a stale manifest must
+    /// never pair with freshly written shards after a crash mid-run —
+    /// a directory with shards but no manifest fails cleanly instead.
+    pub fn create(dir: &Path, n_cols: usize, kind: &str) -> Result<ShardSink> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating shard dir {}", dir.display()))?;
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("shard-") && name.ends_with(".bin") {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        Ok(ShardSink {
+            dir: dir.to_path_buf(),
+            n_cols,
+            kind: kind.to_string(),
+            shards: vec![],
+            rows_seen: 0,
+            nnz_total: 0,
+            bytes_written: 0,
+        })
+    }
+
+    /// Total bytes written to shard files so far.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+
+    /// Write the manifest and return the shard directory layout.
+    pub fn finish(self) -> Result<Vec<ShardMeta>> {
+        let mut body = String::new();
+        body.push_str("{\n");
+        body.push_str(&format!("  \"format\": \"{FORMAT}\",\n"));
+        body.push_str(&format!("  \"n_rows\": {},\n", self.rows_seen));
+        body.push_str(&format!("  \"n_cols\": {},\n", self.n_cols));
+        body.push_str("  \"dtype\": \"f32\",\n");
+        body.push_str("  \"index_dtype\": \"u32\",\n");
+        body.push_str(&format!("  \"kind\": {},\n", json_escape(&self.kind)));
+        body.push_str(&format!("  \"total_nnz\": {},\n", self.nnz_total));
+        body.push_str("  \"shards\": [\n");
+        for (i, s) in self.shards.iter().enumerate() {
+            body.push_str(&format!(
+                "    {{\"file\": {}, \"row_start\": {}, \"n_rows\": {}, \"nnz\": {}}}{}\n",
+                json_escape(&s.file),
+                s.row_start,
+                s.n_rows,
+                s.nnz,
+                if i + 1 < self.shards.len() { "," } else { "" }
+            ));
+        }
+        body.push_str("  ]\n}\n");
+        let path = self.dir.join("manifest.json");
+        std::fs::write(&path, body)
+            .with_context(|| format!("writing manifest {}", path.display()))?;
+        Ok(self.shards)
+    }
+}
+
+impl KernelSink for ShardSink {
+    fn consume(&mut self, stripe: Stripe) -> Result<()> {
+        if stripe.row_start != self.rows_seen {
+            bail!(
+                "stripe out of order: row_start {} but {} rows consumed",
+                stripe.row_start,
+                self.rows_seen
+            );
+        }
+        let rows = &stripe.rows;
+        if rows.n_cols != self.n_cols {
+            bail!("stripe n_cols {} != sink n_cols {}", rows.n_cols, self.n_cols);
+        }
+        let file = format!("shard-{:05}.bin", self.shards.len());
+        let nnz = rows.nnz();
+        let mut buf: Vec<u8> =
+            Vec::with_capacity(HEADER_BYTES + 8 * (rows.n_rows + 1) + 8 * nnz);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(stripe.row_start as u64).to_le_bytes());
+        buf.extend_from_slice(&(rows.n_rows as u64).to_le_bytes());
+        buf.extend_from_slice(&(rows.n_cols as u64).to_le_bytes());
+        buf.extend_from_slice(&(nnz as u64).to_le_bytes());
+        for &p in &rows.indptr {
+            buf.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        for &c in &rows.indices {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        for &v in &rows.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = self.dir.join(&file);
+        std::fs::write(&path, &buf)
+            .with_context(|| format!("writing shard {}", path.display()))?;
+        self.bytes_written += buf.len() as u64;
+        self.shards.push(ShardMeta { file, row_start: stripe.row_start, n_rows: rows.n_rows, nnz });
+        self.rows_seen += rows.n_rows;
+        self.nnz_total += nnz as u64;
+        Ok(())
+    }
+}
+
+/// Streams a shard directory back in row order — the out-of-core twin
+/// of an in-memory CSR (both implement [`KernelSource`]).
+pub struct ShardReader {
+    dir: PathBuf,
+    n_rows: usize,
+    n_cols: usize,
+    kind: String,
+    total_nnz: u64,
+    shards: Vec<ShardMeta>,
+}
+
+impl ShardReader {
+    /// Open and validate `dir/manifest.json`.
+    pub fn open(dir: &Path) -> Result<ShardReader> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != FORMAT {
+            bail!("unsupported shard format {format:?} (expected {FORMAT:?})");
+        }
+        let n_rows = j
+            .get("n_rows")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing n_rows"))?;
+        let n_cols = j
+            .get("n_cols")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing n_cols"))?;
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let total_nnz = j.get("total_nnz").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let entries = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing shards array"))?;
+        let mut shards = Vec::with_capacity(entries.len());
+        let mut expect_row = 0usize;
+        for e in entries {
+            let meta = ShardMeta {
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("shard entry missing file"))?
+                    .to_string(),
+                row_start: e
+                    .get("row_start")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("shard entry missing row_start"))?,
+                n_rows: e
+                    .get("n_rows")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("shard entry missing n_rows"))?,
+                nnz: e
+                    .get("nnz")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("shard entry missing nnz"))?,
+            };
+            if meta.row_start != expect_row {
+                bail!("shard {} starts at row {} (expected {expect_row})", meta.file, meta.row_start);
+            }
+            expect_row += meta.n_rows;
+            shards.push(meta);
+        }
+        if expect_row != n_rows {
+            bail!("shards cover {expect_row} rows but manifest says {n_rows}");
+        }
+        Ok(ShardReader { dir: dir.to_path_buf(), n_rows, n_cols, kind, total_nnz, shards })
+    }
+
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn total_nnz(&self) -> u64 {
+        self.total_nnz
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[ShardMeta] {
+        &self.shards
+    }
+
+    /// Read and validate one shard as a [`Stripe`].
+    pub fn read_stripe(&self, i: usize) -> Result<Stripe> {
+        let meta = &self.shards[i];
+        let path = self.dir.join(&meta.file);
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading shard {}", path.display()))?;
+        let mut off = 0usize;
+        if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
+            bail!("{}: bad shard magic", meta.file);
+        }
+        off += 8;
+        let row_start = take_u64(&buf, &mut off, &meta.file)? as usize;
+        let n_rows = take_u64(&buf, &mut off, &meta.file)? as usize;
+        let n_cols = take_u64(&buf, &mut off, &meta.file)? as usize;
+        let nnz = take_u64(&buf, &mut off, &meta.file)? as usize;
+        if row_start != meta.row_start || n_rows != meta.n_rows || nnz != meta.nnz {
+            bail!("{}: header disagrees with manifest", meta.file);
+        }
+        if n_cols != self.n_cols {
+            bail!("{}: n_cols {} != manifest {}", meta.file, n_cols, self.n_cols);
+        }
+        let need = HEADER_BYTES + 8 * (n_rows + 1) + 8 * nnz;
+        if buf.len() != need {
+            bail!("{}: {} bytes on disk, expected {need}", meta.file, buf.len());
+        }
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        for b in buf[off..off + 8 * (n_rows + 1)].chunks_exact(8) {
+            indptr.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+        }
+        off += 8 * (n_rows + 1);
+        if indptr[0] != 0 || indptr[n_rows] != nnz {
+            bail!("{}: corrupt indptr", meta.file);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        for b in buf[off..off + 4 * nnz].chunks_exact(4) {
+            indices.push(u32::from_le_bytes(b.try_into().unwrap()));
+        }
+        off += 4 * nnz;
+        let mut data = Vec::with_capacity(nnz);
+        for b in buf[off..off + 4 * nnz].chunks_exact(4) {
+            data.push(f32::from_le_bytes(b.try_into().unwrap()));
+        }
+        let rows = Csr { n_rows, n_cols, indptr, indices, data };
+        // Full structural validation (monotone indptr, sorted in-bounds
+        // columns) so corrupt payload bytes surface as a clean error
+        // here rather than a panic in a downstream consumer.
+        rows.check().map_err(|e| anyhow!("{}: corrupt shard: {e}", meta.file))?;
+        Ok(Stripe { row_start, rows })
+    }
+
+    /// Visit every shard as a [`Stripe`], in row order.
+    pub fn for_each_stripe(&self, mut f: impl FnMut(Stripe) -> Result<()>) -> Result<()> {
+        for i in 0..self.shards.len() {
+            f(self.read_stripe(i)?)?;
+        }
+        Ok(())
+    }
+
+    /// Load the whole kernel back into one in-memory CSR (tests and
+    /// small-N verification; defeats the point at large N).
+    pub fn read_csr(&self) -> Result<Csr> {
+        let mut sink = CsrSink::new(self.n_cols);
+        self.for_each_stripe(|s| sink.consume(s))?;
+        Ok(sink.finish())
+    }
+}
+
+impl KernelSource for ShardReader {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn for_each_row(&self, f: &mut dyn FnMut(usize, &[u32], &[f32])) -> Result<()> {
+        self.for_each_stripe(|s| {
+            for r in 0..s.rows.n_rows {
+                let (cols, vals) = s.rows.row(r);
+                f(s.row_start + r, cols, vals);
+            }
+            Ok(())
+        })
+    }
+}
+
+fn take_u64(buf: &[u8], off: &mut usize, file: &str) -> Result<u64> {
+    let end = *off + 8;
+    if end > buf.len() {
+        bail!("{file}: truncated at byte {off}");
+    }
+    let b: [u8; 8] = buf[*off..end].try_into().unwrap();
+    *off = end;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fk-shard-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_stripes() -> Vec<Stripe> {
+        vec![
+            Stripe {
+                row_start: 0,
+                rows: Csr::from_triplets(2, 4, &[(0, 0, 1.5), (0, 3, -0.25), (1, 1, 2.0)]),
+            },
+            Stripe { row_start: 2, rows: Csr::from_triplets(1, 4, &[]) },
+            Stripe { row_start: 3, rows: Csr::from_triplets(1, 4, &[(0, 2, 0.125)]) },
+        ]
+    }
+
+    #[test]
+    fn shard_write_read_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        assert!(sink.bytes_written() > 0);
+        let metas = sink.finish().unwrap();
+        assert_eq!(metas.len(), 3);
+
+        let reader = ShardReader::open(&dir).unwrap();
+        assert_eq!(KernelSource::n_rows(&reader), 4);
+        assert_eq!(KernelSource::n_cols(&reader), 4);
+        assert_eq!(reader.kind(), "kerf");
+        assert_eq!(reader.n_shards(), 3);
+        assert_eq!(reader.total_nnz(), 4);
+        let p = reader.read_csr().unwrap();
+        p.check().unwrap();
+        let expect = Csr::from_triplets(
+            4,
+            4,
+            &[(0, 0, 1.5), (0, 3, -0.25), (1, 1, 2.0), (3, 2, 0.125)],
+        );
+        assert_eq!(p, expect);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_order_stripe_rejected() {
+        let dir = tmpdir("order");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        let bad = Stripe { row_start: 5, rows: Csr::from_triplets(1, 4, &[]) };
+        assert!(sink.consume(bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = tmpdir("magic");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        sink.finish().unwrap();
+        // Flip the magic of the first shard.
+        let path = dir.join("shard-00000.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let reader = ShardReader::open(&dir).unwrap();
+        assert!(reader.read_stripe(0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = tmpdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ShardReader::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_rows_match_csr_rows() {
+        let dir = tmpdir("rows");
+        let mut sink = ShardSink::create(&dir, 4, "original").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        sink.finish().unwrap();
+        let reader = ShardReader::open(&dir).unwrap();
+        let csr = reader.read_csr().unwrap();
+        let mut rows_seen = 0usize;
+        KernelSource::for_each_row(&reader, &mut |r, cols, vals| {
+            assert_eq!(r, rows_seen);
+            let (ec, ev) = csr.row(r);
+            assert_eq!(cols, ec);
+            assert_eq!(vals, ev);
+            rows_seen += 1;
+        })
+        .unwrap();
+        assert_eq!(rows_seen, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,289 @@
+//! Kernel sinks and sources: the consumers of coordinator stripes.
+//!
+//! The coordinator produces the proximity matrix as an ordered stream
+//! of [`Stripe`]s; what happens to each stripe is the sink's business.
+//! [`KernelSink`] abstracts that consumer so the same driver serves
+//! every materialization target:
+//!
+//! * [`CsrSink`] — the classic in-memory path: stripes are concatenated
+//!   into one `N×N` CSR (what `materialize_to_csr` returns).
+//! * [`crate::coordinator::shard::ShardSink`] — the out-of-core path:
+//!   stripes are written to fixed-format binary shard files plus a JSON
+//!   manifest, so the kernel never has to fit in RAM.
+//! * [`SparsifySink`] — a composable adapter that thins each stripe
+//!   (per-row top-k and/or ε-threshold) before forwarding it to any
+//!   inner sink, emitting the kNN-graph-shaped kernel the spectral and
+//!   embedding layers actually consume.
+//!
+//! The read side is [`KernelSource`]: row-ordered streaming access to a
+//! materialized kernel, implemented both by the in-memory [`Csr`] and by
+//! [`crate::coordinator::shard::ShardReader`], so downstream consumers
+//! (`spectral::knn::knn_from_kernel`, `swlc::predict` streaming scores,
+//! the experiment drivers) are agnostic to whether the kernel lives in
+//! memory or on disk.
+
+use super::Stripe;
+use crate::bail;
+use crate::error::Result;
+use crate::sparse::Csr;
+
+/// A consumer of coordinator stripes. `consume` observes stripes in row
+/// order on the caller thread; a returned error aborts the drive (the
+/// remaining stripes are still produced but dropped).
+pub trait KernelSink {
+    fn consume(&mut self, stripe: Stripe) -> Result<()>;
+}
+
+/// Row-ordered streaming access to a materialized kernel — the common
+/// read interface over in-memory CSRs and on-disk shard directories.
+pub trait KernelSource {
+    fn n_rows(&self) -> usize;
+    fn n_cols(&self) -> usize;
+    /// Visit every row in row order as `f(row, cols, vals)`.
+    fn for_each_row(&self, f: &mut dyn FnMut(usize, &[u32], &[f32])) -> Result<()>;
+}
+
+impl KernelSource for Csr {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn for_each_row(&self, f: &mut dyn FnMut(usize, &[u32], &[f32])) -> Result<()> {
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            f(r, cols, vals);
+        }
+        Ok(())
+    }
+}
+
+/// In-memory sink: concatenates stripes into one CSR (the pre-refactor
+/// `materialize_to_csr` behavior, now one [`KernelSink`] among several).
+pub struct CsrSink {
+    n_cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f32>,
+}
+
+impl CsrSink {
+    pub fn new(n_cols: usize) -> CsrSink {
+        CsrSink { n_cols, indptr: vec![0], indices: vec![], data: vec![] }
+    }
+
+    /// The assembled kernel.
+    pub fn finish(self) -> Csr {
+        Csr {
+            n_rows: self.indptr.len() - 1,
+            n_cols: self.n_cols,
+            indptr: self.indptr,
+            indices: self.indices,
+            data: self.data,
+        }
+    }
+}
+
+impl KernelSink for CsrSink {
+    fn consume(&mut self, stripe: Stripe) -> Result<()> {
+        let rows_seen = self.indptr.len() - 1;
+        if stripe.row_start != rows_seen {
+            bail!(
+                "stripe out of order: row_start {} but {rows_seen} rows consumed",
+                stripe.row_start
+            );
+        }
+        let base = *self.indptr.last().unwrap();
+        for r in 0..stripe.rows.n_rows {
+            self.indptr.push(base + stripe.rows.indptr[r + 1]);
+        }
+        self.indices.extend_from_slice(&stripe.rows.indices);
+        self.data.extend_from_slice(&stripe.rows.data);
+        Ok(())
+    }
+}
+
+/// Per-row thinning policy for [`SparsifySink`].
+#[derive(Clone, Copy, Debug)]
+pub struct SparsifyConfig {
+    /// Keep at most this many off-diagonal entries per row (largest
+    /// values first, ties broken toward the smaller column id so the
+    /// output is deterministic). `0` disables the cap.
+    pub top_k: usize,
+    /// Drop entries with `|value| < epsilon` before the top-k cap.
+    pub epsilon: f32,
+    /// Always keep the row's global diagonal entry (if present), on top
+    /// of the `top_k` budget — self-proximity anchors the kNN graph.
+    pub keep_diagonal: bool,
+}
+
+impl Default for SparsifyConfig {
+    fn default() -> Self {
+        SparsifyConfig { top_k: 0, epsilon: 0.0, keep_diagonal: true }
+    }
+}
+
+/// Composable sparsifying adapter: thins each stripe per-row and
+/// forwards the result to the inner sink. Never holds more than one
+/// stripe, so `topk → shards` streams kernels larger than RAM end to
+/// end. With `top_k = 0` and `epsilon = 0` the stripe passes through
+/// bit-for-bit.
+pub struct SparsifySink<S: KernelSink> {
+    cfg: SparsifyConfig,
+    inner: S,
+    /// Entries dropped so far (observability for the CLI).
+    pub dropped: u64,
+}
+
+impl<S: KernelSink> SparsifySink<S> {
+    pub fn new(cfg: SparsifyConfig, inner: S) -> SparsifySink<S> {
+        SparsifySink { cfg, inner, dropped: 0 }
+    }
+
+    /// Hand back the inner sink (to `finish` it).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: KernelSink> KernelSink for SparsifySink<S> {
+    fn consume(&mut self, stripe: Stripe) -> Result<()> {
+        let src = &stripe.rows;
+        let cap = if self.cfg.top_k > 0 {
+            src.nnz().min(src.n_rows * (self.cfg.top_k + 1))
+        } else {
+            src.nnz()
+        };
+        let mut indptr = Vec::with_capacity(src.n_rows + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(cap);
+        let mut data: Vec<f32> = Vec::with_capacity(cap);
+        indptr.push(0usize);
+        let mut keep: Vec<(u32, f32)> = Vec::new();
+        for r in 0..src.n_rows {
+            let gdiag = (stripe.row_start + r) as u32;
+            let (cols, vals) = src.row(r);
+            keep.clear();
+            let mut diag: Option<(u32, f32)> = None;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if self.cfg.keep_diagonal && c == gdiag {
+                    diag = Some((c, v));
+                } else if v.abs() >= self.cfg.epsilon {
+                    keep.push((c, v));
+                }
+            }
+            if self.cfg.top_k > 0 && keep.len() > self.cfg.top_k {
+                keep.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+                keep.truncate(self.cfg.top_k);
+                keep.sort_unstable_by_key(|&(c, _)| c);
+            }
+            if let Some(d) = diag {
+                keep.push(d);
+                keep.sort_unstable_by_key(|&(c, _)| c);
+            }
+            self.dropped += (cols.len() - keep.len()) as u64;
+            for &(c, v) in &keep {
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        self.inner.consume(Stripe {
+            row_start: stripe.row_start,
+            rows: Csr { n_rows: src.n_rows, n_cols: src.n_cols, indptr, indices, data },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stripe(row_start: usize, rows: Csr) -> Stripe {
+        Stripe { row_start, rows }
+    }
+
+    #[test]
+    fn csr_sink_concatenates_stripes() {
+        let mut sink = CsrSink::new(3);
+        sink.consume(stripe(0, Csr::from_triplets(2, 3, &[(0, 1, 1.0), (1, 0, 2.0)]))).unwrap();
+        sink.consume(stripe(2, Csr::from_triplets(1, 3, &[(0, 2, 3.0)]))).unwrap();
+        let p = sink.finish();
+        p.check().unwrap();
+        assert_eq!(p.n_rows, 3);
+        assert_eq!(p.to_dense(), vec![0., 1., 0., 2., 0., 0., 0., 0., 3.]);
+    }
+
+    #[test]
+    fn sparsify_passthrough_is_bitwise_identity() {
+        let m = Csr::from_triplets(3, 3, &[(0, 0, 0.5), (0, 2, 0.25), (2, 1, -1.0)]);
+        let mut sink = SparsifySink::new(SparsifyConfig::default(), CsrSink::new(3));
+        sink.consume(stripe(0, m.clone())).unwrap();
+        assert_eq!(sink.dropped, 0);
+        let p = sink.into_inner().finish();
+        assert_eq!(p, m);
+    }
+
+    #[test]
+    fn sparsify_topk_keeps_largest_and_diagonal() {
+        // Row 0 of a global stripe starting at row 0: diag 0.1 plus
+        // off-diagonals 0.9, 0.8, 0.2 — top-2 keeps 0.9, 0.8 and the
+        // diagonal rides along for free.
+        let m = Csr::from_triplets(
+            1,
+            5,
+            &[(0, 0, 0.1), (0, 1, 0.9), (0, 2, 0.2), (0, 3, 0.8)],
+        );
+        let cfg = SparsifyConfig { top_k: 2, epsilon: 0.0, keep_diagonal: true };
+        let mut sink = SparsifySink::new(cfg, CsrSink::new(5));
+        sink.consume(stripe(0, m)).unwrap();
+        assert_eq!(sink.dropped, 1);
+        let p = sink.into_inner().finish();
+        assert_eq!(p.to_dense(), vec![0.1, 0.9, 0.0, 0.8, 0.0]);
+    }
+
+    #[test]
+    fn sparsify_epsilon_drops_small_entries() {
+        let m = Csr::from_triplets(2, 4, &[(0, 1, 0.05), (0, 2, 0.5), (1, 0, 0.3)]);
+        let cfg = SparsifyConfig { top_k: 0, epsilon: 0.1, keep_diagonal: true };
+        let mut sink = SparsifySink::new(cfg, CsrSink::new(4));
+        sink.consume(stripe(0, m)).unwrap();
+        let p = sink.into_inner().finish();
+        assert_eq!(p.to_dense(), vec![0.0, 0.0, 0.5, 0.0, 0.3, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sparsify_ties_break_toward_smaller_column() {
+        // keep_diagonal off ⇒ no entry is special-cased; the three
+        // equal values must resolve to the two smallest column ids.
+        let m = Csr::from_triplets(1, 4, &[(0, 1, 0.5), (0, 2, 0.5), (0, 3, 0.5)]);
+        let cfg = SparsifyConfig { top_k: 2, epsilon: 0.0, keep_diagonal: false };
+        let mut sink = SparsifySink::new(cfg, CsrSink::new(4));
+        sink.consume(stripe(0, m)).unwrap();
+        let p = sink.into_inner().finish();
+        assert_eq!(p.row(0).0, &[1u32, 2]);
+    }
+
+    #[test]
+    fn csr_sink_rejects_out_of_order_stripes() {
+        let mut sink = CsrSink::new(3);
+        let bad = stripe(5, Csr::from_triplets(1, 3, &[]));
+        assert!(sink.consume(bad).is_err());
+    }
+
+    #[test]
+    fn kernel_source_over_csr_streams_rows_in_order() {
+        let m = Csr::from_triplets(3, 3, &[(0, 1, 1.0), (2, 0, 2.0)]);
+        let mut seen = vec![];
+        KernelSource::for_each_row(&m, &mut |r, cols, vals| {
+            seen.push((r, cols.to_vec(), vals.to_vec()));
+        })
+        .unwrap();
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], (0, vec![1u32], vec![1.0f32]));
+        assert_eq!(seen[1], (1, vec![], vec![]));
+        assert_eq!(seen[2], (2, vec![0u32], vec![2.0f32]));
+    }
+}

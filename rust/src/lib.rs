@@ -24,7 +24,8 @@
 //! * [`rng`] — deterministic SplitMix64/PCG-style RNG used everywhere.
 //! * [`sparse`] — CSR matrices, Gustavson SpGEMM (row-partitioned
 //!   parallel with per-worker SPA scratch), parallel counting-sort
-//!   transpose, SpMV/SpMM.
+//!   transpose, SpMV, and parallel SpMM/SpMMᵀ (row-blocked /
+//!   column-range-tiled on the pool, bitwise-identical to serial).
 //! * [`forest`] — from-scratch decision forests: CART trees over binned
 //!   features, random forests (bootstrap + OOB bookkeeping), extremely
 //!   randomized trees, and gradient-boosted trees. Bagged kinds train
@@ -44,7 +45,15 @@
 //!   manifest layer still works and execution returns a clear error.
 //! * [`coordinator`] — the block coordinator: shards kernel
 //!   materialization into stripe jobs over the shared [`exec`] pool's
-//!   ordered stream (bounded-queue backpressure) with metrics.
+//!   ordered stream (bounded-queue backpressure) with metrics, and
+//!   drives any [`coordinator::sink::KernelSink`] consumer: in-memory
+//!   CSR assembly, the spill-to-disk shard sink (binary stripe files +
+//!   JSON manifest, streamed back by `ShardReader`), and the per-row
+//!   top-k/ε sparsifier. `CoordinatorConfig::with_mem_budget` sizes
+//!   stripes from a byte budget and measured factor density, so kernels
+//!   larger than RAM materialize out of core; the shared
+//!   `KernelSource` read interface lets `spectral::knn` and streamed
+//!   prediction consume either representation unchanged.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.

@@ -7,6 +7,8 @@
 //! no clap).
 
 use forest_kernels::bench_support::{peak_rss_bytes, time, write_bench_json, BenchRecord};
+use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
 use forest_kernels::error::Result;
 use forest_kernels::{anyhow, bail, exec};
@@ -81,6 +83,12 @@ Pipeline commands:
   predict  --dataset covertype --n 20000 --trees 50 --method gap
   embed    --dataset pbmc --n 5000 [--pca-dims 24]
   serve    --dataset covertype --n 5000 --queries 256 [--artifacts artifacts]
+  materialize --dataset covertype --n 20000 --method kerf
+              --sink csr|shards|topk|topk-shards [--out kernel-shards]
+              [--mem-budget 256M | --stripe-rows 4096]
+              [--top-k 32 --epsilon 0.0] [--verify]
+              (streams P through a kernel sink; shards write binary
+               stripe files + manifest.json readable by ShardReader)
 
 Paper harnesses (DESIGN.md experiment index):
   bench-fig41    [--base-n 8000 --seed 1]
@@ -91,6 +99,9 @@ Paper harnesses (DESIGN.md experiment index):
   bench-fig43    [--dataset fashionmnist --n 12000 --test-n 2000]
   bench-tablei1  [--sizes 16384,32768,65536 --trees 50]
   bench-naive    [--n 2048] [--json-out BENCH_spgemm.json]  (factored vs naive)
+  bench-materialize [--n 20000 --trees 32] [--json-out BENCH_materialize.json]
+                 (in-memory CSR sink vs spill-to-disk shard sink vs shard
+                  read-back scan; reports throughput + peak RSS)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
 ";
@@ -120,6 +131,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "predict" => cmd_predict(args),
         "embed" => cmd_embed(args),
         "serve" => cmd_serve(args),
+        "materialize" => cmd_materialize(args),
+        "bench-materialize" => cmd_bench_materialize(args),
         "bench-fig41" => cmd_fig41(args),
         "bench-fig42" => cmd_fig42(args),
         "bench-figh1" => cmd_figh1(args),
@@ -290,6 +303,221 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     for (i, row) in top.iter().enumerate() {
         println!("  query {i} top-3 prototypes: {row:?}");
+    }
+    Ok(())
+}
+
+/// Parse a byte size with an optional K/M/G suffix (binary multiples).
+fn parse_bytes(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1usize << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1usize << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1usize),
+    };
+    num.trim().parse::<usize>().ok().map(|v| v.saturating_mul(mult))
+}
+
+/// Resolve the coordinator config from `--mem-budget` (stripe sizing by
+/// measured factor density) and/or an explicit `--stripe-rows` override.
+fn coordinator_cfg(args: &Args, kernel: &ForestKernel) -> Result<CoordinatorConfig> {
+    let mut cc = if let Some(b) = args.get("mem-budget") {
+        let bytes = parse_bytes(b).ok_or_else(|| anyhow!("bad --mem-budget {b}"))?;
+        CoordinatorConfig::with_mem_budget(kernel, bytes)
+    } else {
+        CoordinatorConfig::default()
+    };
+    if let Some(r) = args.get("stripe-rows").and_then(|v| v.parse().ok()) {
+        cc.stripe_rows = r;
+    }
+    Ok(cc)
+}
+
+fn cmd_materialize(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let cfg = train_cfg(args);
+    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let cc = coordinator_cfg(args, &kernel)?;
+    let sparsify = SparsifyConfig {
+        top_k: args.usize_or("top-k", 32),
+        epsilon: args.get("epsilon").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+        keep_diagonal: true,
+    };
+    let out = PathBuf::from(args.str_or("out", "kernel-shards"));
+    let sink_name = args.str_or("sink", "csr");
+    println!(
+        "{name}: N={} method={} sink={sink_name} stripe_rows={} (factors {:.1} MB)",
+        data.n,
+        kind.name(),
+        cc.stripe_rows,
+        kernel.factor_bytes() as f64 / 1e6,
+    );
+    let report = |label: &str, metrics: &coordinator::Metrics, secs: f64| {
+        let (jobs, nnz, busy) = metrics.snapshot();
+        println!(
+            "{label}: {jobs} stripes, nnz={nnz} in {secs:.3}s \
+             ({:.2} Mnnz/s, worker-busy {busy:.3}s) | peak RSS {:.1} MB",
+            nnz as f64 / secs.max(1e-9) / 1e6,
+            peak_rss_bytes() as f64 / 1e6,
+        );
+    };
+    match sink_name {
+        "csr" => {
+            let ((p, metrics), secs) = time(|| coordinator::materialize_to_csr(&kernel, &cc));
+            report("csr", &metrics, secs);
+            println!("kernel: {} x {}, {:.1} MB resident", p.n_rows, p.n_cols, p.mem_bytes() as f64 / 1e6);
+        }
+        "shards" => {
+            let mut sink = ShardSink::create(&out, kernel.w.n_rows, kind.name())?;
+            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let metrics = metrics?;
+            let written = sink.bytes_written();
+            let shards = sink.finish()?;
+            report("shards", &metrics, secs);
+            println!(
+                "wrote {} shards, {:.1} MB to {} (+ manifest.json)",
+                shards.len(),
+                written as f64 / 1e6,
+                out.display()
+            );
+            if args.get("verify").is_some() {
+                let (reference, _) = coordinator::materialize_to_csr(&kernel, &cc);
+                let back = ShardReader::open(&out)?.read_csr()?;
+                if back != reference {
+                    bail!("shard read-back differs from in-memory kernel");
+                }
+                println!("verify: read-back matches the in-memory CSR exactly");
+            }
+        }
+        "topk" => {
+            let mut sink = SparsifySink::new(sparsify, CsrSink::new(kernel.w.n_rows));
+            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let metrics = metrics?;
+            report("topk", &metrics, secs);
+            let dropped = sink.dropped;
+            let p = sink.into_inner().finish();
+            println!(
+                "sparsified: kept nnz={} (dropped {dropped}), {:.1} MB resident",
+                p.nnz(),
+                p.mem_bytes() as f64 / 1e6
+            );
+            // Drive the streaming consumers the kNN-shaped kernel exists for.
+            let pred = predict::predict_from_kernel(&p, &kernel.ctx.y, kernel.ctx.n_classes)?;
+            println!(
+                "top-{} kernel train-acc {:.4}",
+                sparsify.top_k,
+                predict::accuracy(&pred, &data.y)
+            );
+        }
+        "topk-shards" => {
+            let inner = ShardSink::create(&out, kernel.w.n_rows, kind.name())?;
+            let mut sink = SparsifySink::new(sparsify, inner);
+            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let metrics = metrics?;
+            report("topk-shards", &metrics, secs);
+            let dropped = sink.dropped;
+            let shards = sink.into_inner().finish()?;
+            let reader = ShardReader::open(&out)?;
+            let pred = predict::predict_from_kernel(&reader, &kernel.ctx.y, kernel.ctx.n_classes)?;
+            println!(
+                "wrote {} sparsified shards to {} (dropped {dropped} entries); \
+                 streamed train-acc {:.4}",
+                shards.len(),
+                out.display(),
+                predict::accuracy(&pred, &data.y)
+            );
+        }
+        other => bail!("unknown sink {other} (csr|shards|topk|topk-shards)"),
+    }
+    Ok(())
+}
+
+fn cmd_bench_materialize(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 20_000);
+    let trees = args.usize_or("trees", 32);
+    let dataset = args.str_or("dataset", "covertype");
+    let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let seed = args.u64_or("seed", 5);
+    let data = spec.generate(n, seed);
+    let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
+    let forest = Forest::train(&data, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let cc = coordinator_cfg(args, &kernel)?;
+    println!("# materialize sinks (dataset={dataset} N={n} T={trees} stripe_rows={})", cc.stripe_rows);
+
+    let ((p, m_csr), secs_csr) = time(|| coordinator::materialize_to_csr(&kernel, &cc));
+    let nnz = p.nnz();
+    let csr_mb = p.mem_bytes() as f64 / 1e6;
+    drop(p);
+
+    let dir = std::env::temp_dir().join(format!("fk-bench-shards-{n}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sink = ShardSink::create(&dir, kernel.w.n_rows, kernel.kind.name())?;
+    let (m_shard, secs_shard) = {
+        let (r, s) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+        (r?, s)
+    };
+    let shard_mb = sink.bytes_written() as f64 / 1e6;
+    sink.finish()?;
+
+    let reader = ShardReader::open(&dir)?;
+    let (scanned, secs_scan) = time(|| {
+        let mut acc = 0u64;
+        reader
+            .for_each_stripe(|s| {
+                acc += s.rows.nnz() as u64;
+                Ok(())
+            })
+            .map(|_| acc)
+    });
+    let scanned = scanned?;
+    std::fs::remove_dir_all(&dir).ok();
+
+    let rss_mb = peak_rss_bytes() as f64 / 1e6;
+    println!("sink\tsecs\tMnnz/s\tMB");
+    println!("csr\t{secs_csr:.3}\t{:.2}\t{csr_mb:.1}", nnz as f64 / secs_csr.max(1e-9) / 1e6);
+    println!("shards\t{secs_shard:.3}\t{:.2}\t{shard_mb:.1}", nnz as f64 / secs_shard.max(1e-9) / 1e6);
+    println!("scan\t{secs_scan:.3}\t{:.2}\t-", scanned as f64 / secs_scan.max(1e-9) / 1e6);
+    println!("peak RSS {rss_mb:.1} MB | nnz={nnz} scanned={scanned}");
+    let (j1, n1, _) = m_csr.snapshot();
+    let (j2, n2, _) = m_shard.snapshot();
+    if (j1, n1) != (j2, n2) {
+        bail!("sink metrics disagree: csr ({j1}, {n1}) vs shards ({j2}, {n2})");
+    }
+
+    if let Some(path) = args.get("json-out") {
+        let threads = exec::threads();
+        let records = vec![
+            BenchRecord {
+                name: format!("materialize-csr/{dataset}"),
+                n,
+                wall_secs: secs_csr,
+                predicted_flops: kernel.predicted_flops(),
+                threads,
+                speedup_vs_serial: 1.0,
+            },
+            BenchRecord {
+                name: format!("materialize-shards/{dataset}"),
+                n,
+                wall_secs: secs_shard,
+                predicted_flops: kernel.predicted_flops(),
+                threads,
+                speedup_vs_serial: 1.0,
+            },
+            BenchRecord {
+                name: format!("materialize-scan/{dataset}"),
+                n,
+                wall_secs: secs_scan,
+                predicted_flops: 0,
+                threads,
+                speedup_vs_serial: 1.0,
+            },
+        ];
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
     }
     Ok(())
 }

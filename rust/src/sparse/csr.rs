@@ -304,10 +304,48 @@ impl Csr {
     /// Y = A·X where X is dense column-major `n_cols × k` (`X[c*k + j]`
     /// layout, i.e. row-major with `k` contiguous per row). Output is the
     /// same layout, `n_rows × k`. This layout keeps the k-loop contiguous,
-    /// which is what subspace iteration wants.
+    /// which is what subspace iteration wants. Rows are partitioned
+    /// across the shared [`exec`] pool; output is bitwise-identical to
+    /// serial at any thread count.
     pub fn spmm(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        self.spmm_with_threads(x, k, y, exec::workers_for(self.nnz(), 1 << 14));
+    }
+
+    /// [`Csr::spmm`] with an explicit worker count (`1` = serial
+    /// reference). Each worker owns a contiguous row block of `Y` and
+    /// accumulates every row with the same serial inner loop, so the
+    /// result never depends on the partition.
+    pub fn spmm_with_threads(&self, x: &[f32], k: usize, y: &mut [f32], n_threads: usize) {
         debug_assert_eq!(x.len(), self.n_cols * k);
         debug_assert_eq!(y.len(), self.n_rows * k);
+        let nt = n_threads.max(1).min(self.n_rows.max(1));
+        if nt == 1 || k == 0 {
+            self.spmm_serial(x, k, y);
+            return;
+        }
+        let ranges = exec::chunk_ranges(self.n_rows, nt);
+        let ysh = exec::SharedSlice::new(y);
+        exec::parallel_tasks(ranges, |_, rows| {
+            let mut acc = vec![0f32; k];
+            for r in rows {
+                acc.fill(0.0);
+                let (cols, vals) = self.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let xr = &x[c as usize * k..c as usize * k + k];
+                    for j in 0..k {
+                        acc[j] += v * xr[j];
+                    }
+                }
+                for j in 0..k {
+                    // SAFETY: row ranges are disjoint, so every output
+                    // slot is written by exactly one worker.
+                    unsafe { ysh.write(r * k + j, acc[j]) };
+                }
+            }
+        });
+    }
+
+    fn spmm_serial(&self, x: &[f32], k: usize, y: &mut [f32]) {
         y.fill(0.0);
         for r in 0..self.n_rows {
             let (cols, vals) = self.row(r);
@@ -323,10 +361,64 @@ impl Csr {
 
     /// Yᵀ-accumulate: Y += Aᵀ·X with X `n_rows × k`, Y `n_cols × k`
     /// (both row-major-k). Used by the Gram power step `Qᵀ(QV)` without
-    /// materializing the transpose.
+    /// materializing the transpose. Parallelized over *output column*
+    /// ranges on the shared [`exec`] pool; bitwise-identical to serial
+    /// at any thread count.
     pub fn spmm_t(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        self.spmm_t_with_threads(x, k, y, exec::workers_for(self.nnz(), 1 << 14));
+    }
+
+    /// [`Csr::spmm_t`] with an explicit worker count (`1` = serial
+    /// reference). Each worker owns a contiguous range of output
+    /// columns and scans all rows, locating its columns inside each
+    /// sorted row by binary search. A given output column is therefore
+    /// accumulated in row order by exactly one worker — the same
+    /// association as the serial loop — so the result is
+    /// bitwise-identical whatever the partition.
+    pub fn spmm_t_with_threads(&self, x: &[f32], k: usize, y: &mut [f32], n_threads: usize) {
         debug_assert_eq!(x.len(), self.n_rows * k);
         debug_assert_eq!(y.len(), self.n_cols * k);
+        let nt = n_threads.max(1).min(self.n_cols.max(1));
+        if nt == 1 || k == 0 {
+            self.spmm_t_serial(x, k, y);
+            return;
+        }
+        let ranges = exec::chunk_ranges(self.n_cols, nt);
+        let ysh = exec::SharedSlice::new(y);
+        exec::parallel_tasks(ranges, |_, cols_range| {
+            let width = cols_range.len();
+            let lo = cols_range.start as u32;
+            let hi = cols_range.end as u32;
+            // Per-worker output tile over its own columns.
+            let mut tile = vec![0f32; width * k];
+            for r in 0..self.n_rows {
+                let (cols, vals) = self.row(r);
+                let a = cols.partition_point(|&c| c < lo);
+                let b = a + cols[a..].partition_point(|&c| c < hi);
+                if a == b {
+                    continue;
+                }
+                let xr = &x[r * k..r * k + k];
+                for t in a..b {
+                    let cl = (cols[t] - lo) as usize;
+                    let v = vals[t];
+                    let out = &mut tile[cl * k..cl * k + k];
+                    for j in 0..k {
+                        out[j] += v * xr[j];
+                    }
+                }
+            }
+            for (ci, col) in cols_range.enumerate() {
+                for j in 0..k {
+                    // SAFETY: column ranges are disjoint, so every
+                    // output slot is written by exactly one worker.
+                    unsafe { ysh.write(col * k + j, tile[ci * k + j]) };
+                }
+            }
+        });
+    }
+
+    fn spmm_t_serial(&self, x: &[f32], k: usize, y: &mut [f32]) {
         y.fill(0.0);
         for r in 0..self.n_rows {
             let (cols, vals) = self.row(r);

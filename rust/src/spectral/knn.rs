@@ -7,7 +7,10 @@
 //! several trees, refined by exact distance. Exact brute force is kept
 //! for small inputs and as the test oracle.
 
+use crate::coordinator::sink::KernelSource;
+use crate::error::Result;
 use crate::rng::Rng;
+use crate::{anyhow, bail};
 
 /// A kNN graph: `neighbors[i*k + j]` is the j-th neighbor of point i
 /// (sorted by ascending distance), `dists` the matching distances
@@ -163,6 +166,52 @@ pub fn knn_approx(
     KnnGraph { n, k, neighbors, dists }
 }
 
+/// Build a kNN graph straight from a materialized proximity kernel
+/// streamed in row order — an in-memory CSR or an out-of-core
+/// [`crate::coordinator::shard::ShardReader`], through the shared
+/// [`KernelSource`] interface. Per row the k largest proximities
+/// (self excluded; ties toward the smaller column id) become the
+/// neighbors, with distance `√(max(0, 1 − p))` so identical samples sit
+/// at 0. Rows with fewer than k nonzero proximities are padded with
+/// their last candidate (or `(i+1) mod n` at `f32::INFINITY` when the
+/// row is empty), mirroring [`knn_approx`]'s starved-leaf behavior.
+pub fn knn_from_kernel(src: &dyn KernelSource, k: usize) -> Result<KnnGraph> {
+    let n = src.n_rows();
+    if n != src.n_cols() {
+        bail!("kernel is {}×{}, need square for a kNN graph", n, src.n_cols());
+    }
+    if k == 0 || k >= n.max(1) {
+        return Err(anyhow!("need 0 < k < n (k={k}, n={n})"));
+    }
+    let mut neighbors = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    let mut cand: Vec<(f32, u32)> = Vec::new();
+    src.for_each_row(&mut |i, cols, vals| {
+        cand.clear();
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c as usize != i {
+                cand.push((v, c));
+            }
+        }
+        // Largest proximity first; deterministic tie-break on column.
+        cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        cand.truncate(k);
+        for j in 0..k {
+            let (p, c) = if j < cand.len() {
+                cand[j]
+            } else if let Some(&last) = cand.last() {
+                last
+            } else {
+                (f32::NEG_INFINITY, ((i + 1) % n) as u32)
+            };
+            neighbors[i * k + j] = c;
+            dists[i * k + j] =
+                if p == f32::NEG_INFINITY { f32::INFINITY } else { (1.0 - p).max(0.0).sqrt() };
+        }
+    })?;
+    Ok(KnnGraph { n, k, neighbors, dists })
+}
+
 /// Cross kNN: for each query row, its k nearest rows of a *reference*
 /// set (exact, used for OOS embedding attachment).
 pub fn knn_cross_exact(
@@ -265,6 +314,45 @@ mod tests {
         let g = knn_cross_exact(&queries, 2, &refs, 3, 2, 1);
         assert_eq!(g.neighbors[0], 1);
         assert_eq!(g.neighbors[1], 0);
+    }
+
+    #[test]
+    fn knn_from_kernel_ranks_by_proximity() {
+        use crate::sparse::Csr;
+        let p = Csr::from_triplets(
+            3,
+            3,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 0.8),
+                (0, 2, 0.1),
+                (1, 0, 0.8),
+                (1, 1, 1.0),
+                (1, 2, 0.3),
+                (2, 0, 0.1),
+                (2, 1, 0.3),
+                (2, 2, 1.0),
+            ],
+        );
+        let g = knn_from_kernel(&p, 2).unwrap();
+        assert_eq!(g.neighbors[0..2], [1, 2]); // row 0: 0.8 then 0.1
+        assert_eq!(g.neighbors[2..4], [0, 2]); // row 1: 0.8 then 0.3
+        assert_eq!(g.neighbors[4..6], [1, 0]); // row 2: 0.3 then 0.1
+        assert!((g.dists[0] - (1.0f32 - 0.8).sqrt()).abs() < 1e-6);
+        // Degenerate k rejected.
+        assert!(knn_from_kernel(&p, 0).is_err());
+        assert!(knn_from_kernel(&p, 3).is_err());
+    }
+
+    #[test]
+    fn knn_from_kernel_pads_sparse_rows() {
+        use crate::sparse::Csr;
+        // Row 1 has no off-diagonal proximity at all.
+        let p = Csr::from_triplets(3, 3, &[(0, 2, 0.5), (1, 1, 1.0), (2, 0, 0.5)]);
+        let g = knn_from_kernel(&p, 2).unwrap();
+        assert_eq!(g.neighbors[0..2], [2, 2]); // padded with last candidate
+        assert_eq!(g.neighbors[2..4], [2, 2]); // empty row: (i+1) % n
+        assert!(g.dists[2].is_infinite());
     }
 
     #[test]

@@ -127,12 +127,23 @@ impl ForestKernel {
 /// self-similarity is deterministically 1 and the separable surrogate
 /// must preserve that.
 pub fn set_unit_diagonal(p: &mut Csr) {
-    let n = p.n_rows.min(p.n_cols);
+    set_unit_diagonal_offset(p, 0);
+}
+
+/// [`set_unit_diagonal`] for a row *stripe* of a larger matrix: local
+/// row `i` corresponds to global row (and thus diagonal column)
+/// `row_offset + i`. Used by the coordinator so every stripe sink sees
+/// exactly the diagonal `proximity_matrix` would produce.
+pub fn set_unit_diagonal_offset(p: &mut Csr, row_offset: usize) {
     // First try in-place (diagonal entry present).
     let mut missing = Vec::new();
-    for i in 0..n {
+    for i in 0..p.n_rows {
+        let gcol = row_offset + i;
+        if gcol >= p.n_cols {
+            break;
+        }
         let (lo, hi) = (p.indptr[i], p.indptr[i + 1]);
-        match p.indices[lo..hi].binary_search(&(i as u32)) {
+        match p.indices[lo..hi].binary_search(&(gcol as u32)) {
             Ok(k) => p.data[lo + k] = 1.0,
             Err(_) => missing.push(i),
         }
@@ -147,6 +158,7 @@ pub fn set_unit_diagonal(p: &mut Csr) {
     indptr.push(0);
     let mut miss_iter = missing.iter().peekable();
     for i in 0..p.n_rows {
+        let gcol = (row_offset + i) as u32;
         let (lo, hi) = (p.indptr[i], p.indptr[i + 1]);
         let needs = miss_iter.peek() == Some(&&i);
         if needs {
@@ -155,8 +167,8 @@ pub fn set_unit_diagonal(p: &mut Csr) {
         let mut inserted = false;
         for k in lo..hi {
             let c = p.indices[k];
-            if needs && !inserted && c > i as u32 {
-                indices.push(i as u32);
+            if needs && !inserted && c > gcol {
+                indices.push(gcol);
                 data.push(1.0);
                 inserted = true;
             }
@@ -164,7 +176,7 @@ pub fn set_unit_diagonal(p: &mut Csr) {
             data.push(p.data[k]);
         }
         if needs && !inserted {
-            indices.push(i as u32);
+            indices.push(gcol);
             data.push(1.0);
         }
         indptr.push(indices.len());
@@ -303,6 +315,22 @@ mod tests {
         assert_eq!(d[4], 1.0);
         assert_eq!(d[8], 1.0);
         assert_eq!(d[1], 0.5);
+    }
+
+    #[test]
+    fn set_unit_diagonal_offset_targets_global_columns() {
+        // A 2-row stripe starting at global row 3 of a 6-column matrix:
+        // row 0's diagonal is column 3 (present, overwritten), row 1's
+        // is column 4 (absent, inserted between 2 and 5).
+        let mut p = Csr::from_triplets(2, 6, &[(0, 3, 0.4), (1, 2, 0.2), (1, 5, 0.7)]);
+        set_unit_diagonal_offset(&mut p, 3);
+        p.check().unwrap();
+        let d = p.to_dense();
+        assert_eq!(d[3], 1.0);
+        assert_eq!(d[6 + 4], 1.0);
+        assert_eq!(d[6 + 2], 0.2);
+        assert_eq!(d[6 + 5], 0.7);
+        assert_eq!(p.nnz(), 4);
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! `rust/tests/proptest_swlc.rs`).
 
 use super::kernel::ForestKernel;
+use crate::bail;
+use crate::coordinator::sink::KernelSource;
+use crate::error::Result;
 use crate::sparse::Csr;
 
 /// Per-leaf class mass `M = Wᵀ·onehot(y) ∈ R^{L×C}` (row-major).
@@ -83,6 +86,40 @@ pub fn predict_oos(kernel: &ForestKernel, q_new: &Csr) -> Vec<u32> {
     argmax_scores(&scores, c, majority_class(&kernel.ctx.y, c))
 }
 
+/// Class scores `S = P·Y` streamed row-by-row from a *materialized*
+/// kernel (in-memory CSR or out-of-core shard directory, via the shared
+/// [`KernelSource`] interface) — one pass over nnz(P), never more than
+/// one stripe resident. The factored `Q·(WᵀY)` path above is cheaper
+/// when the factors are at hand; this one serves consumers that only
+/// hold a materialized (possibly sparsified) kernel.
+pub fn scores_from_kernel(
+    src: &dyn KernelSource,
+    y: &[u32],
+    n_classes: usize,
+) -> Result<Vec<f32>> {
+    if src.n_cols() != y.len() {
+        bail!("kernel has {} columns but {} labels", src.n_cols(), y.len());
+    }
+    let mut s = vec![0f32; src.n_rows() * n_classes];
+    src.for_each_row(&mut |i, cols, vals| {
+        let out = &mut s[i * n_classes..(i + 1) * n_classes];
+        for (&j, &v) in cols.iter().zip(vals) {
+            out[y[j as usize] as usize] += v;
+        }
+    })?;
+    Ok(s)
+}
+
+/// Proximity-weighted prediction from a materialized kernel (streamed).
+pub fn predict_from_kernel(
+    src: &dyn KernelSource,
+    y: &[u32],
+    n_classes: usize,
+) -> Result<Vec<u32>> {
+    let scores = scores_from_kernel(src, y, n_classes)?;
+    Ok(argmax_scores(&scores, n_classes, majority_class(y, n_classes)))
+}
+
 /// Accuracy of predicted class ids against f32 labels.
 pub fn accuracy(pred: &[u32], y: &[f32]) -> f64 {
     assert_eq!(pred.len(), y.len());
@@ -155,6 +192,33 @@ mod tests {
         let pred = predict_oos(&k, &qn);
         let acc = accuracy(&pred, &test.y);
         assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn streamed_kernel_scores_match_dense_reference() {
+        let (f, data) = fixture(60, 4);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Kerf);
+        let c = 3;
+        let p = k.proximity_matrix();
+        let scores = scores_from_kernel(&p, &k.ctx.y, c).unwrap();
+        let dense = p.to_dense();
+        for i in 0..60 {
+            for cls in 0..c {
+                let mut expect = 0f32;
+                for j in 0..60 {
+                    if k.ctx.y[j] as usize == cls {
+                        expect += dense[i * 60 + j];
+                    }
+                }
+                let got = scores[i * c + cls];
+                assert!((got - expect).abs() < 1e-3, "({i},{cls}): {got} vs {expect}");
+            }
+        }
+        // And the prediction agrees with the factored path.
+        let pred_stream = predict_from_kernel(&p, &k.ctx.y, c).unwrap();
+        let pred_factor = predict_train(&k);
+        let agree = pred_stream.iter().zip(&pred_factor).filter(|(a, b)| a == b).count();
+        assert!(agree >= 58, "only {agree}/60 predictions agree");
     }
 
     #[test]

@@ -71,6 +71,50 @@ fn prop_parallel_transpose_bitwise_equals_serial() {
     }
 }
 
+#[test]
+fn prop_parallel_spmm_bitwise_equals_serial() {
+    // Unblocks the Leaf-PCA subspace-iteration hot path: `Y = A·X` is
+    // row-blocked across the pool, so each output row is produced by
+    // the same serial inner loop whatever the partition.
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x5B11);
+        let rows = 1 + rng.gen_range(100);
+        let cols = 1 + rng.gen_range(60);
+        let k = 1 + rng.gen_range(9);
+        let m = random_csr(&mut rng, rows, cols, 0.05 + rng.next_f64() * 0.4);
+        let x: Vec<f32> = (0..cols * k).map(|_| rng.next_normal() as f32).collect();
+        let mut serial = vec![0f32; rows * k];
+        m.spmm_with_threads(&x, k, &mut serial, 1);
+        for th in [2usize, 3, 4, 8] {
+            let mut par = vec![f32::NAN; rows * k];
+            m.spmm_with_threads(&x, k, &mut par, th);
+            assert_eq!(bits(&par), bits(&serial), "seed {seed} th {th}: spmm differs");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_spmm_t_bitwise_equals_serial() {
+    // `Y = Aᵀ·X` is partitioned by output columns: every column is
+    // accumulated in row order by exactly one worker, matching the
+    // serial association bit for bit.
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x7B12);
+        let rows = 1 + rng.gen_range(100);
+        let cols = 1 + rng.gen_range(60);
+        let k = 1 + rng.gen_range(9);
+        let m = random_csr(&mut rng, rows, cols, 0.05 + rng.next_f64() * 0.4);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.next_normal() as f32).collect();
+        let mut serial = vec![0f32; cols * k];
+        m.spmm_t_with_threads(&x, k, &mut serial, 1);
+        for th in [2usize, 3, 4, 8] {
+            let mut par = vec![f32::NAN; cols * k];
+            m.spmm_t_with_threads(&x, k, &mut par, th);
+            assert_eq!(bits(&par), bits(&serial), "seed {seed} th {th}: spmm_t differs");
+        }
+    }
+}
+
 /// A forest trained with `n_threads = 4` equals one trained with
 /// `n_threads = 1`: identical trees (structure + leaf stats), OOB
 /// masks, and leaf tables.

@@ -1,0 +1,184 @@
+//! Out-of-core materialization: shard-sink → `ShardReader` roundtrips
+//! must reproduce the in-memory CSR **bit for bit** for every proximity
+//! kind, stripe size (including `stripe_rows = 1` and a single shard),
+//! and under a `--mem-budget` smaller than the kernel's own footprint
+//! (the ISSUE-2 acceptance shape, run at CI-friendly N).
+
+use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::sink::{CsrSink, KernelSource, SparsifyConfig, SparsifySink};
+use forest_kernels::coordinator::{self, CoordinatorConfig};
+use forest_kernels::data::synth;
+use forest_kernels::experiments::train_for;
+use forest_kernels::forest::TrainConfig;
+use forest_kernels::sparse::Csr;
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fk-shard-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn fixture(n: usize, kind: ProximityKind, seed: u64) -> ForestKernel {
+    let data = synth::gaussian_blobs(n, 4, 3, 2.0, seed);
+    let cfg = TrainConfig { n_trees: 12, seed, ..Default::default() };
+    let forest = train_for(&data, kind, &cfg);
+    ForestKernel::fit(&forest, &data, kind)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_bitwise_eq(a: &Csr, b: &Csr, what: &str) {
+    assert_eq!(a.n_rows, b.n_rows, "{what}: n_rows");
+    assert_eq!(a.n_cols, b.n_cols, "{what}: n_cols");
+    assert_eq!(a.indptr, b.indptr, "{what}: indptr");
+    assert_eq!(a.indices, b.indices, "{what}: indices");
+    assert_eq!(bits(&a.data), bits(&b.data), "{what}: values");
+}
+
+fn shard_roundtrip(kernel: &ForestKernel, cfg: &CoordinatorConfig, tag: &str) -> Csr {
+    let dir = tmpdir(tag);
+    let mut sink = ShardSink::create(&dir, kernel.w.n_rows, kernel.kind.name()).unwrap();
+    coordinator::materialize_into(kernel, cfg, &mut sink).unwrap();
+    sink.finish().unwrap();
+    let reader = ShardReader::open(&dir).unwrap();
+    let back = reader.read_csr().unwrap();
+    back.check().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    back
+}
+
+#[test]
+fn prop_shard_roundtrip_bitwise_for_every_kind() {
+    let n = 90;
+    for (i, kind) in ProximityKind::ALL.into_iter().enumerate() {
+        let kernel = fixture(n, kind, 17 + i as u64);
+        let reference = coordinator::materialize_to_csr(
+            &kernel,
+            &CoordinatorConfig { stripe_rows: 32, n_workers: 2, queue_depth: 2 },
+        )
+        .0;
+        // stripe_rows = 1 (one shard per row), a mid size, and a size
+        // past N (single-shard edge case).
+        for stripe_rows in [1usize, 17, 1000] {
+            let cfg = CoordinatorConfig { stripe_rows, n_workers: 3, queue_depth: 2 };
+            let tag = format!("{}-{stripe_rows}", kind.name());
+            let back = shard_roundtrip(&kernel, &cfg, &tag);
+            assert_bitwise_eq(&back, &reference, &tag);
+        }
+    }
+}
+
+#[test]
+fn mem_budget_smaller_than_kernel_still_roundtrips() {
+    // The acceptance shape: a budget well below nnz(P)'s footprint
+    // forces small stripes, the shard sink spills them, and the read
+    // side reproduces the in-memory result exactly.
+    let kernel = fixture(300, ProximityKind::Kerf, 23);
+    let (reference, _) = coordinator::materialize_to_csr(&kernel, &CoordinatorConfig::default());
+    let budget = reference.mem_bytes() / 8;
+    let cfg = CoordinatorConfig::with_mem_budget(&kernel, budget);
+    assert!(cfg.stripe_rows >= 1);
+    assert!(cfg.stripe_rows < 300, "budget did not shrink stripes: {}", cfg.stripe_rows);
+    let back = shard_roundtrip(&kernel, &cfg, "membudget");
+    assert_bitwise_eq(&back, &reference, "mem-budget roundtrip");
+}
+
+#[test]
+fn sparsified_shards_match_sparsified_memory() {
+    // topk → shards and topk → csr must agree bit for bit.
+    let kernel = fixture(120, ProximityKind::Original, 29);
+    let cfg = CoordinatorConfig { stripe_rows: 13, n_workers: 2, queue_depth: 2 };
+    let sp = SparsifyConfig { top_k: 5, epsilon: 0.0, keep_diagonal: true };
+
+    let mut mem = SparsifySink::new(sp, CsrSink::new(kernel.w.n_rows));
+    coordinator::materialize_into(&kernel, &cfg, &mut mem).unwrap();
+    let mem = mem.into_inner().finish();
+    mem.check().unwrap();
+
+    let dir = tmpdir("topk-shards");
+    let mut disk = SparsifySink::new(
+        sp,
+        ShardSink::create(&dir, kernel.w.n_rows, kernel.kind.name()).unwrap(),
+    );
+    coordinator::materialize_into(&kernel, &cfg, &mut disk).unwrap();
+    disk.into_inner().finish().unwrap();
+    let back = ShardReader::open(&dir).unwrap().read_csr().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_bitwise_eq(&back, &mem, "sparsified roundtrip");
+    // Row arity is capped at top_k + diagonal.
+    for r in 0..mem.n_rows {
+        let (cols, _) = mem.row(r);
+        assert!(cols.len() <= 6, "row {r}: {} entries", cols.len());
+    }
+}
+
+#[test]
+fn topk_sink_matches_bruteforce_selection() {
+    let kernel = fixture(80, ProximityKind::Kerf, 31);
+    let cfg = CoordinatorConfig { stripe_rows: 11, n_workers: 2, queue_depth: 2 };
+    let (full, _) = coordinator::materialize_to_csr(&kernel, &cfg);
+    let k = 4usize;
+    let sp = SparsifyConfig { top_k: k, epsilon: 0.0, keep_diagonal: true };
+    let mut sink = SparsifySink::new(sp, CsrSink::new(kernel.w.n_rows));
+    coordinator::materialize_into(&kernel, &cfg, &mut sink).unwrap();
+    let thin = sink.into_inner().finish();
+
+    for r in 0..full.n_rows {
+        // Brute-force reference: off-diagonal entries sorted by
+        // (value desc, col asc), truncated to k, plus the diagonal.
+        let (cols, vals) = full.row(r);
+        let mut offdiag: Vec<(u32, f32)> = cols
+            .iter()
+            .zip(vals)
+            .filter(|(&c, _)| c as usize != r)
+            .map(|(&c, &v)| (c, v))
+            .collect();
+        offdiag.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        offdiag.truncate(k);
+        let mut expect: Vec<u32> = offdiag.iter().map(|&(c, _)| c).collect();
+        if cols.binary_search(&(r as u32)).is_ok() {
+            expect.push(r as u32);
+        }
+        expect.sort_unstable();
+        let (got, _) = thin.row(r);
+        assert_eq!(got, &expect[..], "row {r}");
+    }
+}
+
+#[test]
+fn stream_consumers_agree_between_memory_and_shards() {
+    // `KernelSource` consumers (kNN graph, streamed prediction) must
+    // not care whether the kernel is in RAM or on disk.
+    use forest_kernels::spectral::knn::knn_from_kernel;
+    use forest_kernels::swlc::predict;
+
+    let kernel = fixture(100, ProximityKind::Kerf, 37);
+    let cfg = CoordinatorConfig { stripe_rows: 23, n_workers: 2, queue_depth: 2 };
+    let (mem, _) = coordinator::materialize_to_csr(&kernel, &cfg);
+
+    let dir = tmpdir("consumers");
+    let mut sink = ShardSink::create(&dir, kernel.w.n_rows, kernel.kind.name()).unwrap();
+    coordinator::materialize_into(&kernel, &cfg, &mut sink).unwrap();
+    sink.finish().unwrap();
+    let reader = ShardReader::open(&dir).unwrap();
+
+    let g_mem = knn_from_kernel(&mem, 5).unwrap();
+    let g_disk = knn_from_kernel(&reader, 5).unwrap();
+    assert_eq!(g_mem.neighbors, g_disk.neighbors);
+    assert_eq!(bits(&g_mem.dists), bits(&g_disk.dists));
+
+    let y = &kernel.ctx.y;
+    let c = kernel.ctx.n_classes;
+    let s_mem = predict::scores_from_kernel(&mem, y, c).unwrap();
+    let s_disk = predict::scores_from_kernel(&reader, y, c).unwrap();
+    assert_eq!(bits(&s_mem), bits(&s_disk));
+    // Sanity: KernelSource agrees on shape.
+    assert_eq!(KernelSource::n_rows(&reader), mem.n_rows);
+    assert_eq!(KernelSource::n_cols(&reader), mem.n_cols);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
