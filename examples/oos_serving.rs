@@ -13,11 +13,12 @@
 
 use forest_kernels::coordinator::gallery::GalleryService;
 use forest_kernels::data::registry;
+use forest_kernels::error::Result;
 use forest_kernels::forest::{Forest, TrainConfig};
 use forest_kernels::runtime::Runtime;
 use forest_kernels::swlc::ProximityKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let rt = Runtime::load(std::path::Path::new("artifacts"))?;
     println!("artifacts: {:?}", rt.names());
 

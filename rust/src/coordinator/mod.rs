@@ -33,6 +33,19 @@
 //! [`CoordinatorConfig::with_mem_budget`] sizes `stripe_rows` from a
 //! byte budget using the measured factor density, so `--mem-budget`
 //! bounds resident kernel memory regardless of N.
+//!
+//! **Multi-process sharding.** Every entry point also exists in a
+//! row-range form ([`materialize_range_into`]): a worker process
+//! materializes only `P[A..B, :]`, streaming its stripes into a
+//! fragment [`shard::ShardSink`] under a directory shared with the
+//! other workers. [`partition_rows`] plans the ranges — balanced by
+//! the per-row SpGEMM cost measured from the factors
+//! ([`ForestKernel::row_flops`]), not by raw row count — and
+//! [`shard::merge_fragments`] / [`shard::validate_dir`] fuse and check
+//! the result. Because each kernel row is a function of that row of Q
+//! and all of Wᵀ alone, the merged directory is bitwise-identical to a
+//! single-process run at any process count, stripe size, or thread
+//! count (CLI: `repro shards {plan,run,merge,validate}`).
 
 pub mod gallery;
 pub mod shard;
@@ -42,6 +55,7 @@ use crate::exec::{self, StreamConfig};
 use crate::sparse::{spgemm_nnz_flops, spgemm_with_threads, Csr};
 use crate::swlc::ForestKernel;
 use sink::KernelSink;
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Coordinator configuration.
@@ -118,23 +132,25 @@ pub fn materialize_kernel(
     cfg: &CoordinatorConfig,
     mut sink: impl FnMut(Stripe),
 ) -> Metrics {
-    materialize_cancellable(kernel, cfg, &AtomicBool::new(false), |s| sink(s))
+    let n = kernel.q.n_rows;
+    materialize_cancellable(kernel, cfg, 0..n, &AtomicBool::new(false), |s| sink(s))
 }
 
-/// [`materialize_kernel`] with a cancellation flag: once `cancel` is
-/// set, workers stop computing products and emit empty placeholder
-/// stripes instead, so a failed sink (disk full mid-spill) does not pay
-/// for the rest of a multi-hour product. Already-claimed jobs finish.
+/// [`materialize_kernel`] restricted to global rows `range`, with a
+/// cancellation flag: once `cancel` is set, workers stop computing
+/// products and emit empty placeholder stripes instead, so a failed
+/// sink (disk full mid-spill) does not pay for the rest of a
+/// multi-hour product. Already-claimed jobs finish.
 fn materialize_cancellable(
     kernel: &ForestKernel,
     cfg: &CoordinatorConfig,
+    range: Range<usize>,
     cancel: &AtomicBool,
     mut sink: impl FnMut(Stripe),
 ) -> Metrics {
     let metrics = Metrics::default();
-    let n = kernel.q.n_rows;
     let stripe = cfg.stripe_rows.max(1);
-    let n_jobs = n.div_ceil(stripe);
+    let n_jobs = range.len().div_ceil(stripe);
     let pool = StreamConfig {
         n_workers: if cfg.n_workers == 0 { exec::threads() } else { cfg.n_workers },
         queue_depth: cfg.queue_depth.max(1),
@@ -143,12 +159,12 @@ fn materialize_cancellable(
         n_jobs,
         &pool,
         |j| {
-            let row_start = j * stripe;
+            let row_start = range.start + j * stripe;
             if cancel.load(Ordering::Relaxed) {
                 return Stripe { row_start, rows: Csr::zeros(0, 0) };
             }
             let t0 = std::time::Instant::now();
-            let row_end = (row_start + stripe).min(n);
+            let row_end = (row_start + stripe).min(range.end);
             let rows = stripe_product(kernel, row_start, row_end);
             metrics.jobs.fetch_add(1, Ordering::Relaxed);
             metrics.nnz.fetch_add(rows.nnz() as u64, Ordering::Relaxed);
@@ -169,9 +185,29 @@ pub fn materialize_into<S: KernelSink>(
     cfg: &CoordinatorConfig,
     sink: &mut S,
 ) -> crate::error::Result<Metrics> {
+    materialize_range_into(kernel, cfg, 0..kernel.q.n_rows, sink)
+}
+
+/// [`materialize_into`] restricted to the global row range
+/// `[range.start, range.end)` — the multi-process worker entry point:
+/// each OS process materializes one [`partition_rows`] range into a
+/// fragment [`shard::ShardSink`]. Stripe boundaries never change row
+/// contents (each kernel row depends only on that row of Q and all of
+/// Wᵀ), so any partition of `[0, N)` reassembles bitwise-identically
+/// to the single-process result.
+pub fn materialize_range_into<S: KernelSink>(
+    kernel: &ForestKernel,
+    cfg: &CoordinatorConfig,
+    range: Range<usize>,
+    sink: &mut S,
+) -> crate::error::Result<Metrics> {
+    let n = kernel.q.n_rows;
+    if range.start > range.end || range.end > n {
+        crate::bail!("row range {}..{} out of bounds for N={n}", range.start, range.end);
+    }
     let cancel = AtomicBool::new(false);
     let mut err: Option<crate::error::Error> = None;
-    let metrics = materialize_cancellable(kernel, cfg, &cancel, |s| {
+    let metrics = materialize_cancellable(kernel, cfg, range, &cancel, |s| {
         if err.is_none() {
             if let Err(e) = sink.consume(s) {
                 err = Some(e);
@@ -189,18 +225,10 @@ pub fn materialize_into<S: KernelSink>(
 /// factor rows (same cost model as the monolithic product, §3.3). Runs
 /// single-threaded: stripes are already the coordinator's parallelism
 /// unit, so nesting the row-parallel SpGEMM would only oversubscribe.
-fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Csr {
-    // Build a view of Q's stripe as a small CSR borrowing the data.
-    let q = &kernel.q;
-    let lo = q.indptr[row_start];
-    let hi = q.indptr[row_end];
-    let qs = Csr {
-        n_rows: row_end - row_start,
-        n_cols: q.n_cols,
-        indptr: q.indptr[row_start..=row_end].iter().map(|&p| p - lo).collect(),
-        indices: q.indices[lo..hi].to_vec(),
-        data: q.data[lo..hi].to_vec(),
-    };
+/// Public as the row-exact reference the `shards validate --verify`
+/// sampled cross-check compares against.
+pub fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Csr {
+    let qs = kernel.q.slice_rows(row_start..row_end);
     let mut p = spgemm_with_threads(&qs, kernel.w_transpose(), 1);
     if kernel.kind == crate::swlc::ProximityKind::OobSeparable {
         // Remark G.2 on the stripe's diagonal block: force `P_ii = 1`,
@@ -210,6 +238,52 @@ fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Cs
         crate::swlc::kernel::set_unit_diagonal_offset(&mut p, row_start);
     }
     p
+}
+
+/// Plan a multi-process run: split `[0, N)` into `parts` contiguous
+/// ranges balanced by the *measured* per-row SpGEMM cost
+/// ([`ForestKernel::row_flops`]), so a skewed kernel (dense hub rows,
+/// empty never-OOB rows) still spreads work evenly across worker
+/// processes. Deterministic; every range is non-empty when `parts ≤ N`.
+pub fn partition_rows(kernel: &ForestKernel, parts: usize) -> Vec<Range<usize>> {
+    partition_by_cost(&kernel.row_flops(), parts)
+}
+
+/// [`partition_rows`] on an explicit per-row cost vector: each range
+/// greedily takes rows until it holds `remaining_cost / remaining_parts`
+/// (re-derived after every cut, so one hub row absorbing several
+/// targets' worth of cost cannot starve the ranges after it), clamped
+/// so every remaining range keeps at least one row.
+pub fn partition_by_cost(costs: &[u64], parts: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    if n == 0 {
+        return vec![];
+    }
+    let p = parts.max(1).min(n);
+    let mut remaining: u128 = costs.iter().map(|&c| c as u128).sum();
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0usize;
+    for j in 1..=p {
+        let end = if j == p {
+            n
+        } else {
+            let target = remaining / (p - j + 1) as u128;
+            // Leave at least one row for each of the `p - j` ranges
+            // still to come; take at least one row ourselves.
+            let max_end = n - (p - j);
+            let mut end = start;
+            let mut taken: u128 = 0;
+            while end < max_end && (end == start || taken < target) {
+                taken += costs[end] as u128;
+                end += 1;
+            }
+            remaining -= taken;
+            end
+        };
+        out.push(start..end);
+        start = end;
+    }
+    out
 }
 
 /// Materialize the whole kernel into one CSR via a [`sink::CsrSink`]
@@ -330,6 +404,82 @@ mod tests {
         // monolithic kernel exactly.
         let (pp, _) = materialize_to_csr(&k, &small);
         assert_eq!(pp, p);
+    }
+
+    #[test]
+    fn range_materialization_reproduces_the_slice_bitwise() {
+        let k = fixture(120);
+        let full = k.proximity_matrix();
+        let cfg = CoordinatorConfig { stripe_rows: 13, n_workers: 3, queue_depth: 2 };
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for range in [0..120usize, 0..50, 50..120, 37..38, 60..60] {
+            let mut sink = sink::CsrSink::with_base(120, range.start);
+            let m = materialize_range_into(&k, &cfg, range.clone(), &mut sink).unwrap();
+            let got = sink.finish();
+            assert_eq!(got.n_rows, range.len());
+            let expect = full.slice_rows(range.clone());
+            assert_eq!(got.indptr, expect.indptr, "{range:?}");
+            assert_eq!(got.indices, expect.indices, "{range:?}");
+            assert_eq!(bits(&got.data), bits(&expect.data), "{range:?}");
+            let (_, nnz, _) = m.snapshot();
+            assert_eq!(nnz, expect.nnz() as u64);
+        }
+        // Out-of-bounds ranges fail instead of panicking.
+        assert!(materialize_range_into(
+            &k,
+            &cfg,
+            0..121,
+            &mut sink::CsrSink::with_base(120, 0)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn partitioned_ranges_reassemble_the_full_kernel() {
+        let k = fixture(110);
+        let reference = materialize_to_csr(&k, &CoordinatorConfig::default()).0;
+        for parts in [1usize, 2, 3, 7] {
+            let ranges = partition_rows(&k, parts);
+            assert_eq!(ranges.len(), parts);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, 110);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert!(!w[0].is_empty());
+            }
+            let mut whole = sink::CsrSink::new(110);
+            for r in &ranges {
+                let cfg = CoordinatorConfig { stripe_rows: 16, n_workers: 2, queue_depth: 2 };
+                let mut part = sink::CsrSink::with_base(110, r.start);
+                materialize_range_into(&k, &cfg, r.clone(), &mut part).unwrap();
+                let rows = part.finish();
+                whole
+                    .consume(Stripe { row_start: r.start, rows })
+                    .expect("partition ranges are contiguous");
+            }
+            assert_eq!(whole.finish(), reference, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn partition_by_cost_balances_skewed_costs() {
+        // One hub row dominating the cost must get its own range while
+        // the cheap tail is spread across the rest.
+        let mut costs = vec![1u64; 100];
+        costs[0] = 1_000;
+        let ranges = partition_by_cost(&costs, 4);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges[0], 0..1);
+        let weight = |r: &Range<usize>| costs[r.clone()].iter().sum::<u64>();
+        let rest: Vec<u64> = ranges[1..].iter().map(weight).collect();
+        let (lo, hi) = (rest.iter().min().unwrap(), rest.iter().max().unwrap());
+        assert!(hi - lo <= 2, "tail ranges unbalanced: {rest:?}");
+
+        // Degenerate shapes.
+        assert_eq!(partition_by_cost(&[], 4), vec![]);
+        assert_eq!(partition_by_cost(&[5], 4), vec![0..1]);
+        let uniform = partition_by_cost(&[3u64; 8], 4);
+        assert_eq!(uniform, vec![0..2, 2..4, 4..6, 6..8]);
     }
 
     #[test]

@@ -25,10 +25,40 @@
 //!   "dtype": "f32", "index_dtype": "u32", "kind": "<proximity name>",
 //!   "total_nnz": nnz,
 //!   "shards": [ {"file": "shard-00000.bin", "row_start": 0,
-//!                "n_rows": r, "nnz": z}, … ] }
+//!                "n_rows": r, "nnz": z,
+//!                "checksum": "<16 hex digits>"}, … ] }
 //! ```
 //!
-//! The manifest is parsed with the in-repo [`crate::runtime::json`]
+//! `checksum` is 64-bit FNV-1a ([`fnv1a64`]) over the *complete* shard
+//! file, header included, rendered as 16 lowercase hex digits. Readers
+//! verify it when present and tolerate its absence, so directories
+//! written by the pre-checksum layout still open.
+//!
+//! # Fragment manifests (`manifest-part-KKK.json`)
+//!
+//! Multi-process materialization runs one coordinator per OS process
+//! over a disjoint global row range (planned by
+//! [`crate::coordinator::partition_rows`]). Worker `K` opens the sink
+//! with [`ShardSink::create_fragment`]: its shard files are named
+//! `part-KKK-shard-NNNNN.bin` (collision-free across workers) and its
+//! manifest is written as `manifest-part-KKK.json` with format
+//! `fk-shards-frag-v1` — the same fields as the canonical manifest
+//! plus `"part": K`, `"row_start": A` (the fragment's global base
+//! row), and `"total_rows": N` (the WHOLE kernel's row count, repeated
+//! in every fragment so a missing tail fragment is as detectable as an
+//! interior gap); `n_rows`/`total_nnz` cover only the fragment. A
+//! directory holding fragments but no merged `manifest.json` is *not*
+//! readable: [`ShardReader::open`] fails with a pointer to the repair
+//! path. [`merge_fragments`] (CLI: `repro shards merge`) fuses the
+//! fragments into one canonical `fk-shards-v1` manifest, checking that
+//! the shards tile exactly `[0, total_rows)` contiguously with no
+//! overlap or gap and that every file exists at exactly the size its
+//! metadata implies;
+//! [`validate_dir`] (CLI: `repro shards validate`) additionally
+//! re-reads every shard, verifying checksums, header/manifest
+//! agreement, and structural CSR invariants.
+//!
+//! All manifests are parsed with the in-repo [`crate::runtime::json`]
 //! parser (the same one the AOT artifact manifests use), keeping the
 //! on-disk story serde-free.
 
@@ -43,28 +73,66 @@ use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"FKSHARD1";
 const FORMAT: &str = "fk-shards-v1";
+const FRAG_FORMAT: &str = "fk-shards-frag-v1";
 const HEADER_BYTES: usize = 40;
 
-/// Per-shard bookkeeping, mirrored in the manifest.
+/// 64-bit FNV-1a over a byte slice — the shard-file checksum (in-repo;
+/// the offline vendor set has no hashing crates).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-shard bookkeeping, mirrored in the manifest. `checksum` is
+/// [`fnv1a64`] of the whole shard file; `None` only when reading a
+/// manifest from the pre-checksum layout.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardMeta {
     pub file: String,
     pub row_start: usize,
     pub n_rows: usize,
     pub nnz: usize,
+    pub checksum: Option<u64>,
+}
+
+impl ShardMeta {
+    /// Exact on-disk size (bytes) the shard file must have.
+    fn file_bytes(&self) -> usize {
+        HEADER_BYTES + 8 * (self.n_rows + 1) + 8 * self.nnz
+    }
 }
 
 /// Spill-to-disk [`KernelSink`]: every consumed stripe becomes one
-/// shard file under `dir`; [`ShardSink::finish`] writes the manifest.
+/// shard file under `dir`; [`ShardSink::finish`] writes the manifest
+/// (canonical, or a `manifest-part-KKK.json` fragment in worker mode).
 /// Peak memory is one stripe regardless of N.
 pub struct ShardSink {
     dir: PathBuf,
     n_cols: usize,
     kind: String,
     shards: Vec<ShardMeta>,
+    /// Global row at which this sink's coverage starts (0 for the
+    /// single-process canonical sink; the worker's range start in
+    /// fragment mode).
+    base_row: usize,
+    /// Fragment id and the kernel's TOTAL row count in multi-process
+    /// worker mode; `None` writes the canonical `manifest.json`
+    /// directly. The total is recorded in every fragment so the merge
+    /// can prove the parts tile all of `[0, N)` — without it a missing
+    /// *tail* fragment would be undetectable.
+    part: Option<(usize, usize)>,
     rows_seen: usize,
     nnz_total: u64,
     bytes_written: u64,
+}
+
+/// The on-disk name of fragment `part`'s manifest.
+fn fragment_manifest_name(part: usize) -> String {
+    format!("manifest-part-{part:03}.json")
 }
 
 impl ShardSink {
@@ -73,14 +141,65 @@ impl ShardSink {
     /// never pair with freshly written shards after a crash mid-run —
     /// a directory with shards but no manifest fails cleanly instead.
     pub fn create(dir: &Path, n_cols: usize, kind: &str) -> Result<ShardSink> {
+        Self::create_inner(dir, n_cols, kind, None, 0)
+    }
+
+    /// Open the sink in multi-process worker mode: this process covers
+    /// global rows `[row_start, …)` as fragment `part` of a shard
+    /// directory shared with the other workers; `total_rows` is the
+    /// whole kernel's N, recorded in the fragment manifest so the
+    /// merge can prove complete coverage. Only *this* part's previous
+    /// files are cleared (workers run concurrently), plus any stale
+    /// merged `manifest.json` — removing it is idempotent across
+    /// concurrently starting workers, and a half-written generation
+    /// must never pair with an old merged manifest.
+    pub fn create_fragment(
+        dir: &Path,
+        n_cols: usize,
+        kind: &str,
+        part: usize,
+        row_start: usize,
+        total_rows: usize,
+    ) -> Result<ShardSink> {
+        Self::create_inner(dir, n_cols, kind, Some((part, total_rows)), row_start)
+    }
+
+    fn create_inner(
+        dir: &Path,
+        n_cols: usize,
+        kind: &str,
+        part: Option<(usize, usize)>,
+        base_row: usize,
+    ) -> Result<ShardSink> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating shard dir {}", dir.display()))?;
         let _ = std::fs::remove_file(dir.join("manifest.json"));
+        if let Some((k, _)) = part {
+            let _ = std::fs::remove_file(dir.join(fragment_manifest_name(k)));
+        }
+        let bin_prefix = match part {
+            Some((k, _)) => format!("part-{k:03}-shard-"),
+            None => String::new(),
+        };
         if let Ok(entries) = std::fs::read_dir(dir) {
             for e in entries.flatten() {
                 let name = e.file_name();
                 let name = name.to_string_lossy();
-                if name.starts_with("shard-") && name.ends_with(".bin") {
+                let stale = match part {
+                    // Worker mode: clear only this part's previous
+                    // generation (siblings are writing concurrently).
+                    Some(_) => name.starts_with(&bin_prefix) && name.ends_with(".bin"),
+                    // Canonical mode owns the whole directory: clear
+                    // plain shards AND any leftover fragment files so
+                    // a later `shards merge` cannot resurrect a stale
+                    // generation over this manifest.
+                    None => {
+                        (name.ends_with(".bin")
+                            && (name.starts_with("shard-") || name.starts_with("part-")))
+                            || (name.starts_with("manifest-part-") && name.ends_with(".json"))
+                    }
+                };
+                if stale {
                     let _ = std::fs::remove_file(e.path());
                 }
             }
@@ -90,6 +209,8 @@ impl ShardSink {
             n_cols,
             kind: kind.to_string(),
             shards: vec![],
+            base_row,
+            part,
             rows_seen: 0,
             nnz_total: 0,
             bytes_written: 0,
@@ -101,50 +222,96 @@ impl ShardSink {
         self.bytes_written
     }
 
-    /// Write the manifest and return the shard directory layout.
+    /// Write the manifest — canonical `manifest.json`, or this worker's
+    /// `manifest-part-KKK.json` fragment — and return the layout.
     pub fn finish(self) -> Result<Vec<ShardMeta>> {
-        let mut body = String::new();
-        body.push_str("{\n");
-        body.push_str(&format!("  \"format\": \"{FORMAT}\",\n"));
-        body.push_str(&format!("  \"n_rows\": {},\n", self.rows_seen));
-        body.push_str(&format!("  \"n_cols\": {},\n", self.n_cols));
-        body.push_str("  \"dtype\": \"f32\",\n");
-        body.push_str("  \"index_dtype\": \"u32\",\n");
-        body.push_str(&format!("  \"kind\": {},\n", json_escape(&self.kind)));
-        body.push_str(&format!("  \"total_nnz\": {},\n", self.nnz_total));
-        body.push_str("  \"shards\": [\n");
-        for (i, s) in self.shards.iter().enumerate() {
-            body.push_str(&format!(
-                "    {{\"file\": {}, \"row_start\": {}, \"n_rows\": {}, \"nnz\": {}}}{}\n",
-                json_escape(&s.file),
-                s.row_start,
-                s.n_rows,
-                s.nnz,
-                if i + 1 < self.shards.len() { "," } else { "" }
-            ));
-        }
-        body.push_str("  ]\n}\n");
-        let path = self.dir.join("manifest.json");
+        let frag = self.part.map(|(k, total)| (k, self.base_row, total));
+        let body = manifest_body(
+            frag,
+            self.rows_seen,
+            self.n_cols,
+            &self.kind,
+            self.nnz_total,
+            &self.shards,
+        );
+        let name = match self.part {
+            Some((k, _)) => fragment_manifest_name(k),
+            None => "manifest.json".to_string(),
+        };
+        let path = self.dir.join(name);
         std::fs::write(&path, body)
             .with_context(|| format!("writing manifest {}", path.display()))?;
         Ok(self.shards)
     }
 }
 
+/// Render a manifest document: the canonical `fk-shards-v1` layout
+/// when `frag` is `None`, else the `fk-shards-frag-v1` fragment layout
+/// with its `part`/`row_start` fields. Shared by [`ShardSink::finish`]
+/// and [`merge_fragments`].
+fn manifest_body(
+    frag: Option<(usize, usize, usize)>,
+    n_rows: usize,
+    n_cols: usize,
+    kind: &str,
+    total_nnz: u64,
+    shards: &[ShardMeta],
+) -> String {
+    let mut body = String::new();
+    body.push_str("{\n");
+    match frag {
+        Some((part, row_start, total_rows)) => {
+            body.push_str(&format!("  \"format\": \"{FRAG_FORMAT}\",\n"));
+            body.push_str(&format!("  \"part\": {part},\n"));
+            body.push_str(&format!("  \"row_start\": {row_start},\n"));
+            body.push_str(&format!("  \"total_rows\": {total_rows},\n"));
+        }
+        None => body.push_str(&format!("  \"format\": \"{FORMAT}\",\n")),
+    }
+    body.push_str(&format!("  \"n_rows\": {n_rows},\n"));
+    body.push_str(&format!("  \"n_cols\": {n_cols},\n"));
+    body.push_str("  \"dtype\": \"f32\",\n");
+    body.push_str("  \"index_dtype\": \"u32\",\n");
+    body.push_str(&format!("  \"kind\": {},\n", json_escape(kind)));
+    body.push_str(&format!("  \"total_nnz\": {total_nnz},\n"));
+    body.push_str("  \"shards\": [\n");
+    for (i, s) in shards.iter().enumerate() {
+        let checksum = match s.checksum {
+            Some(c) => format!(", \"checksum\": \"{c:016x}\""),
+            None => String::new(),
+        };
+        body.push_str(&format!(
+            "    {{\"file\": {}, \"row_start\": {}, \"n_rows\": {}, \"nnz\": {}{}}}{}\n",
+            json_escape(&s.file),
+            s.row_start,
+            s.n_rows,
+            s.nnz,
+            checksum,
+            if i + 1 < shards.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    body
+}
+
 impl KernelSink for ShardSink {
     fn consume(&mut self, stripe: Stripe) -> Result<()> {
-        if stripe.row_start != self.rows_seen {
+        if stripe.row_start != self.base_row + self.rows_seen {
             bail!(
-                "stripe out of order: row_start {} but {} rows consumed",
+                "stripe out of order: row_start {} but sink covers rows {}..{}",
                 stripe.row_start,
-                self.rows_seen
+                self.base_row,
+                self.base_row + self.rows_seen
             );
         }
         let rows = &stripe.rows;
         if rows.n_cols != self.n_cols {
             bail!("stripe n_cols {} != sink n_cols {}", rows.n_cols, self.n_cols);
         }
-        let file = format!("shard-{:05}.bin", self.shards.len());
+        let file = match self.part {
+            Some((k, _)) => format!("part-{k:03}-shard-{:05}.bin", self.shards.len()),
+            None => format!("shard-{:05}.bin", self.shards.len()),
+        };
         let nnz = rows.nnz();
         let mut buf: Vec<u8> =
             Vec::with_capacity(HEADER_BYTES + 8 * (rows.n_rows + 1) + 8 * nnz);
@@ -162,11 +329,18 @@ impl KernelSink for ShardSink {
         for &v in &rows.data {
             buf.extend_from_slice(&v.to_le_bytes());
         }
+        let checksum = fnv1a64(&buf);
         let path = self.dir.join(&file);
         std::fs::write(&path, &buf)
             .with_context(|| format!("writing shard {}", path.display()))?;
         self.bytes_written += buf.len() as u64;
-        self.shards.push(ShardMeta { file, row_start: stripe.row_start, n_rows: rows.n_rows, nnz });
+        self.shards.push(ShardMeta {
+            file,
+            row_start: stripe.row_start,
+            n_rows: rows.n_rows,
+            nnz,
+            checksum: Some(checksum),
+        });
         self.rows_seen += rows.n_rows;
         self.nnz_total += nnz as u64;
         Ok(())
@@ -184,63 +358,154 @@ pub struct ShardReader {
     shards: Vec<ShardMeta>,
 }
 
+/// A parsed manifest document — canonical or fragment.
+struct ManifestDoc {
+    format: String,
+    /// Fragment id (`None` for the canonical manifest).
+    part: Option<usize>,
+    /// Fragment global base row (0 for the canonical manifest).
+    row_start: usize,
+    /// The whole kernel's row count as recorded by a fragment (`None`
+    /// for the canonical manifest, whose `n_rows` IS the total).
+    total_rows: Option<usize>,
+    n_rows: usize,
+    n_cols: usize,
+    kind: String,
+    total_nnz: u64,
+    shards: Vec<ShardMeta>,
+}
+
+/// Parse a manifest file (either format); shard-entry ordering is NOT
+/// checked here — callers apply their own coverage rules.
+fn parse_manifest(path: &Path) -> Result<ManifestDoc> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let format = j.get("format").and_then(Json::as_str).unwrap_or("").to_string();
+    let n_rows = j
+        .get("n_rows")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{}: manifest missing n_rows", path.display()))?;
+    let n_cols = j
+        .get("n_cols")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{}: manifest missing n_cols", path.display()))?;
+    let kind = j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string();
+    let total_nnz = j.get("total_nnz").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let part = j.get("part").and_then(Json::as_usize);
+    let row_start = j.get("row_start").and_then(Json::as_usize).unwrap_or(0);
+    let total_rows = j.get("total_rows").and_then(Json::as_usize);
+    let entries = j
+        .get("shards")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{}: manifest missing shards array", path.display()))?;
+    let mut shards = Vec::with_capacity(entries.len());
+    for e in entries {
+        shards.push(ShardMeta {
+            file: e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("shard entry missing file"))?
+                .to_string(),
+            row_start: e
+                .get("row_start")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("shard entry missing row_start"))?,
+            n_rows: e
+                .get("n_rows")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("shard entry missing n_rows"))?,
+            nnz: e
+                .get("nnz")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("shard entry missing nnz"))?,
+            // Absent => legitimately legacy (pre-checksum layout);
+            // present but unparseable => corrupt manifest, a hard error
+            // (silently skipping verification would defeat the field).
+            checksum: match e.get("checksum") {
+                None => None,
+                Some(c) => {
+                    let s = c.as_str().ok_or_else(|| {
+                        anyhow!("{}: shard entry checksum is not a string", path.display())
+                    })?;
+                    Some(u64::from_str_radix(s, 16).map_err(|_| {
+                        anyhow!("{}: shard entry checksum {s:?} is not hex", path.display())
+                    })?)
+                }
+            },
+        });
+    }
+    Ok(ManifestDoc {
+        format,
+        part,
+        row_start,
+        total_rows,
+        n_rows,
+        n_cols,
+        kind,
+        total_nnz,
+        shards,
+    })
+}
+
+/// The fragment manifests (`manifest-part-*.json`) present in `dir`,
+/// sorted by file name (i.e. by part id — parts are zero-padded).
+pub fn fragment_manifests(dir: &Path) -> Result<Vec<PathBuf>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing shard dir {}", dir.display()))?;
+    let mut out = vec![];
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("manifest-part-") && name.ends_with(".json") {
+            out.push(e.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
 impl ShardReader {
-    /// Open and validate `dir/manifest.json`.
+    /// Open and validate `dir/manifest.json`. A directory holding
+    /// fragment manifests but no merged manifest (a crashed or
+    /// unfinished multi-process run) fails with a pointer to
+    /// `shards merge`, which repairs it.
     pub fn open(dir: &Path) -> Result<ShardReader> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading manifest {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let format = j.get("format").and_then(Json::as_str).unwrap_or("");
-        if format != FORMAT {
-            bail!("unsupported shard format {format:?} (expected {FORMAT:?})");
+        if !path.exists() {
+            let frags = fragment_manifests(dir).unwrap_or_default();
+            if !frags.is_empty() {
+                bail!(
+                    "{}: no merged manifest.json, but {} fragment manifest(s) present — \
+                     run `repro shards merge --dir {}` to fuse them",
+                    dir.display(),
+                    frags.len(),
+                    dir.display()
+                );
+            }
         }
-        let n_rows = j
-            .get("n_rows")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing n_rows"))?;
-        let n_cols = j
-            .get("n_cols")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing n_cols"))?;
-        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string();
-        let total_nnz = j.get("total_nnz").and_then(Json::as_usize).unwrap_or(0) as u64;
-        let entries = j
-            .get("shards")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing shards array"))?;
-        let mut shards = Vec::with_capacity(entries.len());
+        let doc = parse_manifest(&path)?;
+        if doc.format != FORMAT {
+            bail!("unsupported shard format {:?} (expected {FORMAT:?})", doc.format);
+        }
         let mut expect_row = 0usize;
-        for e in entries {
-            let meta = ShardMeta {
-                file: e
-                    .get("file")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("shard entry missing file"))?
-                    .to_string(),
-                row_start: e
-                    .get("row_start")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("shard entry missing row_start"))?,
-                n_rows: e
-                    .get("n_rows")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("shard entry missing n_rows"))?,
-                nnz: e
-                    .get("nnz")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("shard entry missing nnz"))?,
-            };
+        for meta in &doc.shards {
             if meta.row_start != expect_row {
                 bail!("shard {} starts at row {} (expected {expect_row})", meta.file, meta.row_start);
             }
             expect_row += meta.n_rows;
-            shards.push(meta);
         }
-        if expect_row != n_rows {
-            bail!("shards cover {expect_row} rows but manifest says {n_rows}");
+        if expect_row != doc.n_rows {
+            bail!("shards cover {expect_row} rows but manifest says {}", doc.n_rows);
         }
-        Ok(ShardReader { dir: dir.to_path_buf(), n_rows, n_cols, kind, total_nnz, shards })
+        Ok(ShardReader {
+            dir: dir.to_path_buf(),
+            n_rows: doc.n_rows,
+            n_cols: doc.n_cols,
+            kind: doc.kind,
+            total_nnz: doc.total_nnz,
+            shards: doc.shards,
+        })
     }
 
     pub fn kind(&self) -> &str {
@@ -265,48 +530,16 @@ impl ShardReader {
         let path = self.dir.join(&meta.file);
         let buf = std::fs::read(&path)
             .with_context(|| format!("reading shard {}", path.display()))?;
-        let mut off = 0usize;
-        if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
-            bail!("{}: bad shard magic", meta.file);
+        if let Some(want) = meta.checksum {
+            let got = fnv1a64(&buf);
+            if got != want {
+                bail!(
+                    "{}: checksum mismatch (manifest {want:016x}, file {got:016x})",
+                    meta.file
+                );
+            }
         }
-        off += 8;
-        let row_start = take_u64(&buf, &mut off, &meta.file)? as usize;
-        let n_rows = take_u64(&buf, &mut off, &meta.file)? as usize;
-        let n_cols = take_u64(&buf, &mut off, &meta.file)? as usize;
-        let nnz = take_u64(&buf, &mut off, &meta.file)? as usize;
-        if row_start != meta.row_start || n_rows != meta.n_rows || nnz != meta.nnz {
-            bail!("{}: header disagrees with manifest", meta.file);
-        }
-        if n_cols != self.n_cols {
-            bail!("{}: n_cols {} != manifest {}", meta.file, n_cols, self.n_cols);
-        }
-        let need = HEADER_BYTES + 8 * (n_rows + 1) + 8 * nnz;
-        if buf.len() != need {
-            bail!("{}: {} bytes on disk, expected {need}", meta.file, buf.len());
-        }
-        let mut indptr = Vec::with_capacity(n_rows + 1);
-        for b in buf[off..off + 8 * (n_rows + 1)].chunks_exact(8) {
-            indptr.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
-        }
-        off += 8 * (n_rows + 1);
-        if indptr[0] != 0 || indptr[n_rows] != nnz {
-            bail!("{}: corrupt indptr", meta.file);
-        }
-        let mut indices = Vec::with_capacity(nnz);
-        for b in buf[off..off + 4 * nnz].chunks_exact(4) {
-            indices.push(u32::from_le_bytes(b.try_into().unwrap()));
-        }
-        off += 4 * nnz;
-        let mut data = Vec::with_capacity(nnz);
-        for b in buf[off..off + 4 * nnz].chunks_exact(4) {
-            data.push(f32::from_le_bytes(b.try_into().unwrap()));
-        }
-        let rows = Csr { n_rows, n_cols, indptr, indices, data };
-        // Full structural validation (monotone indptr, sorted in-bounds
-        // columns) so corrupt payload bytes surface as a clean error
-        // here rather than a panic in a downstream consumer.
-        rows.check().map_err(|e| anyhow!("{}: corrupt shard: {e}", meta.file))?;
-        Ok(Stripe { row_start, rows })
+        parse_stripe_buf(meta, self.n_cols, &buf)
     }
 
     /// Visit every shard as a [`Stripe`], in row order.
@@ -344,6 +577,268 @@ impl KernelSource for ShardReader {
             Ok(())
         })
     }
+}
+
+/// Remove every fragment artifact (`manifest-part-*.json`,
+/// `part-*-shard-*.bin`) from `dir`. The parent of a multi-process run
+/// calls this before spawning workers: each worker only clears its
+/// *own* part, so without this a rerun with fewer parts would leave
+/// higher-numbered fragments from the previous generation on disk and
+/// [`merge_fragments`] would reject the directory as overlapping. A
+/// missing directory is fine (the workers create it).
+pub fn clear_fragments(dir: &Path) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()),
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        let frag = (name.starts_with("manifest-part-") && name.ends_with(".json"))
+            || (name.starts_with("part-") && name.ends_with(".bin"));
+        if frag {
+            std::fs::remove_file(e.path())
+                .with_context(|| format!("clearing stale fragment {}", e.path().display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// What [`merge_fragments`] fused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergeReport {
+    pub parts: usize,
+    pub shards: usize,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub total_nnz: u64,
+}
+
+/// Fuse the `manifest-part-*.json` fragments in `dir` into one
+/// canonical `fk-shards-v1` manifest. Checks that every fragment
+/// agrees on `n_cols`/`kind`, that the shards (ordered by global
+/// `row_start`) tile `[0, N)` contiguously with no overlap or gap, and
+/// that every shard file exists at exactly the size its metadata
+/// implies. Idempotent: re-running over an already-merged directory
+/// that still has its fragments rewrites the same manifest.
+pub fn merge_fragments(dir: &Path) -> Result<MergeReport> {
+    let frags = fragment_manifests(dir)?;
+    if frags.is_empty() {
+        bail!("{}: no manifest fragments (manifest-part-*.json) to merge", dir.display());
+    }
+    let mut docs = Vec::with_capacity(frags.len());
+    for p in &frags {
+        let doc = parse_manifest(p)?;
+        if doc.format != FRAG_FORMAT {
+            bail!(
+                "{}: format {:?} is not a fragment manifest (expected {FRAG_FORMAT:?})",
+                p.display(),
+                doc.format
+            );
+        }
+        docs.push(doc);
+    }
+    let n_cols = docs[0].n_cols;
+    let kind = docs[0].kind.clone();
+    // Every fragment records the whole kernel's N; requiring agreement
+    // and full coverage below makes a missing TAIL fragment (which
+    // leaves a perfectly contiguous prefix) as detectable as an
+    // interior gap.
+    let kernel_rows = docs[0]
+        .total_rows
+        .ok_or_else(|| anyhow!("{}: fragment manifest missing total_rows", frags[0].display()))?;
+    for (p, d) in frags.iter().zip(&docs) {
+        if d.total_rows != Some(kernel_rows) {
+            bail!(
+                "{}: fragment claims a kernel of {:?} rows but part {:?} claims {kernel_rows}",
+                p.display(),
+                d.total_rows,
+                docs[0].part
+            );
+        }
+        if d.n_cols != n_cols || d.kind != kind {
+            bail!(
+                "{}: fragment disagrees with part {:?} \
+                 (n_cols {} kind {:?} vs n_cols {n_cols} kind {kind:?})",
+                p.display(),
+                docs[0].part,
+                d.n_cols,
+                d.kind
+            );
+        }
+        let covered: usize = d.shards.iter().map(|s| s.n_rows).sum();
+        if covered != d.n_rows {
+            bail!(
+                "{}: fragment shards cover {covered} rows but it claims {}",
+                p.display(),
+                d.n_rows
+            );
+        }
+        if let Some(first) = d.shards.first() {
+            if first.row_start != d.row_start {
+                bail!(
+                    "{}: fragment claims base row {} but its first shard starts at {}",
+                    p.display(),
+                    d.row_start,
+                    first.row_start
+                );
+            }
+        }
+    }
+    let mut shards: Vec<ShardMeta> =
+        docs.iter().flat_map(|d| d.shards.iter().cloned()).collect();
+    shards.sort_by_key(|s| s.row_start);
+    let mut expect_row = 0usize;
+    let mut total_nnz = 0u64;
+    for s in &shards {
+        if s.row_start < expect_row {
+            bail!(
+                "shard {} overlaps: starts at row {} but rows are already \
+                 covered through {expect_row}",
+                s.file,
+                s.row_start
+            );
+        }
+        if s.row_start > expect_row {
+            bail!(
+                "coverage gap: rows {expect_row}..{} missing before shard {}",
+                s.row_start,
+                s.file
+            );
+        }
+        let path = dir.join(&s.file);
+        let len = std::fs::metadata(&path)
+            .with_context(|| format!("stat shard {}", path.display()))?
+            .len();
+        if len != s.file_bytes() as u64 {
+            bail!("{}: {len} bytes on disk, expected {}", s.file, s.file_bytes());
+        }
+        expect_row += s.n_rows;
+        total_nnz += s.nnz as u64;
+    }
+    if expect_row != kernel_rows {
+        bail!(
+            "fragments cover rows 0..{expect_row} but the kernel has {kernel_rows} rows — \
+             a tail fragment is missing (rerun its worker, then merge again)"
+        );
+    }
+    let body = manifest_body(None, expect_row, n_cols, &kind, total_nnz, &shards);
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, body)
+        .with_context(|| format!("writing merged manifest {}", path.display()))?;
+    Ok(MergeReport {
+        parts: docs.len(),
+        shards: shards.len(),
+        n_rows: expect_row,
+        n_cols,
+        total_nnz,
+    })
+}
+
+/// What [`validate_dir`] checked.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ValidateReport {
+    pub shards: usize,
+    pub n_rows: usize,
+    pub total_nnz: u64,
+    pub bytes: u64,
+}
+
+/// Full offline validation of a merged shard directory: manifest
+/// coverage/ordering/format (via [`ShardReader::open`]), then for every
+/// shard the exact file size, the FNV-1a checksum, header/manifest
+/// agreement, and the structural CSR invariants (monotone indptr,
+/// sorted in-bounds columns). Strict about checksums: entries written
+/// by the pre-checksum layout fail validation (re-materialize to
+/// upgrade them) even though the read path still accepts them.
+pub fn validate_dir(dir: &Path) -> Result<ValidateReport> {
+    let reader = ShardReader::open(dir)?;
+    let mut bytes = 0u64;
+    let mut nnz = 0u64;
+    let mut rows = 0usize;
+    for meta in &reader.shards {
+        let path = reader.dir.join(&meta.file);
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading shard {}", path.display()))?;
+        if buf.len() != meta.file_bytes() {
+            bail!("{}: {} bytes on disk, expected {}", meta.file, buf.len(), meta.file_bytes());
+        }
+        match meta.checksum {
+            Some(want) => {
+                let got = fnv1a64(&buf);
+                if got != want {
+                    bail!(
+                        "{}: checksum mismatch (manifest {want:016x}, file {got:016x})",
+                        meta.file
+                    );
+                }
+            }
+            None => bail!(
+                "{}: manifest entry carries no checksum (pre-checksum layout) — \
+                 re-materialize to upgrade",
+                meta.file
+            ),
+        }
+        // Structural checks on the buffer already in hand (one read +
+        // one hash per shard, not two of each via read_stripe).
+        let stripe = parse_stripe_buf(meta, reader.n_cols, &buf)?;
+        rows += stripe.rows.n_rows;
+        nnz += stripe.rows.nnz() as u64;
+        bytes += buf.len() as u64;
+    }
+    if nnz != reader.total_nnz {
+        bail!("shards hold {nnz} nnz but the manifest claims {}", reader.total_nnz);
+    }
+    Ok(ValidateReport { shards: reader.shards.len(), n_rows: rows, total_nnz: nnz, bytes })
+}
+
+/// Decode shard-file bytes into a [`Stripe`], checking magic, header
+/// agreement with `meta`, exact length, and the full structural CSR
+/// invariants (monotone indptr, sorted in-bounds columns) so corrupt
+/// payload bytes surface as a clean error rather than a panic in a
+/// downstream consumer. Checksum verification is the caller's job —
+/// [`ShardReader::read_stripe`] hashes what it reads, [`validate_dir`]
+/// hashes the buffer it already holds.
+fn parse_stripe_buf(meta: &ShardMeta, n_cols_expect: usize, buf: &[u8]) -> Result<Stripe> {
+    let mut off = 0usize;
+    if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
+        bail!("{}: bad shard magic", meta.file);
+    }
+    off += 8;
+    let row_start = take_u64(buf, &mut off, &meta.file)? as usize;
+    let n_rows = take_u64(buf, &mut off, &meta.file)? as usize;
+    let n_cols = take_u64(buf, &mut off, &meta.file)? as usize;
+    let nnz = take_u64(buf, &mut off, &meta.file)? as usize;
+    if row_start != meta.row_start || n_rows != meta.n_rows || nnz != meta.nnz {
+        bail!("{}: header disagrees with manifest", meta.file);
+    }
+    if n_cols != n_cols_expect {
+        bail!("{}: n_cols {} != manifest {}", meta.file, n_cols, n_cols_expect);
+    }
+    let need = HEADER_BYTES + 8 * (n_rows + 1) + 8 * nnz;
+    if buf.len() != need {
+        bail!("{}: {} bytes on disk, expected {need}", meta.file, buf.len());
+    }
+    let mut indptr = Vec::with_capacity(n_rows + 1);
+    for b in buf[off..off + 8 * (n_rows + 1)].chunks_exact(8) {
+        indptr.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+    }
+    off += 8 * (n_rows + 1);
+    if indptr[0] != 0 || indptr[n_rows] != nnz {
+        bail!("{}: corrupt indptr", meta.file);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for b in buf[off..off + 4 * nnz].chunks_exact(4) {
+        indices.push(u32::from_le_bytes(b.try_into().unwrap()));
+    }
+    off += 4 * nnz;
+    let mut data = Vec::with_capacity(nnz);
+    for b in buf[off..off + 4 * nnz].chunks_exact(4) {
+        data.push(f32::from_le_bytes(b.try_into().unwrap()));
+    }
+    let rows = Csr { n_rows, n_cols, indptr, indices, data };
+    rows.check().map_err(|e| anyhow!("{}: corrupt shard: {e}", meta.file))?;
+    Ok(Stripe { row_start, rows })
 }
 
 fn take_u64(buf: &[u8], off: &mut usize, file: &str) -> Result<u64> {
@@ -437,6 +932,211 @@ mod tests {
         let dir = tmpdir("missing");
         std::fs::create_dir_all(&dir).unwrap();
         assert!(ShardReader::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn expected_csr() -> Csr {
+        Csr::from_triplets(
+            4,
+            4,
+            &[(0, 0, 1.5), (0, 3, -0.25), (1, 1, 2.0), (3, 2, 0.125)],
+        )
+    }
+
+    /// Part 0 covers global rows 0..3 (two stripes), part 1 covers 3..4.
+    fn write_fragments(dir: &Path) {
+        let mut it = sample_stripes().into_iter();
+        let (a, b, c) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut s0 = ShardSink::create_fragment(dir, 4, "kerf", 0, 0, 4).unwrap();
+        s0.consume(a).unwrap();
+        s0.consume(b).unwrap();
+        s0.finish().unwrap();
+        let mut s1 = ShardSink::create_fragment(dir, 4, "kerf", 1, 3, 4).unwrap();
+        s1.consume(c).unwrap();
+        s1.finish().unwrap();
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fragments_merge_into_readable_directory() {
+        let dir = tmpdir("frag-merge");
+        write_fragments(&dir);
+        let report = merge_fragments(&dir).unwrap();
+        assert_eq!(report, MergeReport { parts: 2, shards: 3, n_rows: 4, n_cols: 4, total_nnz: 4 });
+        let reader = ShardReader::open(&dir).unwrap();
+        assert_eq!(reader.kind(), "kerf");
+        assert_eq!(reader.n_shards(), 3);
+        assert!(reader.shards().iter().all(|s| s.checksum.is_some()));
+        assert_eq!(reader.read_csr().unwrap(), expected_csr());
+        // Merge is idempotent while the fragments remain on disk.
+        assert_eq!(merge_fragments(&dir).unwrap(), report);
+        assert_eq!(ShardReader::open(&dir).unwrap().read_csr().unwrap(), expected_csr());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unmerged_fragments_fail_cleanly_and_merge_repairs() {
+        // Crash-recovery: a directory with fragments but no merged
+        // manifest must fail with a pointer to the repair path, and
+        // `merge_fragments` must then make it readable.
+        let dir = tmpdir("frag-crash");
+        write_fragments(&dir);
+        let err = ShardReader::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("shards merge"), "unhelpful error: {err}");
+        assert!(err.contains("2 fragment"), "unhelpful error: {err}");
+        merge_fragments(&dir).unwrap();
+        assert_eq!(ShardReader::open(&dir).unwrap().read_csr().unwrap(), expected_csr());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_rejects_gap_and_overlap() {
+        // Gap: part 1 starts at row 4 while part 0 covers 0..3.
+        let dir = tmpdir("frag-gap");
+        let mut it = sample_stripes().into_iter();
+        let (a, b, _) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut s0 = ShardSink::create_fragment(&dir, 4, "kerf", 0, 0, 5).unwrap();
+        s0.consume(a).unwrap();
+        s0.consume(b).unwrap();
+        s0.finish().unwrap();
+        let mut s1 = ShardSink::create_fragment(&dir, 4, "kerf", 1, 4, 5).unwrap();
+        s1.consume(Stripe { row_start: 4, rows: Csr::from_triplets(1, 4, &[]) }).unwrap();
+        s1.finish().unwrap();
+        let err = merge_fragments(&dir).unwrap_err().to_string();
+        assert!(err.contains("gap"), "wrong error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Overlap: part 1 re-covers row 2.
+        let dir = tmpdir("frag-overlap");
+        let mut it = sample_stripes().into_iter();
+        let (a, b, _) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut s0 = ShardSink::create_fragment(&dir, 4, "kerf", 0, 0, 4).unwrap();
+        s0.consume(a).unwrap();
+        s0.consume(b).unwrap();
+        s0.finish().unwrap();
+        let mut s1 = ShardSink::create_fragment(&dir, 4, "kerf", 1, 2, 4).unwrap();
+        s1.consume(Stripe { row_start: 2, rows: Csr::from_triplets(1, 4, &[]) }).unwrap();
+        s1.finish().unwrap();
+        let err = merge_fragments(&dir).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "wrong error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_detects_missing_tail_fragment() {
+        // Only part 0 of a 2-part run over a 4-row kernel is present:
+        // the surviving shards tile [0, 3) contiguously, so without the
+        // recorded total the merge would silently truncate the kernel.
+        let dir = tmpdir("tail");
+        let mut it = sample_stripes().into_iter();
+        let (a, b, _) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut s0 = ShardSink::create_fragment(&dir, 4, "kerf", 0, 0, 4).unwrap();
+        s0.consume(a).unwrap();
+        s0.consume(b).unwrap();
+        s0.finish().unwrap();
+        let err = merge_fragments(&dir).unwrap_err().to_string();
+        assert!(err.contains("tail fragment is missing"), "wrong error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clear_fragments_enables_rerun_with_fewer_parts() {
+        // First generation: 4 single-row parts. A rerun with 2 parts
+        // only overwrites parts 0 and 1, so without clearing, parts 2
+        // and 3 would survive and the merge would see overlap.
+        let dir = tmpdir("rerun");
+        for k in 0..4usize {
+            let mut s = ShardSink::create_fragment(&dir, 4, "kerf", k, k, 4).unwrap();
+            s.consume(Stripe { row_start: k, rows: Csr::from_triplets(1, 4, &[]) }).unwrap();
+            s.finish().unwrap();
+        }
+        merge_fragments(&dir).unwrap();
+        clear_fragments(&dir).unwrap();
+        write_fragments(&dir);
+        let report = merge_fragments(&dir).unwrap();
+        assert_eq!(report.parts, 2);
+        assert_eq!(ShardReader::open(&dir).unwrap().read_csr().unwrap(), expected_csr());
+        // Clearing a directory that does not exist is fine.
+        clear_fragments(Path::new("/definitely/not/a/dir")).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_checksum_is_a_parse_error_not_skipped() {
+        let dir = tmpdir("badsum");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        sink.finish().unwrap();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Garble one checksum into non-hex: verification must fail
+        // loudly, not silently downgrade to "no checksum".
+        let garbled = text.replacen("\"checksum\": \"", "\"checksum\": \"zz", 1);
+        assert_ne!(garbled, text);
+        std::fs::write(&path, garbled).unwrap();
+        let err = ShardReader::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "wrong error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksum_catches_payload_corruption() {
+        let dir = tmpdir("checksum");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        sink.finish().unwrap();
+        assert!(validate_dir(&dir).is_ok());
+        // Flip one payload byte (last byte = value bits of the final
+        // entry) — size and header stay intact, only the checksum and
+        // the value change.
+        let path = dir.join("shard-00000.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let reader = ShardReader::open(&dir).unwrap();
+        let err = reader.read_stripe(0).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "wrong error: {err}");
+        assert!(validate_dir(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_reports_totals() {
+        let dir = tmpdir("validate");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        let written = sink.bytes_written();
+        sink.finish().unwrap();
+        let report = validate_dir(&dir).unwrap();
+        assert_eq!(
+            report,
+            ValidateReport { shards: 3, n_rows: 4, total_nnz: 4, bytes: written }
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fragment_sink_rejects_rows_outside_its_range() {
+        let dir = tmpdir("frag-order");
+        let mut sink = ShardSink::create_fragment(&dir, 4, "kerf", 0, 10, 12).unwrap();
+        // First stripe must start exactly at the fragment base row.
+        let bad = Stripe { row_start: 0, rows: Csr::from_triplets(1, 4, &[]) };
+        assert!(sink.consume(bad).is_err());
+        let good = Stripe { row_start: 10, rows: Csr::from_triplets(1, 4, &[]) };
+        sink.consume(good).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

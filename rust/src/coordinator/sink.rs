@@ -65,6 +65,10 @@ impl KernelSource for Csr {
 /// `materialize_to_csr` behavior, now one [`KernelSink`] among several).
 pub struct CsrSink {
     n_cols: usize,
+    /// Global row the first stripe must start at (0 for whole-kernel
+    /// assembly; a range start when consuming a row-range
+    /// materialization — the resulting CSR holds only those rows).
+    base_row: usize,
     indptr: Vec<usize>,
     indices: Vec<u32>,
     data: Vec<f32>,
@@ -72,7 +76,13 @@ pub struct CsrSink {
 
 impl CsrSink {
     pub fn new(n_cols: usize) -> CsrSink {
-        CsrSink { n_cols, indptr: vec![0], indices: vec![], data: vec![] }
+        CsrSink::with_base(n_cols, 0)
+    }
+
+    /// A sink whose coverage starts at global row `base_row`, for
+    /// consuming `coordinator::materialize_range_into` output.
+    pub fn with_base(n_cols: usize, base_row: usize) -> CsrSink {
+        CsrSink { n_cols, base_row, indptr: vec![0], indices: vec![], data: vec![] }
     }
 
     /// The assembled kernel.
@@ -90,10 +100,12 @@ impl CsrSink {
 impl KernelSink for CsrSink {
     fn consume(&mut self, stripe: Stripe) -> Result<()> {
         let rows_seen = self.indptr.len() - 1;
-        if stripe.row_start != rows_seen {
+        if stripe.row_start != self.base_row + rows_seen {
             bail!(
-                "stripe out of order: row_start {} but {rows_seen} rows consumed",
-                stripe.row_start
+                "stripe out of order: row_start {} but sink covers rows {}..{}",
+                stripe.row_start,
+                self.base_row,
+                self.base_row + rows_seen
             );
         }
         let base = *self.indptr.last().unwrap();
@@ -264,6 +276,18 @@ mod tests {
         sink.consume(stripe(0, m)).unwrap();
         let p = sink.into_inner().finish();
         assert_eq!(p.row(0).0, &[1u32, 2]);
+    }
+
+    #[test]
+    fn csr_sink_with_base_assembles_a_row_range() {
+        let mut sink = CsrSink::with_base(3, 5);
+        // The first stripe must start exactly at the base row.
+        assert!(sink.consume(stripe(0, Csr::from_triplets(1, 3, &[]))).is_err());
+        sink.consume(stripe(5, Csr::from_triplets(2, 3, &[(0, 1, 1.0)]))).unwrap();
+        sink.consume(stripe(7, Csr::from_triplets(1, 3, &[(0, 2, 2.0)]))).unwrap();
+        let p = sink.finish();
+        assert_eq!(p.n_rows, 3);
+        assert_eq!(p.to_dense(), vec![0., 1., 0., 0., 0., 0., 0., 0., 2.]);
     }
 
     #[test]

@@ -53,6 +53,16 @@ pub fn threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Per-process worker budget when `n_procs` cooperating processes
+/// share this machine (the multi-process sharded materialization
+/// story): the resolved [`threads`] count divided evenly, floored at 1,
+/// so P workers × their thread pools never oversubscribe the cores the
+/// single-process run would use. Respects the same `--threads` /
+/// `FK_THREADS` overrides as [`threads`].
+pub fn threads_for_share(n_procs: usize) -> usize {
+    (threads() / n_procs.max(1)).max(1)
+}
+
 /// Worker count for a job of `n_items`, keeping at least
 /// `min_per_worker` items per worker so tiny inputs stay serial.
 pub fn workers_for(n_items: usize, min_per_worker: usize) -> usize {
@@ -401,9 +411,18 @@ mod tests {
     #[test]
     fn threads_env_and_override() {
         // The override always wins; clearing falls back to >= 1.
+        // (One test owns the global override — concurrent test threads
+        // mutating it would race.)
         set_threads(3);
         assert_eq!(threads(), 3);
+        set_threads(8);
+        assert_eq!(threads_for_share(1), 8);
+        assert_eq!(threads_for_share(2), 4);
+        assert_eq!(threads_for_share(3), 2);
+        assert_eq!(threads_for_share(16), 1);
+        assert_eq!(threads_for_share(0), 8);
         set_threads(0);
         assert!(threads() >= 1);
+        assert!(threads_for_share(1) >= 1);
     }
 }

@@ -53,7 +53,13 @@
 //!   stripes from a byte budget and measured factor density, so kernels
 //!   larger than RAM materialize out of core; the shared
 //!   `KernelSource` read interface lets `spectral::knn` and streamed
-//!   prediction consume either representation unchanged.
+//!   prediction consume either representation unchanged. Scaling past
+//!   one process, `coordinator::partition_rows` plans cost-balanced
+//!   row ranges, `materialize_range_into` is the per-process worker
+//!   loop writing fragment manifests, and `shard::merge_fragments` /
+//!   `shard::validate_dir` fuse and checksum-verify the shared shard
+//!   directory (CLI: `repro shards {plan,run,merge,validate}`) —
+//!   bitwise-identical to a single-process run at any P.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.

@@ -7,10 +7,11 @@
 //! no clap).
 
 use forest_kernels::bench_support::{peak_rss_bytes, time, write_bench_json, BenchRecord};
-use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::shard::{self, ShardReader, ShardSink};
 use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
-use forest_kernels::error::Result;
+use forest_kernels::error::{Context, Result};
+use forest_kernels::sparse::Csr;
 use forest_kernels::{anyhow, bail, exec};
 use forest_kernels::data::registry;
 use forest_kernels::experiments::{fig41, fig42, fig43, tablei1};
@@ -23,7 +24,6 @@ use std::path::PathBuf;
 /// Minimal `--key value` flag parser; positional args collected in order.
 struct Args {
     flags: HashMap<String, String>,
-    #[allow(dead_code)]
     positional: Vec<String>,
 }
 
@@ -89,6 +89,25 @@ Pipeline commands:
               [--top-k 32 --epsilon 0.0] [--verify]
               (streams P through a kernel sink; shards write binary
                stripe files + manifest.json readable by ShardReader)
+              worker mode: [--row-range A..B --part K --shard-dir D --procs P]
+              (materialize only global rows A..B as fragment K of a shard
+               directory shared with sibling workers; --procs sizes this
+               process's thread pool to an even 1/P share of the cores)
+
+Multi-process sharding (one coordinator per OS process):
+  shards plan     --procs 4 [dataset/forest flags] [--shard-dir D]
+                  (print cost-balanced row ranges + the worker recipe)
+  shards run      --procs 4 [dataset/forest flags] [--shard-dir D]
+                  [--worker-threads T] [--verify-full]
+                  (spawn P materialize workers, wait, merge, validate;
+                   --verify-full compares the merged directory bitwise
+                   against a single-process in-memory materialization)
+  shards merge    --dir D   (fuse manifest-part-*.json fragments into the
+                   canonical manifest.json, checking coverage + file sizes)
+  shards validate --dir D [--verify [--sample 64] + dataset/forest flags]
+                  (check coverage, checksums, structure; --verify retrains
+                   and cross-checks sampled rows bitwise against the
+                   single-process reference product)
 
 Paper harnesses (DESIGN.md experiment index):
   bench-fig41    [--base-n 8000 --seed 1]
@@ -102,6 +121,10 @@ Paper harnesses (DESIGN.md experiment index):
   bench-materialize [--n 20000 --trees 32] [--json-out BENCH_materialize.json]
                  (in-memory CSR sink vs spill-to-disk shard sink vs shard
                   read-back scan; reports throughput + peak RSS)
+  bench-shard-merge [--n 8000 --trees 20 --procs 1,2,4]
+                 [--json-out BENCH_shard_merge.json]
+                 (fragment write / merge / validate throughput vs. the
+                  number of worker partitions)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
 ";
@@ -132,7 +155,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "embed" => cmd_embed(args),
         "serve" => cmd_serve(args),
         "materialize" => cmd_materialize(args),
+        "shards" => cmd_shards(args),
         "bench-materialize" => cmd_bench_materialize(args),
+        "bench-shard-merge" => cmd_bench_shard_merge(args),
         "bench-fig41" => cmd_fig41(args),
         "bench-fig42" => cmd_fig42(args),
         "bench-figh1" => cmd_figh1(args),
@@ -334,7 +359,24 @@ fn coordinator_cfg(args: &Args, kernel: &ForestKernel) -> Result<CoordinatorConf
     Ok(cc)
 }
 
+/// Parse `A..B` (half-open, `A <= B`) for `--row-range`.
+fn parse_row_range(s: &str) -> Option<std::ops::Range<usize>> {
+    let (a, b) = s.split_once("..")?;
+    let a: usize = a.trim().parse().ok()?;
+    let b: usize = b.trim().parse().ok()?;
+    (a <= b).then_some(a..b)
+}
+
 fn cmd_materialize(args: &Args) -> Result<()> {
+    // Multi-process worker mode: P sibling processes share the machine,
+    // so unless --threads was given explicitly, size this process's
+    // pool to an even 1/P share of the cores *before* the parallel
+    // forest training below.
+    if args.get("threads").is_none() {
+        if let Some(p) = args.get("procs").and_then(|v| v.parse::<usize>().ok()) {
+            exec::set_threads(exec::threads_for_share(p));
+        }
+    }
     let (data, name) = load_data(args)?;
     let kind = method(args)?;
     let cfg = train_cfg(args);
@@ -364,6 +406,48 @@ fn cmd_materialize(args: &Args) -> Result<()> {
             peak_rss_bytes() as f64 / 1e6,
         );
     };
+    if let Some(rr) = args.get("row-range") {
+        // Worker mode: materialize only global rows A..B as one
+        // fragment of a shard directory shared with sibling workers.
+        // Fragments are always plain shards — an explicitly requested
+        // other sink would be silently ignored, so refuse it.
+        if let Some(s) = args.get("sink") {
+            if s != "shards" {
+                bail!(
+                    "--row-range workers always write shard fragments; \
+                     --sink {s} is not supported"
+                );
+            }
+        }
+        let range =
+            parse_row_range(rr).ok_or_else(|| anyhow!("bad --row-range {rr} (expected A..B)"))?;
+        let part = args.usize_or("part", 0);
+        let dir = PathBuf::from(args.str_or("shard-dir", args.str_or("out", "kernel-shards")));
+        let mut sink = ShardSink::create_fragment(
+            &dir,
+            kernel.w.n_rows,
+            kind.name(),
+            part,
+            range.start,
+            data.n,
+        )?;
+        let (metrics, secs) =
+            time(|| coordinator::materialize_range_into(&kernel, &cc, range.clone(), &mut sink));
+        let metrics = metrics?;
+        let written = sink.bytes_written();
+        let shards = sink.finish()?;
+        report(&format!("part-{part:03}"), &metrics, secs);
+        println!(
+            "worker {part}: rows {}..{} -> {} shard(s), {:.1} MB + \
+             manifest-part-{part:03}.json in {}",
+            range.start,
+            range.end,
+            shards.len(),
+            written as f64 / 1e6,
+            dir.display()
+        );
+        return Ok(());
+    }
     match sink_name {
         "csr" => {
             let ((p, metrics), secs) = time(|| coordinator::materialize_to_csr(&kernel, &cc));
@@ -516,6 +600,327 @@ fn cmd_bench_materialize(args: &Args) -> Result<()> {
                 speedup_vs_serial: 1.0,
             },
         ];
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
+/// Flags a `shards plan`/`shards run` parent forwards to its
+/// `materialize --row-range` workers: everything that determines the
+/// dataset, the forest, the proximity kind, and the stripe sizing —
+/// the full recipe for reproducing the factors bit-for-bit in another
+/// process. (`--threads` is deliberately excluded: workers get an even
+/// 1/P core share via `--procs` unless `--worker-threads` overrides.)
+const WORKER_FLAGS: [&str; 11] = [
+    "dataset",
+    "n",
+    "trees",
+    "seed",
+    "method",
+    "kind",
+    "depth",
+    "min-leaf",
+    "max-samples",
+    "stripe-rows",
+    "mem-budget",
+];
+
+fn cmd_shards(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("plan") => cmd_shards_plan(args),
+        Some("run") => cmd_shards_run(args),
+        Some("merge") => cmd_shards_merge(args),
+        Some("validate") => cmd_shards_validate(args),
+        other => bail!("unknown shards verb {other:?} (plan|run|merge|validate)\n{USAGE}"),
+    }
+}
+
+fn shard_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("dir", args.str_or("shard-dir", args.str_or("out", "kernel-shards"))))
+}
+
+/// Fit the kernel the multi-process commands partition (the same
+/// train → fit path the workers themselves run).
+fn fit_from_flags(args: &Args) -> Result<(forest_kernels::Dataset, String, ForestKernel)> {
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let cfg = train_cfg(args);
+    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    Ok((data, name, kernel))
+}
+
+fn cmd_shards_plan(args: &Args) -> Result<()> {
+    let procs = args.usize_or("procs", 2);
+    let (data, name, kernel) = fit_from_flags(args)?;
+    // One O(nnz(Q)) cost pass, shared by the planner and the display.
+    let costs = kernel.row_flops();
+    let ranges = coordinator::partition_by_cost(&costs, procs);
+    let total: u128 = costs.iter().map(|&c| c as u128).sum();
+    println!(
+        "# {name}: N={} method={} -> {} worker(s), {} thread(s) each",
+        data.n,
+        kernel.kind.name(),
+        ranges.len(),
+        exec::threads_for_share(ranges.len())
+    );
+    println!("part\trows\t\tflops_share");
+    for (k, r) in ranges.iter().enumerate() {
+        let w: u128 = costs[r.clone()].iter().map(|&c| c as u128).sum();
+        println!(
+            "{k}\t{}..{}\t{:.1}%",
+            r.start,
+            r.end,
+            100.0 * w as f64 / total.max(1) as f64
+        );
+    }
+    let dir = shard_dir(args);
+    let mut forwarded = String::new();
+    for key in WORKER_FLAGS {
+        if let Some(v) = args.get(key) {
+            forwarded.push_str(&format!(" --{key} {v}"));
+        }
+    }
+    println!(
+        "\n# recipe: run each worker (any order), then merge + validate.\n\
+         # (reusing a directory from a run with MORE parts? clear its\n\
+         #  manifest-part-*.json / part-*.bin first — workers only clear their own part)"
+    );
+    for (k, r) in ranges.iter().enumerate() {
+        println!(
+            "repro materialize{forwarded} --row-range {}..{} --part {k} --shard-dir {} --procs {}",
+            r.start,
+            r.end,
+            dir.display(),
+            ranges.len()
+        );
+    }
+    println!("repro shards merge --dir {}", dir.display());
+    println!("repro shards validate --dir {}", dir.display());
+    Ok(())
+}
+
+fn cmd_shards_run(args: &Args) -> Result<()> {
+    let procs = args.usize_or("procs", 2);
+    let (data, name, kernel) = fit_from_flags(args)?;
+    let cc = coordinator_cfg(args, &kernel)?;
+    let dir = shard_dir(args);
+    let ranges = coordinator::partition_rows(&kernel, procs);
+    let exe = std::env::current_exe().context("resolving the repro binary path")?;
+    println!(
+        "{name}: N={} method={} -> {} worker process(es) over {}",
+        data.n,
+        kernel.kind.name(),
+        ranges.len(),
+        dir.display()
+    );
+    // Workers only clear their own part, so a previous generation with
+    // more parts would otherwise survive into the merge and trip the
+    // overlap check.
+    shard::clear_fragments(&dir)?;
+    let t0 = std::time::Instant::now();
+    let mut children = Vec::with_capacity(ranges.len());
+    for (k, r) in ranges.iter().enumerate() {
+        let mut c = std::process::Command::new(&exe);
+        c.arg("materialize");
+        for key in WORKER_FLAGS {
+            if let Some(v) = args.get(key) {
+                c.arg(format!("--{key}")).arg(v);
+            }
+        }
+        c.arg("--row-range").arg(format!("{}..{}", r.start, r.end));
+        c.arg("--part").arg(k.to_string());
+        c.arg("--shard-dir").arg(&dir);
+        c.arg("--procs").arg(ranges.len().to_string());
+        if let Some(t) = args.get("worker-threads") {
+            c.arg("--threads").arg(t);
+        }
+        let child = c.spawn().with_context(|| format!("spawning worker {k}"))?;
+        children.push((k, child));
+    }
+    for (k, mut child) in children {
+        let status = child.wait().with_context(|| format!("waiting for worker {k}"))?;
+        if !status.success() {
+            bail!("worker {k} failed with {status}");
+        }
+    }
+    let secs_workers = t0.elapsed().as_secs_f64();
+    let (merged, secs_merge) = time(|| shard::merge_fragments(&dir));
+    let merged = merged?;
+    let (validated, secs_validate) = time(|| shard::validate_dir(&dir));
+    let validated = validated?;
+    println!(
+        "workers {secs_workers:.3}s | merged {} fragment(s) -> {} shard(s), N={}, \
+         nnz={} in {secs_merge:.3}s | validated {:.1} MB in {secs_validate:.3}s",
+        merged.parts,
+        merged.shards,
+        merged.n_rows,
+        merged.total_nnz,
+        validated.bytes as f64 / 1e6
+    );
+    if args.get("verify-full").is_some() {
+        let reference = coordinator::materialize_to_csr(&kernel, &cc).0;
+        let back = ShardReader::open(&dir)?.read_csr()?;
+        bitwise_check(&back, &reference)?;
+        println!("verify-full: merged shards are bitwise-identical to the single-process CSR");
+    }
+    Ok(())
+}
+
+/// Bitwise CSR equality (f32 payloads compared as raw bits).
+fn bitwise_check(got: &Csr, want: &Csr) -> Result<()> {
+    if got.n_rows != want.n_rows || got.n_cols != want.n_cols {
+        bail!(
+            "shape differs: {}x{} vs {}x{}",
+            got.n_rows,
+            got.n_cols,
+            want.n_rows,
+            want.n_cols
+        );
+    }
+    if got.indptr != want.indptr {
+        bail!("row structure differs");
+    }
+    if got.indices != want.indices {
+        bail!("column indices differ");
+    }
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    if bits(&got.data) != bits(&want.data) {
+        bail!("values differ bitwise");
+    }
+    Ok(())
+}
+
+fn cmd_shards_merge(args: &Args) -> Result<()> {
+    let dir = shard_dir(args);
+    let (merged, secs) = time(|| shard::merge_fragments(&dir));
+    let merged = merged?;
+    println!(
+        "{}: merged {} fragment(s) -> {} shard(s), N={}, nnz={} in {secs:.3}s",
+        dir.display(),
+        merged.parts,
+        merged.shards,
+        merged.n_rows,
+        merged.total_nnz
+    );
+    Ok(())
+}
+
+fn cmd_shards_validate(args: &Args) -> Result<()> {
+    let dir = shard_dir(args);
+    let (report, secs) = time(|| shard::validate_dir(&dir));
+    let report = report?;
+    println!(
+        "{}: {} shard(s), {} rows, nnz={}, {:.1} MB validated in {secs:.3}s \
+         (coverage, checksums, structure)",
+        dir.display(),
+        report.shards,
+        report.n_rows,
+        report.total_nnz,
+        report.bytes as f64 / 1e6
+    );
+    if args.get("verify").is_none() {
+        return Ok(());
+    }
+    // Sampled bitwise cross-check: retrain the forest from the same
+    // dataset/forest flags (deterministic per seed) and compare shard
+    // rows against the single-process reference product.
+    let (data, name, kernel) = fit_from_flags(args)?;
+    let reader = ShardReader::open(&dir)?;
+    if reader.kind() != kernel.kind.name() {
+        bail!(
+            "shard directory holds kind {:?} but flags select {:?}",
+            reader.kind(),
+            kernel.kind.name()
+        );
+    }
+    if report.n_rows != data.n {
+        bail!("shard directory covers {} rows but --n is {}", report.n_rows, data.n);
+    }
+    let samples = args.usize_or("sample", 64).clamp(1, data.n);
+    let mut cached: Option<(usize, coordinator::Stripe)> = None;
+    for s in 0..samples {
+        // Deterministic stride sampling across [0, N).
+        let row = s * data.n / samples;
+        let si = reader.shards().partition_point(|m| m.row_start + m.n_rows <= row);
+        if cached.as_ref().map(|(i, _)| *i) != Some(si) {
+            cached = Some((si, reader.read_stripe(si)?));
+        }
+        let (_, stripe) = cached.as_ref().unwrap();
+        let (cols, vals) = stripe.rows.row(row - stripe.row_start);
+        let reference = coordinator::stripe_product(&kernel, row, row + 1);
+        let (rc, rv) = reference.row(0);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if cols != rc || bits(vals) != bits(rv) {
+            bail!("row {row}: shard contents differ bitwise from the reference product");
+        }
+    }
+    println!("verify: {samples} sampled row(s) of {name} match the reference bitwise");
+    Ok(())
+}
+
+fn cmd_bench_shard_merge(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 8_000);
+    let trees = args.usize_or("trees", 20);
+    let dataset = args.str_or("dataset", "covertype");
+    let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let seed = args.u64_or("seed", 5);
+    let data = spec.generate(n, seed);
+    let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
+    let forest = Forest::train(&data, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let cc = coordinator_cfg(args, &kernel)?;
+    let procs: Vec<usize> =
+        args.str_or("procs", "1,2,4").split(',').filter_map(|s| s.parse().ok()).collect();
+    let mut records: Vec<BenchRecord> = vec![];
+    println!("# shards merge/validate throughput (dataset={dataset} N={n} T={trees})");
+    println!("P\tfragments_s\tmerge_s\tvalidate_s\tshards\tMB");
+    for &p in &procs {
+        let dir = std::env::temp_dir().join(format!(
+            "fk-bench-merge-{n}-{p}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ranges = coordinator::partition_rows(&kernel, p);
+        let (written, secs_frag) = time(|| -> Result<()> {
+            for (k, r) in ranges.iter().enumerate() {
+                let mut sink = ShardSink::create_fragment(
+                    &dir,
+                    kernel.w.n_rows,
+                    kernel.kind.name(),
+                    k,
+                    r.start,
+                    n,
+                )?;
+                coordinator::materialize_range_into(&kernel, &cc, r.clone(), &mut sink)?;
+                sink.finish()?;
+            }
+            Ok(())
+        });
+        written?;
+        let (merged, secs_merge) = time(|| shard::merge_fragments(&dir));
+        let merged = merged?;
+        let (validated, secs_validate) = time(|| shard::validate_dir(&dir));
+        let validated = validated?;
+        println!(
+            "{p}\t{secs_frag:.3}\t{secs_merge:.4}\t{secs_validate:.3}\t{}\t{:.1}",
+            merged.shards,
+            validated.bytes as f64 / 1e6
+        );
+        for (stage, secs) in [("merge", secs_merge), ("validate", secs_validate)] {
+            records.push(BenchRecord {
+                name: format!("shard-{stage}/P={p}"),
+                n,
+                wall_secs: secs,
+                predicted_flops: 0,
+                threads: exec::threads(),
+                speedup_vs_serial: 1.0,
+            });
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    if let Some(path) = args.get("json-out") {
         write_bench_json(std::path::Path::new(path), &records)?;
         println!("wrote {} records to {path}", records.len());
     }

@@ -437,6 +437,24 @@ impl Csr {
         (0..self.n_rows).map(|r| self.row(r).1.iter().sum()).collect()
     }
 
+    /// Copy a contiguous row range into a standalone CSR with the same
+    /// column dimension (the coordinator's stripe view of Q, and the
+    /// factor slicing the multi-process row-range workers use). Row
+    /// contents are preserved verbatim, so any per-row computation on a
+    /// slice is bitwise-identical to the same rows of the full matrix.
+    pub fn slice_rows(&self, rows: std::ops::Range<usize>) -> Csr {
+        assert!(rows.start <= rows.end && rows.end <= self.n_rows);
+        let lo = self.indptr[rows.start];
+        let hi = self.indptr[rows.end];
+        Csr {
+            n_rows: rows.len(),
+            n_cols: self.n_cols,
+            indptr: self.indptr[rows.start..=rows.end].iter().map(|&p| p - lo).collect(),
+            indices: self.indices[lo..hi].to_vec(),
+            data: self.data[lo..hi].to_vec(),
+        }
+    }
+
     /// Extract a dense block `rows × cols` (tests / coordinator assembly).
     pub fn dense_block(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Vec<f32> {
         let (rn, cn) = (rows.len(), cols.len());
@@ -549,6 +567,26 @@ mod tests {
             }
         });
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slice_rows_preserves_row_contents() {
+        let m = sample();
+        for (range, rows) in [
+            (0..3, 3usize),
+            (0..1, 1),
+            (1..2, 1),
+            (1..3, 2),
+            (2..2, 0),
+        ] {
+            let s = m.slice_rows(range.clone());
+            s.check().unwrap();
+            assert_eq!(s.n_rows, rows);
+            assert_eq!(s.n_cols, 3);
+            for (local, global) in range.enumerate() {
+                assert_eq!(s.row(local), m.row(global));
+            }
+        }
     }
 
     #[test]

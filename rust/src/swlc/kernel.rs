@@ -92,6 +92,25 @@ impl ForestKernel {
         spgemm_nnz_flops(&self.q, &self.wt).0
     }
 
+    /// Per-row predicted SpGEMM work: row `i` of `P = Q Wᵀ` costs
+    /// `Σ_{k ∈ Q.row(i)} nnz(Wᵀ.row(k))` Gustavson updates (the row
+    /// terms of §3.3's `N·T·λ̄`). Floored at 1 so structurally empty
+    /// rows (e.g. never-OOB samples) still carry weight — the
+    /// multi-process partition planner balances shards by these costs,
+    /// not by raw row count.
+    pub fn row_flops(&self) -> Vec<u64> {
+        let wt = &self.wt;
+        (0..self.q.n_rows)
+            .map(|i| {
+                let (cols, _) = self.q.row(i);
+                cols.iter()
+                    .map(|&k| (wt.indptr[k as usize + 1] - wt.indptr[k as usize]) as u64)
+                    .sum::<u64>()
+                    .max(1)
+            })
+            .collect()
+    }
+
     /// Route unseen samples and build their query-side map `Q_new`
     /// (Remark 3.9; OOS samples are treated as the query argument).
     pub fn oos_query_map(&self, forest: &Forest, newdata: &Dataset) -> Csr {
@@ -340,5 +359,18 @@ mod tests {
         let flops = k.predicted_flops();
         assert!(flops >= (50 * 8) as u64); // λ̄ >= 1
         assert!(flops <= (50u64 * 50 * 8)); // never worse than dense
+    }
+
+    #[test]
+    fn row_flops_sum_to_predicted_total() {
+        let (f, data) = fixture(60, 10, 9);
+        let k = ForestKernel::fit(&f, &data, ProximityKind::Original);
+        let rows = k.row_flops();
+        assert_eq!(rows.len(), 60);
+        assert!(rows.iter().all(|&c| c >= 1));
+        // Every row of Q is nonempty under Original weights, so the
+        // max(1) floor never fires and the per-row costs sum exactly to
+        // the aggregate §3.3 prediction.
+        assert_eq!(rows.iter().sum::<u64>(), k.predicted_flops());
     }
 }

@@ -4,7 +4,7 @@
 //! and under a `--mem-budget` smaller than the kernel's own footprint
 //! (the ISSUE-2 acceptance shape, run at CI-friendly N).
 
-use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::shard::{self, ShardReader, ShardSink};
 use forest_kernels::coordinator::sink::{CsrSink, KernelSource, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::data::synth;
@@ -67,6 +67,44 @@ fn prop_shard_roundtrip_bitwise_for_every_kind() {
             let tag = format!("{}-{stripe_rows}", kind.name());
             let back = shard_roundtrip(&kernel, &cfg, &tag);
             assert_bitwise_eq(&back, &reference, &tag);
+        }
+    }
+}
+
+#[test]
+fn fragmented_range_materialization_merges_bitwise_for_every_kind() {
+    // The in-library shape of the multi-process story (the real
+    // process-spawning version lives in multiprocess_shards.rs): split
+    // [0, N) by measured cost, materialize each range into a fragment
+    // sink, merge, and require bitwise identity with the single-process
+    // materialization — for every proximity kind and partition count.
+    let n = 90;
+    for (i, kind) in ProximityKind::ALL.into_iter().enumerate() {
+        let kernel = fixture(n, kind, 29 + i as u64);
+        let reference =
+            coordinator::materialize_to_csr(&kernel, &CoordinatorConfig::default()).0;
+        for parts in [2usize, 4] {
+            let dir = tmpdir(&format!("frag-{}-{parts}", kind.name()));
+            let cfg = CoordinatorConfig { stripe_rows: 13, n_workers: 2, queue_depth: 2 };
+            for (k, r) in coordinator::partition_rows(&kernel, parts).iter().enumerate() {
+                let mut sink = ShardSink::create_fragment(
+                    &dir,
+                    kernel.w.n_rows,
+                    kernel.kind.name(),
+                    k,
+                    r.start,
+                    n,
+                )
+                .unwrap();
+                coordinator::materialize_range_into(&kernel, &cfg, r.clone(), &mut sink)
+                    .unwrap();
+                sink.finish().unwrap();
+            }
+            shard::merge_fragments(&dir).unwrap();
+            shard::validate_dir(&dir).unwrap();
+            let back = ShardReader::open(&dir).unwrap().read_csr().unwrap();
+            assert_bitwise_eq(&back, &reference, &format!("{} P={parts}", kind.name()));
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 }
