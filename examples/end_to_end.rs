@@ -60,7 +60,7 @@ fn main() {
     println!("\n== 2. factored vs naive O(N²T) ==");
     println!("N\tnaive_s\tfactored_s\tspeedup");
     for n in [512usize, 1024, 2048, 4096] {
-        let naive = fig42::naive_cost(n, "covertype", trees, 3);
+        let naive = fig42::naive_cost(n, "covertype", trees, 3).expect("known dataset");
         let data = spec.generate(n, 3);
         let forest =
             Forest::train(&data, &TrainConfig { n_trees: trees, seed: 3, ..Default::default() });

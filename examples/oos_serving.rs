@@ -1,15 +1,21 @@
-//! OOS serving demo: batched proximity scoring against a gallery via
-//! the AOT-compiled Pallas tile kernel on the PJRT runtime.
+//! OOS serving, XLA-tile edition: the accelerator counterpart of the
+//! production HTTP server (`repro fit --out model.fkb && repro serve
+//! --model model.fkb`).
+//!
+//! The real server (`rust/src/serve/`) answers `/predict` and
+//! `/neighbors` over TCP by micro-batching single queries into tiles
+//! executed on the exec-pooled *sparse* kernels. This example is the
+//! same workload expressed against the other backend: queries are
+//! batched into fixed-size **dense** tiles and scored against the
+//! gallery by the AOT-compiled Pallas tile kernel on the PJRT runtime,
+//! reporting the same latency-percentile/throughput shape `/stats`
+//! (and `repro bench-serve`) reports for the sparse path. Use it to
+//! compare the XLA gallery tile against the factored SpGEMM serve
+//! path on your hardware.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example oos_serving
 //! ```
-//!
-//! Simulates a stream of single-query requests, batches them into
-//! fixed-size tiles (the coordinator's batching policy), executes each
-//! batch on the XLA executable, and reports latency percentiles and
-//! throughput — the serving-shaped view of the SWLC kernel (prototype
-//! search / similarity-based prediction).
 
 use forest_kernels::coordinator::gallery::GalleryService;
 use forest_kernels::data::registry;

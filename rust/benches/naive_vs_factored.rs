@@ -10,7 +10,7 @@ fn main() {
     let t = 32;
     println!("N\tnaive_s\tfactored_s\tspeedup");
     for n in [512usize, 1024, 2048, 4096, 8192] {
-        let naive = fig42::naive_cost(n, "covertype", t, 3);
+        let naive = fig42::naive_cost(n, "covertype", t, 3).expect("known dataset");
         let data = registry::by_name("covertype").unwrap().generate(n, 3);
         let forest = Forest::train(&data, &TrainConfig { n_trees: t, seed: 3, ..Default::default() });
         let c = measure_kernel_cost(&forest, &data, ProximityKind::Original);

@@ -524,6 +524,31 @@ impl ShardReader {
         &self.shards
     }
 
+    /// Index of the shard holding global `row`, or `None` when the row
+    /// is out of range. O(log #shards) — the random-access entry point
+    /// the online `/neighbors` row lookups and the sampled validator
+    /// share.
+    pub fn shard_of_row(&self, row: usize) -> Option<usize> {
+        if row >= self.n_rows {
+            return None;
+        }
+        let si = self.shards.partition_point(|m| m.row_start + m.n_rows <= row);
+        (si < self.shards.len()).then_some(si)
+    }
+
+    /// Read one global kernel row as owned `(columns, values)`. Reads
+    /// (and checksum-verifies) the containing shard; callers doing many
+    /// nearby lookups should cache the [`Stripe`] from
+    /// [`ShardReader::read_stripe`] keyed by [`ShardReader::shard_of_row`].
+    pub fn read_row(&self, row: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+        let si = self
+            .shard_of_row(row)
+            .ok_or_else(|| anyhow!("row {row} out of range for a {}-row kernel", self.n_rows))?;
+        let stripe = self.read_stripe(si)?;
+        let (cols, vals) = stripe.rows.row(row - stripe.row_start);
+        Ok((cols.to_vec(), vals.to_vec()))
+    }
+
     /// Read and validate one shard as a [`Stripe`].
     pub fn read_stripe(&self, i: usize) -> Result<Stripe> {
         let meta = &self.shards[i];
@@ -1137,6 +1162,29 @@ mod tests {
         assert!(sink.consume(bad).is_err());
         let good = Stripe { row_start: 10, rows: Csr::from_triplets(1, 4, &[]) };
         sink.consume(good).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn random_access_row_reads_match_csr() {
+        let dir = tmpdir("rowread");
+        let mut sink = ShardSink::create(&dir, 4, "kerf").unwrap();
+        for s in sample_stripes() {
+            sink.consume(s).unwrap();
+        }
+        sink.finish().unwrap();
+        let reader = ShardReader::open(&dir).unwrap();
+        let csr = reader.read_csr().unwrap();
+        for row in 0..4 {
+            let (cols, vals) = reader.read_row(row).unwrap();
+            let (ec, ev) = csr.row(row);
+            assert_eq!(cols, ec, "row {row}");
+            assert_eq!(vals, ev, "row {row}");
+        }
+        assert_eq!(reader.shard_of_row(0), Some(0));
+        assert_eq!(reader.shard_of_row(3), Some(2));
+        assert_eq!(reader.shard_of_row(4), None);
+        assert!(reader.read_row(4).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

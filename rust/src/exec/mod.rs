@@ -20,6 +20,13 @@
 //!   `--threads` flag), the `FK_THREADS` environment variable, and
 //!   `std::thread::available_parallelism()`. On a 1-core host every
 //!   primitive degrades to a plain serial loop with zero spawns.
+//!
+//! [`queue`] adds the bounded multi-producer work queue with timed
+//! batch draining that the online serving layer coalesces single
+//! requests on (same backpressure discipline as [`ordered_stream`]'s
+//! claim window).
+
+pub mod queue;
 
 use std::collections::BTreeMap;
 use std::ops::Range;

@@ -1,0 +1,187 @@
+//! Bounded multi-producer work queue with timed batch draining — the
+//! micro-batching substrate of the serving layer.
+//!
+//! Producers [`BoundedQueue::push`] items and block while the queue is
+//! full (backpressure, the same discipline as [`super::ordered_stream`]'s
+//! claim window). A single consumer calls [`BoundedQueue::drain_batch`]:
+//! it blocks until at least one item is available, then lingers briefly
+//! so trailing single items coalesce into one batch — turning a stream
+//! of independent requests into tiles the exec-pool kernels can amortize.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded FIFO with blocking push and coalescing batch pop.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` pending items (`cap >= 1`).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue `item`, blocking while the queue is full. Returns the
+    /// item back as `Err` if the queue has been closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.cap {
+                break;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` items as one batch. Blocks until at least one
+    /// item is available, then keeps collecting for at most `linger`
+    /// (so closely spaced single items ride the same batch) or until
+    /// `max` is reached. Returns `None` once the queue is closed *and*
+    /// drained — the consumer's shutdown signal.
+    pub fn drain_batch(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let deadline = Instant::now() + linger;
+        while g.items.len() < max && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (gg, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.items.len().min(max);
+        let out: Vec<T> = g.items.drain(..take).collect();
+        drop(g);
+        self.not_full.notify_all();
+        Some(out)
+    }
+
+    /// Close the queue: pending pushes fail, the consumer drains what
+    /// is left and then sees `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = BoundedQueue::new(16);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let batch = q.drain_batch(16, Duration::ZERO).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_respects_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.drain_batch(4, Duration::ZERO).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(q.drain_batch(4, Duration::ZERO).unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_drains_remainder() {
+        let q = BoundedQueue::new(4);
+        q.push(1u32).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(2));
+        assert_eq!(q.drain_batch(8, Duration::ZERO).unwrap(), vec![1]);
+        assert_eq!(q.drain_batch(8, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_drain() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(1).is_ok());
+        // The producer is blocked on the full queue until we drain.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.drain_batch(1, Duration::ZERO).unwrap(), vec![0]);
+        assert!(h.join().unwrap());
+        assert_eq!(q.drain_batch(1, Duration::ZERO).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn linger_coalesces_a_late_item() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(8));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(1).unwrap();
+        });
+        // A generous linger lets the second item join the first batch.
+        let batch = q.drain_batch(8, Duration::from_millis(500)).unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "late item missed the lingering batch");
+    }
+
+    #[test]
+    fn consumer_blocks_until_producer_arrives() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(8));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.drain_batch(8, Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(7u32).unwrap();
+        assert_eq!(h.join().unwrap().unwrap(), vec![7]);
+    }
+}

@@ -5,8 +5,10 @@
 //! against.
 
 use super::{measure_kernel_cost, train_for, KernelCost};
+use crate::anyhow;
 use crate::bench_support::{doubling_sizes, loglog_slope};
 use crate::data::registry;
+use crate::error::Result;
 use crate::forest::{ForestKind, TrainConfig};
 use crate::swlc::ProximityKind;
 
@@ -53,13 +55,14 @@ impl Default for SweepConfig {
     }
 }
 
-pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
+pub fn run(axis: &Axis, cfg: &SweepConfig) -> Result<Vec<Series>> {
     let sizes = doubling_sizes(cfg.min_n, cfg.max_n);
     let mut out = vec![];
     match axis {
         Axis::Dataset(names) => {
             for name in names {
-                let spec = registry::by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+                let spec = registry::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown dataset {name}"))?;
                 out.push(run_series(
                     name.clone(),
                     &sizes,
@@ -70,7 +73,7 @@ pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
             }
         }
         Axis::Method(kinds) => {
-            let spec = registry::by_name(&cfg.dataset).unwrap();
+            let spec = default_spec(cfg)?;
             for &kind in kinds {
                 out.push(run_series(
                     kind.name().to_string(),
@@ -82,7 +85,7 @@ pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
             }
         }
         Axis::MinLeaf(leafs) => {
-            let spec = registry::by_name(&cfg.dataset).unwrap();
+            let spec = default_spec(cfg)?;
             for &ml in leafs {
                 out.push(run_series(
                     format!("nmin={ml}"),
@@ -94,7 +97,7 @@ pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
             }
         }
         Axis::ForestKind(kinds) => {
-            let spec = registry::by_name(&cfg.dataset).unwrap();
+            let spec = default_spec(cfg)?;
             for &fk in kinds {
                 let kind = if fk == ForestKind::RandomForest {
                     ProximityKind::RfGap
@@ -111,7 +114,7 @@ pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
             }
         }
         Axis::Depth(depths) => {
-            let spec = registry::by_name(&cfg.dataset).unwrap();
+            let spec = default_spec(cfg)?;
             for &d in depths {
                 out.push(run_series(
                     match d {
@@ -126,7 +129,13 @@ pub fn run(axis: &Axis, cfg: &SweepConfig) -> Vec<Series> {
             }
         }
     }
-    out
+    Ok(out)
+}
+
+/// Resolve the sweep's default dataset, as a `Result` like the rest of
+/// the CLI (an unknown name used to panic here).
+fn default_spec(cfg: &SweepConfig) -> Result<crate::data::registry::DatasetSpec> {
+    registry::by_name(&cfg.dataset).ok_or_else(|| anyhow!("unknown dataset {}", cfg.dataset))
 }
 
 fn base_cfg(cfg: &SweepConfig, max_depth: Option<usize>, min_leaf: usize, fk: ForestKind) -> TrainConfig {
@@ -164,8 +173,9 @@ fn run_series(
 }
 
 /// Naive O(N²T) baseline cost at small N (the crossover reference).
-pub fn naive_cost(n: usize, dataset: &str, n_trees: usize, seed: u64) -> f64 {
-    let spec = registry::by_name(dataset).unwrap();
+pub fn naive_cost(n: usize, dataset: &str, n_trees: usize, seed: u64) -> Result<f64> {
+    let spec =
+        registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
     let data = spec.generate(n, seed);
     let tc = TrainConfig { n_trees, seed, ..Default::default() };
     let forest = train_for(&data, ProximityKind::Original, &tc);
@@ -173,7 +183,7 @@ pub fn naive_cost(n: usize, dataset: &str, n_trees: usize, seed: u64) -> f64 {
     let t0 = std::time::Instant::now();
     let p = crate::swlc::naive::naive_proximity(ProximityKind::Original, &ctx);
     std::hint::black_box(&p);
-    t0.elapsed().as_secs_f64()
+    Ok(t0.elapsed().as_secs_f64())
 }
 
 pub fn print(series: &[Series], title: &str) {
@@ -212,7 +222,8 @@ mod tests {
         let series = run(
             &Axis::Method(vec![ProximityKind::Original, ProximityKind::OobSeparable]),
             &cfg,
-        );
+        )
+        .unwrap();
         assert_eq!(series.len(), 2);
         for s in &series {
             assert_eq!(s.points.len(), 3);
@@ -227,9 +238,11 @@ mod tests {
 
     #[test]
     fn naive_baseline_is_quadratic_shaped() {
-        let t1 = naive_cost(400, "covertype", 8, 3);
-        let t2 = naive_cost(1600, "covertype", 8, 3);
+        let t1 = naive_cost(400, "covertype", 8, 3).unwrap();
+        let t2 = naive_cost(1600, "covertype", 8, 3).unwrap();
         // 4x N ⇒ ~16x naive time; accept anything clearly super-linear.
         assert!(t2 / t1 > 6.0, "t1={t1} t2={t2}");
+        // The unknown-dataset path is an error, not a panic.
+        assert!(naive_cost(64, "not-a-dataset", 2, 3).is_err());
     }
 }

@@ -6,7 +6,9 @@
 //! forest on overfit-prone data (airlines) and lag on covertype.
 
 use super::train_for;
+use crate::anyhow;
 use crate::data::registry;
+use crate::error::Result;
 use crate::forest::TrainConfig;
 use crate::swlc::{predict, ForestKernel, ProximityKind};
 
@@ -24,10 +26,10 @@ pub const KINDS: [ProximityKind; 4] = [
     ProximityKind::Original,
 ];
 
-pub fn run(datasets: &[&str], sizes: &[usize], n_trees: usize, seed: u64) -> Vec<TableRow> {
+pub fn run(datasets: &[&str], sizes: &[usize], n_trees: usize, seed: u64) -> Result<Vec<TableRow>> {
     let mut rows = vec![];
     for &ds in datasets {
-        let spec = registry::by_name(ds).unwrap_or_else(|| panic!("unknown dataset {ds}"));
+        let spec = registry::by_name(ds).ok_or_else(|| anyhow!("unknown dataset {ds}"))?;
         for &n in sizes {
             // Generate train + a 10k test split from the same analog.
             let test_n = 10_000.min(n);
@@ -54,7 +56,7 @@ pub fn run(datasets: &[&str], sizes: &[usize], n_trees: usize, seed: u64) -> Vec
             rows.push(TableRow { dataset: ds.to_string(), n, forest_acc, acc });
         }
     }
-    rows
+    Ok(rows)
 }
 
 pub fn print(rows: &[TableRow]) {
@@ -79,7 +81,8 @@ mod tests {
 
     #[test]
     fn gap_tracks_forest_accuracy() {
-        let rows = run(&["covertype"], &[4096], 24, 5);
+        assert!(run(&["not-a-dataset"], &[64], 2, 5).is_err());
+        let rows = run(&["covertype"], &[4096], 24, 5).unwrap();
         let r = &rows[0];
         let gap = r.acc.iter().find(|(k, _)| *k == ProximityKind::RfGap).unwrap().1;
         // The defining Table I.1 shape: GAP ≈ forest.

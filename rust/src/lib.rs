@@ -60,6 +60,24 @@
 //!   `shard::validate_dir` fuse and checksum-verify the shared shard
 //!   directory (CLI: `repro shards {plan,run,merge,validate}`) —
 //!   bitwise-identical to a single-process run at any P.
+//! * [`model`] — the versioned, checksummed on-disk **model bundle**
+//!   (`fk-bundle-v1`): the trained forest, binning thresholds, ensemble
+//!   context θ, SWLC factors Q/W, proximity kind, and label metadata in
+//!   one FNV-1a-verified binary file. `repro fit --out model.fkb`
+//!   writes it; every pipeline command accepts `--model` and loads a
+//!   kernel bitwise-identical to the originally fitted one instead of
+//!   retraining — including each of the P `shards run` workers.
+//! * [`serve`] — the online serving subsystem: a long-running,
+//!   zero-dependency TCP server (hand-rolled minimal HTTP/1.1) over a
+//!   loaded bundle. Connection threads enqueue single queries into the
+//!   bounded [`exec::queue`] micro-batcher, which executes coalesced
+//!   tiles on the exec-pooled kernels; endpoints are `POST /predict`
+//!   (proximity-weighted OOS prediction), `POST /neighbors` (top-k by
+//!   proximity, from factors or a materialized shard directory),
+//!   `POST /embed` (Leaf-PCA projection), plus `GET /healthz` and
+//!   `GET /stats` (counts, batch histogram, latency percentiles).
+//!   Served answers are bitwise-identical to the in-process batch
+//!   paths.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.
@@ -71,8 +89,10 @@ pub mod error;
 pub mod exec;
 pub mod experiments;
 pub mod forest;
+pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod spectral;
 pub mod swlc;

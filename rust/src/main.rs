@@ -9,17 +9,20 @@
 use forest_kernels::bench_support::{peak_rss_bytes, time, write_bench_json, BenchRecord};
 use forest_kernels::coordinator::shard::{self, ShardReader, ShardSink};
 use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
-use forest_kernels::coordinator::{self, gallery::GalleryService, CoordinatorConfig};
+use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::error::{Context, Result};
+use forest_kernels::model::{self, BundleMeta, ModelBundle};
+use forest_kernels::serve::{self, ServeConfig};
 use forest_kernels::sparse::Csr;
 use forest_kernels::{anyhow, bail, exec};
 use forest_kernels::data::registry;
 use forest_kernels::experiments::{fig41, fig42, fig43, tablei1};
 use forest_kernels::forest::{Forest, ForestKind, TrainConfig};
-use forest_kernels::runtime::Runtime;
+use forest_kernels::spectral::pca;
 use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Minimal `--key value` flag parser; positional args collected in order.
 struct Args {
@@ -76,13 +79,31 @@ Global flags:
                    training, factor build, coordinator); default = cores,
                    also settable via FK_THREADS
 
+Model bundles (fk-bundle-v1):
+  fit      --dataset covertype --n 20000 --trees 50 --method gap
+           [--out model.fkb]
+           (train the forest, fit the SWLC factors, and persist the
+            whole model — forest, binning thresholds, context θ, Q/W
+            factors, labels — as one checksummed binary bundle)
+  every command below also accepts --model model.fkb: the bundle is
+  loaded instead of retraining (bitwise-identical factors), and
+  `shards run` forwards it to all P workers so the forest is fit once.
+
 Pipeline commands:
   datasets                                 print the Table F.1 dataset analogs
   train    --dataset covertype --n 20000 --trees 50 [--kind rf|et|gbt]
-  kernel   --dataset covertype --n 20000 --trees 50 --method gap
+  kernel   --dataset covertype --n 20000 --trees 50 --method gap [--model model.fkb]
   predict  --dataset covertype --n 20000 --trees 50 --method gap
-  embed    --dataset pbmc --n 5000 [--pca-dims 24]
-  serve    --dataset covertype --n 5000 --queries 256 [--artifacts artifacts]
+           [--model model.fkb --queries 1000]
+  embed    --dataset pbmc --n 5000 [--pca-dims 24] [--model model.fkb --queries 1000]
+  serve    --model model.fkb [--addr 127.0.0.1:7878] [--batch 32]
+           [--linger-ms 2] [--shards DIR] [--embed-dims 8]
+           (long-running HTTP server over real TCP: POST /predict,
+            /neighbors, /embed + GET /healthz, /stats; single queries
+            are micro-batched into exec-pool tiles; answers are
+            bitwise-identical to the in-process batch paths; --shards
+            serves /neighbors row lookups from a materialized shard
+            directory)
   materialize --dataset covertype --n 20000 --method kerf
               --sink csr|shards|topk|topk-shards [--out kernel-shards]
               [--mem-budget 256M | --stripe-rows 4096]
@@ -124,7 +145,13 @@ Paper harnesses (DESIGN.md experiment index):
   bench-shard-merge [--n 8000 --trees 20 --procs 1,2,4]
                  [--json-out BENCH_shard_merge.json]
                  (fragment write / merge / validate throughput vs. the
-                  number of worker partitions)
+                  number of worker partitions, plus the bundle
+                  fit-vs-load speedup a --model worker enjoys)
+  bench-serve    [--n 4000 --trees 16 --queries 256] [--batches 1,4,16]
+                 [--clients 1,2,4] [--json-out BENCH_serve.json]
+                 (spawn the HTTP server on an ephemeral port and measure
+                  /predict QPS + latency percentiles vs client-side
+                  batch size × client thread count)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
 ";
@@ -150,6 +177,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "datasets" => cmd_datasets(),
         "train" => cmd_train(args),
+        "fit" => cmd_fit(args),
         "kernel" => cmd_kernel(args),
         "predict" => cmd_predict(args),
         "embed" => cmd_embed(args),
@@ -158,6 +186,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "shards" => cmd_shards(args),
         "bench-materialize" => cmd_bench_materialize(args),
         "bench-shard-merge" => cmd_bench_shard_merge(args),
+        "bench-serve" => cmd_bench_serve(args),
         "bench-fig41" => cmd_fig41(args),
         "bench-fig42" => cmd_fig42(args),
         "bench-figh1" => cmd_figh1(args),
@@ -208,6 +237,107 @@ fn method(args: &Args) -> Result<ProximityKind> {
     ProximityKind::from_name(m).ok_or_else(|| anyhow!("unknown method {m}"))
 }
 
+/// The model every pipeline command runs on: loaded from `--model`
+/// (nothing retrains — the bundle's factors are bitwise the fitted
+/// ones), or trained + fitted from the dataset/forest flags. Flags
+/// that would contradict a loaded bundle (`--method`, `--dataset`,
+/// `--n`, `--trees`) are rejected rather than silently ignored;
+/// `--seed` stays free because the query-set helpers legitimately use
+/// it to draw fresh queries against a fixed model.
+fn load_or_fit(args: &Args) -> Result<ModelBundle> {
+    if let Some(path) = args.get("model") {
+        let bundle = ModelBundle::load(Path::new(path))
+            .with_context(|| format!("loading --model {path}"))?;
+        if let Some(m) = args.get("method") {
+            if m != bundle.kernel.kind.name() {
+                bail!(
+                    "--model holds method {:?} but --method {m} was requested",
+                    bundle.kernel.kind.name()
+                );
+            }
+        }
+        if let Some(ds) = args.get("dataset") {
+            if ds != bundle.meta.dataset {
+                bail!(
+                    "--model was fitted on {:?} but --dataset {ds} was requested",
+                    bundle.meta.dataset
+                );
+            }
+        }
+        if let Some(n) = args.get("n").and_then(|v| v.parse::<usize>().ok()) {
+            if n != bundle.meta.n {
+                bail!("--model was fitted on N={} but --n {n} was requested", bundle.meta.n);
+            }
+        }
+        if let Some(t) = args.get("trees").and_then(|v| v.parse::<usize>().ok()) {
+            if t != bundle.meta.trees {
+                bail!(
+                    "--model holds {} trees but --trees {t} was requested",
+                    bundle.meta.trees
+                );
+            }
+        }
+        println!(
+            "loaded {path}: dataset={} N={} T={} method={} ({:.1} factor MB, no retraining)",
+            bundle.meta.dataset,
+            bundle.kernel.ctx.n,
+            bundle.kernel.ctx.t,
+            bundle.kernel.kind.name(),
+            bundle.kernel.factor_bytes() as f64 / 1e6,
+        );
+        Ok(bundle)
+    } else {
+        let (data, name) = load_data(args)?;
+        let kind = method(args)?;
+        let cfg = train_cfg(args);
+        let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+        let kernel = ForestKernel::fit(&forest, &data, kind);
+        let meta =
+            BundleMeta { dataset: name, n: data.n, seed: cfg.seed, trees: forest.n_trees() };
+        Ok(ModelBundle { forest, kernel, meta })
+    }
+}
+
+/// A fresh query set drawn from the bundle's dataset analog, with the
+/// seed offset so queries never replay the training rows.
+fn query_set(
+    args: &Args,
+    bundle: &ModelBundle,
+    default_n: usize,
+) -> Result<(forest_kernels::Dataset, String)> {
+    let name = args.str_or("dataset", &bundle.meta.dataset).to_string();
+    let spec = registry::by_name(&name).ok_or_else(|| anyhow!("unknown dataset {name}"))?;
+    let n_q = args.usize_or("queries", default_n).max(1);
+    let seed = args.u64_or("seed", bundle.meta.seed) ^ 0x51EED;
+    Ok((spec.generate(n_q, seed), name))
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let (data, name) = load_data(args)?;
+    let kind = method(args)?;
+    let cfg = train_cfg(args);
+    let (forest, secs_train) =
+        time(|| forest_kernels::experiments::train_for(&data, kind, &cfg));
+    let (kernel, secs_fit) = time(|| ForestKernel::fit(&forest, &data, kind));
+    let meta =
+        BundleMeta { dataset: name.clone(), n: data.n, seed: cfg.seed, trees: forest.n_trees() };
+    let out = PathBuf::from(args.str_or("out", "model.fkb"));
+    let bundle = ModelBundle { forest, kernel, meta };
+    let (written, secs_save) = time(|| bundle.save(&out));
+    let written = written?;
+    println!(
+        "{name}: N={} T={} L={} method={} | train {secs_train:.2}s fit {secs_fit:.2}s | \
+         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v1, FNV-1a checksummed)",
+        data.n,
+        bundle.forest.n_trees(),
+        bundle.kernel.ctx.l,
+        kind.name(),
+        written as f64 / 1e6,
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_datasets() -> Result<()> {
     println!("# Dataset analogs (cf. paper Table F.1)");
     println!("name\tpaper_N\tdefault_N\tfeatures\tclasses");
@@ -235,6 +365,28 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_kernel(args: &Args) -> Result<()> {
+    if args.get("model").is_some() {
+        // Loaded factors: report their stats and drive the coordinator;
+        // the retrain-based cost breakdown below is skipped entirely.
+        let bundle = load_or_fit(args)?;
+        let kernel = &bundle.kernel;
+        println!(
+            "{}: N={} method={} | factors {:.1} MB, λ̄={:.1}, predicted flops={} | \
+             peak RSS {:.1} MB",
+            bundle.meta.dataset,
+            kernel.ctx.n,
+            kernel.kind.name(),
+            kernel.factor_bytes() as f64 / 1e6,
+            kernel.ctx.mean_lambda(),
+            kernel.predicted_flops(),
+            peak_rss_bytes() as f64 / 1e6,
+        );
+        let cc = CoordinatorConfig::default();
+        let (_, metrics) = coordinator::materialize_to_csr(kernel, &cc);
+        let (jobs, nnz, busy) = metrics.snapshot();
+        println!("coordinator: {jobs} stripe jobs, nnz={nnz}, worker-busy {busy:.3}s");
+        return Ok(());
+    }
     let (data, name) = load_data(args)?;
     let kind = method(args)?;
     let cfg = train_cfg(args);
@@ -265,6 +417,24 @@ fn cmd_kernel(args: &Args) -> Result<()> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
+    if args.get("model").is_some() {
+        let bundle = load_or_fit(args)?;
+        let (queries, name) = query_set(args, &bundle, 1000)?;
+        let (preds, secs) = time(|| {
+            let qn = bundle.kernel.oos_query_map(&bundle.forest, &queries);
+            predict::predict_oos(&bundle.kernel, &qn)
+        });
+        println!(
+            "{name}: {} fresh queries in {secs:.3}s ({:.0} q/s) | forest acc {:.4} | \
+             {}-weighted acc {:.4}",
+            queries.n,
+            queries.n as f64 / secs.max(1e-9),
+            bundle.forest.accuracy(&queries),
+            bundle.kernel.kind.name(),
+            predict::accuracy(&preds, &queries.y)
+        );
+        return Ok(());
+    }
     let (data, name) = load_data(args)?;
     let kind = method(args)?;
     let (train, test) = data.train_test_split(0.1, args.u64_or("seed", 42) ^ 0x5EED);
@@ -283,6 +453,36 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_embed(args: &Args) -> Result<()> {
+    if args.get("model").is_some() {
+        // Spectral embedding straight from the persisted factors: fit
+        // the Leaf-PCA basis on Q and project fresh queries into it —
+        // the offline twin of the server's /embed endpoint.
+        let bundle = load_or_fit(args)?;
+        let ctx_n = bundle.kernel.ctx.n;
+        let dims = args.usize_or("pca-dims", 8).clamp(1, ctx_n);
+        let (queries, name) = query_set(args, &bundle, 1000)?;
+        let ((scores, vals), secs_basis) =
+            time(|| pca::leaf_pca(&bundle.kernel.q, dims, 30, false, 17));
+        let qn = bundle.kernel.oos_query_map(&bundle.forest, &queries);
+        let (proj, secs_proj) =
+            time(|| pca::leaf_pca_project(&bundle.kernel.q, &scores, &vals, &qn));
+        let y_train: Vec<f32> = bundle.kernel.ctx.y.iter().map(|&v| v as f32).collect();
+        let acc = forest_kernels::spectral::knn_accuracy(
+            &scores,
+            &y_train,
+            &proj,
+            &queries.y,
+            dims,
+            5,
+            bundle.kernel.ctx.n_classes,
+        );
+        println!(
+            "{name}: Leaf-PCA basis ({dims} dims over {ctx_n} rows) in {secs_basis:.2}s | \
+             projected {} queries in {secs_proj:.3}s | 5-NN label agreement {acc:.4}",
+            queries.n
+        );
+        return Ok(());
+    }
     let (data, name) = load_data(args)?;
     let (train, test) = data.train_test_split(0.15, args.u64_or("seed", 42) ^ 0xE3BED);
     let cfg = fig43::Fig43Config {
@@ -296,40 +496,29 @@ fn cmd_embed(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The long-running online server (replacing the old one-shot batch
+/// demo, which lives on as `examples/oos_serving.rs`, the XLA-tile
+/// counterpart of this endpoint set).
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let runtime = Runtime::load(&artifacts)?;
-    println!("loaded artifacts: {:?}", runtime.names());
-    let (data, name) = load_data(args)?;
-    let kind = method(args)?;
-    let n_q = args.usize_or("queries", 256);
-    let (train, test) = data.train_test_split(0.2, 77);
-    let queries = test.head(n_q.min(test.n));
-    let cfg = train_cfg(args);
-    let forest = forest_kernels::experiments::train_for(&train, kind, &cfg);
-    let gal = GalleryService::new(&runtime, &forest, &train, kind)?;
-    let (scores, secs) = time(|| gal.score(&forest, &queries));
-    let scores = scores?;
-    let preds = gal.vote(&scores, queries.n);
-    let acc = preds
-        .iter()
-        .zip(&queries.y)
-        .filter(|(p, y)| **p as f32 == **y)
-        .count() as f64
-        / queries.n as f64;
-    let top = gal.top_k(&scores, queries.n.min(3), 3);
-    println!(
-        "{name}: scored {} queries × {} gallery in {secs:.3}s \
-         ({:.1} q/s, tile {:?}) | vote-acc {acc:.4}",
-        queries.n,
-        gal.n_ref,
-        queries.n as f64 / secs,
-        gal.tile,
-    );
-    for (i, row) in top.iter().enumerate() {
-        println!("  query {i} top-3 prototypes: {row:?}");
-    }
-    Ok(())
+    let bundle = load_or_fit(args)?;
+    let shards = match args.get("shards") {
+        Some(dir) => Some(ShardReader::open(Path::new(dir))?),
+        None => None,
+    };
+    let cfg = ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878").to_string(),
+        max_batch: args.usize_or("batch", 32).max(1),
+        linger: Duration::from_millis(args.u64_or("linger-ms", 2)),
+        embed_dims: args.usize_or("embed-dims", 8),
+        ..ServeConfig::default()
+    };
+    let server = serve::Server::bind(bundle, shards, cfg)?;
+    println!("serving on http://{}", server.addr());
+    println!("  POST /predict    {{\"x\": [f32; d] | [[f32; d], ..]}}");
+    println!("  POST /neighbors  {{\"x\": [f32; d], \"k\": 10}} | {{\"row\": 0, \"k\": 10}}");
+    println!("  POST /embed      {{\"x\": [f32; d] | [[f32; d], ..]}}");
+    println!("  GET  /healthz    GET /stats");
+    server.run()
 }
 
 /// Parse a byte size with an optional K/M/G suffix (binary multiples).
@@ -377,12 +566,15 @@ fn cmd_materialize(args: &Args) -> Result<()> {
             exec::set_threads(exec::threads_for_share(p));
         }
     }
-    let (data, name) = load_data(args)?;
-    let kind = method(args)?;
-    let cfg = train_cfg(args);
-    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
-    let kernel = ForestKernel::fit(&forest, &data, kind);
-    let cc = coordinator_cfg(args, &kernel)?;
+    // `--model` loads the bundle (workers of a `shards run --model`
+    // parent land here — the forest is fit once, not once per worker);
+    // otherwise train + fit from the flags as before.
+    let bundle = load_or_fit(args)?;
+    let name = bundle.meta.dataset.clone();
+    let kind = bundle.kernel.kind;
+    let kernel = &bundle.kernel;
+    let n = kernel.ctx.n;
+    let cc = coordinator_cfg(args, kernel)?;
     let sparsify = SparsifyConfig {
         top_k: args.usize_or("top-k", 32),
         epsilon: args.get("epsilon").and_then(|v| v.parse().ok()).unwrap_or(0.0),
@@ -392,7 +584,7 @@ fn cmd_materialize(args: &Args) -> Result<()> {
     let sink_name = args.str_or("sink", "csr");
     println!(
         "{name}: N={} method={} sink={sink_name} stripe_rows={} (factors {:.1} MB)",
-        data.n,
+        n,
         kind.name(),
         cc.stripe_rows,
         kernel.factor_bytes() as f64 / 1e6,
@@ -429,10 +621,10 @@ fn cmd_materialize(args: &Args) -> Result<()> {
             kind.name(),
             part,
             range.start,
-            data.n,
+            n,
         )?;
         let (metrics, secs) =
-            time(|| coordinator::materialize_range_into(&kernel, &cc, range.clone(), &mut sink));
+            time(|| coordinator::materialize_range_into(kernel, &cc, range.clone(), &mut sink));
         let metrics = metrics?;
         let written = sink.bytes_written();
         let shards = sink.finish()?;
@@ -450,13 +642,13 @@ fn cmd_materialize(args: &Args) -> Result<()> {
     }
     match sink_name {
         "csr" => {
-            let ((p, metrics), secs) = time(|| coordinator::materialize_to_csr(&kernel, &cc));
+            let ((p, metrics), secs) = time(|| coordinator::materialize_to_csr(kernel, &cc));
             report("csr", &metrics, secs);
             println!("kernel: {} x {}, {:.1} MB resident", p.n_rows, p.n_cols, p.mem_bytes() as f64 / 1e6);
         }
         "shards" => {
             let mut sink = ShardSink::create(&out, kernel.w.n_rows, kind.name())?;
-            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let (metrics, secs) = time(|| coordinator::materialize_into(kernel, &cc, &mut sink));
             let metrics = metrics?;
             let written = sink.bytes_written();
             let shards = sink.finish()?;
@@ -468,7 +660,7 @@ fn cmd_materialize(args: &Args) -> Result<()> {
                 out.display()
             );
             if args.get("verify").is_some() {
-                let (reference, _) = coordinator::materialize_to_csr(&kernel, &cc);
+                let (reference, _) = coordinator::materialize_to_csr(kernel, &cc);
                 let back = ShardReader::open(&out)?.read_csr()?;
                 if back != reference {
                     bail!("shard read-back differs from in-memory kernel");
@@ -478,7 +670,7 @@ fn cmd_materialize(args: &Args) -> Result<()> {
         }
         "topk" => {
             let mut sink = SparsifySink::new(sparsify, CsrSink::new(kernel.w.n_rows));
-            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let (metrics, secs) = time(|| coordinator::materialize_into(kernel, &cc, &mut sink));
             let metrics = metrics?;
             report("topk", &metrics, secs);
             let dropped = sink.dropped;
@@ -490,28 +682,30 @@ fn cmd_materialize(args: &Args) -> Result<()> {
             );
             // Drive the streaming consumers the kNN-shaped kernel exists for.
             let pred = predict::predict_from_kernel(&p, &kernel.ctx.y, kernel.ctx.n_classes)?;
+            let y_ref: Vec<f32> = kernel.ctx.y.iter().map(|&v| v as f32).collect();
             println!(
                 "top-{} kernel train-acc {:.4}",
                 sparsify.top_k,
-                predict::accuracy(&pred, &data.y)
+                predict::accuracy(&pred, &y_ref)
             );
         }
         "topk-shards" => {
             let inner = ShardSink::create(&out, kernel.w.n_rows, kind.name())?;
             let mut sink = SparsifySink::new(sparsify, inner);
-            let (metrics, secs) = time(|| coordinator::materialize_into(&kernel, &cc, &mut sink));
+            let (metrics, secs) = time(|| coordinator::materialize_into(kernel, &cc, &mut sink));
             let metrics = metrics?;
             report("topk-shards", &metrics, secs);
             let dropped = sink.dropped;
             let shards = sink.into_inner().finish()?;
             let reader = ShardReader::open(&out)?;
             let pred = predict::predict_from_kernel(&reader, &kernel.ctx.y, kernel.ctx.n_classes)?;
+            let y_ref: Vec<f32> = kernel.ctx.y.iter().map(|&v| v as f32).collect();
             println!(
                 "wrote {} sparsified shards to {} (dropped {dropped} entries); \
                  streamed train-acc {:.4}",
                 shards.len(),
                 out.display(),
-                predict::accuracy(&pred, &data.y)
+                predict::accuracy(&pred, &y_ref)
             );
         }
         other => bail!("unknown sink {other} (csr|shards|topk|topk-shards)"),
@@ -610,9 +804,12 @@ fn cmd_bench_materialize(args: &Args) -> Result<()> {
 /// `materialize --row-range` workers: everything that determines the
 /// dataset, the forest, the proximity kind, and the stripe sizing —
 /// the full recipe for reproducing the factors bit-for-bit in another
-/// process. (`--threads` is deliberately excluded: workers get an even
-/// 1/P core share via `--procs` unless `--worker-threads` overrides.)
-const WORKER_FLAGS: [&str; 11] = [
+/// process. `model` rides along so a `--model` parent's workers load
+/// the bundle instead of refitting the identical forest P times.
+/// (`--threads` is deliberately excluded: workers get an even 1/P core
+/// share via `--procs` unless `--worker-threads` overrides.)
+const WORKER_FLAGS: [&str; 12] = [
+    "model",
     "dataset",
     "n",
     "trees",
@@ -640,27 +837,24 @@ fn shard_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("dir", args.str_or("shard-dir", args.str_or("out", "kernel-shards"))))
 }
 
-/// Fit the kernel the multi-process commands partition (the same
-/// train → fit path the workers themselves run).
-fn fit_from_flags(args: &Args) -> Result<(forest_kernels::Dataset, String, ForestKernel)> {
-    let (data, name) = load_data(args)?;
-    let kind = method(args)?;
-    let cfg = train_cfg(args);
-    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
-    let kernel = ForestKernel::fit(&forest, &data, kind);
-    Ok((data, name, kernel))
+/// The kernel the multi-process commands partition: loaded from
+/// `--model` (no retraining), or fitted via the same train → fit path
+/// the flag-driven workers themselves run. Returns `(N, name, kernel)`.
+fn fit_from_flags(args: &Args) -> Result<(usize, String, ForestKernel)> {
+    let bundle = load_or_fit(args)?;
+    Ok((bundle.kernel.ctx.n, bundle.meta.dataset.clone(), bundle.kernel))
 }
 
 fn cmd_shards_plan(args: &Args) -> Result<()> {
     let procs = args.usize_or("procs", 2);
-    let (data, name, kernel) = fit_from_flags(args)?;
+    let (n, name, kernel) = fit_from_flags(args)?;
     // One O(nnz(Q)) cost pass, shared by the planner and the display.
     let costs = kernel.row_flops();
     let ranges = coordinator::partition_by_cost(&costs, procs);
     let total: u128 = costs.iter().map(|&c| c as u128).sum();
     println!(
         "# {name}: N={} method={} -> {} worker(s), {} thread(s) each",
-        data.n,
+        n,
         kernel.kind.name(),
         ranges.len(),
         exec::threads_for_share(ranges.len())
@@ -703,14 +897,16 @@ fn cmd_shards_plan(args: &Args) -> Result<()> {
 
 fn cmd_shards_run(args: &Args) -> Result<()> {
     let procs = args.usize_or("procs", 2);
-    let (data, name, kernel) = fit_from_flags(args)?;
-    let cc = coordinator_cfg(args, &kernel)?;
+    let bundle = load_or_fit(args)?;
+    let (n, name) = (bundle.kernel.ctx.n, bundle.meta.dataset.clone());
+    let kernel = &bundle.kernel;
+    let cc = coordinator_cfg(args, kernel)?;
     let dir = shard_dir(args);
-    let ranges = coordinator::partition_rows(&kernel, procs);
+    let ranges = coordinator::partition_rows(kernel, procs);
     let exe = std::env::current_exe().context("resolving the repro binary path")?;
     println!(
         "{name}: N={} method={} -> {} worker process(es) over {}",
-        data.n,
+        n,
         kernel.kind.name(),
         ranges.len(),
         dir.display()
@@ -719,16 +915,42 @@ fn cmd_shards_run(args: &Args) -> Result<()> {
     // more parts would otherwise survive into the merge and trip the
     // overlap check.
     shard::clear_fragments(&dir)?;
+    // The parent just fitted (or loaded) the kernel — persist it so
+    // every worker loads the bundle instead of refitting the identical
+    // forest P more times. An explicit --model is reused as-is.
+    let model_path = match args.get("model") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating shard dir {}", dir.display()))?;
+            let p = dir.join("model.fkb");
+            let (bytes, secs) = time(|| bundle.save(&p));
+            let bytes = bytes?;
+            println!(
+                "wrote {} ({:.1} MB in {secs:.2}s) — forest fit once, loaded by {} worker(s)",
+                p.display(),
+                bytes as f64 / 1e6,
+                ranges.len()
+            );
+            p
+        }
+    };
     let t0 = std::time::Instant::now();
     let mut children = Vec::with_capacity(ranges.len());
     for (k, r) in ranges.iter().enumerate() {
         let mut c = std::process::Command::new(&exe);
         c.arg("materialize");
         for key in WORKER_FLAGS {
+            // `model` is passed explicitly below (it may be the bundle
+            // this parent just wrote rather than a user flag).
+            if key == "model" {
+                continue;
+            }
             if let Some(v) = args.get(key) {
                 c.arg(format!("--{key}")).arg(v);
             }
         }
+        c.arg("--model").arg(&model_path);
         c.arg("--row-range").arg(format!("{}..{}", r.start, r.end));
         c.arg("--part").arg(k.to_string());
         c.arg("--shard-dir").arg(&dir);
@@ -760,7 +982,7 @@ fn cmd_shards_run(args: &Args) -> Result<()> {
         validated.bytes as f64 / 1e6
     );
     if args.get("verify-full").is_some() {
-        let reference = coordinator::materialize_to_csr(&kernel, &cc).0;
+        let reference = coordinator::materialize_to_csr(kernel, &cc).0;
         let back = ShardReader::open(&dir)?.read_csr()?;
         bitwise_check(&back, &reference)?;
         println!("verify-full: merged shards are bitwise-identical to the single-process CSR");
@@ -823,10 +1045,10 @@ fn cmd_shards_validate(args: &Args) -> Result<()> {
     if args.get("verify").is_none() {
         return Ok(());
     }
-    // Sampled bitwise cross-check: retrain the forest from the same
-    // dataset/forest flags (deterministic per seed) and compare shard
-    // rows against the single-process reference product.
-    let (data, name, kernel) = fit_from_flags(args)?;
+    // Sampled bitwise cross-check: load the bundle (or retrain from
+    // the same dataset/forest flags — deterministic per seed) and
+    // compare shard rows against the single-process reference product.
+    let (n, name, kernel) = fit_from_flags(args)?;
     let reader = ShardReader::open(&dir)?;
     if reader.kind() != kernel.kind.name() {
         bail!(
@@ -835,15 +1057,17 @@ fn cmd_shards_validate(args: &Args) -> Result<()> {
             kernel.kind.name()
         );
     }
-    if report.n_rows != data.n {
-        bail!("shard directory covers {} rows but --n is {}", report.n_rows, data.n);
+    if report.n_rows != n {
+        bail!("shard directory covers {} rows but the kernel has {}", report.n_rows, n);
     }
-    let samples = args.usize_or("sample", 64).clamp(1, data.n);
+    let samples = args.usize_or("sample", 64).clamp(1, n);
     let mut cached: Option<(usize, coordinator::Stripe)> = None;
     for s in 0..samples {
         // Deterministic stride sampling across [0, N).
-        let row = s * data.n / samples;
-        let si = reader.shards().partition_point(|m| m.row_start + m.n_rows <= row);
+        let row = s * n / samples;
+        let si = reader
+            .shard_of_row(row)
+            .ok_or_else(|| anyhow!("row {row} outside the shard directory's coverage"))?;
         if cached.as_ref().map(|(i, _)| *i) != Some(si) {
             cached = Some((si, reader.read_stripe(si)?));
         }
@@ -868,12 +1092,51 @@ fn cmd_bench_shard_merge(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 5);
     let data = spec.generate(n, seed);
     let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
-    let forest = Forest::train(&data, &cfg);
-    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let ((forest, kernel), secs_fit) = time(|| {
+        let forest = Forest::train(&data, &cfg);
+        let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+        (forest, kernel)
+    });
     let cc = coordinator_cfg(args, &kernel)?;
     let procs: Vec<usize> =
         args.str_or("procs", "1,2,4").split(',').filter_map(|s| s.parse().ok()).collect();
     let mut records: Vec<BenchRecord> = vec![];
+    // `shards run --model` loads the bundle in every worker instead of
+    // repeating this train+fit — measure exactly that per-worker
+    // saving and record it next to the merge numbers.
+    {
+        let path = std::env::temp_dir()
+            .join(format!("fk-bench-bundle-{n}-{}.fkb", std::process::id()));
+        let meta = BundleMeta { dataset: dataset.to_string(), n, seed, trees };
+        model::save(&path, &forest, &kernel, &meta)?;
+        let (loaded, secs_load) = time(|| ModelBundle::load(&path));
+        let loaded = loaded?;
+        std::fs::remove_file(&path).ok();
+        if loaded.kernel.q != kernel.q {
+            bail!("loaded bundle factors differ from the fitted ones");
+        }
+        println!(
+            "# bundle: fit {secs_fit:.3}s vs load {secs_load:.3}s \
+             ({:.1}x saved per --model worker)",
+            secs_fit / secs_load.max(1e-9)
+        );
+        records.push(BenchRecord {
+            name: "bundle-fit".into(),
+            n,
+            wall_secs: secs_fit,
+            predicted_flops: kernel.predicted_flops(),
+            threads: exec::threads(),
+            speedup_vs_serial: 1.0,
+        });
+        records.push(BenchRecord {
+            name: "bundle-load".into(),
+            n,
+            wall_secs: secs_load,
+            predicted_flops: 0,
+            threads: exec::threads(),
+            speedup_vs_serial: secs_fit / secs_load.max(1e-9),
+        });
+    }
     println!("# shards merge/validate throughput (dataset={dataset} N={n} T={trees})");
     println!("P\tfragments_s\tmerge_s\tvalidate_s\tshards\tMB");
     for &p in &procs {
@@ -927,6 +1190,141 @@ fn cmd_bench_shard_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Spawn the HTTP server in-process on an ephemeral port and drive
+/// `/predict` with real TCP clients: QPS + latency percentiles across
+/// client-side batch size × client thread count, emitted as
+/// `BENCH_serve.json` next to the other bench artifacts.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 4_000);
+    let trees = args.usize_or("trees", 16);
+    let dataset = args.str_or("dataset", "covertype");
+    let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let seed = args.u64_or("seed", 5);
+    let data = spec.generate(n, seed);
+    let kind = method(args)?;
+    let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
+    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let meta = BundleMeta { dataset: dataset.to_string(), n, seed, trees: forest.n_trees() };
+    let d = data.d;
+    let total_queries = args.usize_or("queries", 256).max(1);
+    let queries = spec.generate(total_queries, seed ^ 0x51EED);
+    let batches: Vec<usize> =
+        args.str_or("batches", "1,4,16").split(',').filter_map(|s| s.parse().ok()).collect();
+    let clients: Vec<usize> =
+        args.str_or("clients", "1,2,4").split(',').filter_map(|s| s.parse().ok()).collect();
+
+    let server = serve::Server::bind(
+        ModelBundle { forest, kernel, meta },
+        None,
+        ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )?;
+    let addr = server.addr();
+    let handle = server.spawn();
+    // Warm up the accept loop + batcher before timing anything.
+    let (status, _) = serve::http::http_request(&addr, "GET", "/healthz", "")?;
+    if status != 200 {
+        bail!("warm-up /healthz returned {status}");
+    }
+
+    println!("# serve throughput (dataset={dataset} N={n} T={trees} queries={total_queries})");
+    println!("batch\tclients\tsecs\tq/s\tp50_ms\tp95_ms\tp99_ms");
+    let mut records: Vec<BenchRecord> = vec![];
+    for &b in &batches {
+        let b = b.max(1);
+        // Pre-render the request bodies: the query stream chunked into
+        // client-side batches of b.
+        let bodies: Vec<String> = (0..total_queries)
+            .step_by(b)
+            .map(|start| {
+                let end = (start + b).min(total_queries);
+                let mut body = String::from("{\"x\": [");
+                for i in start..end {
+                    if i > start {
+                        body.push_str(", ");
+                    }
+                    body.push('[');
+                    for f in 0..d {
+                        if f > 0 {
+                            body.push_str(", ");
+                        }
+                        body.push_str(&format!("{}", queries.x(i, f)));
+                    }
+                    body.push(']');
+                }
+                body.push_str("]}");
+                body
+            })
+            .collect();
+        for &c in &clients {
+            let c = c.max(1);
+            let lat: std::sync::Mutex<Vec<f64>> =
+                std::sync::Mutex::new(Vec::with_capacity(bodies.len()));
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let failed = std::sync::atomic::AtomicUsize::new(0);
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for _ in 0..c {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= bodies.len() {
+                            break;
+                        }
+                        let t = std::time::Instant::now();
+                        match serve::http::http_request(&addr, "POST", "/predict", &bodies[i]) {
+                            Ok((200, _)) => {
+                                lat.lock().unwrap().push(t.elapsed().as_secs_f64())
+                            }
+                            _ => {
+                                failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let nfail = failed.load(std::sync::atomic::Ordering::Relaxed);
+            if nfail > 0 {
+                bail!("bench-serve: {nfail} request(s) failed (batch={b}, clients={c})");
+            }
+            let mut lats = lat.into_inner().unwrap();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |q: f64| lats[(((lats.len() - 1) as f64) * q).round() as usize];
+            let qps = total_queries as f64 / wall.max(1e-9);
+            println!(
+                "{b}\t{c}\t{wall:.3}\t{qps:.0}\t{:.2}\t{:.2}\t{:.2}",
+                pct(0.5) * 1e3,
+                pct(0.95) * 1e3,
+                pct(0.99) * 1e3
+            );
+            records.push(BenchRecord {
+                name: format!("serve-predict/B={b}/clients={c}"),
+                n: total_queries,
+                wall_secs: wall,
+                predicted_flops: 0,
+                threads: c,
+                speedup_vs_serial: 1.0,
+            });
+            for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                records.push(BenchRecord {
+                    name: format!("serve-predict-latency/B={b}/clients={c}/{tag}"),
+                    n: b,
+                    wall_secs: pct(q),
+                    predicted_flops: 0,
+                    threads: c,
+                    speedup_vs_serial: 1.0,
+                });
+            }
+        }
+    }
+    handle.stop();
+    if let Some(path) = args.get("json-out") {
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
 fn cmd_fig41(args: &Args) -> Result<()> {
     let base_n = args.usize_or("base-n", 8000);
     let rows = fig41::run(
@@ -972,7 +1370,7 @@ fn cmd_fig42(args: &Args) -> Result<()> {
         "depth" => fig42::Axis::Depth(vec![None, Some(20), Some(14), Some(10)]),
         other => bail!("unknown axis {other}"),
     };
-    let series = fig42::run(&axis, &cfg);
+    let series = fig42::run(&axis, &cfg)?;
     fig42::print(&series, &format!("Fig 4.2 axis={}", args.str_or("axis", "method")));
 
     // Serial-vs-parallel probe of the kernel product, hard-capped at
@@ -1050,7 +1448,7 @@ fn cmd_figh1(args: &Args) -> Result<()> {
         ] {
             let mut cfg = fig42_sweep(args);
             cfg.dataset = dataset.to_string();
-            let series = fig42::run(&axis, &cfg);
+            let series = fig42::run(&axis, &cfg)?;
             fig42::print(&series, &format!("Fig H.1 {dataset} row={axis_name}"));
             println!();
         }
@@ -1088,7 +1486,7 @@ fn cmd_tablei1(args: &Args) -> Result<()> {
         &sizes,
         args.usize_or("trees", 50),
         args.u64_or("seed", 9),
-    );
+    )?;
     tablei1::print(&rows);
     Ok(())
 }
@@ -1102,7 +1500,7 @@ fn cmd_naive(args: &Args) -> Result<()> {
     let mut n = 256usize;
     let max = args.usize_or("n", 4096);
     while n <= max {
-        let naive = fig42::naive_cost(n, dataset, trees, 3);
+        let naive = fig42::naive_cost(n, dataset, trees, 3)?;
         let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
         let data = spec.generate(n, 3);
         let cfg = TrainConfig { n_trees: trees, seed: 3, ..Default::default() };

@@ -1,0 +1,243 @@
+//! Fixed-format binary encoding primitives for the model bundle.
+//!
+//! Everything is little-endian; `f32` values are stored as raw bits so
+//! payloads round-trip bit-for-bit (the same convention as the shard
+//! files in [`crate::coordinator::shard`]). Vectors are a `u64` length
+//! followed by the packed elements. The reader validates every length
+//! against the bytes actually remaining, so a corrupt or truncated
+//! buffer surfaces as a clean error instead of an allocation blow-up.
+
+use crate::bail;
+use crate::error::Result;
+
+/// Append-only little-endian encoder.
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl Default for ByteWriter {
+    fn default() -> Self {
+        ByteWriter::new()
+    }
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `f32` as raw bits (bitwise round-trip, NaN payloads included).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// UTF-8 string: `u64` byte length + bytes.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_vec_u16(&mut self, v: &[u16]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u16(x);
+        }
+    }
+
+    pub fn put_vec_u32(&mut self, v: &[u32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    /// `usize` values widened to `u64` (indptr arrays).
+    pub fn put_vec_usize(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    pub fn put_vec_f32(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+}
+
+/// Cursor-based little-endian decoder over a borrowed buffer.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("bundle truncated: need {n} bytes at offset {}, have {}", self.pos, self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    /// Read a `u64` and bounds-check it as a usize element count whose
+    /// packed payload (`elem_bytes` each) must still fit in the buffer.
+    fn take_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.take_u64()?;
+        let need = (n as u128) * elem_bytes as u128;
+        if need > self.remaining() as u128 {
+            bail!("bundle corrupt: length {n} exceeds remaining {} bytes", self.remaining());
+        }
+        Ok(n as usize)
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let n = self.take_len(1)?;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| crate::anyhow!("bundle string is not UTF-8"))
+    }
+
+    pub fn take_vec_u16(&mut self) -> Result<Vec<u16>> {
+        let n = self.take_len(2)?;
+        let mut out = Vec::with_capacity(n);
+        for b in self.take(2 * n)?.chunks_exact(2) {
+            out.push(u16::from_le_bytes(b.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn take_vec_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.take_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for b in self.take(4 * n)?.chunks_exact(4) {
+            out.push(u32::from_le_bytes(b.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn take_vec_usize(&mut self) -> Result<Vec<usize>> {
+        let n = self.take_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for b in self.take(8 * n)?.chunks_exact(8) {
+            out.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+        }
+        Ok(out)
+    }
+
+    pub fn take_vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.take_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for b in self.take(4 * n)?.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(65535);
+        w.put_u32(123_456);
+        w.put_u64(1 << 40);
+        w.put_f32(-0.0);
+        w.put_f32(f32::NAN);
+        w.put_str("héllo");
+        w.put_vec_u16(&[1, 2, 3]);
+        w.put_vec_u32(&[9, 8]);
+        w.put_vec_usize(&[0, usize::MAX >> 1]);
+        w.put_vec_f32(&[1.5, f32::MIN_POSITIVE]);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u16().unwrap(), 65535);
+        assert_eq!(r.take_u32().unwrap(), 123_456);
+        assert_eq!(r.take_u64().unwrap(), 1 << 40);
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.take_f32().unwrap().is_nan());
+        assert_eq!(r.take_str().unwrap(), "héllo");
+        assert_eq!(r.take_vec_u16().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.take_vec_u32().unwrap(), vec![9, 8]);
+        assert_eq!(r.take_vec_usize().unwrap(), vec![0, usize::MAX >> 1]);
+        let f = r.take_vec_f32().unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_fail_cleanly() {
+        let mut w = ByteWriter::new();
+        w.put_u64(1 << 50); // absurd vector length
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.take_vec_f32().is_err());
+        let mut r2 = ByteReader::new(&buf[..3]);
+        assert!(r2.take_u64().is_err());
+    }
+}

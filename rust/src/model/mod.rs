@@ -1,0 +1,415 @@
+//! The versioned on-disk model bundle (`fk-bundle-v1`).
+//!
+//! A bundle persists everything a serving or materialization process
+//! needs so that **no command ever retrains**: the trained [`Forest`]
+//! (trees, binning thresholds, in-bag bookkeeping, tree weights), the
+//! ensemble context θ, the SWLC factors `Q`/`W` as CSR, the
+//! [`ProximityKind`], and the label/class metadata. Loading a bundle
+//! reconstructs a [`ForestKernel`] that is *bitwise-identical* to the
+//! one `ForestKernel::fit` produced — factors, kernel products, and
+//! predictions all round-trip exactly (enforced by
+//! `rust/tests/model_bundle.rs`).
+//!
+//! # File format (`model.fkb`, little-endian throughout)
+//!
+//! | offset | size | field                                    |
+//! |--------|------|------------------------------------------|
+//! | 0      | 8    | magic `b"FKBNDL1\0"`                     |
+//! | 8      | 4    | format version (`u32`, currently 1)      |
+//! | 12     | 8    | payload length (`u64`)                   |
+//! | 20     | 8    | FNV-1a 64 of the payload (`u64`)         |
+//! | 28     | …    | payload (see [`bytes`] for the encoding) |
+//!
+//! The checksum reuses [`crate::coordinator::shard::fnv1a64`] — the
+//! same integrity convention as the kernel shard files — and is
+//! verified before any payload byte is interpreted. `f32` values are
+//! stored as raw bits, so factors and leaf statistics survive the trip
+//! without rounding.
+//!
+//! Produced by `repro fit --out model.fkb`; consumed via `--model` by
+//! `kernel`, `predict`, `embed`, `materialize`, `serve`, and the
+//! `shards` family (each multi-process worker loads the bundle instead
+//! of retraining the same forest P times).
+
+pub mod bytes;
+
+use crate::coordinator::shard::fnv1a64;
+use crate::error::{Context, Result};
+use crate::forest::{Binner, Forest, ForestKind, Node, Tree};
+use crate::sparse::Csr;
+use crate::swlc::{EnsembleContext, ForestKernel, ProximityKind};
+use crate::{anyhow, bail};
+use bytes::{ByteReader, ByteWriter};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"FKBNDL1\0";
+const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 28;
+
+/// Provenance recorded alongside the model (display/auditing only —
+/// nothing downstream depends on it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BundleMeta {
+    /// Dataset analog the forest was trained on.
+    pub dataset: String,
+    /// Training-set size N.
+    pub n: usize,
+    /// Training seed.
+    pub seed: u64,
+    /// Ensemble size T.
+    pub trees: usize,
+}
+
+/// A loaded (or freshly fitted) model: the forest, the fitted SWLC
+/// kernel, and provenance metadata.
+pub struct ModelBundle {
+    pub forest: Forest,
+    pub kernel: ForestKernel,
+    pub meta: BundleMeta,
+}
+
+fn forest_kind_code(kind: ForestKind) -> u8 {
+    match kind {
+        ForestKind::RandomForest => 0,
+        ForestKind::ExtraTrees => 1,
+        ForestKind::GradientBoosting => 2,
+    }
+}
+
+fn forest_kind_from_code(code: u8) -> Result<ForestKind> {
+    Ok(match code {
+        0 => ForestKind::RandomForest,
+        1 => ForestKind::ExtraTrees,
+        2 => ForestKind::GradientBoosting,
+        other => bail!("unknown forest kind code {other}"),
+    })
+}
+
+fn put_csr(w: &mut ByteWriter, m: &Csr) {
+    w.put_u64(m.n_rows as u64);
+    w.put_u64(m.n_cols as u64);
+    w.put_vec_usize(&m.indptr);
+    w.put_vec_u32(&m.indices);
+    w.put_vec_f32(&m.data);
+}
+
+fn take_csr(r: &mut ByteReader) -> Result<Csr> {
+    let n_rows = r.take_u64()? as usize;
+    let n_cols = r.take_u64()? as usize;
+    let indptr = r.take_vec_usize()?;
+    let indices = r.take_vec_u32()?;
+    let data = r.take_vec_f32()?;
+    if indptr.len() != n_rows + 1 || indices.len() != data.len() {
+        bail!("bundle CSR shape is inconsistent ({n_rows} rows, {} indptr)", indptr.len());
+    }
+    let m = Csr { n_rows, n_cols, indptr, indices, data };
+    m.check().map_err(|e| anyhow!("bundle CSR is corrupt: {e}"))?;
+    Ok(m)
+}
+
+fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    // Identity.
+    w.put_str(kernel.kind.name());
+    w.put_u8(forest_kind_code(forest.kind));
+    // Provenance.
+    w.put_str(&meta.dataset);
+    w.put_u64(meta.n as u64);
+    w.put_u64(meta.seed);
+    w.put_u64(meta.trees as u64);
+    // Forest.
+    w.put_u64(forest.n_classes as u64);
+    w.put_f32(forest.init_score);
+    w.put_f32(forest.learning_rate);
+    w.put_u64(forest.n_train as u64);
+    w.put_vec_f32(&forest.tree_weights);
+    w.put_vec_u32(&forest.leaf_offsets);
+    w.put_u64(forest.inbag.len() as u64);
+    for bag in &forest.inbag {
+        w.put_vec_u16(bag);
+    }
+    w.put_u64(forest.trees.len() as u64);
+    for tree in &forest.trees {
+        w.put_u64(tree.nodes.len() as u64);
+        for n in &tree.nodes {
+            w.put_u16(n.feature);
+            w.put_u8(n.threshold);
+            w.put_u32(n.left);
+            w.put_u32(n.right);
+        }
+        w.put_u64(tree.n_leaves as u64);
+        w.put_vec_f32(&tree.leaf_stats);
+        w.put_u64(tree.depth as u64);
+    }
+    // Binner.
+    w.put_u64(forest.binner.n_bins as u64);
+    w.put_u64(forest.binner.edges.len() as u64);
+    for e in &forest.binner.edges {
+        w.put_vec_f32(e);
+    }
+    // Ensemble context θ.
+    let ctx = &kernel.ctx;
+    w.put_u64(ctx.n as u64);
+    w.put_u64(ctx.t as u64);
+    w.put_u64(ctx.l as u64);
+    w.put_vec_u32(&ctx.leaf_of);
+    w.put_vec_f32(&ctx.leaf_mass);
+    w.put_vec_f32(&ctx.inbag_mass);
+    w.put_vec_u16(&ctx.inbag_count);
+    w.put_vec_u32(&ctx.oob_count);
+    w.put_vec_f32(&ctx.tree_weights);
+    w.put_vec_u32(&ctx.y);
+    w.put_u64(ctx.n_classes as u64);
+    // Factors. `Wᵀ` is not stored: the loader recomputes it with the
+    // same deterministic transpose `fit` uses, so it is bit-identical.
+    w.put_u8(kernel.symmetric as u8);
+    put_csr(&mut w, &kernel.q);
+    if !kernel.symmetric {
+        put_csr(&mut w, &kernel.w);
+    }
+    w.into_inner()
+}
+
+fn decode_payload(buf: &[u8]) -> Result<ModelBundle> {
+    let mut r = ByteReader::new(buf);
+    // Identity.
+    let kind_name = r.take_str()?;
+    let kind = ProximityKind::from_name(&kind_name)
+        .ok_or_else(|| anyhow!("bundle holds unknown proximity kind {kind_name:?}"))?;
+    let forest_kind = forest_kind_from_code(r.take_u8()?)?;
+    // Provenance.
+    let meta = BundleMeta {
+        dataset: r.take_str()?,
+        n: r.take_u64()? as usize,
+        seed: r.take_u64()?,
+        trees: r.take_u64()? as usize,
+    };
+    // Forest.
+    let n_classes = r.take_u64()? as usize;
+    let init_score = r.take_f32()?;
+    let learning_rate = r.take_f32()?;
+    let n_train = r.take_u64()? as usize;
+    let tree_weights = r.take_vec_f32()?;
+    let leaf_offsets = r.take_vec_u32()?;
+    let n_inbag = r.take_u64()? as usize;
+    let mut inbag = Vec::with_capacity(n_inbag.min(1 << 20));
+    for _ in 0..n_inbag {
+        inbag.push(r.take_vec_u16()?);
+    }
+    let n_trees = r.take_u64()? as usize;
+    let mut trees = Vec::with_capacity(n_trees.min(1 << 20));
+    for _ in 0..n_trees {
+        let n_nodes = r.take_u64()? as usize;
+        if (n_nodes as u128) * 11 > r.remaining() as u128 {
+            bail!("bundle corrupt: tree claims {n_nodes} nodes");
+        }
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            nodes.push(Node {
+                feature: r.take_u16()?,
+                threshold: r.take_u8()?,
+                left: r.take_u32()?,
+                right: r.take_u32()?,
+            });
+        }
+        let n_leaves = r.take_u64()? as usize;
+        let leaf_stats = r.take_vec_f32()?;
+        let depth = r.take_u64()? as usize;
+        trees.push(Tree { nodes, n_leaves, leaf_stats, depth });
+    }
+    // Binner.
+    let n_bins = r.take_u64()? as usize;
+    let n_features = r.take_u64()? as usize;
+    if (n_features as u128) * 8 > r.remaining() as u128 {
+        bail!("bundle corrupt: binner claims {n_features} features");
+    }
+    let mut edges = Vec::with_capacity(n_features);
+    for _ in 0..n_features {
+        edges.push(r.take_vec_f32()?);
+    }
+    let forest = Forest {
+        kind: forest_kind,
+        trees,
+        binner: Binner { edges, n_bins },
+        leaf_offsets,
+        inbag,
+        tree_weights,
+        n_classes,
+        init_score,
+        learning_rate,
+        n_train,
+    };
+    // Ensemble context θ.
+    let n = r.take_u64()? as usize;
+    let t = r.take_u64()? as usize;
+    let l = r.take_u64()? as usize;
+    let ctx = EnsembleContext {
+        n,
+        t,
+        l,
+        leaf_of: r.take_vec_u32()?,
+        leaf_mass: r.take_vec_f32()?,
+        inbag_mass: r.take_vec_f32()?,
+        inbag_count: r.take_vec_u16()?,
+        oob_count: r.take_vec_u32()?,
+        tree_weights: r.take_vec_f32()?,
+        y: r.take_vec_u32()?,
+        n_classes: r.take_u64()? as usize,
+    };
+    // Factors.
+    let symmetric = r.take_u8()? != 0;
+    let q = take_csr(&mut r)?;
+    let w = if symmetric { q.clone() } else { take_csr(&mut r)? };
+    if r.remaining() != 0 {
+        bail!("bundle has {} trailing payload bytes", r.remaining());
+    }
+    // Cross-section consistency checks.
+    if forest.trees.len() != ctx.t {
+        bail!("bundle forest has {} trees but context says {}", forest.trees.len(), ctx.t);
+    }
+    if forest.n_leaves_total() != ctx.l {
+        bail!("bundle forest has {} leaves but context says {}", forest.n_leaves_total(), ctx.l);
+    }
+    if ctx.leaf_of.len() != ctx.n * ctx.t {
+        bail!("bundle context leaf table is {} entries, expected N*T = {}", ctx.leaf_of.len(), ctx.n * ctx.t);
+    }
+    if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
+        bail!(
+            "bundle factors are {}x{} / {}x{}, expected {}x{}",
+            q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
+        );
+    }
+    if symmetric != kind.symmetric() {
+        bail!("bundle symmetry flag disagrees with proximity kind {kind_name}");
+    }
+    let kernel = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
+    Ok(ModelBundle { forest, kernel, meta })
+}
+
+impl ModelBundle {
+    /// Serialize to `path` as an `fk-bundle-v1` file. Returns the total
+    /// bytes written (header + payload).
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        save(path, &self.forest, &self.kernel, &self.meta)
+    }
+
+    /// Load and checksum-verify a bundle.
+    pub fn load(path: &Path) -> Result<ModelBundle> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading model bundle {}", path.display()))?;
+        if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
+            bail!("{}: not an fk-bundle file (bad magic)", path.display());
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("{}: unsupported bundle version {version} (expected {VERSION})", path.display());
+        }
+        let payload_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+        let want = u64::from_le_bytes(buf[20..28].try_into().unwrap());
+        if buf.len() != HEADER_BYTES + payload_len {
+            bail!(
+                "{}: {} bytes on disk, header claims {}",
+                path.display(),
+                buf.len(),
+                HEADER_BYTES + payload_len
+            );
+        }
+        let payload = &buf[HEADER_BYTES..];
+        let got = fnv1a64(payload);
+        if got != want {
+            bail!("{}: checksum mismatch (header {want:016x}, payload {got:016x})", path.display());
+        }
+        decode_payload(payload)
+            .with_context(|| format!("decoding model bundle {}", path.display()))
+    }
+}
+
+/// Serialize a forest + fitted kernel + metadata to `path`.
+pub fn save(path: &Path, forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Result<u64> {
+    let payload = encode_payload(forest, kernel, meta);
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    std::fs::write(path, &buf)
+        .with_context(|| format!("writing model bundle {}", path.display()))?;
+    Ok(buf.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::forest::TrainConfig;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fk-bundle-unit-{tag}-{}.fkb", std::process::id()))
+    }
+
+    fn fixture() -> (Forest, ForestKernel, BundleMeta) {
+        let data = synth::gaussian_blobs(80, 4, 3, 2.0, 11);
+        let forest =
+            Forest::train(&data, &TrainConfig { n_trees: 8, seed: 11, ..Default::default() });
+        let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+        let meta = BundleMeta { dataset: "blobs".into(), n: 80, seed: 11, trees: 8 };
+        (forest, kernel, meta)
+    }
+
+    #[test]
+    fn save_load_roundtrips_meta_and_shapes() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("roundtrip");
+        let written = save(&path, &forest, &kernel, &meta).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len());
+        let b = ModelBundle::load(&path).unwrap();
+        assert_eq!(b.meta, meta);
+        assert_eq!(b.forest.trees.len(), forest.trees.len());
+        assert_eq!(b.kernel.ctx.n, kernel.ctx.n);
+        assert_eq!(b.kernel.q, kernel.q);
+        assert_eq!(b.kernel.w_transpose(), kernel.w_transpose());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_fails_checksum() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("corrupt");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelBundle::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "wrong error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_and_foreign_files_fail_cleanly() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("truncated");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(ModelBundle::load(&path).is_err());
+        std::fs::write(&path, b"definitely not a bundle").unwrap();
+        let err = ModelBundle::load(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "wrong error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_is_checked() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("version");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 99; // bump the version field
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelBundle::load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "wrong error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! Hand-rolled minimal HTTP/1.1 — just enough for the serving layer.
+//!
+//! The offline vendor set has no hyper/tiny-http, so this module
+//! implements the slice the server and its bench/test clients need:
+//! request-line + header parsing with `Content-Length` bodies on the
+//! server side, and a one-shot `Connection: close` client. Chunked
+//! transfer encoding, pipelining, and keep-alive are deliberately out
+//! of scope (keep-alive pooling is queued in the ROADMAP).
+
+use crate::error::Result;
+use crate::{anyhow, bail};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Maximum accepted header block (64 KB) and body (64 MB).
+const MAX_HEADER: usize = 64 * 1024;
+const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// One parsed request.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one request from the stream. `Ok(None)` means the peer closed
+/// the connection cleanly before sending anything.
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subsequence(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER {
+            bail!("request header exceeds {MAX_HEADER} bytes");
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-header");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let header = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| anyhow!("request header is not UTF-8"))?;
+    let mut lines = header.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line {request_line:?}");
+    }
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad Content-Length {:?}", v.trim()))?;
+            }
+        }
+    }
+    if content_len > MAX_BODY {
+        bail!("request body of {content_len} bytes exceeds {MAX_BODY}");
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-body ({} of {content_len} bytes)", body.len());
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_len);
+    Ok(Some(Request { method, path, body }))
+}
+
+/// Write a full response and flush. Every response closes the
+/// connection (`Connection: close`) — one request per connection.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// One-shot client: send `method path` with a JSON body, read the full
+/// response (the server closes the connection), return
+/// `(status, body)`. Shared by `bench-serve` and the end-to-end tests.
+pub fn http_request(
+    addr: &SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf)?;
+    let header_end = find_subsequence(&buf, b"\r\n\r\n")
+        .ok_or_else(|| anyhow!("response has no header terminator"))?;
+    let header = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| anyhow!("response header is not UTF-8"))?;
+    let status_line = header.split("\r\n").next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+    let body = String::from_utf8(buf[header_end + 4..].to_vec())
+        .map_err(|_| anyhow!("response body is not UTF-8"))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn request_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream).unwrap().unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/echo");
+            let body = String::from_utf8(req.body).unwrap();
+            write_response(&mut stream, 200, "OK", &body).unwrap();
+        });
+        let (status, body) = http_request(&addr, "POST", "/echo", "{\"x\": [1, 2]}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"x\": [1, 2]}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn empty_connection_reads_none() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            assert!(read_request(&mut stream).unwrap().is_none());
+        });
+        drop(TcpStream::connect(addr).unwrap());
+        server.join().unwrap();
+    }
+}

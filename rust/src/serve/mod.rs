@@ -1,0 +1,695 @@
+//! Online proximity serving: a long-running, zero-dependency TCP
+//! server over a loaded model bundle.
+//!
+//! The paper's factorization is exactly the shape an online service
+//! wants: the `O(NT)` factors stay resident while the `N×N` kernel
+//! remains implicit, so every query is one sparse row product. This
+//! module turns that observation into a deployable server:
+//!
+//! * **Transport** — hand-rolled minimal HTTP/1.1 ([`http`]; the crate
+//!   is dependency-free by policy), one request per connection.
+//! * **Micro-batching** — connection threads enqueue single queries
+//!   into an [`crate::exec::queue::BoundedQueue`]; a batcher thread
+//!   drains them (lingering briefly so trailing requests coalesce) and
+//!   executes each batch as one tile on the [`crate::exec`]-pooled
+//!   kernels (`Forest::apply`, SpGEMM). Per-query results are bitwise
+//!   independent of batch composition — every kernel row depends only
+//!   on its own query — so batching is a pure throughput optimization.
+//! * **Endpoints** —
+//!   `POST /predict` (proximity-weighted OOS prediction: labels from
+//!   the factored `predict_oos` path, class scores from the
+//!   materialized `cross_proximity` + `scores_from_kernel` path; the
+//!   two paths sum identical products in different orders, so on a
+//!   float-rounding near-tie the served label can differ from the
+//!   argmax of the served scores — the label is the canonical answer,
+//!   each path bitwise-faithful to its in-process twin),
+//!   `POST /neighbors` (top-k by proximity: OOS queries on the fly
+//!   from the factors, or training rows served from the factors or a
+//!   materialized shard directory through `ShardReader` — bit-identical
+//!   to `spectral::knn::knn_from_kernel`),
+//!   `POST /embed` (project queries into the spectral Leaf-PCA
+//!   embedding fitted at startup),
+//!   `GET /healthz` and `GET /stats` (request counts, batch-size
+//!   histogram, p50/p95/p99 latency — see [`stats`]).
+//!
+//! Served answers are **bitwise-identical** to the in-process batch
+//! paths (`rust/tests/serve_http.rs` drives a real TCP round trip and
+//! compares raw f32 bits).
+
+pub mod http;
+pub mod stats;
+
+use crate::bench_support::json_escape;
+use crate::coordinator;
+use crate::coordinator::shard::ShardReader;
+use crate::coordinator::sink::KernelSource;
+use crate::coordinator::Stripe;
+use crate::data::Dataset;
+use crate::error::{Context, Result};
+use crate::exec::queue::BoundedQueue;
+use crate::model::ModelBundle;
+use crate::runtime::json::Json;
+use crate::spectral::knn::{knn_row, rank_row};
+use crate::spectral::pca::{leaf_pca, leaf_pca_project};
+use crate::swlc::predict;
+use crate::{anyhow, bail};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub use stats::Stats;
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests/benches).
+    pub addr: String,
+    /// Max queries per executed tile.
+    pub max_batch: usize,
+    /// How long the batcher lingers after the first query so trailing
+    /// single requests coalesce into the same tile.
+    pub linger: Duration,
+    /// Pending-query bound (backpressure: producers block when full).
+    pub queue_depth: usize,
+    /// Leaf-PCA dimensions of the `/embed` spectral embedding.
+    pub embed_dims: usize,
+    /// Subspace-iteration sweeps for the embedding basis.
+    pub embed_iters: usize,
+    /// Seed of the (deterministic) embedding basis.
+    pub embed_seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_batch: 32,
+            linger: Duration::from_millis(2),
+            queue_depth: 1024,
+            embed_dims: 8,
+            embed_iters: 30,
+            embed_seed: 17,
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum JobKind {
+    Predict = 0,
+    Embed = 1,
+    Neighbors = 2,
+}
+
+enum Reply {
+    Predict { label: u32, scores: Vec<f32> },
+    Embed { coords: Vec<f32> },
+    Neighbors { ids: Vec<u32>, proximities: Vec<f32>, dists: Vec<f32> },
+}
+
+/// One enqueued query awaiting its tile.
+struct Job {
+    kind: JobKind,
+    x: Vec<f32>,
+    /// `/neighbors` only: how many neighbors to return.
+    k: usize,
+    tx: mpsc::Sender<Result<Reply>>,
+}
+
+/// Single-stripe LRU over a shard directory for `/neighbors` row mode.
+struct ShardCache {
+    reader: ShardReader,
+    last: Mutex<Option<(usize, Stripe)>>,
+}
+
+impl ShardCache {
+    fn row(&self, i: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+        let si = self
+            .reader
+            .shard_of_row(i)
+            .ok_or_else(|| anyhow!("row {i} out of range"))?;
+        let mut g = self.last.lock().unwrap();
+        if g.as_ref().map(|(s, _)| *s) != Some(si) {
+            *g = Some((si, self.reader.read_stripe(si)?));
+        }
+        let (_, stripe) = g.as_ref().unwrap();
+        let (c, v) = stripe.rows.row(i - stripe.row_start);
+        Ok((c.to_vec(), v.to_vec()))
+    }
+}
+
+/// Everything the connection and batcher threads share.
+pub struct ServerState {
+    bundle: ModelBundle,
+    cfg: ServeConfig,
+    /// Feature dimension the binner was fitted on.
+    d: usize,
+    /// Leaf-PCA basis fitted at startup (deterministic in the config).
+    embed_scores: Vec<f32>,
+    embed_vals: Vec<f32>,
+    shards: Option<ShardCache>,
+    pub stats: Stats,
+    queue: BoundedQueue<Job>,
+    shutdown: AtomicBool,
+}
+
+/// A bound (but not yet running) server.
+pub struct Server {
+    state: Arc<ServerState>,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+/// Handle to a server running on a background thread (tests/benches).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Flag shutdown, poke the accept loop, and join.
+    pub fn stop(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.join.join();
+    }
+}
+
+impl Server {
+    /// Bind the listener and fit the `/embed` spectral basis. `shards`
+    /// optionally points `/neighbors` row lookups at a materialized
+    /// shard directory (must cover the model's N rows with its kind).
+    pub fn bind(
+        bundle: ModelBundle,
+        shards: Option<ShardReader>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let n = bundle.kernel.ctx.n;
+        if let Some(r) = &shards {
+            if KernelSource::n_rows(r) != n {
+                bail!(
+                    "shard directory covers {} rows but the model was fitted on {n}",
+                    KernelSource::n_rows(r)
+                );
+            }
+            if r.kind() != bundle.kernel.kind.name() {
+                bail!(
+                    "shard directory holds kind {:?} but the model is {:?}",
+                    r.kind(),
+                    bundle.kernel.kind.name()
+                );
+            }
+        }
+        let dims = cfg.embed_dims.clamp(1, n);
+        let (embed_scores, embed_vals) =
+            leaf_pca(&bundle.kernel.q, dims, cfg.embed_iters, false, cfg.embed_seed);
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let d = bundle.forest.binner.edges.len();
+        let state = Arc::new(ServerState {
+            queue: BoundedQueue::new(cfg.queue_depth),
+            d,
+            embed_scores,
+            embed_vals,
+            shards: shards.map(|reader| ShardCache { reader, last: Mutex::new(None) }),
+            stats: Stats::new(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+            bundle,
+        });
+        Ok(Server { state, listener, addr })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run the accept loop on the calling thread until shutdown is
+    /// flagged (via [`ServerHandle::stop`] from a clone of the state).
+    /// Each connection is handled on its own thread; query execution
+    /// happens on the single batcher thread, which drives the
+    /// exec-pooled kernels.
+    pub fn run(self) -> Result<()> {
+        let state = self.state;
+        let batcher = {
+            let st = state.clone();
+            std::thread::Builder::new()
+                .name("fk-serve-batcher".into())
+                .spawn(move || batch_loop(st))
+                .context("spawning the batcher thread")?
+        };
+        for conn in self.listener.incoming() {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let st = state.clone();
+            std::thread::spawn(move || handle_connection(&st, stream));
+        }
+        state.queue.close();
+        let _ = batcher.join();
+        Ok(())
+    }
+
+    /// Run on a background thread; the handle stops it.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let state = self.state.clone();
+        let join = std::thread::spawn(move || {
+            let _ = self.run();
+        });
+        ServerHandle { addr, state, join }
+    }
+}
+
+/// Drain the queue into per-endpoint tiles until the queue closes.
+fn batch_loop(st: Arc<ServerState>) {
+    while let Some(batch) = st.queue.drain_batch(st.cfg.max_batch, st.cfg.linger) {
+        st.stats.record_batch(batch.len());
+        let mut groups: [Vec<Job>; 3] = Default::default();
+        for job in batch {
+            groups[job.kind as usize].push(job);
+        }
+        for group in groups {
+            if group.is_empty() {
+                continue;
+            }
+            let kind = group[0].kind;
+            match run_tile(&st, kind, &group) {
+                Ok(replies) => {
+                    for (job, reply) in group.into_iter().zip(replies) {
+                        let _ = job.tx.send(Ok(reply));
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for job in group {
+                        let _ = job.tx.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one homogeneous tile: route the whole batch through the
+/// forest once, then answer every query from the shared products. Each
+/// output row depends only on its own query row, so results are
+/// bitwise-independent of how requests were batched.
+fn run_tile(st: &ServerState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>> {
+    let kernel = &st.bundle.kernel;
+    let forest = &st.bundle.forest;
+    let b = group.len();
+    let mut x = Vec::with_capacity(b * st.d);
+    for job in group {
+        x.extend_from_slice(&job.x);
+    }
+    let data = Dataset { x, y: vec![0.0; b], n: b, d: st.d, n_classes: kernel.ctx.n_classes };
+    let qn = kernel.oos_query_map(forest, &data);
+    match kind {
+        JobKind::Predict => {
+            let c = kernel.ctx.n_classes;
+            // Labels take the factored predictor (the `predict_oos`
+            // batch path); scores take the materialized cross-kernel
+            // path — each bitwise-identical to its in-process twin.
+            let labels = predict::predict_oos(kernel, &qn);
+            let cross = kernel.cross_proximity(&qn);
+            let scores = predict::scores_from_kernel(&cross, &kernel.ctx.y, c)?;
+            Ok((0..b)
+                .map(|i| Reply::Predict {
+                    label: labels[i],
+                    scores: scores[i * c..(i + 1) * c].to_vec(),
+                })
+                .collect())
+        }
+        JobKind::Embed => {
+            let dims = st.embed_vals.len();
+            let coords = leaf_pca_project(&kernel.q, &st.embed_scores, &st.embed_vals, &qn);
+            Ok((0..b)
+                .map(|i| Reply::Embed { coords: coords[i * dims..(i + 1) * dims].to_vec() })
+                .collect())
+        }
+        JobKind::Neighbors => {
+            let cross = kernel.cross_proximity(&qn);
+            Ok(group
+                .iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let (cols, vals) = cross.row(i);
+                    let ranked = rank_row(cols, vals, None, job.k);
+                    let ids: Vec<u32> = ranked.iter().map(|&(c, _)| c).collect();
+                    let proximities: Vec<f32> = ranked.iter().map(|&(_, p)| p).collect();
+                    let dists: Vec<f32> =
+                        proximities.iter().map(|&p| (1.0 - p).max(0.0).sqrt()).collect();
+                    Reply::Neighbors { ids, proximities, dists }
+                })
+                .collect())
+        }
+    }
+}
+
+/// How long a connection may sit idle mid-request/mid-response before
+/// its handler thread gives up — without this, a client that connects
+/// and sends nothing would pin a thread forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn handle_connection(st: &Arc<ServerState>, mut stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let req = match http::read_request(&mut stream) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            st.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let body = format!("{{\"error\": {}}}", json_escape(&e.to_string()));
+            let _ = http::write_response(&mut stream, 400, "Bad Request", &body);
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    match route(st, &req) {
+        Ok((status, body)) => {
+            let reason = if status == 200 { "OK" } else { "Not Found" };
+            let _ = http::write_response(&mut stream, status, reason, &body);
+        }
+        Err(e) => {
+            st.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let body = format!("{{\"error\": {}}}", json_escape(&e.to_string()));
+            let _ = http::write_response(&mut stream, 400, "Bad Request", &body);
+        }
+    }
+    st.stats.record_latency(t0.elapsed().as_secs_f64());
+}
+
+fn route(st: &ServerState, req: &http::Request) -> Result<(u16, String)> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            st.stats.healthz.fetch_add(1, Ordering::Relaxed);
+            Ok((200, healthz_body(st)))
+        }
+        ("GET", "/stats") => {
+            st.stats.stats.fetch_add(1, Ordering::Relaxed);
+            Ok((200, st.stats.to_json()))
+        }
+        ("POST", "/predict") => {
+            st.stats.predict.fetch_add(1, Ordering::Relaxed);
+            Ok((200, predict_endpoint(st, req)?))
+        }
+        ("POST", "/embed") => {
+            st.stats.embed.fetch_add(1, Ordering::Relaxed);
+            Ok((200, embed_endpoint(st, req)?))
+        }
+        ("POST", "/neighbors") => {
+            st.stats.neighbors.fetch_add(1, Ordering::Relaxed);
+            Ok((200, neighbors_endpoint(st, req)?))
+        }
+        (m, p) => Ok((
+            404,
+            format!(
+                "{{\"error\": {}, \"endpoints\": \
+                 [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\"]}}",
+                json_escape(&format!("no route for {m} {p}")),
+            ),
+        )),
+    }
+}
+
+fn parse_body(req: &http::Request) -> Result<Json> {
+    let text =
+        std::str::from_utf8(&req.body).map_err(|_| anyhow!("request body is not UTF-8"))?;
+    if text.trim().is_empty() {
+        bail!("empty request body");
+    }
+    Json::parse(text).map_err(|e| anyhow!("bad JSON body: {e}"))
+}
+
+fn as_f32(j: &Json) -> Result<f32> {
+    match j {
+        Json::Num(v) => Ok(*v as f32),
+        _ => Err(anyhow!("expected a number")),
+    }
+}
+
+/// `"x"` as query rows: a flat array is one query, an array of arrays
+/// is a client-side batch. Every row must have the model's feature
+/// dimension.
+fn parse_queries(j: &Json, d: usize) -> Result<Vec<Vec<f32>>> {
+    let x = j.get("x").ok_or_else(|| anyhow!("body missing \"x\""))?;
+    let arr = x.as_arr().ok_or_else(|| anyhow!("\"x\" must be an array"))?;
+    if arr.is_empty() {
+        bail!("\"x\" is empty");
+    }
+    let rows: Vec<Vec<f32>> = if matches!(arr[0], Json::Arr(_)) {
+        arr.iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| anyhow!("\"x\" rows must all be arrays"))?
+                    .iter()
+                    .map(as_f32)
+                    .collect::<Result<Vec<f32>>>()
+            })
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        vec![arr.iter().map(as_f32).collect::<Result<Vec<f32>>>()?]
+    };
+    for r in &rows {
+        if r.len() != d {
+            bail!("query has {} features but the model expects {d}", r.len());
+        }
+    }
+    Ok(rows)
+}
+
+/// Enqueue one job per query row and await the replies in row order.
+fn submit(st: &ServerState, kind: JobKind, rows: Vec<Vec<f32>>, k: usize) -> Result<Vec<Reply>> {
+    let mut rxs = Vec::with_capacity(rows.len());
+    for x in rows {
+        let (tx, rx) = mpsc::channel();
+        st.queue
+            .push(Job { kind, x, k, tx })
+            .map_err(|_| anyhow!("server is shutting down"))?;
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .map(|rx| rx.recv().map_err(|_| anyhow!("batch executor unavailable"))?)
+        .collect()
+}
+
+/// Render f32 with Rust's shortest round-trip formatting: parsing the
+/// decimal back (even through f64) recovers the exact same bits, so
+/// JSON numbers are a lossless transport for the bitwise tests.
+fn json_f32(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "\"nan\"".into()
+    } else if v > 0.0 {
+        "\"inf\"".into()
+    } else {
+        "\"-inf\"".into()
+    }
+}
+
+fn json_f32_array(vs: &[f32]) -> String {
+    let mut out = String::from("[");
+    for (i, &v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&json_f32(v));
+    }
+    out.push(']');
+    out
+}
+
+fn json_u32_array(vs: &[u32]) -> String {
+    let mut out = String::from("[");
+    for (i, &v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&v.to_string());
+    }
+    out.push(']');
+    out
+}
+
+fn healthz_body(st: &ServerState) -> String {
+    let m = &st.bundle.meta;
+    let k = &st.bundle.kernel;
+    format!(
+        "{{\"status\": \"ok\", \"model\": {{\"dataset\": {}, \"n\": {}, \"trees\": {}, \
+         \"kind\": {}, \"forest\": {}, \"classes\": {}, \"features\": {}, \"leaves\": {}}}, \
+         \"neighbors_source\": {}, \"embed_dims\": {}}}",
+        json_escape(&m.dataset),
+        k.ctx.n,
+        k.ctx.t,
+        json_escape(k.kind.name()),
+        json_escape(&format!("{:?}", st.bundle.forest.kind)),
+        k.ctx.n_classes,
+        st.d,
+        k.ctx.l,
+        if st.shards.is_some() { "\"shards\"" } else { "\"factors\"" },
+        st.embed_vals.len(),
+    )
+}
+
+fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
+    let c = st.bundle.kernel.ctx.n_classes;
+    if c < 2 {
+        bail!("/predict needs a classification model (bundle has {c} classes)");
+    }
+    let body = parse_body(req)?;
+    let rows = parse_queries(&body, st.d)?;
+    let replies = submit(st, JobKind::Predict, rows, 0)?;
+    let mut preds = String::from("[");
+    let mut scores = String::from("[");
+    for (i, r) in replies.iter().enumerate() {
+        let (label, s) = match r {
+            Reply::Predict { label, scores } => (label, scores),
+            _ => bail!("internal: unexpected reply kind"),
+        };
+        if i > 0 {
+            preds.push_str(", ");
+            scores.push_str(", ");
+        }
+        preds.push_str(&label.to_string());
+        scores.push_str(&json_f32_array(s));
+    }
+    preds.push(']');
+    scores.push(']');
+    Ok(format!("{{\"predictions\": {preds}, \"scores\": {scores}}}"))
+}
+
+fn embed_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
+    let body = parse_body(req)?;
+    let rows = parse_queries(&body, st.d)?;
+    let replies = submit(st, JobKind::Embed, rows, 0)?;
+    let mut coords = String::from("[");
+    for (i, r) in replies.iter().enumerate() {
+        let c = match r {
+            Reply::Embed { coords } => coords,
+            _ => bail!("internal: unexpected reply kind"),
+        };
+        if i > 0 {
+            coords.push_str(", ");
+        }
+        coords.push_str(&json_f32_array(c));
+    }
+    coords.push(']');
+    Ok(format!("{{\"dims\": {}, \"coords\": {coords}}}", st.embed_vals.len()))
+}
+
+fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
+    let body = parse_body(req)?;
+    let k = match body.get("k") {
+        Some(v) => v.as_usize().ok_or_else(|| anyhow!("\"k\" must be a positive integer"))?,
+        None => 10,
+    };
+    if k == 0 {
+        bail!("\"k\" must be >= 1");
+    }
+    let n = st.bundle.kernel.ctx.n;
+    if let Some(row_json) = body.get("row") {
+        // Training-row lookup: serve the materialized kernel row (from
+        // the shard directory when attached, else computed on the fly —
+        // the stripe product is bitwise what a shard holds) and rank it
+        // exactly as `knn_from_kernel` would.
+        let row = row_json
+            .as_usize()
+            .ok_or_else(|| anyhow!("\"row\" must be a non-negative integer"))?;
+        if row >= n {
+            bail!("row {row} out of range for a {n}-row kernel");
+        }
+        if k >= n {
+            bail!("row lookups need k < n (k={k}, n={n})");
+        }
+        let (cols, vals) = match &st.shards {
+            Some(cache) => cache.row(row)?,
+            None => {
+                let stripe = coordinator::stripe_product(&st.bundle.kernel, row, row + 1);
+                let (c, v) = stripe.row(0);
+                (c.to_vec(), v.to_vec())
+            }
+        };
+        let (ids, dists) = knn_row(row, n, &cols, &vals, k);
+        return Ok(format!(
+            "{{\"row\": {row}, \"k\": {k}, \"ids\": {}, \"dists\": {}, \"source\": {}}}",
+            json_u32_array(&ids),
+            json_f32_array(&dists),
+            if st.shards.is_some() { "\"shards\"" } else { "\"factors\"" },
+        ));
+    }
+    // OOS query: rank the cross-proximity row from the factors.
+    let rows = parse_queries(&body, st.d)?;
+    if rows.len() != 1 {
+        bail!("/neighbors takes one query per request (got {})", rows.len());
+    }
+    if k > n {
+        bail!("k={k} exceeds the {n}-row gallery");
+    }
+    let replies = submit(st, JobKind::Neighbors, rows, k)?;
+    match &replies[0] {
+        Reply::Neighbors { ids, proximities, dists } => Ok(format!(
+            "{{\"k\": {k}, \"ids\": {}, \"proximities\": {}, \"dists\": {}, \
+             \"source\": \"factors\"}}",
+            json_u32_array(ids),
+            json_f32_array(proximities),
+            json_f32_array(dists),
+        )),
+        _ => bail!("internal: unexpected reply kind"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_parsing_accepts_flat_and_nested() {
+        let j = Json::parse("{\"x\": [1.0, 2.5]}").unwrap();
+        let rows = parse_queries(&j, 2).unwrap();
+        assert_eq!(rows, vec![vec![1.0, 2.5]]);
+        let j = Json::parse("{\"x\": [[1, 2], [3, 4]]}").unwrap();
+        let rows = parse_queries(&j, 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec![3.0, 4.0]);
+        // Dimension mismatch and malformed bodies fail.
+        assert!(parse_queries(&j, 3).is_err());
+        let j = Json::parse("{\"x\": []}").unwrap();
+        assert!(parse_queries(&j, 2).is_err());
+        let j = Json::parse("{\"y\": [1]}").unwrap();
+        assert!(parse_queries(&j, 1).is_err());
+    }
+
+    #[test]
+    fn f32_json_transport_is_bit_exact() {
+        // format! → parse-as-f64 → cast-to-f32 must recover the bits.
+        for v in [0.1f32, -0.0, 1.0 / 3.0, f32::MIN_POSITIVE, 1e30, -7.25] {
+            let s = json_f32(v);
+            let back = s.parse::<f64>().unwrap() as f32;
+            assert_eq!(back.to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(json_f32(f32::INFINITY), "\"inf\"");
+        assert_eq!(json_f32(f32::NEG_INFINITY), "\"-inf\"");
+        assert_eq!(json_f32(f32::NAN), "\"nan\"");
+    }
+
+    #[test]
+    fn array_rendering() {
+        assert_eq!(json_u32_array(&[1, 2, 3]), "[1, 2, 3]");
+        assert_eq!(json_f32_array(&[]), "[]");
+        assert_eq!(json_f32_array(&[0.5]), "[0.5]");
+    }
+}

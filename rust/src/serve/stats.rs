@@ -1,0 +1,194 @@
+//! Serving observability: request counters, a batch-size histogram
+//! (how well the micro-batcher coalesces), and latency percentiles
+//! from a bounded reservoir — everything `GET /stats` reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency reservoir capacity (most recent samples win).
+const RESERVOIR: usize = 4096;
+/// Power-of-two batch-size buckets: 1, 2, 4, …, 2^15, plus overflow.
+const HIST_BUCKETS: usize = 17;
+
+#[derive(Default)]
+struct LatencyRing {
+    samples: Vec<f64>,
+    next: usize,
+}
+
+/// Shared serving counters. All methods are `&self` (atomics + one
+/// short-lived mutex), so connection threads record without contention
+/// on the hot path.
+pub struct Stats {
+    pub predict: AtomicU64,
+    pub neighbors: AtomicU64,
+    pub embed: AtomicU64,
+    pub healthz: AtomicU64,
+    pub stats: AtomicU64,
+    pub errors: AtomicU64,
+    batch_hist: [AtomicU64; HIST_BUCKETS],
+    batches: AtomicU64,
+    batched_jobs: AtomicU64,
+    latencies: Mutex<LatencyRing>,
+    total_latency_samples: AtomicU64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats {
+            predict: AtomicU64::new(0),
+            neighbors: AtomicU64::new(0),
+            embed: AtomicU64::new(0),
+            healthz: AtomicU64::new(0),
+            stats: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            batches: AtomicU64::new(0),
+            batched_jobs: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyRing::default()),
+            total_latency_samples: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one executed micro-batch of `size` jobs.
+    pub fn record_batch(&self, size: usize) {
+        let bucket = (usize::BITS - size.max(1).leading_zeros() - 1) as usize;
+        self.batch_hist[bucket.min(HIST_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one request's end-to-end latency (seconds).
+    pub fn record_latency(&self, secs: f64) {
+        self.total_latency_samples.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.latencies.lock().unwrap();
+        if ring.samples.len() < RESERVOIR {
+            ring.samples.push(secs);
+        } else {
+            let slot = ring.next;
+            ring.samples[slot] = secs;
+        }
+        ring.next = (ring.next + 1) % RESERVOIR;
+    }
+
+    /// `(p50, p95, p99)` over the reservoir, `None` when empty.
+    pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        let ring = self.latencies.lock().unwrap();
+        if ring.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = ring.samples.clone();
+        drop(ring);
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| sorted[(((sorted.len() - 1) as f64) * q).round() as usize];
+        Some((pick(0.50), pick(0.95), pick(0.99)))
+    }
+
+    /// The `GET /stats` document.
+    pub fn to_json(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut hist = String::from("{");
+        let mut first = true;
+        for (i, c) in self.batch_hist.iter().enumerate() {
+            let v = c.load(Ordering::Relaxed);
+            if v == 0 {
+                continue;
+            }
+            if !first {
+                hist.push_str(", ");
+            }
+            first = false;
+            let label = if i == HIST_BUCKETS - 1 {
+                "65536+".to_string()
+            } else {
+                format!("{}", 1usize << i)
+            };
+            hist.push_str(&format!("\"{label}\": {v}"));
+        }
+        hist.push('}');
+        let (p50, p95, p99) = self.latency_percentiles().unwrap_or((0.0, 0.0, 0.0));
+        let batches = g(&self.batches);
+        let jobs = g(&self.batched_jobs);
+        format!(
+            "{{\"requests\": {{\"predict\": {}, \"neighbors\": {}, \"embed\": {}, \
+             \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \
+             \"batches\": {batches}, \"batched_jobs\": {jobs}, \
+             \"mean_batch\": {:.3}, \"batch_size_hist\": {hist}, \
+             \"latency_secs\": {{\"samples\": {}, \"p50\": {:.6}, \"p95\": {:.6}, \
+             \"p99\": {:.6}}}}}",
+            g(&self.predict),
+            g(&self.neighbors),
+            g(&self.embed),
+            g(&self.healthz),
+            g(&self.stats),
+            g(&self.errors),
+            if batches > 0 { jobs as f64 / batches as f64 } else { 0.0 },
+            g(&self.total_latency_samples),
+            p50,
+            p95,
+            p99,
+        )
+    }
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Stats::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::json::Json;
+
+    #[test]
+    fn batch_histogram_buckets_by_power_of_two() {
+        let s = Stats::new();
+        for size in [1usize, 1, 2, 3, 4, 7, 8, 1000] {
+            s.record_batch(size);
+        }
+        assert_eq!(s.batch_hist[0].load(Ordering::Relaxed), 2); // 1, 1
+        assert_eq!(s.batch_hist[1].load(Ordering::Relaxed), 2); // 2, 3
+        assert_eq!(s.batch_hist[2].load(Ordering::Relaxed), 2); // 4, 7
+        assert_eq!(s.batch_hist[3].load(Ordering::Relaxed), 1); // 8
+        assert_eq!(s.batch_hist[9].load(Ordering::Relaxed), 1); // 1000 ∈ [512, 1024)
+    }
+
+    #[test]
+    fn percentiles_over_known_samples() {
+        let s = Stats::new();
+        for i in 1..=100 {
+            s.record_latency(i as f64);
+        }
+        let (p50, p95, p99) = s.latency_percentiles().unwrap();
+        assert!((p50 - 51.0).abs() < 1.5, "p50={p50}");
+        assert!((p95 - 95.0).abs() < 1.5, "p95={p95}");
+        assert!((p99 - 99.0).abs() < 1.5, "p99={p99}");
+    }
+
+    #[test]
+    fn reservoir_wraps_without_growing() {
+        let s = Stats::new();
+        for i in 0..(RESERVOIR + 100) {
+            s.record_latency(i as f64);
+        }
+        assert_eq!(s.latencies.lock().unwrap().samples.len(), RESERVOIR);
+        assert_eq!(s.total_latency_samples.load(Ordering::Relaxed), (RESERVOIR + 100) as u64);
+    }
+
+    #[test]
+    fn stats_json_parses_with_in_repo_parser() {
+        let s = Stats::new();
+        s.predict.fetch_add(3, Ordering::Relaxed);
+        s.record_batch(4);
+        s.record_latency(0.002);
+        let j = Json::parse(&s.to_json()).unwrap();
+        assert_eq!(
+            j.get("requests").and_then(|r| r.get("predict")).and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(j.get("batches").and_then(Json::as_usize), Some(1));
+        assert!(j.get("latency_secs").is_some());
+    }
+}

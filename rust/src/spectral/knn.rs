@@ -166,6 +166,51 @@ pub fn knn_approx(
     KnnGraph { n, k, neighbors, dists }
 }
 
+/// Rank one kernel row's entries by descending proximity (ties toward
+/// the smaller column id — the deterministic order every kernel-kNN
+/// consumer shares), excluding column `exclude` if given, truncated to
+/// the best `k`. Returns `(column, proximity)` pairs, possibly fewer
+/// than `k` (no padding — see [`knn_row`] for the padded graph view).
+/// This is the single ranking primitive behind [`knn_from_kernel`] and
+/// the serving layer's `/neighbors` endpoint, which must agree bitwise.
+pub fn rank_row(cols: &[u32], vals: &[f32], exclude: Option<usize>, k: usize) -> Vec<(u32, f32)> {
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(cols.len());
+    for (&c, &v) in cols.iter().zip(vals) {
+        if Some(c as usize) != exclude {
+            cand.push((v, c));
+        }
+    }
+    // Largest proximity first; deterministic tie-break on column.
+    cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    cand.truncate(k);
+    cand.into_iter().map(|(p, c)| (c, p)).collect()
+}
+
+/// The kNN-graph view of one kernel row `i` (of an `n×n` kernel):
+/// exactly `k` `(neighbor, distance)` slots with self excluded,
+/// distance `√(max(0, 1 − p))`, and rows with fewer than `k` nonzero
+/// proximities padded with their last candidate (or `(i+1) mod n` at
+/// `f32::INFINITY` when the row is empty) — [`knn_from_kernel`]'s
+/// per-row contract, factored out so the online server produces
+/// bit-identical answers.
+pub fn knn_row(i: usize, n: usize, cols: &[u32], vals: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+    let cand = rank_row(cols, vals, Some(i), k);
+    let mut neighbors = Vec::with_capacity(k);
+    let mut dists = Vec::with_capacity(k);
+    for j in 0..k {
+        let (c, p) = if j < cand.len() {
+            cand[j]
+        } else if let Some(&last) = cand.last() {
+            last
+        } else {
+            (((i + 1) % n) as u32, f32::NEG_INFINITY)
+        };
+        neighbors.push(c);
+        dists.push(if p == f32::NEG_INFINITY { f32::INFINITY } else { (1.0 - p).max(0.0).sqrt() });
+    }
+    (neighbors, dists)
+}
+
 /// Build a kNN graph straight from a materialized proximity kernel
 /// streamed in row order — an in-memory CSR or an out-of-core
 /// [`crate::coordinator::shard::ShardReader`], through the shared
@@ -175,6 +220,7 @@ pub fn knn_approx(
 /// at 0. Rows with fewer than k nonzero proximities are padded with
 /// their last candidate (or `(i+1) mod n` at `f32::INFINITY` when the
 /// row is empty), mirroring [`knn_approx`]'s starved-leaf behavior.
+/// Per-row semantics live in [`knn_row`].
 pub fn knn_from_kernel(src: &dyn KernelSource, k: usize) -> Result<KnnGraph> {
     let n = src.n_rows();
     if n != src.n_cols() {
@@ -185,29 +231,10 @@ pub fn knn_from_kernel(src: &dyn KernelSource, k: usize) -> Result<KnnGraph> {
     }
     let mut neighbors = vec![0u32; n * k];
     let mut dists = vec![0f32; n * k];
-    let mut cand: Vec<(f32, u32)> = Vec::new();
     src.for_each_row(&mut |i, cols, vals| {
-        cand.clear();
-        for (&c, &v) in cols.iter().zip(vals) {
-            if c as usize != i {
-                cand.push((v, c));
-            }
-        }
-        // Largest proximity first; deterministic tie-break on column.
-        cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-        cand.truncate(k);
-        for j in 0..k {
-            let (p, c) = if j < cand.len() {
-                cand[j]
-            } else if let Some(&last) = cand.last() {
-                last
-            } else {
-                (f32::NEG_INFINITY, ((i + 1) % n) as u32)
-            };
-            neighbors[i * k + j] = c;
-            dists[i * k + j] =
-                if p == f32::NEG_INFINITY { f32::INFINITY } else { (1.0 - p).max(0.0).sqrt() };
-        }
+        let (nb, ds) = knn_row(i, n, cols, vals, k);
+        neighbors[i * k..(i + 1) * k].copy_from_slice(&nb);
+        dists[i * k..(i + 1) * k].copy_from_slice(&ds);
     })?;
     Ok(KnnGraph { n, k, neighbors, dists })
 }

@@ -75,6 +75,26 @@ impl ForestKernel {
         ForestKernel { kind, ctx, q: qm, w: wm, wt, symmetric }
     }
 
+    /// Reassemble a kernel from persisted parts (the model-bundle load
+    /// path): the cached transpose `Wᵀ` is recomputed here with the
+    /// same deterministic parallel transpose `fit` uses, so a loaded
+    /// kernel is bitwise-identical to the originally fitted one —
+    /// factors, products, and predictions all round-trip exactly.
+    pub fn from_parts(
+        kind: ProximityKind,
+        ctx: EnsembleContext,
+        q: Csr,
+        w: Csr,
+        symmetric: bool,
+    ) -> ForestKernel {
+        assert_eq!(q.n_rows, ctx.n);
+        assert_eq!(q.n_cols, ctx.l);
+        assert_eq!(w.n_rows, ctx.n);
+        assert_eq!(w.n_cols, ctx.l);
+        let wt = w.transpose();
+        ForestKernel { kind, ctx, q, w, wt, symmetric }
+    }
+
     /// The exact training proximity matrix `P = Q Wᵀ` (Prop. 3.6) as a
     /// sparse `N×N` CSR. For the separable OOB kernel the diagonal is
     /// then forced to 1 (Remark G.2).

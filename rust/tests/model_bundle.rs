@@ -1,0 +1,187 @@
+//! Model-bundle persistence: save → load must round-trip the forest,
+//! the context, and the SWLC factors **bitwise** for every supported
+//! `ForestKind` × `ProximityKind` combination, and every downstream
+//! computation (kernel product, training prediction, OOS prediction)
+//! must agree exactly between the fitted and the loaded model.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Criterion, Forest, ForestKind, TrainConfig};
+use forest_kernels::model::{save, BundleMeta, ModelBundle};
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+use std::path::PathBuf;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fk-bundle-e2e-{tag}-{}.fkb", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Proximity kinds a forest of this kind supports: the OOB-querying
+/// schemes need bootstrap bookkeeping, which only RandomForest has.
+fn kinds_for(fk: ForestKind) -> Vec<ProximityKind> {
+    match fk {
+        ForestKind::RandomForest => ProximityKind::ALL.to_vec(),
+        _ => vec![
+            ProximityKind::Original,
+            ProximityKind::Kerf,
+            ProximityKind::InstanceHardness,
+            ProximityKind::Boosted,
+        ],
+    }
+}
+
+fn train(fk: ForestKind, seed: u64) -> (Forest, forest_kernels::Dataset) {
+    // GBT is binary logistic, so give it two classes.
+    let n_classes = if fk == ForestKind::GradientBoosting { 2 } else { 3 };
+    let data = synth::gaussian_blobs(130, 4, n_classes, 2.2, seed);
+    let cfg = TrainConfig {
+        kind: fk,
+        n_trees: 9,
+        seed,
+        max_depth: if fk == ForestKind::GradientBoosting { Some(4) } else { None },
+        criterion: if fk == ForestKind::GradientBoosting {
+            Criterion::Mse
+        } else {
+            Criterion::Gini
+        },
+        ..Default::default()
+    };
+    (Forest::train(&data, &cfg), data)
+}
+
+fn assert_csr_bitwise(
+    got: &forest_kernels::Csr,
+    want: &forest_kernels::Csr,
+    what: &str,
+) {
+    assert_eq!(got.n_rows, want.n_rows, "{what}: n_rows");
+    assert_eq!(got.n_cols, want.n_cols, "{what}: n_cols");
+    assert_eq!(got.indptr, want.indptr, "{what}: indptr");
+    assert_eq!(got.indices, want.indices, "{what}: indices");
+    assert_eq!(bits(&got.data), bits(&want.data), "{what}: values");
+}
+
+fn roundtrip_one(fk: ForestKind, kind: ProximityKind, seed: u64) {
+    let tag = format!("{fk:?}-{}", kind.name());
+    let (forest, data) = train(fk, seed);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: 9 };
+    let path = tmpfile(&tag);
+    save(&path, &forest, &kernel, &meta).unwrap();
+    let loaded = ModelBundle::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Forest round-trips exactly (Tree/Node derive PartialEq; leaf
+    // statistics are f32 payloads compared as raw bits).
+    assert_eq!(loaded.forest.trees.len(), forest.trees.len(), "{tag}: tree count");
+    for (a, b) in loaded.forest.trees.iter().zip(&forest.trees) {
+        assert_eq!(a.nodes, b.nodes, "{tag}: nodes");
+        assert_eq!(a.n_leaves, b.n_leaves, "{tag}: n_leaves");
+        assert_eq!(a.depth, b.depth, "{tag}: depth");
+        assert_eq!(bits(&a.leaf_stats), bits(&b.leaf_stats), "{tag}: leaf_stats");
+    }
+    assert_eq!(loaded.forest.leaf_offsets, forest.leaf_offsets, "{tag}: leaf_offsets");
+    assert_eq!(loaded.forest.inbag, forest.inbag, "{tag}: inbag");
+    assert_eq!(
+        bits(&loaded.forest.tree_weights),
+        bits(&forest.tree_weights),
+        "{tag}: tree_weights"
+    );
+    assert_eq!(loaded.forest.n_classes, forest.n_classes, "{tag}: n_classes");
+    assert_eq!(
+        loaded.forest.init_score.to_bits(),
+        forest.init_score.to_bits(),
+        "{tag}: init_score"
+    );
+    assert_eq!(loaded.forest.binner.n_bins, forest.binner.n_bins, "{tag}: n_bins");
+    assert_eq!(loaded.forest.binner.edges.len(), forest.binner.edges.len(), "{tag}: edges");
+    for (a, b) in loaded.forest.binner.edges.iter().zip(&forest.binner.edges) {
+        assert_eq!(bits(a), bits(b), "{tag}: bin edges");
+    }
+
+    // Context round-trips exactly.
+    assert_eq!(loaded.kernel.ctx.n, kernel.ctx.n, "{tag}: ctx.n");
+    assert_eq!(loaded.kernel.ctx.t, kernel.ctx.t, "{tag}: ctx.t");
+    assert_eq!(loaded.kernel.ctx.l, kernel.ctx.l, "{tag}: ctx.l");
+    assert_eq!(loaded.kernel.ctx.leaf_of, kernel.ctx.leaf_of, "{tag}: leaf_of");
+    assert_eq!(bits(&loaded.kernel.ctx.leaf_mass), bits(&kernel.ctx.leaf_mass), "{tag}");
+    assert_eq!(bits(&loaded.kernel.ctx.inbag_mass), bits(&kernel.ctx.inbag_mass), "{tag}");
+    assert_eq!(loaded.kernel.ctx.inbag_count, kernel.ctx.inbag_count, "{tag}");
+    assert_eq!(loaded.kernel.ctx.oob_count, kernel.ctx.oob_count, "{tag}");
+    assert_eq!(loaded.kernel.ctx.y, kernel.ctx.y, "{tag}: y");
+    assert_eq!(loaded.kernel.ctx.n_classes, kernel.ctx.n_classes, "{tag}");
+
+    // Factors, cached transpose, and the full kernel product are
+    // bitwise-identical.
+    assert_eq!(loaded.kernel.symmetric, kernel.symmetric, "{tag}: symmetric");
+    assert_csr_bitwise(&loaded.kernel.q, &kernel.q, &format!("{tag}: Q"));
+    assert_csr_bitwise(&loaded.kernel.w, &kernel.w, &format!("{tag}: W"));
+    assert_csr_bitwise(
+        loaded.kernel.w_transpose(),
+        kernel.w_transpose(),
+        &format!("{tag}: Wt"),
+    );
+    assert_csr_bitwise(
+        &loaded.kernel.proximity_matrix(),
+        &kernel.proximity_matrix(),
+        &format!("{tag}: P"),
+    );
+
+    // Predictions agree exactly: training rows and fresh OOS queries
+    // routed through the loaded forest.
+    assert_eq!(predict::predict_train(&loaded.kernel), predict::predict_train(&kernel), "{tag}");
+    let queries = synth::gaussian_blobs(40, 4, kernel.ctx.n_classes, 2.2, seed ^ 0xBEEF);
+    let qn_orig = kernel.oos_query_map(&forest, &queries);
+    let qn_load = loaded.kernel.oos_query_map(&loaded.forest, &queries);
+    assert_csr_bitwise(&qn_load, &qn_orig, &format!("{tag}: Q_new"));
+    assert_eq!(
+        predict::predict_oos(&loaded.kernel, &qn_load),
+        predict::predict_oos(&kernel, &qn_orig),
+        "{tag}: OOS predictions"
+    );
+}
+
+#[test]
+fn random_forest_bundles_roundtrip_bitwise_for_all_kinds() {
+    for (i, kind) in kinds_for(ForestKind::RandomForest).into_iter().enumerate() {
+        roundtrip_one(ForestKind::RandomForest, kind, 100 + i as u64);
+    }
+}
+
+#[test]
+fn extratrees_bundles_roundtrip_bitwise() {
+    for (i, kind) in kinds_for(ForestKind::ExtraTrees).into_iter().enumerate() {
+        roundtrip_one(ForestKind::ExtraTrees, kind, 200 + i as u64);
+    }
+}
+
+#[test]
+fn gbt_bundles_roundtrip_bitwise() {
+    for (i, kind) in kinds_for(ForestKind::GradientBoosting).into_iter().enumerate() {
+        roundtrip_one(ForestKind::GradientBoosting, kind, 300 + i as u64);
+    }
+}
+
+#[test]
+fn loaded_bundle_needs_no_dataset() {
+    // The whole point of the bundle: everything (context, labels,
+    // factors) comes off disk — simulate a fresh process that only has
+    // the file and a query stream.
+    let (forest, data) = train(ForestKind::RandomForest, 7);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::RfGap);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 7, trees: 9 };
+    let path = tmpfile("no-dataset");
+    save(&path, &forest, &kernel, &meta).unwrap();
+    drop((forest, kernel, data));
+
+    let b = ModelBundle::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(b.meta.dataset, "blobs");
+    let queries = synth::gaussian_blobs(25, 4, 3, 2.2, 99);
+    let qn = b.kernel.oos_query_map(&b.forest, &queries);
+    let preds = predict::predict_oos(&b.kernel, &qn);
+    assert_eq!(preds.len(), 25);
+    assert!(preds.iter().all(|&p| p < 3));
+}

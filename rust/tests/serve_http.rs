@@ -1,0 +1,317 @@
+//! End-to-end serving: spawn the HTTP server on an ephemeral port,
+//! talk to it over real TCP, and assert the served answers are
+//! **bitwise-identical** to the in-process batch paths — `/predict`
+//! against `predict_oos` + `cross_proximity`/`scores_from_kernel`,
+//! `/neighbors` against `knn_from_kernel` (both from factors and from
+//! a materialized shard directory), `/embed` against
+//! `leaf_pca`/`leaf_pca_project`.
+
+use forest_kernels::coordinator::shard::{ShardReader, ShardSink};
+use forest_kernels::coordinator::{self, CoordinatorConfig};
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{BundleMeta, ModelBundle};
+use forest_kernels::runtime::json::Json;
+use forest_kernels::serve::{http, ServeConfig, Server};
+use forest_kernels::spectral::knn::{knn_from_kernel, rank_row};
+use forest_kernels::spectral::pca;
+use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
+use forest_kernels::Dataset;
+use std::time::Duration;
+
+const N: usize = 160;
+const D: usize = 5;
+const C: usize = 3;
+const TREES: usize = 12;
+const EMBED_DIMS: usize = 4;
+const EMBED_ITERS: usize = 20;
+const EMBED_SEED: u64 = 9;
+
+/// Deterministic model fixture: calling this twice with the same seed
+/// yields bitwise-identical forests and kernels, so one copy can go to
+/// the server while the other stays as the in-process reference.
+fn fixture(seed: u64) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, C, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    ModelBundle { forest, kernel, meta }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        embed_dims: EMBED_DIMS,
+        embed_iters: EMBED_ITERS,
+        embed_seed: EMBED_SEED,
+        ..Default::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn f32s(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .expect("expected a JSON array")
+        .iter()
+        .map(|v| match v {
+            Json::Num(x) => *x as f32,
+            other => panic!("expected a number, got {other:?}"),
+        })
+        .collect()
+}
+
+fn u32s(j: &Json) -> Vec<u32> {
+    j.as_arr()
+        .expect("expected a JSON array")
+        .iter()
+        .map(|v| v.as_usize().expect("expected an integer") as u32)
+        .collect()
+}
+
+fn row_json(data: &Dataset, i: usize) -> String {
+    let mut s = String::from("[");
+    for f in 0..data.d {
+        if f > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}", data.x(i, f)));
+    }
+    s.push(']');
+    s
+}
+
+#[test]
+fn predict_over_tcp_matches_in_process_bitwise() {
+    let reference = fixture(1);
+    let server = Server::bind(fixture(1), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let queries = synth::gaussian_blobs(12, D, C, 2.2, 555);
+    let qn = reference.kernel.oos_query_map(&reference.forest, &queries);
+    let want_preds = predict::predict_oos(&reference.kernel, &qn);
+    let cross = reference.kernel.cross_proximity(&qn);
+    let want_scores =
+        predict::scores_from_kernel(&cross, &reference.kernel.ctx.y, C).unwrap();
+
+    // Single-query requests: each must match its row of the in-process
+    // batch exactly (batch composition never changes a row's bits).
+    for i in 0..queries.n {
+        let body = format!("{{\"x\": {}}}", row_json(&queries, i));
+        let (status, resp) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+        assert_eq!(status, 200, "query {i}: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(u32s(j.get("predictions").unwrap()), vec![want_preds[i]], "query {i}");
+        let scores = f32s(&j.get("scores").unwrap().as_arr().unwrap()[0]);
+        assert_eq!(
+            bits(&scores),
+            bits(&want_scores[i * C..(i + 1) * C]),
+            "query {i}: scores differ bitwise"
+        );
+    }
+
+    // One client-side batch holding every query.
+    let mut body = String::from("{\"x\": [");
+    for i in 0..queries.n {
+        if i > 0 {
+            body.push_str(", ");
+        }
+        body.push_str(&row_json(&queries, i));
+    }
+    body.push_str("]}");
+    let (status, resp) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(u32s(j.get("predictions").unwrap()), want_preds);
+    let score_rows = j.get("scores").unwrap().as_arr().unwrap();
+    assert_eq!(score_rows.len(), queries.n);
+    for (i, row) in score_rows.iter().enumerate() {
+        assert_eq!(bits(&f32s(row)), bits(&want_scores[i * C..(i + 1) * C]), "batch row {i}");
+    }
+
+    handle.stop();
+}
+
+#[test]
+fn neighbors_row_lookups_match_knn_from_kernel_bitwise() {
+    let reference = fixture(2);
+    let k = 5;
+    // The materialized kernel is the ground truth for row lookups.
+    let (p, _) =
+        coordinator::materialize_to_csr(&reference.kernel, &CoordinatorConfig::default());
+    let g = knn_from_kernel(&p, k).unwrap();
+
+    // Mode 1: no shard directory — rows computed on the fly from the
+    // factors (the stripe product is bitwise what a shard holds).
+    let server = Server::bind(fixture(2), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+    for row in [0usize, 7, 63, N - 1] {
+        let body = format!("{{\"row\": {row}, \"k\": {k}}}");
+        let (status, resp) = http::http_request(&addr, "POST", "/neighbors", &body).unwrap();
+        assert_eq!(status, 200, "row {row}: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("source").and_then(Json::as_str), Some("factors"));
+        assert_eq!(u32s(j.get("ids").unwrap()), g.neighbors[row * k..(row + 1) * k], "row {row}");
+        assert_eq!(
+            bits(&f32s(j.get("dists").unwrap())),
+            bits(&g.dists[row * k..(row + 1) * k]),
+            "row {row}: dists differ bitwise"
+        );
+    }
+    // Out-of-range rows and degenerate k fail cleanly.
+    let (status, _) =
+        http::http_request(&addr, "POST", "/neighbors", &format!("{{\"row\": {N}}}")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        http::http_request(&addr, "POST", "/neighbors", "{\"row\": 0, \"k\": 0}").unwrap();
+    assert_eq!(status, 400);
+    handle.stop();
+
+    // Mode 2: the same lookups served from a materialized shard
+    // directory through ShardReader.
+    let dir = std::env::temp_dir()
+        .join(format!("fk-serve-shards-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sink = ShardSink::create(&dir, N, "kerf").unwrap();
+    let cc = CoordinatorConfig { stripe_rows: 48, ..Default::default() };
+    coordinator::materialize_into(&reference.kernel, &cc, &mut sink).unwrap();
+    sink.finish().unwrap();
+    let reader = ShardReader::open(&dir).unwrap();
+    let server = Server::bind(fixture(2), Some(reader), serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+    for row in [0usize, 31, 100, N - 1] {
+        let body = format!("{{\"row\": {row}, \"k\": {k}}}");
+        let (status, resp) = http::http_request(&addr, "POST", "/neighbors", &body).unwrap();
+        assert_eq!(status, 200, "row {row}: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("source").and_then(Json::as_str), Some("shards"));
+        assert_eq!(u32s(j.get("ids").unwrap()), g.neighbors[row * k..(row + 1) * k], "row {row}");
+        assert_eq!(
+            bits(&f32s(j.get("dists").unwrap())),
+            bits(&g.dists[row * k..(row + 1) * k]),
+            "row {row}: dists differ bitwise (shard mode)"
+        );
+    }
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oos_neighbors_match_cross_proximity_ranking_bitwise() {
+    let reference = fixture(3);
+    let server = Server::bind(fixture(3), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let queries = synth::gaussian_blobs(6, D, C, 2.2, 777);
+    let qn = reference.kernel.oos_query_map(&reference.forest, &queries);
+    let cross = reference.kernel.cross_proximity(&qn);
+    let k = 7;
+    for i in 0..queries.n {
+        let body = format!("{{\"x\": {}, \"k\": {k}}}", row_json(&queries, i));
+        let (status, resp) = http::http_request(&addr, "POST", "/neighbors", &body).unwrap();
+        assert_eq!(status, 200, "query {i}: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        let (cols, vals) = cross.row(i);
+        let want = rank_row(cols, vals, None, k);
+        let want_ids: Vec<u32> = want.iter().map(|&(c, _)| c).collect();
+        let want_prox: Vec<f32> = want.iter().map(|&(_, p)| p).collect();
+        assert_eq!(u32s(j.get("ids").unwrap()), want_ids, "query {i}");
+        assert_eq!(
+            bits(&f32s(j.get("proximities").unwrap())),
+            bits(&want_prox),
+            "query {i}: proximities differ bitwise"
+        );
+    }
+    handle.stop();
+}
+
+#[test]
+fn embed_matches_leaf_pca_projection_bitwise() {
+    let reference = fixture(4);
+    let server = Server::bind(fixture(4), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    // Recompute the server's startup basis: leaf_pca is deterministic
+    // in (factors, dims, iters, seed) at any thread count.
+    let (scores, vals) =
+        pca::leaf_pca(&reference.kernel.q, EMBED_DIMS, EMBED_ITERS, false, EMBED_SEED);
+    let queries = synth::gaussian_blobs(9, D, C, 2.2, 888);
+    let qn = reference.kernel.oos_query_map(&reference.forest, &queries);
+    let want = pca::leaf_pca_project(&reference.kernel.q, &scores, &vals, &qn);
+
+    let mut body = String::from("{\"x\": [");
+    for i in 0..queries.n {
+        if i > 0 {
+            body.push_str(", ");
+        }
+        body.push_str(&row_json(&queries, i));
+    }
+    body.push_str("]}");
+    let (status, resp) = http::http_request(&addr, "POST", "/embed", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("dims").and_then(Json::as_usize), Some(EMBED_DIMS));
+    let rows = j.get("coords").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), queries.n);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(
+            bits(&f32s(row)),
+            bits(&want[i * EMBED_DIMS..(i + 1) * EMBED_DIMS]),
+            "query {i}: embedding differs bitwise"
+        );
+    }
+    handle.stop();
+}
+
+#[test]
+fn health_stats_and_error_paths() {
+    let server = Server::bind(fixture(5), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let (status, resp) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+    let model = j.get("model").unwrap();
+    assert_eq!(model.get("n").and_then(Json::as_usize), Some(N));
+    assert_eq!(model.get("kind").and_then(Json::as_str), Some("kerf"));
+    assert_eq!(model.get("features").and_then(Json::as_usize), Some(D));
+
+    // Errors: unknown route, bad JSON, wrong dimension, non-class model
+    // constraints are all clean HTTP errors, not hangs or panics.
+    let (status, _) = http::http_request(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::http_request(&addr, "POST", "/predict", "{not json").unwrap();
+    assert_eq!(status, 400);
+    let (status, resp) =
+        http::http_request(&addr, "POST", "/predict", "{\"x\": [1.0, 2.0]}").unwrap();
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("features"), "unhelpful error: {resp}");
+
+    // A valid predict so /stats has something to report.
+    let q = synth::gaussian_blobs(1, D, C, 2.2, 42);
+    let body = format!("{{\"x\": {}}}", row_json(&q, 0));
+    let (status, _) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(status, 200);
+
+    let (status, resp) = http::http_request(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&resp).unwrap();
+    let reqs = j.get("requests").unwrap();
+    assert_eq!(reqs.get("healthz").and_then(Json::as_usize), Some(1));
+    assert!(reqs.get("predict").and_then(Json::as_usize).unwrap() >= 2);
+    assert!(j.get("errors").and_then(Json::as_usize).unwrap() >= 2);
+    assert!(j.get("batches").and_then(Json::as_usize).unwrap() >= 1);
+    handle.stop();
+}
