@@ -68,16 +68,21 @@
 //!   kernel bitwise-identical to the originally fitted one instead of
 //!   retraining — including each of the P `shards run` workers.
 //! * [`serve`] — the online serving subsystem: a long-running,
-//!   zero-dependency TCP server (hand-rolled minimal HTTP/1.1) over a
-//!   loaded bundle. Connection threads enqueue single queries into the
+//!   zero-dependency TCP server (hand-rolled minimal HTTP/1.1 with
+//!   **persistent keep-alive connections** — a per-connection carry
+//!   buffer keeps pipelined bytes across requests) over a loaded
+//!   bundle. Connection threads enqueue single queries into the
 //!   bounded [`exec::queue`] micro-batcher, which executes coalesced
 //!   tiles on the exec-pooled kernels; endpoints are `POST /predict`
 //!   (proximity-weighted OOS prediction), `POST /neighbors` (top-k by
 //!   proximity, from factors or a materialized shard directory),
 //!   `POST /embed` (Leaf-PCA projection), plus `GET /healthz` and
 //!   `GET /stats` (counts, batch histogram, latency percentiles).
-//!   Served answers are bitwise-identical to the in-process batch
-//!   paths.
+//!   [`serve::router`] fronts R replica serve processes behind one
+//!   address over pooled keep-alive connections: round-robin for OOS
+//!   queries, row-range ownership for `/neighbors` row lookups,
+//!   fleet-merged `/stats`. Served and routed answers are
+//!   bitwise-identical to the in-process batch paths.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.

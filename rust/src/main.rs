@@ -97,13 +97,22 @@ Pipeline commands:
            [--model model.fkb --queries 1000]
   embed    --dataset pbmc --n 5000 [--pca-dims 24] [--model model.fkb --queries 1000]
   serve    --model model.fkb [--addr 127.0.0.1:7878] [--batch 32]
-           [--linger-ms 2] [--shards DIR] [--embed-dims 8]
-           (long-running HTTP server over real TCP: POST /predict,
-            /neighbors, /embed + GET /healthz, /stats; single queries
-            are micro-batched into exec-pool tiles; answers are
-            bitwise-identical to the in-process batch paths; --shards
-            serves /neighbors row lookups from a materialized shard
-            directory)
+           [--linger-ms 2] [--shards DIR] [--embed-dims 8] [--replicas R]
+           (long-running HTTP/1.1 keep-alive server over real TCP:
+            POST /predict, /neighbors, /embed + GET /healthz, /stats;
+            single queries are micro-batched into exec-pool tiles;
+            answers are bitwise-identical to the in-process batch
+            paths; --shards serves /neighbors row lookups from a
+            materialized shard directory; --replicas R spawns R serve
+            processes on ephemeral ports and fronts them with the
+            replica router on --addr)
+  route    --backends host:port,host:port,... [--addr 127.0.0.1:7979]
+           (replica router over already-running serve processes: health-
+            checks the backends at bind, round-robins /predict, /embed,
+            and OOS /neighbors over pooled keep-alive connections, pins
+            /neighbors row lookups to the row-range owner, and merges
+            GET /stats across the fleet; routed responses are byte-
+            identical to direct ones)
   materialize --dataset covertype --n 20000 --method kerf
               --sink csr|shards|topk|topk-shards [--out kernel-shards]
               [--mem-budget 256M | --stripe-rows 4096]
@@ -148,10 +157,16 @@ Paper harnesses (DESIGN.md experiment index):
                   number of worker partitions, plus the bundle
                   fit-vs-load speedup a --model worker enjoys)
   bench-serve    [--n 4000 --trees 16 --queries 256] [--batches 1,4,16]
-                 [--clients 1,2,4] [--json-out BENCH_serve.json]
+                 [--clients 1,2,4] [--transports close,keepalive]
+                 [--route-replicas R] [--json-out BENCH_serve.json]
                  (spawn the HTTP server on an ephemeral port and measure
                   /predict QPS + latency percentiles vs client-side
-                  batch size × client thread count)
+                  batch size × client thread count; `close` opens a
+                  connection per request, `keepalive` reuses one per
+                  client thread; the close baseline always runs — it
+                  prices the speedup the other modes record;
+                  --route-replicas R adds a `routed` mode through the
+                  replica router over R in-process servers)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
 ";
@@ -182,6 +197,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "predict" => cmd_predict(args),
         "embed" => cmd_embed(args),
         "serve" => cmd_serve(args),
+        "route" => cmd_route(args),
         "materialize" => cmd_materialize(args),
         "shards" => cmd_shards(args),
         "bench-materialize" => cmd_bench_materialize(args),
@@ -498,8 +514,13 @@ fn cmd_embed(args: &Args) -> Result<()> {
 
 /// The long-running online server (replacing the old one-shot batch
 /// demo, which lives on as `examples/oos_serving.rs`, the XLA-tile
-/// counterpart of this endpoint set).
+/// counterpart of this endpoint set). `--replicas R` switches to the
+/// replicated topology: R serve processes behind the router.
 fn cmd_serve(args: &Args) -> Result<()> {
+    let replicas = args.usize_or("replicas", 1);
+    if replicas >= 2 {
+        return cmd_serve_replicated(args, replicas);
+    }
     let bundle = load_or_fit(args)?;
     let shards = match args.get("shards") {
         Some(dir) => Some(ShardReader::open(Path::new(dir))?),
@@ -519,6 +540,145 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /embed      {{\"x\": [f32; d] | [[f32; d], ..]}}");
     println!("  GET  /healthz    GET /stats");
     server.run()
+}
+
+/// Spawn one serve replica on an ephemeral port and parse its bound
+/// address off the first "serving on http://…" stdout line. The rest
+/// of the child's stdout is drained on a background thread so its
+/// prints can never fill the pipe and block it.
+fn spawn_replica(
+    exe: &Path,
+    args: &Args,
+    model_path: &Path,
+) -> Result<(std::process::Child, String)> {
+    use std::io::BufRead;
+    let mut c = std::process::Command::new(exe);
+    c.arg("serve").arg("--model").arg(model_path).arg("--addr").arg("127.0.0.1:0");
+    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads"] {
+        if let Some(v) = args.get(key) {
+            c.arg(format!("--{key}")).arg(v);
+        }
+    }
+    c.stdout(std::process::Stdio::piped());
+    let mut child = c.spawn().context("spawning a serve replica")?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let mut addr = None;
+    for line in lines.by_ref() {
+        let line = line.context("reading replica stdout")?;
+        if let Some(a) = line.strip_prefix("serving on http://") {
+            addr = Some(a.trim().to_string());
+            break;
+        }
+    }
+    let Some(addr) = addr else {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("serve replica exited before announcing its address");
+    };
+    std::thread::spawn(move || for _ in lines {});
+    Ok((child, addr))
+}
+
+/// `serve --replicas R`: persist the bundle once (the replication
+/// unit), spawn R serve processes that each load it, then run the
+/// replica router in this process on `--addr`.
+fn cmd_serve_replicated(args: &Args, replicas: usize) -> Result<()> {
+    let exe = std::env::current_exe().context("resolving the repro binary path")?;
+    // A bundle written here (no --model) is ours to delete once every
+    // replica has loaded it; a user-supplied --model is not.
+    let mut temp_model = None;
+    let model_path = match args.get("model") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let bundle = load_or_fit(args)?;
+            let p = std::env::temp_dir()
+                .join(format!("fk-serve-model-{}.fkb", std::process::id()));
+            let bytes = bundle.save(&p)?;
+            println!(
+                "wrote {} ({:.1} MB) — fit once, loaded by {replicas} replica(s)",
+                p.display(),
+                bytes as f64 / 1e6
+            );
+            temp_model = Some(p.clone());
+            p
+        }
+    };
+    let mut children: Vec<std::process::Child> = Vec::with_capacity(replicas);
+    let kill_all = |children: &mut Vec<std::process::Child>| {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    };
+    let cleanup = |children: &mut Vec<std::process::Child>| {
+        kill_all(children);
+        if let Some(p) = &temp_model {
+            std::fs::remove_file(p).ok();
+        }
+    };
+    let mut backends = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        match spawn_replica(&exe, args, &model_path) {
+            Ok((child, addr)) => {
+                println!("replica {i} serving on http://{addr}");
+                children.push(child);
+                backends.push(addr);
+            }
+            Err(e) => {
+                cleanup(&mut children);
+                return Err(e);
+            }
+        }
+    }
+    // Every replica printed its address, which happens only after its
+    // bundle finished loading — the temp file has served its purpose.
+    if let Some(p) = &temp_model {
+        std::fs::remove_file(p).ok();
+    }
+    let cfg = serve::router::RouterConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878").to_string(),
+        backends,
+    };
+    let router = match serve::router::Router::bind(cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            kill_all(&mut children);
+            return Err(e);
+        }
+    };
+    println!("routing on http://{} -> {replicas} replica(s)", router.addr());
+    println!("  /predict /embed + OOS /neighbors: round-robin");
+    println!("  /neighbors row lookups: row-range owner");
+    println!("  GET /stats: merged across the fleet");
+    let out = router.run();
+    kill_all(&mut children);
+    out
+}
+
+/// `repro route --backends a,b,c`: the replica router over serve
+/// processes that are already running (started by hand, by `serve
+/// --replicas`, or on other machines — the bundle file is the only
+/// thing replicas share).
+fn cmd_route(args: &Args) -> Result<()> {
+    let backends: Vec<String> = args
+        .get("backends")
+        .ok_or_else(|| anyhow!("route needs --backends host:port,host:port,..."))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cfg = serve::router::RouterConfig {
+        addr: args.str_or("addr", "127.0.0.1:7979").to_string(),
+        backends,
+    };
+    let router = serve::router::Router::bind(cfg)?;
+    let owners = router.backends();
+    println!("routing on http://{} -> {} backend(s)", router.addr(), owners.len());
+    for (i, b) in owners.iter().enumerate() {
+        println!("  backend {i}: {b}");
+    }
+    router.run()
 }
 
 /// Parse a byte size with an optional K/M/G suffix (binary multiples).
@@ -1190,10 +1350,67 @@ fn cmd_bench_shard_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drive `/predict` with `clients` real TCP client threads over a
+/// shared work queue of pre-rendered bodies. `keepalive` chooses the
+/// transport: one persistent connection per thread, or a fresh
+/// connection per request (the close baseline). Returns the wall time
+/// and the sorted per-request latencies.
+fn drive_predict(
+    addr: &std::net::SocketAddr,
+    bodies: &[String],
+    clients: usize,
+    keepalive: bool,
+    label: &str,
+) -> Result<(f64, Vec<f64>)> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let lat: std::sync::Mutex<Vec<f64>> =
+        std::sync::Mutex::new(Vec::with_capacity(bodies.len()));
+    let next = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                let mut client = keepalive.then(|| serve::http::HttpClient::new(*addr));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= bodies.len() {
+                        break;
+                    }
+                    let t = std::time::Instant::now();
+                    let out = match client.as_mut() {
+                        Some(cl) => cl.request("POST", "/predict", &bodies[i]),
+                        None => serve::http::http_request(addr, "POST", "/predict", &bodies[i]),
+                    };
+                    match out {
+                        Ok((200, _)) => lat.lock().unwrap().push(t.elapsed().as_secs_f64()),
+                        _ => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let nfail = failed.load(Ordering::Relaxed);
+    if nfail > 0 {
+        bail!("bench-serve: {nfail} request(s) failed ({label})");
+    }
+    let mut lats = lat.into_inner().unwrap();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok((wall, lats))
+}
+
 /// Spawn the HTTP server in-process on an ephemeral port and drive
 /// `/predict` with real TCP clients: QPS + latency percentiles across
-/// client-side batch size × client thread count, emitted as
-/// `BENCH_serve.json` next to the other bench artifacts.
+/// client-side batch size × client thread count × transport
+/// (connection-per-request `close` vs pooled `keepalive`, plus a
+/// `routed` mode through the replica router when `--route-replicas R`
+/// is given), emitted as `BENCH_serve.json` next to the other bench
+/// artifacts. The close-vs-keepalive pair at batch 1 is the headline:
+/// it prices the per-query TCP connect/teardown the keep-alive
+/// transport amortizes away.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 4_000);
     let trees = args.usize_or("trees", 16);
@@ -1213,9 +1430,50 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         args.str_or("batches", "1,4,16").split(',').filter_map(|s| s.parse().ok()).collect();
     let clients: Vec<usize> =
         args.str_or("clients", "1,2,4").split(',').filter_map(|s| s.parse().ok()).collect();
+    let transports: Vec<String> = args
+        .str_or("transports", "close,keepalive")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for t in &transports {
+        if t != "close" && t != "keepalive" {
+            bail!("unknown transport {t} (close|keepalive)");
+        }
+    }
+    let route_replicas = args.usize_or("route-replicas", 0);
+
+    let bundle = ModelBundle { forest, kernel, meta };
+    // The routed fleet loads the persisted bundle — bitwise the same
+    // model, exactly the production replication path.
+    let mut replica_handles = vec![];
+    let mut router_handle = None;
+    let mut router_addr = None;
+    if route_replicas >= 2 {
+        let model_path = std::env::temp_dir()
+            .join(format!("fk-bench-serve-model-{}.fkb", std::process::id()));
+        bundle.save(&model_path)?;
+        let mut backend_addrs = Vec::with_capacity(route_replicas);
+        for _ in 0..route_replicas {
+            let replica = serve::Server::bind(
+                ModelBundle::load(&model_path)?,
+                None,
+                ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+            )?;
+            backend_addrs.push(replica.addr().to_string());
+            replica_handles.push(replica.spawn());
+        }
+        std::fs::remove_file(&model_path).ok();
+        let router = serve::router::Router::bind(serve::router::RouterConfig {
+            addr: "127.0.0.1:0".into(),
+            backends: backend_addrs,
+        })?;
+        router_addr = Some(router.addr());
+        router_handle = Some(router.spawn());
+    }
 
     let server = serve::Server::bind(
-        ModelBundle { forest, kernel, meta },
+        bundle,
         None,
         ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
     )?;
@@ -1227,8 +1485,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         bail!("warm-up /healthz returned {status}");
     }
 
+    // Canonical transport order, fixed across the whole sweep. The
+    // close baseline ALWAYS runs first — even when --transports omits
+    // it — because every other mode's speedup-vs-close in the artifact
+    // must be priced against a measured wall time, never a silent 1.0.
+    let mut modes: Vec<(&str, std::net::SocketAddr, bool)> = vec![("close", addr, false)];
+    if transports.iter().any(|t| t == "keepalive") {
+        modes.push(("keepalive", addr, true));
+    }
+    if let Some(raddr) = router_addr {
+        modes.push(("routed", raddr, true));
+    }
+
     println!("# serve throughput (dataset={dataset} N={n} T={trees} queries={total_queries})");
-    println!("batch\tclients\tsecs\tq/s\tp50_ms\tp95_ms\tp99_ms");
+    println!("batch\tclients\ttransport\tsecs\tq/s\tp50_ms\tp95_ms\tp99_ms");
     let mut records: Vec<BenchRecord> = vec![];
     for &b in &batches {
         let b = b.max(1);
@@ -1258,66 +1528,52 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             .collect();
         for &c in &clients {
             let c = c.max(1);
-            let lat: std::sync::Mutex<Vec<f64>> =
-                std::sync::Mutex::new(Vec::with_capacity(bodies.len()));
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            let failed = std::sync::atomic::AtomicUsize::new(0);
-            let t0 = std::time::Instant::now();
-            std::thread::scope(|scope| {
-                for _ in 0..c {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= bodies.len() {
-                            break;
-                        }
-                        let t = std::time::Instant::now();
-                        match serve::http::http_request(&addr, "POST", "/predict", &bodies[i]) {
-                            Ok((200, _)) => {
-                                lat.lock().unwrap().push(t.elapsed().as_secs_f64())
-                            }
-                            _ => {
-                                failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            }
-                        }
-                    });
+            // The close baseline's wall time prices every other
+            // transport at this (batch, clients) point: the QPS record
+            // carries speedup-vs-close directly in the artifact.
+            let mut close_wall: Option<f64> = None;
+            for &(mode, target, keepalive) in &modes {
+                let label = format!("batch={b}, clients={c}, transport={mode}");
+                let (wall, lats) = drive_predict(&target, &bodies, c, keepalive, &label)?;
+                if mode == "close" {
+                    close_wall = Some(wall);
                 }
-            });
-            let wall = t0.elapsed().as_secs_f64();
-            let nfail = failed.load(std::sync::atomic::Ordering::Relaxed);
-            if nfail > 0 {
-                bail!("bench-serve: {nfail} request(s) failed (batch={b}, clients={c})");
-            }
-            let mut lats = lat.into_inner().unwrap();
-            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let pct = |q: f64| lats[(((lats.len() - 1) as f64) * q).round() as usize];
-            let qps = total_queries as f64 / wall.max(1e-9);
-            println!(
-                "{b}\t{c}\t{wall:.3}\t{qps:.0}\t{:.2}\t{:.2}\t{:.2}",
-                pct(0.5) * 1e3,
-                pct(0.95) * 1e3,
-                pct(0.99) * 1e3
-            );
-            records.push(BenchRecord {
-                name: format!("serve-predict/B={b}/clients={c}"),
-                n: total_queries,
-                wall_secs: wall,
-                predicted_flops: 0,
-                threads: c,
-                speedup_vs_serial: 1.0,
-            });
-            for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                let pct = |q: f64| lats[(((lats.len() - 1) as f64) * q).round() as usize];
+                let qps = total_queries as f64 / wall.max(1e-9);
+                println!(
+                    "{b}\t{c}\t{mode}\t{wall:.3}\t{qps:.0}\t{:.2}\t{:.2}\t{:.2}",
+                    pct(0.5) * 1e3,
+                    pct(0.95) * 1e3,
+                    pct(0.99) * 1e3
+                );
                 records.push(BenchRecord {
-                    name: format!("serve-predict-latency/B={b}/clients={c}/{tag}"),
-                    n: b,
-                    wall_secs: pct(q),
+                    name: format!("serve-predict/B={b}/clients={c}/{mode}"),
+                    n: total_queries,
+                    wall_secs: wall,
                     predicted_flops: 0,
                     threads: c,
-                    speedup_vs_serial: 1.0,
+                    speedup_vs_serial: close_wall.map_or(1.0, |cw| cw / wall),
                 });
+                for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                    records.push(BenchRecord {
+                        name: format!("serve-predict-latency/B={b}/clients={c}/{mode}/{tag}"),
+                        n: b,
+                        wall_secs: pct(q),
+                        predicted_flops: 0,
+                        threads: c,
+                        speedup_vs_serial: 1.0,
+                    });
+                }
             }
         }
     }
     handle.stop();
+    if let Some(rh) = router_handle {
+        rh.stop();
+    }
+    for rh in replica_handles {
+        rh.stop();
+    }
     if let Some(path) = args.get("json-out") {
         write_bench_json(std::path::Path::new(path), &records)?;
         println!("wrote {} records to {path}", records.len());

@@ -1,139 +1,383 @@
 //! Hand-rolled minimal HTTP/1.1 — just enough for the serving layer.
 //!
 //! The offline vendor set has no hyper/tiny-http, so this module
-//! implements the slice the server and its bench/test clients need:
-//! request-line + header parsing with `Content-Length` bodies on the
-//! server side, and a one-shot `Connection: close` client. Chunked
-//! transfer encoding, pipelining, and keep-alive are deliberately out
-//! of scope (keep-alive pooling is queued in the ROADMAP).
+//! implements the slice the server, the replica router, and their
+//! bench/test clients need: request-line + header parsing with
+//! `Content-Length` bodies, **persistent keep-alive connections** on
+//! both sides, and a thread-safe connection pool. Chunked transfer
+//! encoding and HTTP/2 are deliberately out of scope.
+//!
+//! The load-bearing piece is [`ConnReader`]: a per-connection buffer
+//! that carries over-read bytes across requests. A single
+//! `stream.read` may return the tail of one request *plus* the head of
+//! the next (two small requests routinely land in one TCP segment);
+//! dropping that tail — what the old one-shot reader did — corrupts
+//! the stream the moment two requests share a connection, which is why
+//! keep-alive was previously impossible.
 
 use crate::error::Result;
 use crate::{anyhow, bail};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
 
 /// Maximum accepted header block (64 KB) and body (64 MB).
 const MAX_HEADER: usize = 64 * 1024;
 const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// Client-side connect/read/write timeouts — the mirror of the
+/// server's per-connection `IO_TIMEOUT`. Without these, a backend that
+/// accepts but never answers (stopped process, deadlocked batcher)
+/// would hang the caller forever and the router's failover could never
+/// trigger: only an I/O error lets it move to the next replica.
+const CLIENT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Open a client connection with the timeout discipline applied.
+fn connect(addr: &SocketAddr) -> std::io::Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(addr, CLIENT_IO_TIMEOUT)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(CLIENT_IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT)).ok();
+    Ok(stream)
+}
 
 /// One parsed request.
 pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Whether the peer asked to keep the connection open after this
+    /// request: the HTTP/1.1 default, overridden by
+    /// `Connection: close`; HTTP/1.0 closes unless it sends an
+    /// explicit `Connection: keep-alive`.
+    pub keep_alive: bool,
 }
 
 fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-/// Read one request from the stream. `Ok(None)` means the peer closed
-/// the connection cleanly before sending anything.
-pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
-    let mut tmp = [0u8; 4096];
-    let header_end = loop {
-        if let Some(pos) = find_subsequence(&buf, b"\r\n\r\n") {
-            break pos;
-        }
-        if buf.len() > MAX_HEADER {
-            bail!("request header exceeds {MAX_HEADER} bytes");
-        }
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            if buf.is_empty() {
-                return Ok(None);
-            }
-            bail!("connection closed mid-header");
-        }
-        buf.extend_from_slice(&tmp[..n]);
-    };
-    let header = std::str::from_utf8(&buf[..header_end])
-        .map_err(|_| anyhow!("request header is not UTF-8"))?;
-    let mut lines = header.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    if method.is_empty() || path.is_empty() {
-        bail!("malformed request line {request_line:?}");
-    }
-    let mut content_len = 0usize;
-    for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_len = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow!("bad Content-Length {:?}", v.trim()))?;
-            }
-        }
-    }
-    if content_len > MAX_BODY {
-        bail!("request body of {content_len} bytes exceeds {MAX_BODY}");
-    }
-    let mut body = buf[header_end + 4..].to_vec();
-    while body.len() < content_len {
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            bail!("connection closed mid-body ({} of {content_len} bytes)", body.len());
-        }
-        body.extend_from_slice(&tmp[..n]);
-    }
-    body.truncate(content_len);
-    Ok(Some(Request { method, path, body }))
+/// Per-connection read buffer. Every read appends here and every
+/// parsed message drains exactly its own bytes, so anything the kernel
+/// delivered past the current message — the start of a pipelined next
+/// request — is waiting in `buf` for the next parse instead of being
+/// discarded with the temporary read buffer.
+pub struct ConnReader {
+    buf: Vec<u8>,
 }
 
-/// Write a full response and flush. Every response closes the
-/// connection (`Connection: close`) — one request per connection.
+impl Default for ConnReader {
+    fn default() -> Self {
+        ConnReader::new()
+    }
+}
+
+impl ConnReader {
+    pub fn new() -> ConnReader {
+        ConnReader { buf: Vec::with_capacity(1024) }
+    }
+
+    /// Block until at least one byte of the next message is buffered.
+    /// `Ok(false)` means the peer closed cleanly with nothing pending —
+    /// the normal end of a keep-alive connection. Lets callers separate
+    /// idle keep-alive time (not request latency) from request time.
+    pub fn await_data(&mut self, stream: &mut TcpStream) -> Result<bool> {
+        if !self.buf.is_empty() {
+            return Ok(true);
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Ok(false);
+        }
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(true)
+    }
+
+    /// Fill until the `\r\n\r\n` header terminator is buffered and
+    /// return its position. `Ok(None)` on clean EOF with an empty
+    /// buffer.
+    fn fill_header(&mut self, stream: &mut TcpStream) -> Result<Option<usize>> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(pos) = find_subsequence(&self.buf, b"\r\n\r\n") {
+                return Ok(Some(pos));
+            }
+            if self.buf.len() > MAX_HEADER {
+                bail!("message header exceeds {MAX_HEADER} bytes");
+            }
+            let n = stream.read(&mut tmp)?;
+            if n == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-header");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Fill until `total` bytes are buffered (header + body).
+    fn fill_body(&mut self, stream: &mut TcpStream, total: usize) -> Result<()> {
+        let mut tmp = [0u8; 4096];
+        while self.buf.len() < total {
+            let n = stream.read(&mut tmp)?;
+            if n == 0 {
+                bail!("connection closed mid-body ({} of {total} bytes)", self.buf.len());
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+        Ok(())
+    }
+
+    /// Read one request. `Ok(None)` means the peer closed the
+    /// connection cleanly before sending anything (end of keep-alive).
+    /// Over-read bytes stay buffered for the next call.
+    pub fn read_request(&mut self, stream: &mut TcpStream) -> Result<Option<Request>> {
+        let header_end = match self.fill_header(stream)? {
+            Some(pos) => pos,
+            None => return Ok(None),
+        };
+        let header = std::str::from_utf8(&self.buf[..header_end])
+            .map_err(|_| anyhow!("request header is not UTF-8"))?;
+        let mut lines = header.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1");
+        if method.is_empty() || path.is_empty() {
+            bail!("malformed request line {request_line:?}");
+        }
+        let mut content_len = 0usize;
+        let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                let k = k.trim();
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_len = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad Content-Length {:?}", v.trim()))?;
+                } else if k.eq_ignore_ascii_case("connection") {
+                    let v = v.trim();
+                    if v.eq_ignore_ascii_case("close") {
+                        keep_alive = false;
+                    } else if v.eq_ignore_ascii_case("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+            }
+        }
+        if content_len > MAX_BODY {
+            bail!("request body of {content_len} bytes exceeds {MAX_BODY}");
+        }
+        let body_start = header_end + 4;
+        self.fill_body(stream, body_start + content_len)?;
+        let body = self.buf[body_start..body_start + content_len].to_vec();
+        // Drain exactly this request; a pipelined successor stays put.
+        self.buf.drain(..body_start + content_len);
+        Ok(Some(Request { method, path, body, keep_alive }))
+    }
+}
+
+/// Write a full response and flush. `keep_alive` echoes the client's
+/// wish back as `Connection: keep-alive`/`close` so both sides agree
+/// on the connection's fate.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
     body: &str,
+    keep_alive: bool,
 ) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
 }
 
-/// One-shot client: send `method path` with a JSON body, read the full
-/// response (the server closes the connection), return
-/// `(status, body)`. Shared by `bench-serve` and the end-to-end tests.
+fn send_request(
+    stream: &mut TcpStream,
+    addr: &SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()
+}
+
+/// Read one `Content-Length`-framed response off `stream` through the
+/// carry buffer; returns `(status, body, server_keeps_alive)`. Framed
+/// reads (not `read_to_end`) are what make response boundaries visible
+/// on a connection that stays open.
+pub fn read_response(
+    stream: &mut TcpStream,
+    reader: &mut ConnReader,
+) -> Result<(u16, String, bool)> {
+    let header_end = reader
+        .fill_header(stream)?
+        .ok_or_else(|| anyhow!("connection closed before any response byte"))?;
+    let header = std::str::from_utf8(&reader.buf[..header_end])
+        .map_err(|_| anyhow!("response header is not UTF-8"))?;
+    let mut lines = header.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+    let mut content_len: Option<usize> = None;
+    let mut keep_alive = true;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad response Content-Length {:?}", v.trim()))?,
+                );
+            } else if k.eq_ignore_ascii_case("connection")
+                && v.trim().eq_ignore_ascii_case("close")
+            {
+                keep_alive = false;
+            }
+        }
+    }
+    let content_len =
+        content_len.ok_or_else(|| anyhow!("response has no Content-Length header"))?;
+    if content_len > MAX_BODY {
+        bail!("response body of {content_len} bytes exceeds {MAX_BODY}");
+    }
+    let body_start = header_end + 4;
+    reader.fill_body(stream, body_start + content_len)?;
+    let body = String::from_utf8(reader.buf[body_start..body_start + content_len].to_vec())
+        .map_err(|_| anyhow!("response body is not UTF-8"))?;
+    reader.buf.drain(..body_start + content_len);
+    Ok((status, body, keep_alive))
+}
+
+/// One-shot client: open a fresh connection, send `Connection: close`,
+/// read the framed response, return `(status, body)`. The
+/// connection-per-request baseline `bench-serve` measures keep-alive
+/// against; tests use it wherever connection reuse is irrelevant.
 pub fn http_request(
     addr: &SocketAddr,
     method: &str,
     path: &str,
     body: &str,
 ) -> Result<(u16, String)> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_nodelay(true).ok();
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(req.as_bytes())?;
-    let mut buf = Vec::new();
-    stream.read_to_end(&mut buf)?;
-    let header_end = find_subsequence(&buf, b"\r\n\r\n")
-        .ok_or_else(|| anyhow!("response has no header terminator"))?;
-    let header = std::str::from_utf8(&buf[..header_end])
-        .map_err(|_| anyhow!("response header is not UTF-8"))?;
-    let status_line = header.split("\r\n").next().unwrap_or("");
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
-    let body = String::from_utf8(buf[header_end + 4..].to_vec())
-        .map_err(|_| anyhow!("response body is not UTF-8"))?;
+    let mut stream = connect(addr)?;
+    send_request(&mut stream, addr, method, path, body, false)?;
+    let mut reader = ConnReader::new();
+    let (status, body, _) = read_response(&mut stream, &mut reader)?;
     Ok((status, body))
+}
+
+/// A persistent keep-alive client: one TCP connection reused across
+/// requests, transparently re-established when the server closes it
+/// (idle reaping, restart). The retry-on-reuse is safe for this API —
+/// every endpoint is a read — and only fires when the *reused*
+/// connection fails, never twice on a fresh one.
+pub struct HttpClient {
+    addr: SocketAddr,
+    conn: Option<(TcpStream, ConnReader)>,
+}
+
+impl HttpClient {
+    pub fn new(addr: SocketAddr) -> HttpClient {
+        HttpClient { addr, conn: None }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        if self.conn.is_none() {
+            self.conn = Some((connect(&self.addr)?, ConnReader::new()));
+        }
+        let (stream, reader) = self.conn.as_mut().unwrap();
+        let addr = self.addr;
+        send_request(stream, &addr, method, path, body, true)?;
+        let (status, resp, server_keeps) = read_response(stream, reader)?;
+        if !server_keeps {
+            self.conn = None;
+        }
+        Ok((status, resp))
+    }
+
+    /// Send one request on the pooled connection and read its framed
+    /// response. A failure on a reused connection drops it and retries
+    /// exactly once on a fresh one.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let reused = self.conn.is_some();
+        match self.try_request(method, path, body) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.conn = None;
+                if !reused {
+                    return Err(e);
+                }
+                let out = self.try_request(method, path, body);
+                if out.is_err() {
+                    // Leave no half-read connection behind.
+                    self.conn = None;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Thread-safe pool of keep-alive connections to one address: threads
+/// check a connection out per request and return it on success, so
+/// concurrent callers never share a stream mid-message and broken
+/// connections are simply dropped. Grows to the caller concurrency.
+pub struct ClientPool {
+    addr: SocketAddr,
+    idle: Mutex<Vec<HttpClient>>,
+}
+
+impl ClientPool {
+    pub fn new(addr: SocketAddr) -> ClientPool {
+        ClientPool { addr, idle: Mutex::new(Vec::new()) }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run one request on a pooled connection (creating one when all
+    /// are busy); the connection returns to the pool only on success.
+    pub fn request(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let mut client = self
+            .idle
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| HttpClient::new(self.addr));
+        let out = client.request(method, path, body);
+        if out.is_ok() {
+            self.idle.lock().unwrap().push(client);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -141,17 +385,44 @@ mod tests {
     use super::*;
     use std::net::TcpListener;
 
+    fn echo_server(
+        listener: TcpListener,
+        requests: usize,
+    ) -> std::thread::JoinHandle<Vec<(String, String)>> {
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut reader = ConnReader::new();
+            let mut seen = vec![];
+            for _ in 0..requests {
+                let req = match reader.read_request(&mut stream).unwrap() {
+                    Some(r) => r,
+                    None => break,
+                };
+                let keep = req.keep_alive;
+                seen.push((req.path.clone(), String::from_utf8(req.body).unwrap()));
+                let body = format!("{{\"path\": \"{}\"}}", req.path);
+                write_response(&mut stream, 200, "OK", &body, keep).unwrap();
+                if !keep {
+                    break;
+                }
+            }
+            seen
+        })
+    }
+
     #[test]
-    fn request_roundtrip_over_loopback() {
+    fn one_shot_roundtrip_over_loopback() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (mut stream, _) = listener.accept().unwrap();
-            let req = read_request(&mut stream).unwrap().unwrap();
+            let mut reader = ConnReader::new();
+            let req = reader.read_request(&mut stream).unwrap().unwrap();
             assert_eq!(req.method, "POST");
             assert_eq!(req.path, "/echo");
+            assert!(!req.keep_alive, "one-shot client must ask for close");
             let body = String::from_utf8(req.body).unwrap();
-            write_response(&mut stream, 200, "OK", &body).unwrap();
+            write_response(&mut stream, 200, "OK", &body, false).unwrap();
         });
         let (status, body) = http_request(&addr, "POST", "/echo", "{\"x\": [1, 2]}").unwrap();
         assert_eq!(status, 200);
@@ -165,9 +436,92 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (mut stream, _) = listener.accept().unwrap();
-            assert!(read_request(&mut stream).unwrap().is_none());
+            assert!(ConnReader::new().read_request(&mut stream).unwrap().is_none());
         });
         drop(TcpStream::connect(addr).unwrap());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn keep_alive_client_reuses_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // The server thread accepts exactly ONE connection; if the
+        // client reconnected per request, later requests would hang or
+        // fail instead of being answered.
+        let server = echo_server(listener, 3);
+        let mut client = HttpClient::new(addr);
+        for i in 0..3 {
+            let (status, body) =
+                client.request("POST", &format!("/r{i}"), &format!("{{\"i\": {i}}}")).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, format!("{{\"path\": \"/r{i}\"}}"));
+        }
+        let seen = server.join().unwrap();
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[2], ("/r2".to_string(), "{\"i\": 2}".to_string()));
+    }
+
+    #[test]
+    fn two_requests_in_one_segment_are_both_served() {
+        // The carried-buffer regression: both requests land in the
+        // server's buffer in ONE read; the old reader discarded the
+        // second one with the bytes past Content-Length.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = echo_server(listener, 2);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        let one = "POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let two = "POST /b HTTP/1.1\r\nContent-Length: 3\r\nConnection: close\r\n\r\nbye";
+        stream.write_all(format!("{one}{two}").as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut reader = ConnReader::new();
+        let (s1, b1, keep1) = read_response(&mut stream, &mut reader).unwrap();
+        let (s2, b2, keep2) = read_response(&mut stream, &mut reader).unwrap();
+        assert_eq!((s1, b1.as_str(), keep1), (200, "{\"path\": \"/a\"}", true));
+        assert_eq!((s2, b2.as_str(), keep2), (200, "{\"path\": \"/b\"}", false));
+        let seen = server.join().unwrap();
+        assert_eq!(seen, vec![
+            ("/a".to_string(), "hi".to_string()),
+            ("/b".to_string(), "bye".to_string()),
+        ]);
+    }
+
+    #[test]
+    fn client_reconnects_when_server_closes_between_requests() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // A server that closes after every response despite the
+        // client's keep-alive wish (Connection: close in the reply).
+        let server = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (mut stream, _) = listener.accept().unwrap();
+                let mut reader = ConnReader::new();
+                let req = reader.read_request(&mut stream).unwrap().unwrap();
+                write_response(&mut stream, 200, "OK", "{}", false).unwrap();
+                drop(req);
+            }
+        });
+        let mut client = HttpClient::new(addr);
+        assert_eq!(client.request("GET", "/x", "").unwrap().0, 200);
+        // The client saw Connection: close, so the second request
+        // opens a fresh connection instead of writing into a corpse.
+        assert_eq!(client.request("GET", "/y", "").unwrap().0, 200);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn http_10_defaults_to_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = ConnReader::new().read_request(&mut stream).unwrap().unwrap();
+            assert!(!req.keep_alive);
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /z HTTP/1.0\r\nContent-Length: 0\r\n\r\n").unwrap();
         server.join().unwrap();
     }
 }

@@ -7,7 +7,13 @@
 //! module turns that observation into a deployable server:
 //!
 //! * **Transport** — hand-rolled minimal HTTP/1.1 ([`http`]; the crate
-//!   is dependency-free by policy), one request per connection.
+//!   is dependency-free by policy) with persistent keep-alive
+//!   connections: a per-connection [`http::ConnReader`] carries
+//!   over-read bytes across requests, so sub-millisecond queries pay
+//!   the TCP connect/teardown once per *client*, not once per query.
+//! * **Replica routing** — [`router`] fronts R identical serve
+//!   processes (the `model.fkb` bundle is the replication unit) behind
+//!   one address over pooled keep-alive connections.
 //! * **Micro-batching** — connection threads enqueue single queries
 //!   into an [`crate::exec::queue::BoundedQueue`]; a batcher thread
 //!   drains them (lingering briefly so trailing requests coalesce) and
@@ -37,6 +43,7 @@
 //! compares raw f32 bits).
 
 pub mod http;
+pub mod router;
 pub mod stats;
 
 use crate::bench_support::json_escape;
@@ -128,13 +135,26 @@ impl ShardCache {
             .reader
             .shard_of_row(i)
             .ok_or_else(|| anyhow!("row {i} out of range"))?;
-        let mut g = self.last.lock().unwrap();
-        if g.as_ref().map(|(s, _)| *s) != Some(si) {
-            *g = Some((si, self.reader.read_stripe(si)?));
+        // Fast path: copy out of the cached stripe under the lock —
+        // the copy is a few hundred bytes, the read it avoids is disk.
+        {
+            let g = self.last.lock().unwrap();
+            if let Some((s, stripe)) = g.as_ref() {
+                if *s == si {
+                    let (c, v) = stripe.rows.row(i - stripe.row_start);
+                    return Ok((c.to_vec(), v.to_vec()));
+                }
+            }
         }
-        let (_, stripe) = g.as_ref().unwrap();
+        // Miss: do the stripe I/O with the lock RELEASED, then swap the
+        // result in. Concurrent misses on different stripes no longer
+        // serialize behind the slowest disk read; two threads missing
+        // the same stripe may both read it — wasted work, never wrong.
+        let stripe = self.reader.read_stripe(si)?;
         let (c, v) = stripe.rows.row(i - stripe.row_start);
-        Ok((c.to_vec(), v.to_vec()))
+        let out = (c.to_vec(), v.to_vec());
+        *self.last.lock().unwrap() = Some((si, stripe));
+        Ok(out)
     }
 }
 
@@ -358,70 +378,143 @@ fn run_tile(st: &ServerState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>
     }
 }
 
-/// How long a connection may sit idle mid-request/mid-response before
-/// its handler thread gives up — without this, a client that connects
-/// and sends nothing would pin a thread forever.
-const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long a connection may sit idle before its handler thread gives
+/// up — without this, a client that connects and sends nothing (or
+/// parks a keep-alive connection forever) would pin a thread.
+pub(crate) const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
-fn handle_connection(st: &Arc<ServerState>, mut stream: TcpStream) {
+/// One routed response. Status and reason travel together so
+/// `handle_connection` never has to guess a reason phrase from a bare
+/// status code (the old hardcoded "Not Found" covered every non-200).
+pub(crate) struct Response {
+    pub(crate) status: u16,
+    pub(crate) reason: &'static str,
+    pub(crate) body: String,
+}
+
+impl Response {
+    pub(crate) fn ok(body: String) -> Response {
+        Response { status: 200, reason: "OK", body }
+    }
+
+    pub(crate) fn bad_request(err: impl std::fmt::Display) -> Response {
+        Response {
+            status: 400,
+            reason: "Bad Request",
+            body: format!("{{\"error\": {}}}", json_escape(&err.to_string())),
+        }
+    }
+}
+
+/// The shared miss response: **405** when the path exists but the
+/// method is wrong, 404 only for genuinely unknown paths. The replica
+/// router uses the same function so routed and direct error responses
+/// are byte-identical.
+pub(crate) fn unroutable(method: &str, path: &str) -> Response {
+    let allow = match path {
+        "/healthz" | "/stats" => Some("GET"),
+        "/predict" | "/embed" | "/neighbors" => Some("POST"),
+        _ => None,
+    };
+    match allow {
+        Some(allow) if allow != method => Response {
+            status: 405,
+            reason: "Method Not Allowed",
+            body: format!(
+                "{{\"error\": {}, \"allow\": \"{allow}\"}}",
+                json_escape(&format!("{path} only accepts {allow} (got {method})")),
+            ),
+        },
+        _ => Response {
+            status: 404,
+            reason: "Not Found",
+            body: format!(
+                "{{\"error\": {}, \"endpoints\": \
+                 [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\"]}}",
+                json_escape(&format!("no route for {method} {path}")),
+            ),
+        },
+    }
+}
+
+/// The shared keep-alive connection loop — one copy for the server
+/// and the replica router, which differ only in how they route. Waits
+/// (untimed) for each request's first byte, times the request from
+/// that byte through the response write so malformed-request 400s are
+/// recorded like any other response, and closes on
+/// `Connection: close`, a write failure, or broken framing (carrying a
+/// desynchronized stream forward would corrupt it).
+pub(crate) fn connection_loop(
+    mut stream: TcpStream,
+    stats: &Stats,
+    mut route: impl FnMut(&http::Request) -> Result<Response>,
+) {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
-    let req = match http::read_request(&mut stream) {
-        Ok(Some(r)) => r,
-        Ok(None) => return,
-        Err(e) => {
-            st.stats.errors.fetch_add(1, Ordering::Relaxed);
-            let body = format!("{{\"error\": {}}}", json_escape(&e.to_string()));
-            let _ = http::write_response(&mut stream, 400, "Bad Request", &body);
+    stats.connections.fetch_add(1, Ordering::Relaxed);
+    let mut reader = http::ConnReader::new();
+    loop {
+        // Waiting for the next request on an idle keep-alive
+        // connection is not request time; a clean close or an idle
+        // timeout here simply ends the connection.
+        match reader.await_data(&mut stream) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return,
+        }
+        let t0 = Instant::now();
+        let (resp, keep) = match reader.read_request(&mut stream) {
+            Ok(Some(req)) => {
+                let keep = req.keep_alive;
+                match route(&req) {
+                    Ok(resp) => (resp, keep),
+                    Err(e) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        (Response::bad_request(e), keep)
+                    }
+                }
+            }
+            Ok(None) => return,
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                (Response::bad_request(e), false)
+            }
+        };
+        let sent = http::write_response(&mut stream, resp.status, resp.reason, &resp.body, keep);
+        stats.record_latency(t0.elapsed().as_secs_f64());
+        if !keep || sent.is_err() {
             return;
         }
-    };
-    let t0 = Instant::now();
-    match route(st, &req) {
-        Ok((status, body)) => {
-            let reason = if status == 200 { "OK" } else { "Not Found" };
-            let _ = http::write_response(&mut stream, status, reason, &body);
-        }
-        Err(e) => {
-            st.stats.errors.fetch_add(1, Ordering::Relaxed);
-            let body = format!("{{\"error\": {}}}", json_escape(&e.to_string()));
-            let _ = http::write_response(&mut stream, 400, "Bad Request", &body);
-        }
     }
-    st.stats.record_latency(t0.elapsed().as_secs_f64());
 }
 
-fn route(st: &ServerState, req: &http::Request) -> Result<(u16, String)> {
+fn handle_connection(st: &Arc<ServerState>, stream: TcpStream) {
+    connection_loop(stream, &st.stats, |req| route(st, req));
+}
+
+fn route(st: &ServerState, req: &http::Request) -> Result<Response> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             st.stats.healthz.fetch_add(1, Ordering::Relaxed);
-            Ok((200, healthz_body(st)))
+            Ok(Response::ok(healthz_body(st)))
         }
         ("GET", "/stats") => {
             st.stats.stats.fetch_add(1, Ordering::Relaxed);
-            Ok((200, st.stats.to_json()))
+            Ok(Response::ok(st.stats.to_json()))
         }
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
-            Ok((200, predict_endpoint(st, req)?))
+            Ok(Response::ok(predict_endpoint(st, req)?))
         }
         ("POST", "/embed") => {
             st.stats.embed.fetch_add(1, Ordering::Relaxed);
-            Ok((200, embed_endpoint(st, req)?))
+            Ok(Response::ok(embed_endpoint(st, req)?))
         }
         ("POST", "/neighbors") => {
             st.stats.neighbors.fetch_add(1, Ordering::Relaxed);
-            Ok((200, neighbors_endpoint(st, req)?))
+            Ok(Response::ok(neighbors_endpoint(st, req)?))
         }
-        (m, p) => Ok((
-            404,
-            format!(
-                "{{\"error\": {}, \"endpoints\": \
-                 [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\"]}}",
-                json_escape(&format!("no route for {m} {p}")),
-            ),
-        )),
+        (m, p) => Ok(unroutable(m, p)),
     }
 }
 

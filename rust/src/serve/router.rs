@@ -1,0 +1,378 @@
+//! Replica routing: one address in front of R identical serve
+//! processes.
+//!
+//! The `model.fkb` bundle is the replication unit — every replica
+//! loads the same file and produces bitwise-identical answers, so the
+//! router needs **no coordination**: it health-checks its backends
+//! once at bind, then forwards requests over pooled keep-alive
+//! connections ([`http::ClientPool`]) and relays the responses
+//! verbatim (routed bytes == direct bytes).
+//!
+//! * `POST /predict`, `/embed`, and OOS `/neighbors` queries are
+//!   **round-robin**: any replica answers any query.
+//! * `/neighbors` **row-mode** lookups go to the row-range *owner* —
+//!   the static partition of `[0, N)` into R contiguous ranges. Any
+//!   replica could answer (they are full copies), but pinning a row to
+//!   one replica keeps that replica's single-stripe shard cache hot
+//!   for its range instead of thrashing all caches over all stripes.
+//! * `GET /stats` merges the fleet: summed counters via
+//!   [`stats::merge_counter_totals`] plus each backend's full document
+//!   (latency percentiles aren't additive, so they stay per-backend).
+//! * `GET /healthz` answers from the router itself with the backend
+//!   roster.
+//!
+//! A backend that stops answering is skipped: forwards fail over to
+//! the next replica (every endpoint is a read, so a retry is safe),
+//! and only when *all* replicas are down does the client see a
+//! 502 Bad Gateway.
+
+use super::{unroutable, Response};
+use crate::error::{Context, Result};
+use crate::runtime::json::Json;
+use crate::serve::http::{self, ClientPool};
+use crate::serve::stats::{merge_counter_totals, Stats};
+use crate::{anyhow, bail};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Router tuning knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests/benches).
+    pub addr: String,
+    /// Backend serve addresses (`host:port`), health-checked at bind.
+    pub backends: Vec<String>,
+}
+
+struct Backend {
+    addr: SocketAddr,
+    /// Keep-alive connections to this replica, shared by all router
+    /// connection threads.
+    pool: ClientPool,
+    /// The contiguous slice of `[0, N)` whose row-mode lookups pin
+    /// here.
+    rows: Range<usize>,
+}
+
+/// Everything the router's connection threads share.
+pub struct RouterState {
+    backends: Vec<Backend>,
+    /// Training rows of the (replicated) model.
+    n: usize,
+    /// Model kind reported by the backends (must agree).
+    kind: String,
+    /// Round-robin cursor for the OOS endpoints.
+    rr: AtomicUsize,
+    pub stats: Stats,
+    shutdown: AtomicBool,
+}
+
+/// A bound (but not yet running) router.
+pub struct Router {
+    state: Arc<RouterState>,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+/// Handle to a router running on a background thread (tests/benches).
+pub struct RouterHandle {
+    addr: SocketAddr,
+    state: Arc<RouterState>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl RouterHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Flag shutdown, poke the accept loop, and join.
+    pub fn stop(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.join.join();
+    }
+}
+
+/// Partition `[0, n)` into `parts` contiguous near-even ranges (the
+/// deterministic row-ownership map; replica `i` owns range `i`).
+pub fn row_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    (0..parts).map(|i| (i * n / parts)..((i + 1) * n / parts)).collect()
+}
+
+impl Router {
+    /// Resolve and health-check every backend (each must answer
+    /// `GET /healthz` and agree on the model's N and kind), then bind
+    /// the listener.
+    pub fn bind(cfg: RouterConfig) -> Result<Router> {
+        if cfg.backends.is_empty() {
+            bail!("router needs at least one --backends address");
+        }
+        let mut resolved = Vec::with_capacity(cfg.backends.len());
+        let mut n_kind: Option<(usize, String)> = None;
+        for b in &cfg.backends {
+            let addr = b
+                .to_socket_addrs()
+                .with_context(|| format!("resolving backend {b}"))?
+                .next()
+                .ok_or_else(|| anyhow!("backend {b} resolved to no address"))?;
+            let (status, body) = http::http_request(&addr, "GET", "/healthz", "")
+                .with_context(|| format!("health-checking backend {b}"))?;
+            if status != 200 {
+                bail!("backend {b} /healthz returned {status}: {body}");
+            }
+            let j = Json::parse(&body)
+                .map_err(|e| anyhow!("backend {b} /healthz is not JSON: {e}"))?;
+            let model = j.get("model").ok_or_else(|| anyhow!("backend {b} reports no model"))?;
+            let n = model
+                .get("n")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("backend {b} reports no model.n"))?;
+            let kind = model
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            if let Some((n0, k0)) = &n_kind {
+                if *n0 != n || *k0 != kind {
+                    bail!(
+                        "backend {b} serves n={n} kind={kind} but {} serves n={n0} \
+                         kind={k0} — replicas must share one bundle",
+                        cfg.backends[0]
+                    );
+                }
+            } else {
+                n_kind = Some((n, kind));
+            }
+            resolved.push(addr);
+        }
+        let (n, kind) = n_kind.unwrap();
+        let ranges = row_ranges(n, resolved.len());
+        let backends = resolved
+            .into_iter()
+            .zip(ranges)
+            .map(|(addr, rows)| Backend { addr, pool: ClientPool::new(addr), rows })
+            .collect();
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding router {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(RouterState {
+            backends,
+            n,
+            kind,
+            rr: AtomicUsize::new(0),
+            stats: Stats::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Router { state, listener, addr })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The backend addresses, in row-range-owner order.
+    pub fn backends(&self) -> Vec<SocketAddr> {
+        self.state.backends.iter().map(|b| b.addr).collect()
+    }
+
+    /// Run the accept loop on the calling thread until shutdown is
+    /// flagged. Each connection is handled on its own thread with the
+    /// same keep-alive semantics as the serve process.
+    pub fn run(self) -> Result<()> {
+        let state = self.state;
+        for conn in self.listener.incoming() {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let st = state.clone();
+            std::thread::spawn(move || handle_connection(&st, stream));
+        }
+        Ok(())
+    }
+
+    /// Run on a background thread; the handle stops it.
+    pub fn spawn(self) -> RouterHandle {
+        let addr = self.addr;
+        let state = self.state.clone();
+        let join = std::thread::spawn(move || {
+            let _ = self.run();
+        });
+        RouterHandle { addr, state, join }
+    }
+}
+
+fn handle_connection(st: &Arc<RouterState>, stream: TcpStream) {
+    super::connection_loop(stream, &st.stats, |req| Ok(route(st, req)));
+}
+
+fn route(st: &RouterState, req: &http::Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            st.stats.healthz.fetch_add(1, Ordering::Relaxed);
+            Response::ok(healthz_body(st))
+        }
+        ("GET", "/stats") => {
+            st.stats.stats.fetch_add(1, Ordering::Relaxed);
+            Response::ok(merged_stats(st))
+        }
+        ("POST", "/predict") => {
+            st.stats.predict.fetch_add(1, Ordering::Relaxed);
+            forward(st, rr_next(st), "/predict", &req.body)
+        }
+        ("POST", "/embed") => {
+            st.stats.embed.fetch_add(1, Ordering::Relaxed);
+            forward(st, rr_next(st), "/embed", &req.body)
+        }
+        ("POST", "/neighbors") => {
+            st.stats.neighbors.fetch_add(1, Ordering::Relaxed);
+            // Row-mode lookups pin to the range owner; OOS queries (or
+            // anything unparseable — the backend's 400 must match a
+            // direct request's) round-robin.
+            let start = row_owner(st, &req.body).unwrap_or_else(|| rr_next(st));
+            forward(st, start, "/neighbors", &req.body)
+        }
+        (m, p) => unroutable(m, p),
+    }
+}
+
+fn rr_next(st: &RouterState) -> usize {
+    st.rr.fetch_add(1, Ordering::Relaxed) % st.backends.len()
+}
+
+/// The backend owning the `"row"` in a row-mode `/neighbors` body, or
+/// `None` for OOS queries, malformed bodies, and out-of-range rows.
+fn row_owner(st: &RouterState, body: &[u8]) -> Option<usize> {
+    let text = std::str::from_utf8(body).ok()?;
+    let j = Json::parse(text).ok()?;
+    let row = j.get("row")?.as_usize()?;
+    st.backends.iter().position(|b| b.rows.contains(&row))
+}
+
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        502 => "Bad Gateway",
+        _ => "Error",
+    }
+}
+
+/// Forward one request, starting at backend `start` and failing over
+/// replica by replica. The backend's response body is relayed
+/// **verbatim** — routed answers are byte-identical to direct ones.
+fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response {
+    let body = match std::str::from_utf8(body) {
+        Ok(s) => s,
+        Err(_) => {
+            st.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Response::bad_request("request body is not UTF-8");
+        }
+    };
+    let nb = st.backends.len();
+    for attempt in 0..nb {
+        let backend = &st.backends[(start + attempt) % nb];
+        match backend.pool.request("POST", path, body) {
+            Ok((status, resp)) => {
+                return Response { status, reason: reason_for(status), body: resp }
+            }
+            // Transport failure (replica down/restarting): every
+            // endpoint is a read, so retrying on a sibling is safe.
+            Err(_) => continue,
+        }
+    }
+    st.stats.errors.fetch_add(1, Ordering::Relaxed);
+    Response {
+        status: 502,
+        reason: "Bad Gateway",
+        body: format!("{{\"error\": \"all {nb} backend replica(s) unreachable\"}}"),
+    }
+}
+
+fn healthz_body(st: &RouterState) -> String {
+    let mut backends = String::from("[");
+    for (i, b) in st.backends.iter().enumerate() {
+        if i > 0 {
+            backends.push_str(", ");
+        }
+        backends.push_str(&format!(
+            "{{\"addr\": \"{}\", \"rows\": [{}, {}]}}",
+            b.addr, b.rows.start, b.rows.end
+        ));
+    }
+    backends.push(']');
+    format!(
+        "{{\"status\": \"ok\", \"role\": \"router\", \"n\": {}, \"kind\": \"{}\", \
+         \"backends\": {backends}}}",
+        st.n, st.kind
+    )
+}
+
+/// The merged `GET /stats` document: the router's own counters, the
+/// fleet-wide counter totals, and each backend's full document.
+fn merged_stats(st: &RouterState) -> String {
+    let mut docs: Vec<Json> = Vec::with_capacity(st.backends.len());
+    let mut per_backend = String::from("[");
+    for (i, b) in st.backends.iter().enumerate() {
+        if i > 0 {
+            per_backend.push_str(", ");
+        }
+        match b.pool.request("GET", "/stats", "") {
+            Ok((200, body)) => {
+                per_backend
+                    .push_str(&format!("{{\"addr\": \"{}\", \"stats\": {body}}}", b.addr));
+                if let Ok(j) = Json::parse(&body) {
+                    docs.push(j);
+                }
+            }
+            _ => {
+                per_backend.push_str(&format!(
+                    "{{\"addr\": \"{}\", \"error\": \"unreachable\"}}",
+                    b.addr
+                ));
+            }
+        }
+    }
+    per_backend.push(']');
+    format!(
+        "{{\"role\": \"router\", \"router\": {}, \"totals\": {}, \"backends\": {per_backend}}}",
+        st.stats.to_json(),
+        merge_counter_totals(&docs),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_ranges_tile_exactly() {
+        for (n, parts) in [(10, 3), (7, 2), (160, 4), (5, 8), (1, 1)] {
+            let ranges = row_ranges(n, parts);
+            assert_eq!(ranges.len(), parts);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges[parts - 1].end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn reason_strings_cover_the_relayed_statuses() {
+        assert_eq!(reason_for(200), "OK");
+        assert_eq!(reason_for(400), "Bad Request");
+        assert_eq!(reason_for(405), "Method Not Allowed");
+        assert_eq!(reason_for(418), "Error");
+    }
+}

@@ -2,6 +2,7 @@
 //! (how well the micro-batcher coalesces), and latency percentiles
 //! from a bounded reservoir — everything `GET /stats` reports.
 
+use crate::runtime::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -26,6 +27,9 @@ pub struct Stats {
     pub healthz: AtomicU64,
     pub stats: AtomicU64,
     pub errors: AtomicU64,
+    /// Accepted TCP connections — with keep-alive this grows much
+    /// slower than the request counters, which is the whole point.
+    pub connections: AtomicU64,
     batch_hist: [AtomicU64; HIST_BUCKETS],
     batches: AtomicU64,
     batched_jobs: AtomicU64,
@@ -42,6 +46,7 @@ impl Stats {
             healthz: AtomicU64::new(0),
             stats: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             batches: AtomicU64::new(0),
             batched_jobs: AtomicU64::new(0),
@@ -111,7 +116,7 @@ impl Stats {
         let jobs = g(&self.batched_jobs);
         format!(
             "{{\"requests\": {{\"predict\": {}, \"neighbors\": {}, \"embed\": {}, \
-             \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \
+             \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \"connections\": {}, \
              \"batches\": {batches}, \"batched_jobs\": {jobs}, \
              \"mean_batch\": {:.3}, \"batch_size_hist\": {hist}, \
              \"latency_secs\": {{\"samples\": {}, \"p50\": {:.6}, \"p95\": {:.6}, \
@@ -122,6 +127,7 @@ impl Stats {
             g(&self.healthz),
             g(&self.stats),
             g(&self.errors),
+            g(&self.connections),
             if batches > 0 { jobs as f64 / batches as f64 } else { 0.0 },
             g(&self.total_latency_samples),
             p50,
@@ -135,6 +141,38 @@ impl Default for Stats {
     fn default() -> Self {
         Stats::new()
     }
+}
+
+/// Sum the counter fields of several backend `/stats` documents into
+/// one `"totals"` object — what the replica router reports for the
+/// fleet. Latency percentiles don't merge (quantiles aren't additive),
+/// so callers keep the per-backend documents for those.
+pub fn merge_counter_totals(docs: &[Json]) -> String {
+    let sum = |path: &[&str]| -> u64 {
+        docs.iter()
+            .map(|d| {
+                let mut j = Some(d);
+                for key in path {
+                    j = j.and_then(|x| x.get(key));
+                }
+                j.and_then(Json::as_usize).unwrap_or(0) as u64
+            })
+            .sum()
+    };
+    format!(
+        "{{\"requests\": {{\"predict\": {}, \"neighbors\": {}, \"embed\": {}, \
+         \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \"connections\": {}, \
+         \"batches\": {}, \"batched_jobs\": {}}}",
+        sum(&["requests", "predict"]),
+        sum(&["requests", "neighbors"]),
+        sum(&["requests", "embed"]),
+        sum(&["requests", "healthz"]),
+        sum(&["requests", "stats"]),
+        sum(&["errors"]),
+        sum(&["connections"]),
+        sum(&["batches"]),
+        sum(&["batched_jobs"]),
+    )
 }
 
 #[cfg(test)]
@@ -175,6 +213,25 @@ mod tests {
         }
         assert_eq!(s.latencies.lock().unwrap().samples.len(), RESERVOIR);
         assert_eq!(s.total_latency_samples.load(Ordering::Relaxed), (RESERVOIR + 100) as u64);
+    }
+
+    #[test]
+    fn counter_totals_merge_across_documents() {
+        let a = Stats::new();
+        a.predict.fetch_add(3, Ordering::Relaxed);
+        a.errors.fetch_add(1, Ordering::Relaxed);
+        a.connections.fetch_add(2, Ordering::Relaxed);
+        let b = Stats::new();
+        b.predict.fetch_add(2, Ordering::Relaxed);
+        b.neighbors.fetch_add(5, Ordering::Relaxed);
+        let docs =
+            vec![Json::parse(&a.to_json()).unwrap(), Json::parse(&b.to_json()).unwrap()];
+        let t = Json::parse(&merge_counter_totals(&docs)).unwrap();
+        let req = |k: &str| t.get("requests").and_then(|r| r.get(k)).and_then(Json::as_usize);
+        assert_eq!(req("predict"), Some(5));
+        assert_eq!(req("neighbors"), Some(5));
+        assert_eq!(t.get("errors").and_then(Json::as_usize), Some(1));
+        assert_eq!(t.get("connections").and_then(Json::as_usize), Some(2));
     }
 
     #[test]

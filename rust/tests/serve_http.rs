@@ -288,10 +288,13 @@ fn health_stats_and_error_paths() {
     assert_eq!(model.get("kind").and_then(Json::as_str), Some("kerf"));
     assert_eq!(model.get("features").and_then(Json::as_usize), Some(D));
 
-    // Errors: unknown route, bad JSON, wrong dimension, non-class model
-    // constraints are all clean HTTP errors, not hangs or panics.
+    // Errors: unknown route, method mismatch, bad JSON, wrong
+    // dimension, non-class model constraints are all clean HTTP
+    // errors, not hangs or panics.
     let (status, _) = http::http_request(&addr, "GET", "/nope", "").unwrap();
     assert_eq!(status, 404);
+    let (status, resp) = http::http_request(&addr, "GET", "/predict", "").unwrap();
+    assert_eq!(status, 405, "known path + wrong method is 405, not 404: {resp}");
     let (status, _) = http::http_request(&addr, "POST", "/predict", "{not json").unwrap();
     assert_eq!(status, 400);
     let (status, resp) =
@@ -313,5 +316,7 @@ fn health_stats_and_error_paths() {
     assert!(reqs.get("predict").and_then(Json::as_usize).unwrap() >= 2);
     assert!(j.get("errors").and_then(Json::as_usize).unwrap() >= 2);
     assert!(j.get("batches").and_then(Json::as_usize).unwrap() >= 1);
+    // Every request above used a one-shot connection.
+    assert!(j.get("connections").and_then(Json::as_usize).unwrap() >= 7);
     handle.stop();
 }

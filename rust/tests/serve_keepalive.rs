@@ -1,0 +1,356 @@
+//! Keep-alive transport + replica routing, end to end over real TCP.
+//!
+//! The invariant under test is the serving contract extended to the
+//! new transport: answers must be **byte-identical** whether they
+//! travel over N one-shot connections, N sequential requests on one
+//! keep-alive connection, two requests coalesced into a single TCP
+//! segment (the carried-buffer regression), or through the replica
+//! router — and row-mode `/neighbors` lookups must land on the
+//! row-range-owning replica.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{BundleMeta, ModelBundle};
+use forest_kernels::runtime::json::Json;
+use forest_kernels::serve::http::{self, ConnReader, HttpClient};
+use forest_kernels::serve::router::{Router, RouterConfig};
+use forest_kernels::serve::{ServeConfig, Server};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+use forest_kernels::Dataset;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+const N: usize = 160;
+const D: usize = 5;
+const C: usize = 3;
+const TREES: usize = 12;
+
+/// Deterministic model fixture (same recipe as `serve_http.rs`): two
+/// calls with one seed give bitwise-identical bundles, so replicas
+/// built this way really are copies of one model.
+fn fixture(seed: u64) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, C, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    ModelBundle { forest, kernel, meta }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        embed_dims: 4,
+        embed_iters: 20,
+        embed_seed: 9,
+        ..Default::default()
+    }
+}
+
+fn row_json(data: &Dataset, i: usize) -> String {
+    let mut s = String::from("[");
+    for f in 0..data.d {
+        if f > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}", data.x(i, f)));
+    }
+    s.push(']');
+    s
+}
+
+fn predict_bodies(seed: u64, count: usize) -> Vec<String> {
+    let queries = synth::gaussian_blobs(count, D, C, 2.2, seed);
+    (0..count).map(|i| format!("{{\"x\": {}}}", row_json(&queries, i))).collect()
+}
+
+#[test]
+fn keepalive_sequence_matches_one_shot_connections_bitwise() {
+    let server = Server::bind(fixture(11), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let bodies = predict_bodies(4242, 10);
+    // Baseline: one connection per request.
+    let want: Vec<(u16, String)> = bodies
+        .iter()
+        .map(|b| http::http_request(&addr, "POST", "/predict", b).unwrap())
+        .collect();
+    // Same sequence over ONE persistent connection.
+    let mut client = HttpClient::new(addr);
+    for (body, want) in bodies.iter().zip(&want) {
+        let got = client.request("POST", "/predict", body).unwrap();
+        assert_eq!(&got, want, "keep-alive answer differs from one-shot");
+    }
+    // The server accepted 10 one-shot connections + 1 keep-alive one;
+    // /stats over the same live connection must see exactly 11.
+    let (status, stats) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&stats).unwrap();
+    assert_eq!(
+        j.get("connections").and_then(Json::as_usize),
+        Some(11),
+        "keep-alive client must reuse its connection: {stats}"
+    );
+    assert_eq!(
+        j.get("requests").and_then(|r| r.get("predict")).and_then(Json::as_usize),
+        Some(20)
+    );
+    handle.stop();
+}
+
+#[test]
+fn two_requests_in_one_tcp_segment_are_both_answered() {
+    let server = Server::bind(fixture(12), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let bodies = predict_bodies(777, 2);
+    let want: Vec<(u16, String)> = bodies
+        .iter()
+        .map(|b| http::http_request(&addr, "POST", "/predict", b).unwrap())
+        .collect();
+
+    // Serialize both requests into ONE write so the server's first
+    // read almost certainly carries request 2's head past request 1's
+    // Content-Length — the bytes the old transport silently discarded.
+    let render = |body: &str, last: bool| {
+        format!(
+            "POST /predict HTTP/1.1\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+            body.len(),
+            if last { "close" } else { "keep-alive" },
+        )
+    };
+    let wire = format!("{}{}", render(&bodies[0], false), render(&bodies[1], true));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    stream.write_all(wire.as_bytes()).unwrap();
+    stream.flush().unwrap();
+
+    let mut reader = ConnReader::new();
+    let (s1, b1, keep1) = http::read_response(&mut stream, &mut reader).unwrap();
+    assert_eq!((s1, &b1), (want[0].0, &want[0].1), "pipelined request 1");
+    assert!(keep1);
+    let (s2, b2, keep2) = http::read_response(&mut stream, &mut reader).unwrap();
+    assert_eq!((s2, &b2), (want[1].0, &want[1].1), "pipelined request 2");
+    assert!(!keep2);
+    handle.stop();
+}
+
+#[test]
+fn mixed_keepalive_and_close_clients_agree() {
+    let server = Server::bind(fixture(13), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let bodies = predict_bodies(31337, 8);
+    let want: Vec<(u16, String)> = bodies
+        .iter()
+        .map(|b| http::http_request(&addr, "POST", "/predict", b).unwrap())
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            // Keep-alive clients: one connection for the whole sweep.
+            scope.spawn(|| {
+                let mut client = HttpClient::new(addr);
+                for (body, want) in bodies.iter().zip(&want) {
+                    let got = client.request("POST", "/predict", body).unwrap();
+                    assert_eq!(&got, want, "keep-alive client diverged");
+                }
+            });
+            // Close clients: a fresh connection per request, racing the
+            // keep-alive ones through the same micro-batcher.
+            scope.spawn(|| {
+                for (body, want) in bodies.iter().zip(&want) {
+                    let got = http::http_request(&addr, "POST", "/predict", body).unwrap();
+                    assert_eq!(&got, want, "close client diverged");
+                }
+            });
+        }
+    });
+    handle.stop();
+}
+
+#[test]
+fn method_mismatch_is_405_and_unknown_path_stays_404() {
+    let server = Server::bind(fixture(14), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    for (method, path) in [
+        ("GET", "/predict"),
+        ("GET", "/embed"),
+        ("GET", "/neighbors"),
+        ("POST", "/healthz"),
+        ("POST", "/stats"),
+    ] {
+        let (status, body) = http::http_request(&addr, method, path, "").unwrap();
+        assert_eq!(status, 405, "{method} {path}: {body}");
+        assert!(body.contains("\"allow\""), "{method} {path}: {body}");
+    }
+    let (status, _) = http::http_request(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::http_request(&addr, "DELETE", "/predict", "").unwrap();
+    assert_eq!(status, 405);
+
+    // The reason phrase must match the status (the old handler wrote
+    // "Not Found" for every non-200): check the raw status line.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"GET /predict HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = Vec::new();
+    std::io::Read::read_to_end(&mut stream, &mut raw).unwrap();
+    let head = String::from_utf8_lossy(&raw);
+    assert!(
+        head.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"),
+        "bad status line: {}",
+        head.lines().next().unwrap_or("")
+    );
+    handle.stop();
+}
+
+#[test]
+fn malformed_requests_reach_the_latency_reservoir() {
+    let server = Server::bind(fixture(15), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    // A request line with no path fails in read_request — before this
+    // fix, the 400 was sent without ever starting the latency clock.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"BADREQUEST\r\n\r\n").unwrap();
+    let mut reader = ConnReader::new();
+    let (status, _, keep) = http::read_response(&mut stream, &mut reader).unwrap();
+    assert_eq!(status, 400);
+    assert!(!keep, "a desynchronized connection must close");
+    drop(stream);
+
+    let (status, stats) = http::http_request(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&stats).unwrap();
+    assert!(j.get("errors").and_then(Json::as_usize).unwrap() >= 1, "{stats}");
+    let samples = j
+        .get("latency_secs")
+        .and_then(|l| l.get("samples"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(samples >= 1, "the early-400 path must record latency: {stats}");
+    handle.stop();
+}
+
+#[test]
+fn router_is_bitwise_transparent_and_pins_row_owners() {
+    // Two replicas of one model (bitwise-identical fixtures).
+    let backend_a = Server::bind(fixture(16), None, serve_cfg()).unwrap();
+    let backend_b = Server::bind(fixture(16), None, serve_cfg()).unwrap();
+    let addr_a = backend_a.addr();
+    let addr_b = backend_b.addr();
+    let h_a = backend_a.spawn();
+    let h_b = backend_b.spawn();
+    let router = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr_a.to_string(), addr_b.to_string()],
+    })
+    .unwrap();
+    let raddr = router.addr();
+    let rh = router.spawn();
+
+    let mut client = HttpClient::new(raddr);
+
+    // Router identity: its own healthz names the fleet.
+    let (status, health) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&health).unwrap();
+    assert_eq!(j.get("role").and_then(Json::as_str), Some("router"));
+    assert_eq!(j.get("n").and_then(Json::as_usize), Some(N));
+    assert_eq!(j.get("backends").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+
+    // OOS endpoints through the router == direct backend answers
+    // (replicas are bitwise copies, so either backend is a valid
+    // reference).
+    for body in &predict_bodies(999, 6) {
+        let direct = http::http_request(&addr_a, "POST", "/predict", body).unwrap();
+        let routed = client.request("POST", "/predict", body).unwrap();
+        assert_eq!(routed, direct, "routed /predict differs from direct");
+    }
+    let queries = synth::gaussian_blobs(3, D, C, 2.2, 555);
+    for i in 0..queries.n {
+        let body = format!("{{\"x\": {}}}", row_json(&queries, i));
+        let direct = http::http_request(&addr_b, "POST", "/embed", &body).unwrap();
+        let routed = client.request("POST", "/embed", &body).unwrap();
+        assert_eq!(routed, direct, "routed /embed differs from direct");
+    }
+
+    // Row-mode /neighbors: rows [0, 80) belong to backend A, rows
+    // [80, 160) to backend B. Three lookups in A's range, two in B's.
+    let low_rows = [0usize, 5, 79];
+    let high_rows = [80usize, 159];
+    for &row in low_rows.iter().chain(&high_rows) {
+        let body = format!("{{\"row\": {row}, \"k\": 5}}");
+        let direct = http::http_request(&addr_a, "POST", "/neighbors", &body).unwrap();
+        let routed = client.request("POST", "/neighbors", &body).unwrap();
+        assert_eq!(routed, direct, "routed row {row} differs from direct");
+    }
+    // Ownership is observable in the backends' own counters: only the
+    // row-range owner saw its lookups (OOS traffic above never touched
+    // /neighbors).
+    let stats_of = |addr| {
+        let (s, body) = http::http_request(addr, "GET", "/stats", "").unwrap();
+        assert_eq!(s, 200);
+        Json::parse(&body).unwrap()
+    };
+    let neighbors_count = |j: &Json| {
+        j.get("requests").and_then(|r| r.get("neighbors")).and_then(Json::as_usize).unwrap()
+    };
+    // Backend A also answered the direct reference lookups for ALL
+    // five rows; the ROUTED copies split 3 / 2 by ownership.
+    assert_eq!(neighbors_count(&stats_of(&addr_a)), 5 + low_rows.len());
+    assert_eq!(neighbors_count(&stats_of(&addr_b)), high_rows.len());
+
+    // Merged /stats: totals sum the fleet, per-backend docs ride along.
+    let (status, merged) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&merged).unwrap();
+    assert_eq!(j.get("role").and_then(Json::as_str), Some("router"));
+    let totals = j.get("totals").unwrap();
+    assert_eq!(
+        totals.get("requests").and_then(|r| r.get("neighbors")).and_then(Json::as_usize),
+        Some(5 + low_rows.len() + high_rows.len())
+    );
+    assert_eq!(j.get("backends").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+
+    // Unroutable requests answer identically through the router.
+    let direct = http::http_request(&addr_a, "GET", "/predict", "").unwrap();
+    let routed = client.request("GET", "/predict", "").unwrap();
+    assert_eq!(routed, direct, "405 body must match the backend's");
+    let direct = http::http_request(&addr_a, "GET", "/nope", "").unwrap();
+    let routed = client.request("GET", "/nope", "").unwrap();
+    assert_eq!(routed, direct, "404 body must match the backend's");
+
+    rh.stop();
+    h_a.stop();
+    h_b.stop();
+}
+
+#[test]
+fn router_bind_health_checks_every_backend() {
+    let backend = Server::bind(fixture(17), None, serve_cfg()).unwrap();
+    let addr = backend.addr();
+    let handle = backend.spawn();
+    // A port with no listener (bind-then-drop reserves a dead addr).
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let err = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr.to_string(), dead.to_string()],
+    });
+    assert!(err.is_err(), "a dead backend must fail the bind health check");
+    handle.stop();
+}
