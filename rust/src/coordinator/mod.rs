@@ -52,9 +52,11 @@ pub mod shard;
 pub mod sink;
 
 use crate::exec::{self, StreamConfig};
-use crate::sparse::{spgemm_nnz_flops, spgemm_with_threads, Csr};
+use crate::sparse::qcsr::{self, QRowScratch};
+use crate::sparse::{spgemm_nnz_flops, spgemm_with_scratch, Csr, SpaScratch};
 use crate::swlc::ForestKernel;
 use sink::KernelSink;
+use std::cell::RefCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
@@ -221,15 +223,35 @@ pub fn materialize_range_into<S: KernelSink>(
     }
 }
 
+thread_local! {
+    /// Per-worker SpGEMM scratch, reused across every stripe this thread
+    /// computes: the dense accumulator, stamps, and radix buffers stop
+    /// being reallocated per call (they start as `Vec::new()` in a fresh
+    /// `SpaScratch`), and the quantized decode buffers ride along.
+    /// Stamp generations ([`SpaScratch::begin_rows`]) make the reuse
+    /// bitwise-invisible.
+    static STRIPE_SCRATCH: RefCell<(SpaScratch, QRowScratch)> =
+        RefCell::new((SpaScratch::new(0), QRowScratch::new()));
+}
+
 /// Compute one stripe `P[row_start..row_end, :]` by Gustavson over the
 /// factor rows (same cost model as the monolithic product, §3.3). Runs
 /// single-threaded: stripes are already the coordinator's parallelism
 /// unit, so nesting the row-parallel SpGEMM would only oversubscribe.
 /// Public as the row-exact reference the `shards validate --verify`
-/// sampled cross-check compares against.
+/// sampled cross-check compares against. Routes through the quantized
+/// factors when the kernel's quantized mode is on.
 pub fn stripe_product(kernel: &ForestKernel, row_start: usize, row_end: usize) -> Csr {
-    let qs = kernel.q.slice_rows(row_start..row_end);
-    let mut p = spgemm_with_threads(&qs, kernel.w_transpose(), 1);
+    let mut p = STRIPE_SCRATCH.with(|cell| {
+        let (spa, rs) = &mut *cell.borrow_mut();
+        match kernel.quantized() {
+            Some(qf) => qcsr::spgemm_q_range(&qf.q, row_start..row_end, &qf.wt, spa, rs),
+            None => {
+                let qs = kernel.q.slice_rows(row_start..row_end);
+                spgemm_with_scratch(&qs, kernel.w_transpose(), spa)
+            }
+        }
+    });
     if kernel.kind == crate::swlc::ProximityKind::OobSeparable {
         // Remark G.2 on the stripe's diagonal block: force `P_ii = 1`,
         // inserting entries that the product left structurally absent

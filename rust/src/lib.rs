@@ -23,9 +23,14 @@
 //! * [`error`] — zero-dependency `anyhow`-style error type + macros.
 //! * [`rng`] — deterministic SplitMix64/PCG-style RNG used everywhere.
 //! * [`sparse`] — CSR matrices, Gustavson SpGEMM (row-partitioned
-//!   parallel with per-worker SPA scratch), parallel counting-sort
-//!   transpose, SpMV, and parallel SpMM/SpMMᵀ (row-blocked /
-//!   column-range-tiled on the pool, bitwise-identical to serial).
+//!   parallel with per-worker SPA scratch, reusable across calls via
+//!   [`sparse::spgemm_with_scratch`]), parallel counting-sort
+//!   transpose, SpMV, and parallel SpMM/SpMMᵀ (row-blocked, output
+//!   columns walked in cache-resident k-tiles, bitwise-identical to
+//!   serial). [`sparse::qcsr`] adds the block-quantized factor format:
+//!   int8/int4 values in fixed blocks with per-block f32 scales and
+//!   delta-varint columns, plus blocked quantized SpGEMM/SpMM that
+//!   accumulate in f32 and match the dequantized exact path bitwise.
 //! * [`forest`] — from-scratch decision forests: CART trees over binned
 //!   features, random forests (bootstrap + OOB bookkeeping), extremely
 //!   randomized trees, and gradient-boosted trees. Bagged kinds train
@@ -61,10 +66,13 @@
 //!   directory (CLI: `repro shards {plan,run,merge,validate}`) —
 //!   bitwise-identical to a single-process run at any P.
 //! * [`model`] — the versioned, checksummed on-disk **model bundle**
-//!   (`fk-bundle-v1`): the trained forest, binning thresholds, ensemble
-//!   context θ, SWLC factors Q/W, proximity kind, and label metadata in
-//!   one FNV-1a-verified binary file. `repro fit --out model.fkb`
-//!   writes it; every pipeline command accepts `--model` and loads a
+//!   (`fk-bundle-v2`, v1 still loads): the trained forest, binning
+//!   thresholds, ensemble context θ, SWLC factors Q/W (exact CSR, or
+//!   the block-quantized [`sparse::qcsr`] form when the kernel was
+//!   fitted with `--quantize int8|int4` — typically 3×+ smaller),
+//!   proximity kind, and label metadata in one FNV-1a-verified binary
+//!   file. `repro fit --out model.fkb` writes it and prints per-section
+//!   sizes; every pipeline command accepts `--model` and loads a
 //!   kernel bitwise-identical to the originally fitted one instead of
 //!   retraining — including each of the P `shards run` workers.
 //! * [`serve`] — the online serving subsystem: a long-running,

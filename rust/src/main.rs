@@ -13,7 +13,7 @@ use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::error::{Context, Result};
 use forest_kernels::model::{self, BundleMeta, ModelBundle};
 use forest_kernels::serve::{self, ServeConfig};
-use forest_kernels::sparse::Csr;
+use forest_kernels::sparse::{Csr, QuantMode};
 use forest_kernels::{anyhow, bail, exec};
 use forest_kernels::data::registry;
 use forest_kernels::experiments::{fig41, fig42, fig43, tablei1};
@@ -79,15 +79,24 @@ Global flags:
                    training, factor build, coordinator); default = cores,
                    also settable via FK_THREADS
 
-Model bundles (fk-bundle-v1):
+Model bundles (fk-bundle, v2; v1 files still load):
   fit      --dataset covertype --n 20000 --trees 50 --method gap
-           [--out model.fkb]
+           [--out model.fkb] [--quantize none|int8|int4]
            (train the forest, fit the SWLC factors, and persist the
             whole model — forest, binning thresholds, context θ, Q/W
-            factors, labels — as one checksummed binary bundle)
+            factors, labels — as one checksummed binary bundle;
+            --quantize stores block-quantized factors instead of exact
+            CSRs for a several-times-smaller artifact, and prints the
+            per-section byte sizes either way)
   every command below also accepts --model model.fkb: the bundle is
   loaded instead of retraining (bitwise-identical factors), and
   `shards run` forwards it to all P workers so the forest is fit once.
+  kernel / materialize / predict / serve also accept
+  --quantize none|int8|int4: int8/int4 switches the kernel products
+  (stripe SpGEMM, OOS prediction, serve tiles) onto the compressed
+  factors; `none` (the default for exact models) keeps the bitwise
+  f32 path. A quantized --model implies its own mode; asking for a
+  different one is an error.
 
 Pipeline commands:
   datasets                                 print the Table F.1 dataset analogs
@@ -169,6 +178,11 @@ Paper harnesses (DESIGN.md experiment index):
                   replica router over R in-process servers)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
+  bench-quantize [--n 8192 --trees 48 --min-leaf 64 --method kerf]
+                 [--sample-rows 256] [--json-out BENCH_quantize.json]
+                 (exact vs int8/int4 factors: serialized bytes/row,
+                  full-kernel SpGEMM throughput, and neighbor recall@10
+                  / recall@100 of the quantized product vs the exact one)
 ";
 
 fn main() {
@@ -210,6 +224,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "bench-tablei1" => cmd_tablei1(args),
         "bench-naive" => cmd_naive(args),
         "bench-learned" => cmd_learned(args),
+        "bench-quantize" => cmd_bench_quantize(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -253,6 +268,41 @@ fn method(args: &Args) -> Result<ProximityKind> {
     ProximityKind::from_name(m).ok_or_else(|| anyhow!("unknown method {m}"))
 }
 
+/// Parse `--quantize`: outer `None` = flag absent (keep whatever the
+/// model already has), `Some(None)` = explicit `none`, `Some(Some(m))`
+/// = a requested quantized mode.
+fn parse_quant(args: &Args) -> Result<Option<Option<QuantMode>>> {
+    match args.get("quantize") {
+        None => Ok(None),
+        Some(s) => QuantMode::from_name(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("--quantize must be none, int8, or int4 (got {s:?})")),
+    }
+}
+
+/// Apply the `--quantize` policy to a model: explicit modes must agree
+/// with a quantized bundle (its exact factors are already the
+/// dequantized ones — a different grid cannot be recovered), and
+/// explicit `none` on a quantized bundle is equally impossible.
+fn apply_quant(args: &Args, bundle: &mut ModelBundle) -> Result<()> {
+    let Some(req) = parse_quant(args)? else { return Ok(()) };
+    match (bundle.kernel.quantization(), req) {
+        (Some(have), Some(want)) if have != want => bail!(
+            "--model holds {} factors but --quantize {} was requested",
+            have.name(),
+            want.name()
+        ),
+        (Some(have), None) => bail!(
+            "--model holds {} factors; --quantize none cannot restore the exact ones \
+             (refit without --quantize instead)",
+            have.name()
+        ),
+        (Some(_), Some(_)) => {} // same mode, already attached
+        (None, want) => bundle.kernel.set_quantization(want),
+    }
+    Ok(())
+}
+
 /// The model every pipeline command runs on: loaded from `--model`
 /// (nothing retrains — the bundle's factors are bitwise the fitted
 /// ones), or trained + fitted from the dataset/forest flags. Flags
@@ -294,13 +344,19 @@ fn load_or_fit(args: &Args) -> Result<ModelBundle> {
             }
         }
         println!(
-            "loaded {path}: dataset={} N={} T={} method={} ({:.1} factor MB, no retraining)",
+            "loaded {path}: dataset={} N={} T={} method={}{} ({:.1} factor MB, no retraining)",
             bundle.meta.dataset,
             bundle.kernel.ctx.n,
             bundle.kernel.ctx.t,
             bundle.kernel.kind.name(),
+            match bundle.kernel.quantization() {
+                Some(m) => format!(" quantize={}", m.name()),
+                None => String::new(),
+            },
             bundle.kernel.factor_bytes() as f64 / 1e6,
         );
+        let mut bundle = bundle;
+        apply_quant(args, &mut bundle)?;
         Ok(bundle)
     } else {
         let (data, name) = load_data(args)?;
@@ -310,7 +366,9 @@ fn load_or_fit(args: &Args) -> Result<ModelBundle> {
         let kernel = ForestKernel::fit(&forest, &data, kind);
         let meta =
             BundleMeta { dataset: name, n: data.n, seed: cfg.seed, trees: forest.n_trees() };
-        Ok(ModelBundle { forest, kernel, meta })
+        let mut bundle = ModelBundle { forest, kernel, meta };
+        apply_quant(args, &mut bundle)?;
+        Ok(bundle)
     }
 }
 
@@ -334,22 +392,38 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let cfg = train_cfg(args);
     let (forest, secs_train) =
         time(|| forest_kernels::experiments::train_for(&data, kind, &cfg));
-    let (kernel, secs_fit) = time(|| ForestKernel::fit(&forest, &data, kind));
+    let (mut kernel, secs_fit) = time(|| ForestKernel::fit(&forest, &data, kind));
+    if let Some(mode) = parse_quant(args)?.flatten() {
+        kernel.set_quantization(Some(mode));
+    }
     let meta =
         BundleMeta { dataset: name.clone(), n: data.n, seed: cfg.seed, trees: forest.n_trees() };
     let out = PathBuf::from(args.str_or("out", "model.fkb"));
     let bundle = ModelBundle { forest, kernel, meta };
-    let (written, secs_save) = time(|| bundle.save(&out));
-    let written = written?;
+    let (saved, secs_save) =
+        time(|| model::save_with_sizes(&out, &bundle.forest, &bundle.kernel, &bundle.meta));
+    let (written, sizes) = saved?;
     println!(
-        "{name}: N={} T={} L={} method={} | train {secs_train:.2}s fit {secs_fit:.2}s | \
-         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v1, FNV-1a checksummed)",
+        "{name}: N={} T={} L={} method={}{} | train {secs_train:.2}s fit {secs_fit:.2}s | \
+         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v2, FNV-1a checksummed)",
         data.n,
         bundle.forest.n_trees(),
         bundle.kernel.ctx.l,
         kind.name(),
+        match bundle.kernel.quantization() {
+            Some(m) => format!(" quantize={}", m.name()),
+            None => String::new(),
+        },
         written as f64 / 1e6,
         out.display()
+    );
+    println!(
+        "  sections: forest {:.2} MB | context {:.2} MB | exact factors {:.2} MB | \
+         quantized factors {:.2} MB",
+        sizes.forest as f64 / 1e6,
+        sizes.context as f64 / 1e6,
+        sizes.factors as f64 / 1e6,
+        sizes.quantized as f64 / 1e6,
     );
     Ok(())
 }
@@ -554,7 +628,7 @@ fn spawn_replica(
     use std::io::BufRead;
     let mut c = std::process::Command::new(exe);
     c.arg("serve").arg("--model").arg(model_path).arg("--addr").arg("127.0.0.1:0");
-    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads"] {
+    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads", "quantize"] {
         if let Some(v) = args.get(key) {
             c.arg(format!("--{key}")).arg(v);
         }
@@ -968,7 +1042,7 @@ fn cmd_bench_materialize(args: &Args) -> Result<()> {
 /// the bundle instead of refitting the identical forest P times.
 /// (`--threads` is deliberately excluded: workers get an even 1/P core
 /// share via `--procs` unless `--worker-threads` overrides.)
-const WORKER_FLAGS: [&str; 12] = [
+const WORKER_FLAGS: [&str; 13] = [
     "model",
     "dataset",
     "n",
@@ -981,6 +1055,7 @@ const WORKER_FLAGS: [&str; 12] = [
     "max-samples",
     "stripe-rows",
     "mem-budget",
+    "quantize",
 ];
 
 fn cmd_shards(args: &Args) -> Result<()> {
@@ -1791,6 +1866,136 @@ fn cmd_naive(args: &Args) -> Result<()> {
             speedup_vs_serial: probe.speedup(),
         });
         n *= 2;
+    }
+    if let Some(path) = args.get("json-out") {
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
+/// `bench-quantize`: exact vs block-quantized factors on one fitted
+/// kernel — serialized bytes/row, full-kernel SpGEMM wall time, and
+/// neighbor recall@10 / recall@100 of the quantized product against the
+/// exact one (sampled rows, ties broken identically on both sides).
+fn cmd_bench_quantize(args: &Args) -> Result<()> {
+    use forest_kernels::sparse::qcsr;
+    use forest_kernels::spectral::knn::rank_row;
+    let dataset = args.str_or("dataset", "covertype");
+    let n = args.usize_or("n", 8192);
+    let trees = args.usize_or("trees", 48);
+    let sample_rows = args.usize_or("sample-rows", 256).max(1);
+    let kind = {
+        let m = args.str_or("method", "kerf");
+        ProximityKind::from_name(m).ok_or_else(|| anyhow!("unknown method {m}"))?
+    };
+    let spec =
+        registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let data = spec.generate(n, 7);
+    let cfg = TrainConfig {
+        n_trees: trees,
+        min_samples_leaf: args.usize_or("min-leaf", 64),
+        seed: 7,
+        ..Default::default()
+    };
+    let forest = Forest::train(&data, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let threads = exec::threads();
+    let flops = kernel.predicted_flops();
+
+    let (p_exact, secs_exact) = time(|| kernel.proximity_matrix());
+    let exact_bytes =
+        model::encoded_csr_bytes(&kernel.q) + model::encoded_csr_bytes(kernel.w_transpose());
+    println!(
+        "# quantized factors vs exact ({dataset}, N={n}, T={trees}, method={}, {threads} threads)",
+        kind.name()
+    );
+    println!("mode\tbytes/row\tratio\tspgemm_s\trecall@10\trecall@100");
+    println!(
+        "exact\t{:.1}\t1.00x\t{secs_exact:.3}\t1.000\t1.000",
+        exact_bytes as f64 / n as f64
+    );
+    let mut records = vec![
+        BenchRecord {
+            name: format!("quantize-spgemm/exact/{dataset}"),
+            n,
+            wall_secs: secs_exact,
+            predicted_flops: flops,
+            threads,
+            speedup_vs_serial: 1.0,
+        },
+        BenchRecord {
+            name: format!("quantize-bytes-per-row/exact/{dataset}"),
+            n,
+            wall_secs: exact_bytes as f64 / n as f64,
+            predicted_flops: 0,
+            threads: 1,
+            speedup_vs_serial: 1.0,
+        },
+    ];
+
+    // Mean recall@k of the quantized product's neighbor ranking vs the
+    // exact one, over every `step`-th row (self excluded on both sides).
+    let recall_at = |p_q: &Csr, k: usize| -> f64 {
+        let step = (n / sample_rows).max(1);
+        let (mut tot, mut cnt) = (0f64, 0usize);
+        let mut i = 0;
+        while i < n {
+            let (ec, ev) = p_exact.row(i);
+            let top: Vec<u32> =
+                rank_row(ec, ev, Some(i), k).into_iter().map(|(c, _)| c).collect();
+            if !top.is_empty() {
+                let (qc, qv) = p_q.row(i);
+                let got: std::collections::HashSet<u32> =
+                    rank_row(qc, qv, Some(i), k).into_iter().map(|(c, _)| c).collect();
+                let hit = top.iter().filter(|c| got.contains(c)).count();
+                tot += hit as f64 / top.len() as f64;
+                cnt += 1;
+            }
+            i += step;
+        }
+        if cnt == 0 { 1.0 } else { tot / cnt }
+    };
+
+    for mode in [QuantMode::Int8, QuantMode::Int4] {
+        let qq = qcsr::quantize(&kernel.q, mode);
+        let qwt = qcsr::quantize(kernel.w_transpose(), mode);
+        let (p_q, secs_q) = time(|| qcsr::spgemm_q(&qq, &qwt, threads));
+        let qbytes = model::encoded_qcsr_bytes(&qq) + model::encoded_qcsr_bytes(&qwt);
+        let ratio = exact_bytes as f64 / qbytes as f64;
+        let r10 = recall_at(&p_q, 10);
+        let r100 = recall_at(&p_q, 100);
+        println!(
+            "{}\t{:.1}\t{ratio:.2}x\t{secs_q:.3}\t{r10:.3}\t{r100:.3}",
+            mode.name(),
+            qbytes as f64 / n as f64
+        );
+        records.push(BenchRecord {
+            name: format!("quantize-spgemm/{}/{dataset}", mode.name()),
+            n,
+            wall_secs: secs_q,
+            predicted_flops: flops,
+            threads,
+            speedup_vs_serial: secs_exact / secs_q,
+        });
+        records.push(BenchRecord {
+            name: format!("quantize-bytes-per-row/{}/{dataset}", mode.name()),
+            n,
+            wall_secs: qbytes as f64 / n as f64,
+            predicted_flops: 0,
+            threads: 1,
+            speedup_vs_serial: ratio,
+        });
+        for (k, r) in [(10usize, r10), (100usize, r100)] {
+            records.push(BenchRecord {
+                name: format!("quantize-recall/{}/k={k}/{dataset}", mode.name()),
+                n,
+                wall_secs: r,
+                predicted_flops: 0,
+                threads: 1,
+                speedup_vs_serial: r,
+            });
+        }
     }
     if let Some(path) = args.get("json-out") {
         write_bench_json(std::path::Path::new(path), &records)?;

@@ -93,6 +93,12 @@ impl ByteWriter {
             self.put_f32(x);
         }
     }
+
+    /// Raw byte payload: `u64` length + bytes (quantized factor streams).
+    pub fn put_vec_u8(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
 }
 
 /// Cursor-based little-endian decoder over a borrowed buffer.
@@ -192,6 +198,11 @@ impl<'a> ByteReader<'a> {
         }
         Ok(out)
     }
+
+    pub fn take_vec_u8(&mut self) -> Result<Vec<u8>> {
+        let n = self.take_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +223,7 @@ mod tests {
         w.put_vec_u32(&[9, 8]);
         w.put_vec_usize(&[0, usize::MAX >> 1]);
         w.put_vec_f32(&[1.5, f32::MIN_POSITIVE]);
+        w.put_vec_u8(&[0xFF, 0x00, 0x7E]);
         let buf = w.into_inner();
         let mut r = ByteReader::new(&buf);
         assert_eq!(r.take_u8().unwrap(), 7);
@@ -227,6 +239,7 @@ mod tests {
         let f = r.take_vec_f32().unwrap();
         assert_eq!(f.len(), 2);
         assert_eq!(f[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(r.take_vec_u8().unwrap(), vec![0xFF, 0x00, 0x7E]);
         assert_eq!(r.remaining(), 0);
     }
 

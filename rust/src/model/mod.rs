@@ -15,7 +15,7 @@
 //! | offset | size | field                                    |
 //! |--------|------|------------------------------------------|
 //! | 0      | 8    | magic `b"FKBNDL1\0"`                     |
-//! | 8      | 4    | format version (`u32`, currently 1)      |
+//! | 8      | 4    | format version (`u32`, currently 2)      |
 //! | 12     | 8    | payload length (`u64`)                   |
 //! | 20     | 8    | FNV-1a 64 of the payload (`u64`)         |
 //! | 28     | …    | payload (see [`bytes`] for the encoding) |
@@ -25,6 +25,16 @@
 //! verified before any payload byte is interpreted. `f32` values are
 //! stored as raw bits, so factors and leaf statistics survive the trip
 //! without rounding.
+//!
+//! **Version 2** adds a factor-form byte ahead of the factor section:
+//! form 0 stores the exact CSR factors (the v1 layout and the default),
+//! form 1 stores block-quantized [`QCsr`] factors instead — written by
+//! `fit --out --quantize {int8,int4}` for a several-times-smaller
+//! artifact. A quantized bundle is lossy by design: the loader
+//! dequantizes the stored factors into the kernel's canonical `Q`/`W`
+//! (so every downstream path works unchanged), re-attaches the stored
+//! quantized `Q` bitwise, and re-quantizes the recomputed `Wᵀ` with the
+//! same deterministic rule. Version-1 files load unchanged.
 //!
 //! Produced by `repro fit --out model.fkb`; consumed via `--model` by
 //! `kernel`, `predict`, `embed`, `materialize`, `serve`, and the
@@ -36,15 +46,20 @@ pub mod bytes;
 use crate::coordinator::shard::fnv1a64;
 use crate::error::{Context, Result};
 use crate::forest::{Binner, Forest, ForestKind, Node, Tree};
+use crate::sparse::qcsr::{self, QCsr, QuantMode};
 use crate::sparse::Csr;
-use crate::swlc::{EnsembleContext, ForestKernel, ProximityKind};
+use crate::swlc::{EnsembleContext, ForestKernel, ProximityKind, QuantizedFactors};
 use crate::{anyhow, bail};
 use bytes::{ByteReader, ByteWriter};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"FKBNDL1\0";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 const HEADER_BYTES: usize = 28;
+
+/// Factor-section forms (v2+).
+const FORM_EXACT: u8 = 0;
+const FORM_QUANTIZED: u8 = 1;
 
 /// Provenance recorded alongside the model (display/auditing only —
 /// nothing downstream depends on it).
@@ -107,7 +122,60 @@ fn take_csr(r: &mut ByteReader) -> Result<Csr> {
     Ok(m)
 }
 
-fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Vec<u8> {
+fn put_qcsr(w: &mut ByteWriter, m: &QCsr) {
+    w.put_u64(m.n_rows as u64);
+    w.put_u64(m.n_cols as u64);
+    w.put_u8(m.mode.code());
+    w.put_vec_usize(&m.indptr);
+    w.put_vec_u8(&m.col_bytes);
+    w.put_vec_u8(&m.qdata);
+    w.put_vec_f32(&m.scales);
+}
+
+fn take_qcsr(r: &mut ByteReader) -> Result<QCsr> {
+    let n_rows = r.take_u64()? as usize;
+    let n_cols = r.take_u64()? as usize;
+    let mode = QuantMode::from_code(r.take_u8()?)
+        .ok_or_else(|| anyhow!("bundle quantized factor has unknown mode code"))?;
+    let indptr = r.take_vec_usize()?;
+    let col_bytes = r.take_vec_u8()?;
+    let qdata = r.take_vec_u8()?;
+    let scales = r.take_vec_f32()?;
+    QCsr::from_parts(n_rows, n_cols, mode, indptr, col_bytes, qdata, scales)
+        .map_err(|e| anyhow!("bundle quantized factor is corrupt: {e}"))
+}
+
+/// Serialized size of one exact CSR factor section (bench reporting).
+pub fn encoded_csr_bytes(m: &Csr) -> usize {
+    let mut w = ByteWriter::new();
+    put_csr(&mut w, m);
+    w.len()
+}
+
+/// Serialized size of one quantized factor section (bench reporting).
+pub fn encoded_qcsr_bytes(m: &QCsr) -> usize {
+    let mut w = ByteWriter::new();
+    put_qcsr(&mut w, m);
+    w.len()
+}
+
+/// Byte sizes of the major payload sections of a just-encoded bundle,
+/// reported by `fit --out` so compression wins are visible at the CLI.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SectionSizes {
+    /// Trees, bags, binner, tree weights.
+    pub forest: usize,
+    /// Ensemble context θ.
+    pub context: usize,
+    /// Exact CSR factor section (0 in a quantized bundle).
+    pub factors: usize,
+    /// Quantized factor section (0 in an exact bundle).
+    pub quantized: usize,
+    /// Whole payload, including identity/provenance.
+    pub total: usize,
+}
+
+fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<u8>, SectionSizes) {
     let mut w = ByteWriter::new();
     // Identity.
     w.put_str(kernel.kind.name());
@@ -118,6 +186,7 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     w.put_u64(meta.seed);
     w.put_u64(meta.trees as u64);
     // Forest.
+    let forest_start = w.len();
     w.put_u64(forest.n_classes as u64);
     w.put_f32(forest.init_score);
     w.put_f32(forest.learning_rate);
@@ -147,6 +216,7 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     for e in &forest.binner.edges {
         w.put_vec_f32(e);
     }
+    let forest_end = w.len();
     // Ensemble context θ.
     let ctx = &kernel.ctx;
     w.put_u64(ctx.n as u64);
@@ -160,17 +230,50 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     w.put_vec_f32(&ctx.tree_weights);
     w.put_vec_u32(&ctx.y);
     w.put_u64(ctx.n_classes as u64);
-    // Factors. `Wᵀ` is not stored: the loader recomputes it with the
-    // same deterministic transpose `fit` uses, so it is bit-identical.
+    let ctx_end = w.len();
+    // Factors. `Wᵀ` is never stored: the loader recomputes it with the
+    // same deterministic transpose `fit` uses. When the kernel has a
+    // quantized mode, the quantized factors *replace* the exact CSRs on
+    // disk (form 1) — that is the whole artifact-size win; the loader
+    // dequantizes them back into the canonical slots.
     w.put_u8(kernel.symmetric as u8);
-    put_csr(&mut w, &kernel.q);
-    if !kernel.symmetric {
-        put_csr(&mut w, &kernel.w);
+    let mut factors = 0usize;
+    let mut quantized = 0usize;
+    match kernel.quantized() {
+        Some(qf) => {
+            w.put_u8(FORM_QUANTIZED);
+            w.put_u8(qf.mode.code());
+            let qstart = w.len();
+            // The attached quantized Q is written verbatim (so a loaded
+            // bundle re-saves bitwise); W has no attached quantized form
+            // (only Wᵀ does) and is quantized here.
+            put_qcsr(&mut w, &qf.q);
+            if !kernel.symmetric {
+                put_qcsr(&mut w, &qcsr::quantize(&kernel.w, qf.mode));
+            }
+            quantized = w.len() - qstart;
+        }
+        None => {
+            w.put_u8(FORM_EXACT);
+            let fstart = w.len();
+            put_csr(&mut w, &kernel.q);
+            if !kernel.symmetric {
+                put_csr(&mut w, &kernel.w);
+            }
+            factors = w.len() - fstart;
+        }
     }
-    w.into_inner()
+    let sizes = SectionSizes {
+        forest: forest_end - forest_start,
+        context: ctx_end - forest_end,
+        factors,
+        quantized,
+        total: w.len(),
+    };
+    (w.into_inner(), sizes)
 }
 
-fn decode_payload(buf: &[u8]) -> Result<ModelBundle> {
+fn decode_payload(buf: &[u8], version: u32) -> Result<ModelBundle> {
     let mut r = ByteReader::new(buf);
     // Identity.
     let kind_name = r.take_str()?;
@@ -256,10 +359,38 @@ fn decode_payload(buf: &[u8]) -> Result<ModelBundle> {
         y: r.take_vec_u32()?,
         n_classes: r.take_u64()? as usize,
     };
-    // Factors.
+    // Factors. v1 files predate the form byte and are always exact.
     let symmetric = r.take_u8()? != 0;
-    let q = take_csr(&mut r)?;
-    let w = if symmetric { q.clone() } else { take_csr(&mut r)? };
+    let form = if version >= 2 { r.take_u8()? } else { FORM_EXACT };
+    let mut quant: Option<(QuantMode, QCsr)> = None;
+    let (q, w) = match form {
+        FORM_EXACT => {
+            let q = take_csr(&mut r)?;
+            let w = if symmetric { q.clone() } else { take_csr(&mut r)? };
+            (q, w)
+        }
+        FORM_QUANTIZED => {
+            let mode = QuantMode::from_code(r.take_u8()?)
+                .ok_or_else(|| anyhow!("bundle quantized section has unknown mode code"))?;
+            let qq = take_qcsr(&mut r)?;
+            if qq.mode != mode {
+                bail!("bundle quantized Q mode disagrees with the section header");
+            }
+            let q = qq.dequantize();
+            let w = if symmetric {
+                q.clone()
+            } else {
+                let qw = take_qcsr(&mut r)?;
+                if qw.mode != mode {
+                    bail!("bundle quantized W mode disagrees with the section header");
+                }
+                qw.dequantize()
+            };
+            quant = Some((mode, qq));
+            (q, w)
+        }
+        other => bail!("bundle has unknown factor form {other}"),
+    };
     if r.remaining() != 0 {
         bail!("bundle has {} trailing payload bytes", r.remaining());
     }
@@ -282,7 +413,14 @@ fn decode_payload(buf: &[u8]) -> Result<ModelBundle> {
     if symmetric != kind.symmetric() {
         bail!("bundle symmetry flag disagrees with proximity kind {kind_name}");
     }
-    let kernel = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
+    let mut kernel = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
+    if let Some((mode, qq)) = quant {
+        // The stored quantized Q survives bitwise; the quantized Wᵀ is
+        // re-derived from the recomputed transpose with the same
+        // deterministic rounding rule.
+        let wt_q = qcsr::quantize(kernel.w_transpose(), mode);
+        kernel.attach_quantized(QuantizedFactors { mode, q: qq, wt: wt_q });
+    }
     Ok(ModelBundle { forest, kernel, meta })
 }
 
@@ -301,8 +439,8 @@ impl ModelBundle {
             bail!("{}: not an fk-bundle file (bad magic)", path.display());
         }
         let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
-        if version != VERSION {
-            bail!("{}: unsupported bundle version {version} (expected {VERSION})", path.display());
+        if version == 0 || version > VERSION {
+            bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
         }
         let payload_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
         let want = u64::from_le_bytes(buf[20..28].try_into().unwrap());
@@ -319,14 +457,25 @@ impl ModelBundle {
         if got != want {
             bail!("{}: checksum mismatch (header {want:016x}, payload {got:016x})", path.display());
         }
-        decode_payload(payload)
+        decode_payload(payload, version)
             .with_context(|| format!("decoding model bundle {}", path.display()))
     }
 }
 
 /// Serialize a forest + fitted kernel + metadata to `path`.
 pub fn save(path: &Path, forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Result<u64> {
-    let payload = encode_payload(forest, kernel, meta);
+    save_with_sizes(path, forest, kernel, meta).map(|(n, _)| n)
+}
+
+/// [`save`] that also reports the payload section sizes (for the
+/// `fit --out` CLI summary).
+pub fn save_with_sizes(
+    path: &Path,
+    forest: &Forest,
+    kernel: &ForestKernel,
+    meta: &BundleMeta,
+) -> Result<(u64, SectionSizes)> {
+    let (payload, sizes) = encode_payload(forest, kernel, meta);
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&VERSION.to_le_bytes());
@@ -335,7 +484,7 @@ pub fn save(path: &Path, forest: &Forest, kernel: &ForestKernel, meta: &BundleMe
     buf.extend_from_slice(&payload);
     std::fs::write(path, &buf)
         .with_context(|| format!("writing model bundle {}", path.display()))?;
-    Ok(buf.len() as u64)
+    Ok((buf.len() as u64, sizes))
 }
 
 #[cfg(test)]
@@ -398,6 +547,37 @@ mod tests {
         let err = ModelBundle::load(&path).unwrap_err().to_string();
         assert!(err.contains("magic"), "wrong error: {err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantized_bundle_roundtrips_and_reports_sizes() {
+        let (forest, mut kernel, meta) = fixture();
+        kernel.set_quantization(Some(QuantMode::Int8));
+        let path = tmpfile("quantized");
+        let (written, sizes) = save_with_sizes(&path, &forest, &kernel, &meta).unwrap();
+        assert_eq!(written as usize, HEADER_BYTES + sizes.total);
+        assert_eq!(sizes.factors, 0, "quantized bundle must not store exact factors");
+        assert!(sizes.quantized > 0);
+        assert!(sizes.forest > 0 && sizes.context > 0);
+        let b = ModelBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(b.kernel.quantization(), Some(QuantMode::Int8));
+        // The stored quantized Q survives bitwise; the exact slot holds
+        // its dequantization.
+        let qf_orig = kernel.quantized().unwrap();
+        let qf_load = b.kernel.quantized().unwrap();
+        assert_eq!(qf_load.q, qf_orig.q);
+        assert_eq!(b.kernel.q, qf_orig.q.dequantize());
+    }
+
+    #[test]
+    fn exact_bundle_reports_factor_section() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("sizes-exact");
+        let (_, sizes) = save_with_sizes(&path, &forest, &kernel, &meta).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(sizes.quantized, 0);
+        assert!(sizes.factors > 0);
     }
 
     #[test]

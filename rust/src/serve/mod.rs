@@ -57,7 +57,7 @@ use crate::exec::queue::BoundedQueue;
 use crate::model::ModelBundle;
 use crate::runtime::json::Json;
 use crate::spectral::knn::{knn_row, rank_row};
-use crate::spectral::pca::{leaf_pca, leaf_pca_project};
+use crate::spectral::pca::{leaf_pca, leaf_pca_project, leaf_pca_project_q};
 use crate::swlc::predict;
 use crate::{anyhow, bail};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -354,7 +354,12 @@ fn run_tile(st: &ServerState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>
         }
         JobKind::Embed => {
             let dims = st.embed_vals.len();
-            let coords = leaf_pca_project(&kernel.q, &st.embed_scores, &st.embed_vals, &qn);
+            // Quantized bundles project tiles off the compressed Q; the
+            // exact factor stays the default path.
+            let coords = match kernel.quantized() {
+                Some(qf) => leaf_pca_project_q(&qf.q, &st.embed_scores, &st.embed_vals, &qn),
+                None => leaf_pca_project(&kernel.q, &st.embed_scores, &st.embed_vals, &qn),
+            };
             Ok((0..b)
                 .map(|i| Reply::Embed { coords: coords[i * dims..(i + 1) * dims].to_vec() })
                 .collect())

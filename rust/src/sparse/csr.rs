@@ -2,6 +2,14 @@
 
 use crate::exec;
 
+/// Output-column tile width for `spmm`/`spmm_t`: the dense `X` panel is
+/// walked in slices of at most this many columns so the slice stays
+/// cache-resident while matrix rows stream past it. Tiling never changes
+/// results — each output element accumulates its row's nonzeros in the
+/// same order whatever the tile — so tiled output is bitwise-identical
+/// to untiled at any thread count.
+const SPMM_K_TILE: usize = 16;
+
 /// A CSR matrix over `f32` values with `u32` column indices.
 ///
 /// `u32` indices cap the column dimension at ~4.29e9, comfortably above
@@ -315,6 +323,12 @@ impl Csr {
     /// reference). Each worker owns a contiguous row block of `Y` and
     /// accumulates every row with the same serial inner loop, so the
     /// result never depends on the partition.
+    ///
+    /// The k-loop is tiled ([`SPMM_K_TILE`]) so the slice of the dense
+    /// `X` panel in flight stays cache-resident while a worker streams
+    /// its rows; every output element still accumulates its row's
+    /// nonzeros in the same order whatever the tiling, so tiled output
+    /// is bitwise-identical to untiled (and across thread counts).
     pub fn spmm_with_threads(&self, x: &[f32], k: usize, y: &mut [f32], n_threads: usize) {
         debug_assert_eq!(x.len(), self.n_cols * k);
         debug_assert_eq!(y.len(), self.n_rows * k);
@@ -326,20 +340,26 @@ impl Csr {
         let ranges = exec::chunk_ranges(self.n_rows, nt);
         let ysh = exec::SharedSlice::new(y);
         exec::parallel_tasks(ranges, |_, rows| {
-            let mut acc = vec![0f32; k];
-            for r in rows {
-                acc.fill(0.0);
-                let (cols, vals) = self.row(r);
-                for (&c, &v) in cols.iter().zip(vals) {
-                    let xr = &x[c as usize * k..c as usize * k + k];
-                    for j in 0..k {
-                        acc[j] += v * xr[j];
+            let mut acc = vec![0f32; SPMM_K_TILE.min(k)];
+            for k0 in (0..k).step_by(SPMM_K_TILE) {
+                let kt = SPMM_K_TILE.min(k - k0);
+                for r in rows.clone() {
+                    let acc = &mut acc[..kt];
+                    acc.fill(0.0);
+                    let (cols, vals) = self.row(r);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        let xr = &x[c as usize * k + k0..c as usize * k + k0 + kt];
+                        for j in 0..kt {
+                            acc[j] += v * xr[j];
+                        }
                     }
-                }
-                for j in 0..k {
-                    // SAFETY: row ranges are disjoint, so every output
-                    // slot is written by exactly one worker.
-                    unsafe { ysh.write(r * k + j, acc[j]) };
+                    for j in 0..kt {
+                        // SAFETY: row ranges are disjoint and k-tiles
+                        // within a range run on the same worker, so
+                        // every output slot is written by exactly one
+                        // worker.
+                        unsafe { ysh.write(r * k + k0 + j, acc[j]) };
+                    }
                 }
             }
         });
@@ -347,13 +367,16 @@ impl Csr {
 
     fn spmm_serial(&self, x: &[f32], k: usize, y: &mut [f32]) {
         y.fill(0.0);
-        for r in 0..self.n_rows {
-            let (cols, vals) = self.row(r);
-            let out = &mut y[r * k..(r + 1) * k];
-            for (&c, &v) in cols.iter().zip(vals) {
-                let xr = &x[c as usize * k..c as usize * k + k];
-                for j in 0..k {
-                    out[j] += v * xr[j];
+        for k0 in (0..k).step_by(SPMM_K_TILE) {
+            let kt = SPMM_K_TILE.min(k - k0);
+            for r in 0..self.n_rows {
+                let (cols, vals) = self.row(r);
+                let out = &mut y[r * k + k0..r * k + k0 + kt];
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let xr = &x[c as usize * k + k0..c as usize * k + k0 + kt];
+                    for j in 0..kt {
+                        out[j] += v * xr[j];
+                    }
                 }
             }
         }
@@ -389,30 +412,37 @@ impl Csr {
             let width = cols_range.len();
             let lo = cols_range.start as u32;
             let hi = cols_range.end as u32;
-            // Per-worker output tile over its own columns.
-            let mut tile = vec![0f32; width * k];
-            for r in 0..self.n_rows {
-                let (cols, vals) = self.row(r);
-                let a = cols.partition_point(|&c| c < lo);
-                let b = a + cols[a..].partition_point(|&c| c < hi);
-                if a == b {
-                    continue;
-                }
-                let xr = &x[r * k..r * k + k];
-                for t in a..b {
-                    let cl = (cols[t] - lo) as usize;
-                    let v = vals[t];
-                    let out = &mut tile[cl * k..cl * k + k];
-                    for j in 0..k {
-                        out[j] += v * xr[j];
+            // Per-worker output tile over its own columns, k-tiled so
+            // the live slices of X and the tile fit in cache together.
+            let mut tile = vec![0f32; width * SPMM_K_TILE.min(k)];
+            for k0 in (0..k).step_by(SPMM_K_TILE) {
+                let kt = SPMM_K_TILE.min(k - k0);
+                tile[..width * kt].fill(0.0);
+                for r in 0..self.n_rows {
+                    let (cols, vals) = self.row(r);
+                    let a = cols.partition_point(|&c| c < lo);
+                    let b = a + cols[a..].partition_point(|&c| c < hi);
+                    if a == b {
+                        continue;
+                    }
+                    let xr = &x[r * k + k0..r * k + k0 + kt];
+                    for t in a..b {
+                        let cl = (cols[t] - lo) as usize;
+                        let v = vals[t];
+                        let out = &mut tile[cl * kt..cl * kt + kt];
+                        for j in 0..kt {
+                            out[j] += v * xr[j];
+                        }
                     }
                 }
-            }
-            for (ci, col) in cols_range.enumerate() {
-                for j in 0..k {
-                    // SAFETY: column ranges are disjoint, so every
-                    // output slot is written by exactly one worker.
-                    unsafe { ysh.write(col * k + j, tile[ci * k + j]) };
+                for (ci, col) in cols_range.clone().enumerate() {
+                    for j in 0..kt {
+                        // SAFETY: column ranges are disjoint and every
+                        // k-tile of a range runs on the same worker, so
+                        // every output slot is written by exactly one
+                        // worker.
+                        unsafe { ysh.write(col * k + k0 + j, tile[ci * kt + j]) };
+                    }
                 }
             }
         });
@@ -420,13 +450,16 @@ impl Csr {
 
     fn spmm_t_serial(&self, x: &[f32], k: usize, y: &mut [f32]) {
         y.fill(0.0);
-        for r in 0..self.n_rows {
-            let (cols, vals) = self.row(r);
-            let xr = &x[r * k..(r + 1) * k];
-            for (&c, &v) in cols.iter().zip(vals) {
-                let out = &mut y[c as usize * k..c as usize * k + k];
-                for j in 0..k {
-                    out[j] += v * xr[j];
+        for k0 in (0..k).step_by(SPMM_K_TILE) {
+            let kt = SPMM_K_TILE.min(k - k0);
+            for r in 0..self.n_rows {
+                let (cols, vals) = self.row(r);
+                let xr = &x[r * k + k0..r * k + k0 + kt];
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let out = &mut y[c as usize * k + k0..c as usize * k + k0 + kt];
+                    for j in 0..kt {
+                        out[j] += v * xr[j];
+                    }
                 }
             }
         }

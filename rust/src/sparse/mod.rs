@@ -8,11 +8,17 @@
 //! layer is built on: triplet→CSR assembly, transpose, SpGEMM with both
 //! dense-scratch and hash-map accumulators, SpMV/SpMM, and row/column
 //! scaling.
+//!
+//! [`qcsr`] adds the opt-in compressed companion: block-quantized
+//! int8/int4 factors ([`QCsr`]) with delta-compressed indices and
+//! quantized SpGEMM/SpMM kernels that accumulate in f32.
 
 mod csr;
 mod ops;
+pub mod qcsr;
 mod spgemm;
 
 pub use csr::Csr;
 pub use ops::{scale_cols, scale_rows};
-pub use spgemm::{spgemm, spgemm_nnz_flops, spgemm_with_threads, SpaScratch};
+pub use qcsr::{QCsr, QuantMode};
+pub use spgemm::{spgemm, spgemm_nnz_flops, spgemm_with_scratch, spgemm_with_threads, SpaScratch};

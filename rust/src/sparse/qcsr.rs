@@ -1,0 +1,832 @@
+//! Block-quantized CSR factors (`QCsr`): int8/int4 values + compressed
+//! column indices, with a quantized SpGEMM/SpMM fast path.
+//!
+//! The SWLC hot paths (stripe SpGEMM, serve tiles, subspace iteration)
+//! are memory-bandwidth-bound over the factor value/index arrays, so a
+//! QLORA/RFX-style block quantization of the factors trades a bounded,
+//! *documented* value error for a 3–4× smaller working set and bundle
+//! artifact. The exact f32 [`Csr`] path stays canonical: quantization is
+//! opt-in (`--quantize {none,int8,int4}`) and validated on neighbor
+//! ranking (recall@k vs exact), never on bitwise equality.
+//!
+//! # Storage layout
+//!
+//! Values are quantized in **row-local fixed-size blocks** of
+//! [`QBLOCK`] entries (the last block of a row may be short) with one
+//! f32 scale per block, so row slicing and per-row decode never cross a
+//! scale boundary:
+//!
+//! * `Int8`: one byte per entry, `q ∈ [-127, 127]`.
+//! * `Int4`: two entries per byte (low nibble first), nibble stores
+//!   `q + 8` with `q ∈ [-7, 7]` (nibble value 0 is unused).
+//!
+//! Column indices are stored as per-entry **delta varints**: the first
+//! entry of a row stores its absolute column, each later entry stores
+//! `col - prev - 1` (columns are strictly increasing). Deltas `< 255`
+//! take one byte; larger ones take an `0xFF` escape byte plus a `u32`
+//! little-endian payload. For SWLC factors (leaf gaps ≈ L/T, sample
+//! gaps ≈ N/leaf-size) almost every delta fits in one byte.
+//!
+//! # Deterministic rounding rule
+//!
+//! Per block, `scale = max|v| / L` with `L = 127` (int8) or `7` (int4),
+//! and `q = clamp(round(v · L / max|v|), -L, L)` using f32 arithmetic
+//! and `f32::round` (round-half-away-from-zero). The dequantized value
+//! is `v̂ = q · scale`, so `|v̂ - v| ≤ scale/2` up to f32 rounding. An
+//! all-zero block stores `scale = 0`. The rule involves no
+//! platform-dependent operations, so quantizing the same factor yields
+//! identical bytes everywhere.
+//!
+//! # Compute path
+//!
+//! The quantized SpGEMM/SpMM kernels decode one row at a time into a
+//! reused scratch ([`QRowScratch`]): the column loop walks the varint
+//! stream, then the value loop dequantizes block-by-block — a
+//! contiguous, branch-free multiply per block that the autovectorizer
+//! turns into SIMD-width code. Accumulation is in f32 through the same
+//! SPA ([`SpaScratch`]) the exact path uses, in the same order, so the
+//! quantized product is bitwise-identical to the *exact* product of the
+//! dequantized factors, and parallel runs are bitwise-identical to
+//! serial at any thread count.
+
+use super::csr::Csr;
+use super::spgemm::{key_bytes_for, SpaScratch};
+use crate::exec;
+
+/// Entries per quantization block (per-block f32 scale).
+pub const QBLOCK: usize = 32;
+
+/// Quantization precision for [`QCsr`] values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// One byte per value, `q ∈ [-127, 127]`.
+    Int8,
+    /// One nibble per value (two per byte), `q ∈ [-7, 7]`.
+    Int4,
+}
+
+impl QuantMode {
+    /// CLI / display name (`int8` / `int4`).
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Int8 => "int8",
+            QuantMode::Int4 => "int4",
+        }
+    }
+
+    /// Parse a `--quantize` value; `none` maps to `Ok(None)`.
+    pub fn from_name(s: &str) -> Option<Option<QuantMode>> {
+        match s {
+            "none" => Some(None),
+            "int8" => Some(Some(QuantMode::Int8)),
+            "int4" => Some(Some(QuantMode::Int4)),
+            _ => None,
+        }
+    }
+
+    /// Stable on-disk code (bundle format): 1 = int8, 2 = int4.
+    pub fn code(self) -> u8 {
+        match self {
+            QuantMode::Int8 => 1,
+            QuantMode::Int4 => 2,
+        }
+    }
+
+    /// Inverse of [`QuantMode::code`].
+    pub fn from_code(code: u8) -> Option<QuantMode> {
+        match code {
+            1 => Some(QuantMode::Int8),
+            2 => Some(QuantMode::Int4),
+            _ => None,
+        }
+    }
+
+    /// Largest representable magnitude `L` of the signed grid.
+    fn levels(self) -> f32 {
+        match self {
+            QuantMode::Int8 => 127.0,
+            QuantMode::Int4 => 7.0,
+        }
+    }
+
+    /// Packed bytes needed for `len` row entries.
+    fn row_bytes(self, len: usize) -> usize {
+        match self {
+            QuantMode::Int8 => len,
+            QuantMode::Int4 => len.div_ceil(2),
+        }
+    }
+}
+
+/// Block-quantized CSR (see the module docs for the exact layout).
+///
+/// The per-row pointer arrays (`col_ptr`, `qdata_ptr`, `block_ptr`) are
+/// derivable from `indptr` + `mode` + the varint stream; the bundle
+/// stores only `indptr`/`col_bytes`/`qdata`/`scales` and rebuilds the
+/// rest on load ([`QCsr::from_parts`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QCsr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub mode: QuantMode,
+    /// Entry offsets per row (same meaning as [`Csr::indptr`]).
+    pub indptr: Vec<usize>,
+    /// Byte offset of each row's delta-varint stream in `col_bytes`.
+    pub col_ptr: Vec<usize>,
+    /// Delta-varint column stream.
+    pub col_bytes: Vec<u8>,
+    /// Byte offset of each row's packed values in `qdata`.
+    pub qdata_ptr: Vec<usize>,
+    /// Quantized values: int8 as raw bytes, int4 packed two per byte.
+    pub qdata: Vec<u8>,
+    /// First scale-block index of each row.
+    pub block_ptr: Vec<usize>,
+    /// Per-block f32 scales.
+    pub scales: Vec<f32>,
+}
+
+/// Reused per-worker decode buffers for one quantized row.
+pub struct QRowScratch {
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+    /// Second (cols, vals) pair so an A-row can stay decoded while
+    /// B-rows stream through the first pair.
+    pub cols2: Vec<u32>,
+    pub vals2: Vec<f32>,
+}
+
+impl QRowScratch {
+    pub fn new() -> QRowScratch {
+        QRowScratch { cols: Vec::new(), vals: Vec::new(), cols2: Vec::new(), vals2: Vec::new() }
+    }
+}
+
+impl Default for QRowScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Quantize one block: returns `(scale, inv)` with `inv = L / max|v|`
+/// (0 for an all-zero block, making every `q` 0).
+fn block_scale(vals: &[f32], levels: f32) -> (f32, f32) {
+    let mut max_abs = 0f32;
+    for &v in vals {
+        max_abs = max_abs.max(v.abs());
+    }
+    if max_abs == 0.0 {
+        (0.0, 0.0)
+    } else {
+        (max_abs / levels, levels / max_abs)
+    }
+}
+
+#[inline]
+fn quantize_one(v: f32, inv: f32, levels: f32) -> i8 {
+    (v * inv).round().clamp(-levels, levels) as i8
+}
+
+/// Append the delta varint for `col` given the previous column.
+fn push_delta(out: &mut Vec<u8>, col: u32, prev: &mut i64) {
+    let d = col as i64 - *prev - 1;
+    debug_assert!(d >= 0, "columns must be strictly increasing");
+    if (d as u64) < 0xFF {
+        out.push(d as u8);
+    } else {
+        out.push(0xFF);
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    *prev = col as i64;
+}
+
+/// Quantize an exact CSR into a [`QCsr`] with the documented
+/// deterministic rounding rule.
+pub fn quantize(m: &Csr, mode: QuantMode) -> QCsr {
+    assert!(m.n_cols <= u32::MAX as usize);
+    let levels = mode.levels();
+    let n = m.n_rows;
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    let mut qdata_ptr = Vec::with_capacity(n + 1);
+    let mut block_ptr = Vec::with_capacity(n + 1);
+    let mut col_bytes = Vec::with_capacity(m.nnz());
+    let mut qdata = Vec::with_capacity(mode.row_bytes(m.nnz()));
+    let mut scales = Vec::with_capacity(m.nnz().div_ceil(QBLOCK.max(1)));
+    col_ptr.push(0);
+    qdata_ptr.push(0);
+    block_ptr.push(0);
+    let mut nibbles: Vec<u8> = Vec::new();
+    for i in 0..n {
+        let (cols, vals) = m.row(i);
+        // Columns: first entry absolute, then gap-minus-one varints.
+        let mut prev: i64 = -1;
+        for &c in cols {
+            push_delta(&mut col_bytes, c, &mut prev);
+        }
+        col_ptr.push(col_bytes.len());
+        // Values: row-local blocks of QBLOCK with one scale each.
+        match mode {
+            QuantMode::Int8 => {
+                for chunk in vals.chunks(QBLOCK) {
+                    let (s, inv) = block_scale(chunk, levels);
+                    scales.push(s);
+                    for &v in chunk {
+                        qdata.push(quantize_one(v, inv, levels) as u8);
+                    }
+                }
+            }
+            QuantMode::Int4 => {
+                nibbles.clear();
+                for chunk in vals.chunks(QBLOCK) {
+                    let (s, inv) = block_scale(chunk, levels);
+                    scales.push(s);
+                    for &v in chunk {
+                        nibbles.push((quantize_one(v, inv, levels) + 8) as u8);
+                    }
+                }
+                // Pack per row: entry 2m in the low nibble, 2m+1 high.
+                for pair in nibbles.chunks(2) {
+                    let hi = if pair.len() == 2 { pair[1] } else { 0 };
+                    qdata.push(pair[0] | (hi << 4));
+                }
+            }
+        }
+        qdata_ptr.push(qdata.len());
+        block_ptr.push(scales.len());
+    }
+    QCsr {
+        n_rows: n,
+        n_cols: m.n_cols,
+        mode,
+        indptr: m.indptr.clone(),
+        col_ptr,
+        col_bytes,
+        qdata_ptr,
+        qdata,
+        block_ptr,
+        scales,
+    }
+}
+
+impl QCsr {
+    pub fn nnz(&self) -> usize {
+        *self.indptr.last().unwrap_or(&0)
+    }
+
+    /// Rebuild a `QCsr` from its serialized parts (bundle load path):
+    /// derives the per-row pointer arrays by walking the varint stream
+    /// and fully validates the structure, so a corrupt or truncated
+    /// bundle section fails here instead of at compute time.
+    pub fn from_parts(
+        n_rows: usize,
+        n_cols: usize,
+        mode: QuantMode,
+        indptr: Vec<usize>,
+        col_bytes: Vec<u8>,
+        qdata: Vec<u8>,
+        scales: Vec<f32>,
+    ) -> Result<QCsr, String> {
+        if indptr.len() != n_rows + 1 {
+            return Err(format!("indptr has {} entries for {} rows", indptr.len(), n_rows));
+        }
+        if indptr[0] != 0 || indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("indptr is not monotonically non-decreasing from 0".into());
+        }
+        let mut col_ptr = Vec::with_capacity(n_rows + 1);
+        let mut qdata_ptr = Vec::with_capacity(n_rows + 1);
+        let mut block_ptr = Vec::with_capacity(n_rows + 1);
+        col_ptr.push(0);
+        qdata_ptr.push(0);
+        block_ptr.push(0);
+        let mut byte = 0usize;
+        let mut data_off = 0usize;
+        let mut blocks = 0usize;
+        for i in 0..n_rows {
+            let len = indptr[i + 1] - indptr[i];
+            // Walk (and bounds-check) this row's varint stream.
+            let mut prev: i64 = -1;
+            for _ in 0..len {
+                let Some(&b0) = col_bytes.get(byte) else {
+                    return Err(format!("column stream truncated in row {i}"));
+                };
+                byte += 1;
+                let d = if b0 == 0xFF {
+                    let Some(raw) = col_bytes.get(byte..byte + 4) else {
+                        return Err(format!("escaped delta truncated in row {i}"));
+                    };
+                    byte += 4;
+                    u32::from_le_bytes(raw.try_into().unwrap()) as i64
+                } else {
+                    b0 as i64
+                };
+                let col = prev + 1 + d;
+                if col >= n_cols as i64 {
+                    return Err(format!("row {i} column {col} out of bounds ({n_cols} cols)"));
+                }
+                prev = col;
+            }
+            col_ptr.push(byte);
+            data_off += mode.row_bytes(len);
+            qdata_ptr.push(data_off);
+            blocks += len.div_ceil(QBLOCK);
+            block_ptr.push(blocks);
+        }
+        if byte != col_bytes.len() {
+            return Err(format!("{} trailing column-stream bytes", col_bytes.len() - byte));
+        }
+        if data_off != qdata.len() {
+            return Err(format!("value payload is {} bytes, expected {data_off}", qdata.len()));
+        }
+        if blocks != scales.len() {
+            return Err(format!("{} scales for {blocks} blocks", scales.len()));
+        }
+        if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err("non-finite or negative block scale".into());
+        }
+        Ok(QCsr {
+            n_rows,
+            n_cols,
+            mode,
+            indptr,
+            col_ptr,
+            col_bytes,
+            qdata_ptr,
+            qdata,
+            block_ptr,
+            scales,
+        })
+    }
+
+    /// Structural validation (the [`QCsr::from_parts`] checks applied to
+    /// an already-assembled matrix).
+    pub fn check(&self) -> Result<(), String> {
+        let rebuilt = QCsr::from_parts(
+            self.n_rows,
+            self.n_cols,
+            self.mode,
+            self.indptr.clone(),
+            self.col_bytes.clone(),
+            self.qdata.clone(),
+            self.scales.clone(),
+        )?;
+        if rebuilt.col_ptr != self.col_ptr
+            || rebuilt.qdata_ptr != self.qdata_ptr
+            || rebuilt.block_ptr != self.block_ptr
+        {
+            return Err("derived pointer arrays disagree with stored ones".into());
+        }
+        Ok(())
+    }
+
+    /// Resident memory footprint in bytes (all arrays).
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.col_ptr.len() * std::mem::size_of::<usize>()
+            + self.qdata_ptr.len() * std::mem::size_of::<usize>()
+            + self.block_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_bytes.len()
+            + self.qdata.len()
+            + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Decode row `i`'s columns into `cols` (cleared first).
+    pub fn decode_cols_into(&self, i: usize, cols: &mut Vec<u32>) {
+        cols.clear();
+        let len = self.indptr[i + 1] - self.indptr[i];
+        cols.reserve(len);
+        let bytes = &self.col_bytes[self.col_ptr[i]..self.col_ptr[i + 1]];
+        let mut p = 0usize;
+        let mut prev: i64 = -1;
+        for _ in 0..len {
+            let b0 = bytes[p];
+            p += 1;
+            let d = if b0 == 0xFF {
+                let raw: [u8; 4] = bytes[p..p + 4].try_into().unwrap();
+                p += 4;
+                u32::from_le_bytes(raw) as i64
+            } else {
+                b0 as i64
+            };
+            prev += 1 + d;
+            cols.push(prev as u32);
+        }
+    }
+
+    /// Decode row `i`'s values into `vals` (cleared first), block by
+    /// block: within a block the scale is constant, so each inner loop
+    /// is a contiguous branch-free `int → f32 → ×scale` that vectorizes.
+    pub fn decode_vals_into(&self, i: usize, vals: &mut Vec<f32>) {
+        vals.clear();
+        let len = self.indptr[i + 1] - self.indptr[i];
+        vals.reserve(len);
+        let bytes = &self.qdata[self.qdata_ptr[i]..self.qdata_ptr[i + 1]];
+        let scales = &self.scales[self.block_ptr[i]..self.block_ptr[i + 1]];
+        match self.mode {
+            QuantMode::Int8 => {
+                for (b, chunk) in bytes.chunks(QBLOCK).enumerate() {
+                    let s = scales[b];
+                    for &q in chunk {
+                        vals.push(q as i8 as f32 * s);
+                    }
+                }
+            }
+            QuantMode::Int4 => {
+                for j in 0..len {
+                    let nib = (bytes[j / 2] >> ((j & 1) * 4)) & 0xF;
+                    let s = scales[j / QBLOCK];
+                    vals.push((nib as i32 - 8) as f32 * s);
+                }
+            }
+        }
+    }
+
+    /// Decode one full row into the scratch's primary (cols, vals) pair.
+    pub fn decode_row_into(&self, i: usize, rs: &mut QRowScratch) {
+        self.decode_cols_into(i, &mut rs.cols);
+        self.decode_vals_into(i, &mut rs.vals);
+    }
+
+    /// Exact reconstruction under the documented rounding rule:
+    /// `dequantize(quantize(m))` has `m`'s structure with each value
+    /// replaced by `q · scale`.
+    pub fn dequantize(&self) -> Csr {
+        let mut rs = QRowScratch::new();
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            self.decode_row_into(i, &mut rs);
+            indices.extend_from_slice(&rs.cols);
+            data.extend_from_slice(&rs.vals);
+        }
+        Csr {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            indptr: self.indptr.clone(),
+            indices,
+            data,
+        }
+    }
+
+    /// Quantized `Y = A·X` (X dense `n_cols × k`, row-major-k), k-tiled
+    /// like [`Csr::spmm`]; serial and bitwise-identical to
+    /// `self.dequantize().spmm(...)` (same per-element accumulation
+    /// order).
+    pub fn spmm(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_cols * k);
+        debug_assert_eq!(y.len(), self.n_rows * k);
+        y.fill(0.0);
+        if k == 0 {
+            return;
+        }
+        let mut rs = QRowScratch::new();
+        for r in 0..self.n_rows {
+            self.decode_row_into(r, &mut rs);
+            let out = &mut y[r * k..(r + 1) * k];
+            for (&c, &v) in rs.cols.iter().zip(&rs.vals) {
+                let xr = &x[c as usize * k..c as usize * k + k];
+                for j in 0..k {
+                    out[j] += v * xr[j];
+                }
+            }
+        }
+    }
+
+    /// Quantized `Y = Aᵀ·X` (X `n_rows × k`, Y `n_cols × k`); serial and
+    /// bitwise-identical to `self.dequantize().spmm_t(...)`.
+    pub fn spmm_t(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_rows * k);
+        debug_assert_eq!(y.len(), self.n_cols * k);
+        y.fill(0.0);
+        if k == 0 {
+            return;
+        }
+        let mut rs = QRowScratch::new();
+        for r in 0..self.n_rows {
+            self.decode_row_into(r, &mut rs);
+            let xr = &x[r * k..(r + 1) * k];
+            for (&c, &v) in rs.cols.iter().zip(&rs.vals) {
+                let out = &mut y[c as usize * k..c as usize * k + k];
+                for j in 0..k {
+                    out[j] += v * xr[j];
+                }
+            }
+        }
+    }
+}
+
+/// Gustavson product over a row range of quantized `A` against
+/// quantized `B`, reusing the caller's SPA + decode scratch (the
+/// coordinator's stripe path). Output rows are built by the same
+/// accumulate/sort loop as [`super::spgemm`], so stripes concatenate
+/// bitwise-identically to the full [`spgemm_q`] product.
+pub fn spgemm_q_range(
+    a: &QCsr,
+    rows: std::ops::Range<usize>,
+    b: &QCsr,
+    spa: &mut SpaScratch,
+    rs: &mut QRowScratch,
+) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "spgemm_q dim mismatch");
+    spa.ensure(b.n_cols);
+    let base = spa.begin_rows(rows.len());
+    let key_bytes = key_bytes_for(b.n_cols);
+    let mut indptr = Vec::with_capacity(rows.len() + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    indptr.push(0usize);
+    for i in rows.clone() {
+        let row_stamp = base + (i - rows.start) as u32;
+        a.decode_cols_into(i, &mut rs.cols2);
+        a.decode_vals_into(i, &mut rs.vals2);
+        for (&ac, &av) in rs.cols2.iter().zip(&rs.vals2) {
+            b.decode_cols_into(ac as usize, &mut rs.cols);
+            b.decode_vals_into(ac as usize, &mut rs.vals);
+            spa.accumulate(row_stamp, &rs.cols, &rs.vals, av);
+        }
+        spa.flush(key_bytes, &mut indices, &mut data);
+        indptr.push(indices.len());
+    }
+    Csr { n_rows: rows.len(), n_cols: b.n_cols, indptr, indices, data }
+}
+
+/// Quantized SpGEMM `C = A·B` on the shared worker pool; `n_threads =
+/// 1` is the serial reference and the output is bitwise-identical
+/// across thread counts (row-partitioned, same serial inner loop).
+pub fn spgemm_q(a: &QCsr, b: &QCsr, n_threads: usize) -> Csr {
+    assert!(a.n_rows < u32::MAX as usize);
+    let blocks = exec::parallel_ranges(a.n_rows, n_threads.max(1), |_, rows| {
+        let mut spa = SpaScratch::new(b.n_cols);
+        let mut rs = QRowScratch::new();
+        spgemm_q_range(a, rows, b, &mut spa, &mut rs)
+    });
+    stitch_row_blocks(a.n_rows, b.n_cols, blocks)
+}
+
+/// Mixed SpGEMM: exact f32 `A` (e.g. a fresh OOS query map) against
+/// quantized `B` (the stored `Wᵀ`). Bitwise-identical to
+/// `spgemm(a, &b.dequantize())` and across thread counts.
+pub fn spgemm_csr_q(a: &Csr, b: &QCsr, n_threads: usize) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "spgemm_csr_q dim mismatch");
+    assert!(a.n_rows < u32::MAX as usize);
+    let key_bytes = key_bytes_for(b.n_cols);
+    let blocks = exec::parallel_ranges(a.n_rows, n_threads.max(1), |_, rows| {
+        let mut spa = SpaScratch::new(b.n_cols);
+        let mut rs = QRowScratch::new();
+        let base = spa.begin_rows(rows.len());
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut data: Vec<f32> = Vec::new();
+        indptr.push(0usize);
+        for i in rows.clone() {
+            let row_stamp = base + (i - rows.start) as u32;
+            let (acols, avals) = a.row(i);
+            for (&ac, &av) in acols.iter().zip(avals) {
+                b.decode_cols_into(ac as usize, &mut rs.cols);
+                b.decode_vals_into(ac as usize, &mut rs.vals);
+                spa.accumulate(row_stamp, &rs.cols, &rs.vals, av);
+            }
+            spa.flush(key_bytes, &mut indices, &mut data);
+            indptr.push(indices.len());
+        }
+        Csr { n_rows: rows.len(), n_cols: b.n_cols, indptr, indices, data }
+    });
+    stitch_row_blocks(a.n_rows, b.n_cols, blocks)
+}
+
+/// Stitch per-range partial products (local CSRs) in row order.
+fn stitch_row_blocks(n_rows: usize, n_cols: usize, blocks: Vec<Csr>) -> Csr {
+    let nnz: usize = blocks.iter().map(|blk| blk.indices.len()).sum();
+    let mut indptr = Vec::with_capacity(n_rows + 1);
+    let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+    let mut data: Vec<f32> = Vec::with_capacity(nnz);
+    indptr.push(0usize);
+    for blk in blocks {
+        let b = indices.len();
+        indptr.extend(blk.indptr[1..].iter().map(|&p| b + p));
+        indices.extend_from_slice(&blk.indices);
+        data.extend_from_slice(&blk.data);
+    }
+    if indptr.len() == 1 {
+        indptr.resize(n_rows + 1, 0);
+    }
+    Csr { n_rows, n_cols, indptr, indices, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::spgemm_with_threads;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut trip = vec![];
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.next_f64() < density {
+                    trip.push((r, c as u32, rng.next_normal() as f32));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, &trip)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_block() {
+        let mut rng = Rng::new(41);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let m = random_csr(&mut rng, 60, 500, 0.15);
+            let q = quantize(&m, mode);
+            q.check().unwrap();
+            let back = q.dequantize();
+            assert_eq!(back.indptr, m.indptr);
+            assert_eq!(back.indices, m.indices);
+            for i in 0..m.n_rows {
+                let (_, vals) = m.row(i);
+                let (_, got) = back.row(i);
+                for (b, chunk) in vals.chunks(QBLOCK).enumerate() {
+                    let max_abs = chunk.iter().fold(0f32, |a, v| a.max(v.abs()));
+                    let bound = max_abs * (0.5 / mode.levels()) * 1.001 + 1e-12;
+                    for (j, (&v, &vh)) in
+                        chunk.iter().zip(&got[b * QBLOCK..b * QBLOCK + chunk.len()]).enumerate()
+                    {
+                        assert!(
+                            (v - vh).abs() <= bound,
+                            "{mode:?} row {i} block {b} entry {j}: |{v} - {vh}| > {bound}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_deltas_use_escape_and_roundtrip() {
+        // Columns far apart force the 0xFF + u32 escape encoding.
+        let m = Csr::from_triplets(
+            2,
+            1_000_000,
+            &[(0, 3, 1.0), (0, 999_999, -2.0), (1, 0, 0.5), (1, 254, 0.25), (1, 600, 4.0)],
+        );
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let q = quantize(&m, mode);
+            q.check().unwrap();
+            assert_eq!(q.dequantize().indices, m.indices);
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_matrices() {
+        let z = quantize(&Csr::zeros(5, 7), QuantMode::Int8);
+        z.check().unwrap();
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.dequantize().to_dense(), vec![0f32; 35]);
+        let e = quantize(&Csr::zeros(0, 4), QuantMode::Int4);
+        e.check().unwrap();
+        assert_eq!(e.dequantize().n_rows, 0);
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_streams() {
+        let mut rng = Rng::new(43);
+        let m = random_csr(&mut rng, 20, 90, 0.2);
+        let q = quantize(&m, QuantMode::Int8);
+        // Truncated column stream.
+        let mut cb = q.col_bytes.clone();
+        cb.pop();
+        assert!(QCsr::from_parts(
+            q.n_rows, q.n_cols, q.mode, q.indptr.clone(), cb, q.qdata.clone(), q.scales.clone()
+        )
+        .is_err());
+        // Wrong value payload size.
+        let mut qd = q.qdata.clone();
+        qd.pop();
+        assert!(QCsr::from_parts(
+            q.n_rows, q.n_cols, q.mode, q.indptr.clone(), q.col_bytes.clone(), qd,
+            q.scales.clone()
+        )
+        .is_err());
+        // Wrong scale count.
+        let mut sc = q.scales.clone();
+        sc.push(1.0);
+        assert!(QCsr::from_parts(
+            q.n_rows, q.n_cols, q.mode, q.indptr.clone(), q.col_bytes.clone(), q.qdata.clone(), sc
+        )
+        .is_err());
+        // Out-of-bounds column (shrink n_cols below the data).
+        assert!(QCsr::from_parts(
+            q.n_rows, 1, q.mode, q.indptr.clone(), q.col_bytes.clone(), q.qdata.clone(),
+            q.scales.clone()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn quantized_spgemm_matches_dequantized_exact_bitwise() {
+        let mut rng = Rng::new(47);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let a = random_csr(&mut rng, 40, 25, 0.3);
+            let b = random_csr(&mut rng, 25, 35, 0.3);
+            let (qa, qb) = (quantize(&a, mode), quantize(&b, mode));
+            let want = spgemm_with_threads(&qa.dequantize(), &qb.dequantize(), 1);
+            let got = spgemm_q(&qa, &qb, 1);
+            got.check().unwrap();
+            assert_eq!(got.indptr, want.indptr, "{mode:?}");
+            assert_eq!(got.indices, want.indices, "{mode:?}");
+            assert_eq!(bits(&got.data), bits(&want.data), "{mode:?}");
+            // Mixed exact×quantized path agrees the same way.
+            let mixed = spgemm_csr_q(&a, &qb, 1);
+            let mixed_want = spgemm_with_threads(&a, &qb.dequantize(), 1);
+            assert_eq!(mixed.indptr, mixed_want.indptr, "{mode:?} mixed");
+            assert_eq!(bits(&mixed.data), bits(&mixed_want.data), "{mode:?} mixed");
+        }
+    }
+
+    #[test]
+    fn quantized_spgemm_parallel_bitwise_equals_serial() {
+        let mut rng = Rng::new(53);
+        let a = random_csr(&mut rng, 70, 30, 0.25);
+        let b = random_csr(&mut rng, 30, 50, 0.25);
+        let qa = quantize(&a, QuantMode::Int8);
+        let qb = quantize(&b, QuantMode::Int8);
+        let serial = spgemm_q(&qa, &qb, 1);
+        for th in [2usize, 3, 4, 8] {
+            let par = spgemm_q(&qa, &qb, th);
+            assert_eq!(par.indptr, serial.indptr, "th {th}");
+            assert_eq!(par.indices, serial.indices, "th {th}");
+            assert_eq!(bits(&par.data), bits(&serial.data), "th {th}");
+            let par_mixed = spgemm_csr_q(&a, &qb, th);
+            let ser_mixed = spgemm_csr_q(&a, &qb, 1);
+            assert_eq!(bits(&par_mixed.data), bits(&ser_mixed.data), "mixed th {th}");
+        }
+    }
+
+    #[test]
+    fn quantized_spmm_matches_dequantized_bitwise() {
+        let mut rng = Rng::new(59);
+        let m = random_csr(&mut rng, 45, 30, 0.3);
+        let q = quantize(&m, QuantMode::Int8);
+        let d = q.dequantize();
+        for k in [1usize, 3, 17] {
+            let x: Vec<f32> = (0..m.n_cols * k).map(|_| rng.next_normal() as f32).collect();
+            let mut want = vec![0f32; m.n_rows * k];
+            let mut got = vec![0f32; m.n_rows * k];
+            d.spmm_with_threads(&x, k, &mut want, 1);
+            q.spmm(&x, k, &mut got);
+            assert_eq!(bits(&got), bits(&want), "spmm k={k}");
+            let xt: Vec<f32> = (0..m.n_rows * k).map(|_| rng.next_normal() as f32).collect();
+            let mut want_t = vec![0f32; m.n_cols * k];
+            let mut got_t = vec![0f32; m.n_cols * k];
+            d.spmm_t_with_threads(&xt, k, &mut want_t, 1);
+            q.spmm_t(&xt, k, &mut got_t);
+            assert_eq!(bits(&got_t), bits(&want_t), "spmm_t k={k}");
+        }
+    }
+
+    #[test]
+    fn stripe_ranges_concatenate_to_full_product() {
+        let mut rng = Rng::new(61);
+        let a = random_csr(&mut rng, 33, 20, 0.3);
+        let b = random_csr(&mut rng, 20, 28, 0.3);
+        let (qa, qb) = (quantize(&a, QuantMode::Int8), quantize(&b, QuantMode::Int8));
+        let full = spgemm_q(&qa, &qb, 1);
+        let mut spa = SpaScratch::new(0);
+        let mut rs = QRowScratch::new();
+        let mut row = 0usize;
+        for stripe in [10usize, 10, 13] {
+            let p = spgemm_q_range(&qa, row..row + stripe, &qb, &mut spa, &mut rs);
+            for i in 0..stripe {
+                let (fc, fv) = full.row(row + i);
+                let (sc, sv) = p.row(i);
+                assert_eq!(sc, fc, "row {}", row + i);
+                assert_eq!(bits(sv), bits(fv), "row {}", row + i);
+            }
+            row += stripe;
+        }
+    }
+
+    #[test]
+    fn mode_name_and_code_roundtrip() {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            assert_eq!(QuantMode::from_code(mode.code()), Some(mode));
+            assert_eq!(QuantMode::from_name(mode.name()), Some(Some(mode)));
+        }
+        assert_eq!(QuantMode::from_name("none"), Some(None));
+        assert_eq!(QuantMode::from_name("fp16"), None);
+        assert_eq!(QuantMode::from_code(0), None);
+    }
+
+    #[test]
+    fn compression_beats_f32_on_clustered_columns() {
+        // Narrow column gaps (the SWLC regime) → ~1-byte deltas, and the
+        // resident quantized form is well under half the exact one.
+        let mut rng = Rng::new(67);
+        let m = random_csr(&mut rng, 200, 400, 0.2);
+        let q8 = quantize(&m, QuantMode::Int8);
+        let q4 = quantize(&m, QuantMode::Int4);
+        assert!((q8.mem_bytes() as f64) < 0.5 * m.mem_bytes() as f64);
+        assert!(q4.mem_bytes() < q8.mem_bytes());
+    }
+}

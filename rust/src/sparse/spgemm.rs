@@ -26,11 +26,18 @@ use crate::exec;
 /// `value == 0.0` sentinel would double-push a column whose partial sum
 /// cancels to exactly zero mid-row, and would force a scratch clear per
 /// row.) Allocated once per worker and reset per row in O(row nnz).
+///
+/// A scratch may be reused across *calls* (the coordinator keeps one
+/// per pool thread so stripe products stop reallocating `touched` /
+/// `radix_tmp` between stripes): [`SpaScratch::begin_rows`] hands out a
+/// fresh stamp base per call, so stale stamps from earlier products can
+/// never collide with live rows.
 pub struct SpaScratch {
     scratch: Vec<f32>,
     stamp: Vec<u32>,
     touched: Vec<u32>,
     radix_tmp: Vec<u32>,
+    next_stamp: u32,
 }
 
 impl SpaScratch {
@@ -40,8 +47,80 @@ impl SpaScratch {
             stamp: vec![0u32; n_out_cols],
             touched: Vec::new(),
             radix_tmp: Vec::new(),
+            next_stamp: 1,
         }
     }
+
+    /// Grow the dense arrays to cover `n_out_cols` output columns
+    /// (no-op when already large enough). New stamp slots start at 0,
+    /// which is below every stamp [`SpaScratch::begin_rows`] hands out.
+    pub fn ensure(&mut self, n_out_cols: usize) {
+        if self.scratch.len() < n_out_cols {
+            self.scratch.resize(n_out_cols, 0.0);
+            self.stamp.resize(n_out_cols, 0);
+        }
+    }
+
+    /// Reserve `n_rows` consecutive row stamps and return the base
+    /// stamp; wraps by clearing the stamp array when the u32 space is
+    /// about to run out (once per ~4G accumulated rows).
+    pub(crate) fn begin_rows(&mut self, n_rows: usize) -> u32 {
+        if n_rows as u64 >= (u32::MAX - self.next_stamp) as u64 {
+            self.stamp.fill(0);
+            self.next_stamp = 1;
+        }
+        let base = self.next_stamp;
+        self.next_stamp += n_rows as u32;
+        base
+    }
+
+    /// Scatter-accumulate `alpha · vals` into the SPA at `cols`,
+    /// recording first-touched columns. Shared by the exact and
+    /// quantized Gustavson inner loops, so both accumulate in exactly
+    /// the same order.
+    #[inline]
+    pub(crate) fn accumulate(&mut self, row_stamp: u32, cols: &[u32], vals: &[f32], alpha: f32) {
+        for (&bc, &bv) in cols.iter().zip(vals) {
+            let c = bc as usize;
+            let st = unsafe { self.stamp.get_unchecked_mut(c) };
+            let slot = unsafe { self.scratch.get_unchecked_mut(c) };
+            if *st != row_stamp {
+                *st = row_stamp;
+                *slot = alpha * bv;
+                self.touched.push(bc);
+            } else {
+                *slot += alpha * bv;
+            }
+        }
+    }
+
+    /// Sort the touched columns and append the finished row to
+    /// (`indices`, `data`), keeping exact cancellation zeros (they are
+    /// real collisions with zero weight; dropping them would make nnz
+    /// structure depend on weight values).
+    pub(crate) fn flush(&mut self, key_bytes: usize, indices: &mut Vec<u32>, data: &mut Vec<f32>) {
+        if self.touched.len() < 64 {
+            self.touched.sort_unstable();
+        } else {
+            radix_sort_u32(&mut self.touched, &mut self.radix_tmp, key_bytes);
+        }
+        for &c in &self.touched {
+            indices.push(c);
+            data.push(self.scratch[c as usize]);
+        }
+        self.touched.clear();
+    }
+}
+
+/// Radix key width for sorting column ids below `n_out_cols`.
+///
+/// §Perf: SWLC kernels have a duplication factor flops/nnz ≈ 1, so
+/// per-row key sorting dominates the accumulate loop. An LSD radix-256
+/// on the u32 keys (values are gathered from the scratch afterwards, so
+/// only keys move) beats the comparison sort ~2× on the λ̄·T-sized rows
+/// this workload produces.
+pub(crate) fn key_bytes_for(n_out_cols: usize) -> usize {
+    (32 - (n_out_cols.max(2) as u32 - 1).leading_zeros()).div_ceil(8) as usize
 }
 
 /// One worker's share of the product: a contiguous row range of `C` as
@@ -56,13 +135,8 @@ struct RowBlock {
 /// `spa`. The accumulate + sort order per row is fixed, so the output
 /// for a row does not depend on which range it lands in.
 fn spgemm_rows(a: &Csr, b: &Csr, rows: std::ops::Range<usize>, spa: &mut SpaScratch) -> RowBlock {
-    let n_out_cols = b.n_cols;
-    // §Perf: SWLC kernels have a duplication factor flops/nnz ≈ 1, so
-    // per-row key sorting dominates the accumulate loop. An LSD
-    // radix-256 on the u32 keys (values are gathered from the scratch
-    // afterwards, so only keys move) beats the comparison sort ~2× on
-    // the λ̄·T-sized rows this workload produces.
-    let key_bytes = (32 - (n_out_cols.max(2) as u32 - 1).leading_zeros()).div_ceil(8) as usize;
+    let key_bytes = key_bytes_for(b.n_cols);
+    let base = spa.begin_rows(rows.len());
 
     let mut indptr = Vec::with_capacity(rows.len() + 1);
     let mut indices: Vec<u32> = Vec::new();
@@ -70,37 +144,13 @@ fn spgemm_rows(a: &Csr, b: &Csr, rows: std::ops::Range<usize>, spa: &mut SpaScra
     indptr.push(0usize);
 
     for i in rows.clone() {
-        let row_stamp = (i - rows.start) as u32 + 1;
+        let row_stamp = base + (i - rows.start) as u32;
         let (acols, avals) = a.row(i);
         for (&ac, &av) in acols.iter().zip(avals) {
             let (bcols, bvals) = b.row(ac as usize);
-            for (&bc, &bv) in bcols.iter().zip(bvals) {
-                let c = bc as usize;
-                let st = unsafe { spa.stamp.get_unchecked_mut(c) };
-                let slot = unsafe { spa.scratch.get_unchecked_mut(c) };
-                if *st != row_stamp {
-                    *st = row_stamp;
-                    *slot = av * bv;
-                    spa.touched.push(bc);
-                } else {
-                    *slot += av * bv;
-                }
-            }
+            spa.accumulate(row_stamp, bcols, bvals, av);
         }
-        if spa.touched.len() < 64 {
-            spa.touched.sort_unstable();
-        } else {
-            radix_sort_u32(&mut spa.touched, &mut spa.radix_tmp, key_bytes);
-        }
-        for &c in &spa.touched {
-            // Keep exact zeros produced by cancellation: they are real
-            // collisions with zero weight and dropping them would make
-            // nnz structure depend on weight values. (Entries never
-            // touched are genuinely structural zeros.)
-            indices.push(c);
-            data.push(spa.scratch[c as usize]);
-        }
-        spa.touched.clear();
+        spa.flush(key_bytes, &mut indices, &mut data);
         indptr.push(indices.len());
     }
     RowBlock { indptr, indices, data }
@@ -139,6 +189,19 @@ pub fn spgemm_with_threads(a: &Csr, b: &Csr, n_threads: usize) -> Csr {
         indptr.resize(a.n_rows + 1, 0);
     }
     Csr { n_rows: a.n_rows, n_cols: b.n_cols, indptr, indices, data }
+}
+
+/// Serial SpGEMM reusing a caller-owned [`SpaScratch`] across calls —
+/// the coordinator's stripe path, where one scratch per pool thread
+/// serves every stripe that thread processes. Bitwise-identical to
+/// `spgemm_with_threads(a, b, 1)` (same inner loop; the stamp base
+/// differs but stamps never leak into the output).
+pub fn spgemm_with_scratch(a: &Csr, b: &Csr, spa: &mut SpaScratch) -> Csr {
+    assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
+    assert!(a.n_rows < u32::MAX as usize);
+    spa.ensure(b.n_cols);
+    let blk = spgemm_rows(a, b, 0..a.n_rows, spa);
+    Csr { n_rows: a.n_rows, n_cols: b.n_cols, indptr: blk.indptr, indices: blk.indices, data: blk.data }
 }
 
 /// In-place LSD radix-256 sort of `keys`, using `tmp` as the ping-pong
@@ -321,6 +384,42 @@ mod tests {
         // The single output row is capped at n_cols(B) = 4.
         assert_eq!(nnz_ub, 4);
         assert!(spgemm(&a, &b).nnz() as u64 <= nnz_ub);
+    }
+
+    #[test]
+    fn reused_scratch_is_bitwise_identical_across_products() {
+        // One scratch serving many differently-shaped products (the
+        // stripe pattern) must never change results: stale stamps from
+        // earlier calls cannot collide with fresh stamp bases.
+        let mut rng = Rng::new(31);
+        let mut spa = SpaScratch::new(0);
+        for case in 0..12 {
+            let rows = 1 + rng.gen_range(40);
+            let inner = 1 + rng.gen_range(20);
+            let cols = 1 + rng.gen_range(50);
+            let a = random_csr(&mut rng, rows, inner, 0.3);
+            let b = random_csr(&mut rng, inner, cols, 0.3);
+            let want = spgemm_with_threads(&a, &b, 1);
+            let got = spgemm_with_scratch(&a, &b, &mut spa);
+            assert_eq!(got.indptr, want.indptr, "case {case}");
+            assert_eq!(got.indices, want.indices, "case {case}");
+            let gb: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "case {case}: values not bitwise equal");
+        }
+    }
+
+    #[test]
+    fn stamp_wraparound_clears_cleanly() {
+        let mut rng = Rng::new(33);
+        let a = random_csr(&mut rng, 10, 8, 0.4);
+        let b = random_csr(&mut rng, 8, 12, 0.4);
+        let want = spgemm_with_threads(&a, &b, 1);
+        let mut spa = SpaScratch::new(0);
+        spa.next_stamp = u32::MAX - 4; // force the wrap path
+        let got = spgemm_with_scratch(&a, &b, &mut spa);
+        assert_eq!(got.indices, want.indices);
+        assert_eq!(got.indptr, want.indptr);
     }
 
     #[test]

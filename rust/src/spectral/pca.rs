@@ -9,6 +9,7 @@
 //! leans on for sparse inputs.
 
 use super::subspace::symmetric_topk;
+use crate::sparse::qcsr::QCsr;
 use crate::sparse::Csr;
 
 /// Leaf-PCA scores: top-k principal components of the row-sample leaf
@@ -122,6 +123,36 @@ pub fn leaf_pca_project(
     // wait: OOS kernel-PCA scores are Q_new V_right = U_new Σ-coords.
     // Training scores are U Σ = Q_train V_right, so the consistent OOS
     // map is simply Q_new · V_right — basis already equals V_right.
+    let mut out = vec![0f32; q_new.n_rows * k];
+    q_new.spmm(&basis, k, &mut out);
+    out
+}
+
+/// [`leaf_pca_project`] with the *training* factor in quantized form
+/// (the serve-path variant: replicas holding a quantized bundle project
+/// embed tiles without dequantizing `Q`). The basis is built by
+/// [`QCsr::spmm_t`], whose accumulation order matches the exact
+/// [`Csr::spmm_t`], so this is bitwise-identical to
+/// `leaf_pca_project(&q_train.dequantize(), …)`.
+pub fn leaf_pca_project_q(
+    q_train: &QCsr,
+    scores: &[f32],
+    vals: &[f32],
+    q_new: &Csr,
+) -> Vec<f32> {
+    let k = vals.len();
+    let n = q_train.n_rows;
+    let l = q_train.n_cols;
+    assert_eq!(scores.len(), n * k);
+    assert_eq!(q_new.n_cols, l);
+    let mut basis = vec![0f32; l * k];
+    q_train.spmm_t(scores, k, &mut basis);
+    for c in 0..l {
+        for j in 0..k {
+            let lam = vals[j].max(1e-12);
+            basis[c * k + j] /= lam;
+        }
+    }
     let mut out = vec![0f32; q_new.n_rows * k];
     q_new.spmm(&basis, k, &mut out);
     out

@@ -13,7 +13,20 @@ use super::ProximityKind;
 use crate::data::Dataset;
 use crate::exec;
 use crate::forest::Forest;
+use crate::sparse::qcsr::{self, QCsr, QuantMode};
 use crate::sparse::{spgemm, spgemm_nnz_flops, Csr};
+
+/// Block-quantized companions of the kernel factors (see
+/// [`crate::sparse::qcsr`]): `Q` and `Wᵀ` in int8/int4 form, enough to
+/// drive every product the kernel exposes. Present only when the
+/// quantized mode is enabled; the exact factors always remain canonical.
+pub struct QuantizedFactors {
+    pub mode: QuantMode,
+    /// Quantized query-side map (N×L).
+    pub q: QCsr,
+    /// Quantized cached transpose `Wᵀ` (L×N).
+    pub wt: QCsr,
+}
 
 /// A fitted SWLC kernel in factored form.
 pub struct ForestKernel {
@@ -27,6 +40,9 @@ pub struct ForestKernel {
     /// `Wᵀ` cached for products (L×N).
     wt: Csr,
     pub symmetric: bool,
+    /// Opt-in quantized fast path; `None` (the default) keeps every
+    /// product on the exact f32 factors, bitwise-unchanged.
+    quant: Option<QuantizedFactors>,
 }
 
 /// Build an `N×L` leaf-incidence CSR from a sample-major leaf table and
@@ -72,7 +88,7 @@ impl ForestKernel {
             let wt = wm.transpose();
             (qm, wm, wt)
         };
-        ForestKernel { kind, ctx, q: qm, w: wm, wt, symmetric }
+        ForestKernel { kind, ctx, q: qm, w: wm, wt, symmetric, quant: None }
     }
 
     /// Reassemble a kernel from persisted parts (the model-bundle load
@@ -92,14 +108,57 @@ impl ForestKernel {
         assert_eq!(w.n_rows, ctx.n);
         assert_eq!(w.n_cols, ctx.l);
         let wt = w.transpose();
-        ForestKernel { kind, ctx, q, w, wt, symmetric }
+        ForestKernel { kind, ctx, q, w, wt, symmetric, quant: None }
     }
 
-    /// The exact training proximity matrix `P = Q Wᵀ` (Prop. 3.6) as a
-    /// sparse `N×N` CSR. For the separable OOB kernel the diagonal is
-    /// then forced to 1 (Remark G.2).
+    /// Switch the quantized fast path on (`Some(mode)`) or off (`None`).
+    /// Enabling quantizes `Q` and `Wᵀ` with the deterministic block rule
+    /// of [`qcsr::quantize`]; the exact factors are kept — quantization
+    /// is always an overlay, never a replacement.
+    pub fn set_quantization(&mut self, mode: Option<QuantMode>) {
+        self.quant = mode.map(|m| QuantizedFactors {
+            mode: m,
+            q: qcsr::quantize(&self.q, m),
+            wt: qcsr::quantize(&self.wt, m),
+        });
+    }
+
+    /// Attach pre-built quantized factors (the bundle-load path, where
+    /// the stored `QCsr` must survive bitwise rather than being
+    /// re-derived from dequantized values).
+    pub fn attach_quantized(&mut self, qf: QuantizedFactors) {
+        assert_eq!(qf.q.n_rows, self.q.n_rows, "quantized Q row mismatch");
+        assert_eq!(qf.q.n_cols, self.q.n_cols, "quantized Q col mismatch");
+        assert_eq!(qf.wt.n_rows, self.wt.n_rows, "quantized Wt row mismatch");
+        assert_eq!(qf.wt.n_cols, self.wt.n_cols, "quantized Wt col mismatch");
+        self.quant = Some(qf);
+    }
+
+    /// Active quantization mode, if the fast path is enabled.
+    pub fn quantization(&self) -> Option<QuantMode> {
+        self.quant.as_ref().map(|q| q.mode)
+    }
+
+    /// The quantized factors, if the fast path is enabled.
+    pub fn quantized(&self) -> Option<&QuantizedFactors> {
+        self.quant.as_ref()
+    }
+
+    /// In-memory bytes of the quantized factor overlay (0 when off).
+    pub fn quantized_bytes(&self) -> usize {
+        self.quant.as_ref().map_or(0, |q| q.q.mem_bytes() + q.wt.mem_bytes())
+    }
+
+    /// The training proximity matrix `P = Q Wᵀ` (Prop. 3.6) as a sparse
+    /// `N×N` CSR. For the separable OOB kernel the diagonal is then
+    /// forced to 1 (Remark G.2). When the quantized mode is on this is
+    /// the quantized product (bitwise-identical to the exact product of
+    /// the *dequantized* factors); otherwise it is the exact product.
     pub fn proximity_matrix(&self) -> Csr {
-        let mut p = spgemm(&self.q, &self.wt);
+        let mut p = match &self.quant {
+            Some(qf) => qcsr::spgemm_q(&qf.q, &qf.wt, exec::workers_for(self.q.n_rows, 64)),
+            None => spgemm(&self.q, &self.wt),
+        };
         if self.kind == ProximityKind::OobSeparable {
             set_unit_diagonal(&mut p);
         }
@@ -140,10 +199,16 @@ impl ForestKernel {
     }
 
     /// Cross-proximities `Q_new Wᵀ ∈ R^{N_new×N}` against the training
-    /// gallery.
+    /// gallery. Query rows stay exact f32; only the gallery side `Wᵀ`
+    /// is read in quantized form when the fast path is on.
     pub fn cross_proximity(&self, q_new: &Csr) -> Csr {
         assert_eq!(q_new.n_cols, self.ctx.l);
-        spgemm(q_new, &self.wt)
+        match &self.quant {
+            Some(qf) => {
+                qcsr::spgemm_csr_q(q_new, &qf.wt, exec::workers_for(q_new.n_rows, 64))
+            }
+            None => spgemm(q_new, &self.wt),
+        }
     }
 
     /// Total factor memory (bytes) — the `O(NT)` term of §3.3's space

@@ -26,7 +26,7 @@ pub mod predict;
 pub mod weights;
 
 pub use context::EnsembleContext;
-pub use kernel::ForestKernel;
+pub use kernel::{ForestKernel, QuantizedFactors};
 pub use weights::WeightSpec;
 
 /// Which SWLC proximity to build (App. B). OOB here is the *separable*

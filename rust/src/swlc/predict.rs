@@ -12,6 +12,7 @@ use super::kernel::ForestKernel;
 use crate::bail;
 use crate::coordinator::sink::KernelSource;
 use crate::error::Result;
+use crate::sparse::qcsr::{QCsr, QRowScratch};
 use crate::sparse::Csr;
 
 /// Per-leaf class mass `M = Wᵀ·onehot(y) ∈ R^{L×C}` (row-major).
@@ -23,6 +24,26 @@ pub fn leaf_class_mass(w: &Csr, y: &[u32], n_classes: usize) -> Vec<f32> {
         let (cols, vals) = w.row(j);
         for (&leaf, &v) in cols.iter().zip(vals) {
             m[leaf as usize * n_classes + cls] += v;
+        }
+    }
+    m
+}
+
+/// [`leaf_class_mass`] from the *quantized transpose* `Wᵀ` (L×N):
+/// rows are leaves, so the class mass of leaf `ℓ` accumulates that
+/// row's decoded sample weights bucketed by label. Leaf-major
+/// accumulation order (deterministic, serial) — the quantized path is
+/// validated on ranking/prediction quality, not bitwise against the
+/// sample-major exact pass.
+pub fn leaf_class_mass_q(wt: &QCsr, y: &[u32], n_classes: usize) -> Vec<f32> {
+    assert_eq!(wt.n_cols, y.len());
+    let mut m = vec![0f32; wt.n_rows * n_classes];
+    let mut rs = QRowScratch::new();
+    for leaf in 0..wt.n_rows {
+        wt.decode_row_into(leaf, &mut rs);
+        let out = &mut m[leaf * n_classes..(leaf + 1) * n_classes];
+        for (&j, &v) in rs.cols.iter().zip(&rs.vals) {
+            out[y[j as usize] as usize] += v;
         }
     }
     m
@@ -78,10 +99,15 @@ pub fn predict_train(kernel: &ForestKernel) -> Vec<u32> {
 }
 
 /// Proximity-weighted prediction for OOS queries given their query map.
+/// When the kernel's quantized mode is on, the leaf class-mass table is
+/// built from the compressed `Wᵀ` instead of the exact `W`.
 pub fn predict_oos(kernel: &ForestKernel, q_new: &Csr) -> Vec<u32> {
     let c = kernel.ctx.n_classes;
     assert!(c >= 2);
-    let m = leaf_class_mass(&kernel.w, &kernel.ctx.y, c);
+    let m = match kernel.quantized() {
+        Some(qf) => leaf_class_mass_q(&qf.wt, &kernel.ctx.y, c),
+        None => leaf_class_mass(&kernel.w, &kernel.ctx.y, c),
+    };
     let scores = class_scores(q_new, &m, c);
     argmax_scores(&scores, c, majority_class(&kernel.ctx.y, c))
 }

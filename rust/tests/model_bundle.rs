@@ -164,6 +164,120 @@ fn gbt_bundles_roundtrip_bitwise() {
     }
 }
 
+/// Quantized bundles (v2 form 1) across a forest-kind × proximity-kind
+/// × mode grid: the mode and the stored quantized `Q` round-trip
+/// bitwise, the exact slots hold its dequantization, and two
+/// independent loads agree bitwise on the full product and on OOS
+/// predictions. (The fitted-vs-loaded product is *not* asserted: a
+/// quantized bundle is lossy by design, and the loaded kernel's `Wᵀ` is
+/// re-quantized from the dequantized factors.)
+#[test]
+fn quantized_bundles_roundtrip_for_kind_grid() {
+    use forest_kernels::sparse::qcsr::QuantMode;
+    let grid = [
+        (ForestKind::RandomForest, ProximityKind::Kerf, QuantMode::Int8),
+        (ForestKind::RandomForest, ProximityKind::RfGap, QuantMode::Int8),
+        (ForestKind::RandomForest, ProximityKind::OobSeparable, QuantMode::Int4),
+        (ForestKind::ExtraTrees, ProximityKind::Original, QuantMode::Int4),
+        (ForestKind::GradientBoosting, ProximityKind::Boosted, QuantMode::Int8),
+    ];
+    for (i, &(fk, kind, mode)) in grid.iter().enumerate() {
+        let seed = 400 + i as u64;
+        let tag = format!("{fk:?}-{}-{mode:?}", kind.name());
+        let (forest, data) = train(fk, seed);
+        let mut kernel = ForestKernel::fit(&forest, &data, kind);
+        kernel.set_quantization(Some(mode));
+        let qf_orig = kernel.quantized().expect("mode attached").q.clone();
+        let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: 9 };
+        let path = tmpfile(&format!("quant-{tag}"));
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let a = ModelBundle::load(&path).unwrap();
+        let b = ModelBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(a.kernel.quantization(), Some(mode), "{tag}: mode lost");
+        let qf_load = a.kernel.quantized().expect("loaded bundle keeps quantized Q");
+        assert_eq!(qf_load.q, qf_orig, "{tag}: stored quantized Q differs");
+        assert_csr_bitwise(&a.kernel.q, &qf_orig.dequantize(), &format!("{tag}: Q slot"));
+        if kernel.symmetric {
+            assert_csr_bitwise(&a.kernel.w, &a.kernel.q, &format!("{tag}: symmetric W"));
+        }
+        assert_csr_bitwise(
+            &a.kernel.proximity_matrix(),
+            &b.kernel.proximity_matrix(),
+            &format!("{tag}: P across loads"),
+        );
+        let queries = synth::gaussian_blobs(30, 4, kernel.ctx.n_classes, 2.2, seed ^ 0xACE);
+        let qn_a = a.kernel.oos_query_map(&a.forest, &queries);
+        let qn_b = b.kernel.oos_query_map(&b.forest, &queries);
+        assert_csr_bitwise(&qn_b, &qn_a, &format!("{tag}: Q_new"));
+        assert_eq!(
+            predict::predict_oos(&a.kernel, &qn_a),
+            predict::predict_oos(&b.kernel, &qn_b),
+            "{tag}: OOS predictions across loads"
+        );
+    }
+}
+
+/// A symmetric quantized bundle re-saves **byte-identical**: the loader
+/// keeps the stored quantized `Q` verbatim and symmetric kernels store
+/// no `W`, so save → load → save is a fixed point of the file bytes.
+#[test]
+fn symmetric_quantized_bundle_resaves_byte_identical() {
+    use forest_kernels::sparse::qcsr::QuantMode;
+    let (forest, data) = train(ForestKind::RandomForest, 88);
+    let mut kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    assert!(kernel.symmetric, "kerf kernel should be symmetric");
+    kernel.set_quantization(Some(QuantMode::Int8));
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 88, trees: 9 };
+    let p1 = tmpfile("qfix-1");
+    let p2 = tmpfile("qfix-2");
+    save(&p1, &forest, &kernel, &meta).unwrap();
+    let loaded = ModelBundle::load(&p1).unwrap();
+    save(&p2, &loaded.forest, &loaded.kernel, &loaded.meta).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(b1, b2, "re-saved quantized bundle bytes differ");
+}
+
+/// Truncation *inside* the quantized factor section must fail cleanly
+/// even when the header (payload length + FNV checksum) is fixed up to
+/// match the shortened payload — the structural validation in the QCsr
+/// decoder is the last line of defense, not the checksum.
+#[test]
+fn quantized_section_truncation_fails_cleanly_past_the_checksum() {
+    use forest_kernels::coordinator::shard::fnv1a64;
+    use forest_kernels::sparse::qcsr::QuantMode;
+    const HEADER: usize = 28;
+    let (forest, data) = train(ForestKind::RandomForest, 99);
+    let mut kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    kernel.set_quantization(Some(QuantMode::Int8));
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 99, trees: 9 };
+    let path = tmpfile("qtrunc");
+    save(&path, &forest, &kernel, &meta).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    for cut in [1usize, 3, 8, 64, 512, 2048] {
+        if HEADER + cut >= full.len() {
+            continue;
+        }
+        let payload = &full[HEADER..full.len() - cut];
+        let mut bytes = Vec::with_capacity(HEADER + payload.len());
+        bytes.extend_from_slice(&full[..12]); // magic + version
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        bytes.extend_from_slice(payload);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelBundle::load(&path).unwrap_err().to_string();
+        assert!(
+            !err.contains("checksum mismatch"),
+            "cut {cut}: expected a structural error, got checksum: {err}"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn loaded_bundle_needs_no_dataset() {
     // The whole point of the bundle: everything (context, labels,

@@ -115,6 +115,80 @@ fn prop_parallel_spmm_t_bitwise_equals_serial() {
     }
 }
 
+/// The SpMM/SpMMᵀ output-column tiling (`SPMM_K_TILE = 16`) must be
+/// invisible: for widths below, at, straddling, and well above the tile
+/// width, the tiled kernels stay bitwise equal to an untiled naive loop
+/// (which folds each output element's terms in the same nonzero order)
+/// at every thread count.
+#[test]
+fn prop_spmm_k_tiling_matches_untiled_reference() {
+    for (seed, k) in [(1u64, 3usize), (2, 16), (3, 17), (4, 24), (5, 40)] {
+        let mut rng = Rng::new(seed ^ 0xC411);
+        let rows = 1 + rng.gen_range(90);
+        let cols = 1 + rng.gen_range(70);
+        let m = random_csr(&mut rng, rows, cols, 0.05 + rng.next_f64() * 0.4);
+        let x: Vec<f32> = (0..cols * k).map(|_| rng.next_normal() as f32).collect();
+        let mut naive = vec![0f32; rows * k];
+        for r in 0..rows {
+            let (cs, vs) = m.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                for j in 0..k {
+                    naive[r * k + j] += v * x[c as usize * k + j];
+                }
+            }
+        }
+        for th in [1usize, 2, 4, 8] {
+            let mut got = vec![f32::NAN; rows * k];
+            m.spmm_with_threads(&x, k, &mut got, th);
+            assert_eq!(bits(&got), bits(&naive), "seed {seed} k {k} th {th}: spmm");
+        }
+        let xt: Vec<f32> = (0..rows * k).map(|_| rng.next_normal() as f32).collect();
+        let mut naive_t = vec![0f32; cols * k];
+        for r in 0..rows {
+            let (cs, vs) = m.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                for j in 0..k {
+                    naive_t[c as usize * k + j] += v * xt[r * k + j];
+                }
+            }
+        }
+        for th in [1usize, 2, 4, 8] {
+            let mut got = vec![f32::NAN; cols * k];
+            m.spmm_t_with_threads(&xt, k, &mut got, th);
+            assert_eq!(bits(&got), bits(&naive_t), "seed {seed} k {k} th {th}: spmm_t");
+        }
+    }
+}
+
+/// Quantized SpGEMM: the parallel product of int8/int4 factors must be
+/// bitwise-identical to the serial one, and both must equal the exact
+/// SpGEMM of the dequantized factors (same SPA, same flush order).
+#[test]
+fn prop_quantized_spgemm_bitwise_equals_serial_and_dequantized() {
+    use forest_kernels::sparse::qcsr::{self, QuantMode};
+    for seed in 0..12u64 {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let mut rng = Rng::new(seed ^ 0x9C5);
+            let rows = 1 + rng.gen_range(70);
+            let inner = 1 + rng.gen_range(50);
+            let cols = 1 + rng.gen_range(60);
+            let density = 0.05 + rng.next_f64() * 0.4;
+            let a = qcsr::quantize(&random_csr(&mut rng, rows, inner, density), mode);
+            let b = qcsr::quantize(&random_csr(&mut rng, inner, cols, density), mode);
+            let serial = qcsr::spgemm_q(&a, &b, 1);
+            let exact = spgemm_with_threads(&a.dequantize(), &b.dequantize(), 1);
+            assert_eq!(serial.indptr, exact.indptr, "seed {seed} {mode:?}: structure");
+            assert_eq!(serial.indices, exact.indices, "seed {seed} {mode:?}: columns");
+            assert_eq!(bits(&serial.data), bits(&exact.data), "seed {seed} {mode:?}: values");
+            for th in THREAD_COUNTS {
+                let par = qcsr::spgemm_q(&a, &b, th);
+                par.check().unwrap_or_else(|e| panic!("seed {seed} th {th}: invalid CSR: {e}"));
+                assert_eq!(par, serial, "seed {seed} {mode:?} th {th}: parallel differs");
+            }
+        }
+    }
+}
+
 /// A forest trained with `n_threads = 4` equals one trained with
 /// `n_threads = 1`: identical trees (structure + leaf stats), OOB
 /// masks, and leaf tables.
