@@ -70,7 +70,7 @@ impl<'a> GalleryService<'a> {
             leaves,
             weights: wts,
             n_tiles,
-            labels: ctx.y.clone(),
+            labels: ctx.y.to_vec(),
             n_classes: ctx.n_classes,
         })
     }

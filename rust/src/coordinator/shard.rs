@@ -861,7 +861,7 @@ fn parse_stripe_buf(meta: &ShardMeta, n_cols_expect: usize, buf: &[u8]) -> Resul
     for b in buf[off..off + 4 * nnz].chunks_exact(4) {
         data.push(f32::from_le_bytes(b.try_into().unwrap()));
     }
-    let rows = Csr { n_rows, n_cols, indptr, indices, data };
+    let rows = Csr { n_rows, n_cols, indptr: indptr.into(), indices: indices.into(), data: data.into() };
     rows.check().map_err(|e| anyhow!("{}: corrupt shard: {e}", meta.file))?;
     Ok(Stripe { row_start, rows })
 }

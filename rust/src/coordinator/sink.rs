@@ -90,9 +90,9 @@ impl CsrSink {
         Csr {
             n_rows: self.indptr.len() - 1,
             n_cols: self.n_cols,
-            indptr: self.indptr,
-            indices: self.indices,
-            data: self.data,
+            indptr: self.indptr.into(),
+            indices: self.indices.into(),
+            data: self.data.into(),
         }
     }
 }
@@ -204,7 +204,13 @@ impl<S: KernelSink> KernelSink for SparsifySink<S> {
         }
         self.inner.consume(Stripe {
             row_start: stripe.row_start,
-            rows: Csr { n_rows: src.n_rows, n_cols: src.n_cols, indptr, indices, data },
+            rows: Csr {
+                n_rows: src.n_rows,
+                n_cols: src.n_cols,
+                indptr: indptr.into(),
+                indices: indices.into(),
+                data: data.into(),
+            },
         })
     }
 }

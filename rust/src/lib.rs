@@ -66,15 +66,22 @@
 //!   directory (CLI: `repro shards {plan,run,merge,validate}`) —
 //!   bitwise-identical to a single-process run at any P.
 //! * [`model`] — the versioned, checksummed on-disk **model bundle**
-//!   (`fk-bundle-v2`, v1 still loads): the trained forest, binning
+//!   (`fk-bundle-v3`, v1/v2 still load): the trained forest, binning
 //!   thresholds, ensemble context θ, SWLC factors Q/W (exact CSR, or
 //!   the block-quantized [`sparse::qcsr`] form when the kernel was
 //!   fitted with `--quantize int8|int4` — typically 3×+ smaller),
 //!   proximity kind, and label metadata in one FNV-1a-verified binary
-//!   file. `repro fit --out model.fkb` writes it and prints per-section
-//!   sizes; every pipeline command accepts `--model` and loads a
-//!   kernel bitwise-identical to the originally fitted one instead of
-//!   retraining — including each of the P `shards run` workers.
+//!   file. v3 writes every large array as a 64-byte-aligned section
+//!   behind a checksummed section table, so [`model::mmap`] (a
+//!   zero-dep `mmap(2)` wrapper) can bind the file **zero-copy**: with
+//!   `--mmap auto|on`, loading is O(1) in bundle size, the borrowed
+//!   sections ride [`sparse::Buf`] through every kernel product
+//!   bitwise-identically, and replicas on one box share the page
+//!   cache. `repro fit --out model.fkb` writes it and prints
+//!   per-section sizes; every pipeline command accepts `--model` and
+//!   loads a kernel bitwise-identical to the originally fitted one
+//!   instead of retraining — including each of the P `shards run`
+//!   workers.
 //! * [`serve`] — the online serving subsystem: a long-running,
 //!   zero-dependency TCP server (hand-rolled minimal HTTP/1.1 with
 //!   **persistent keep-alive connections** — a per-connection carry
@@ -86,11 +93,16 @@
 //!   proximity, from factors or a materialized shard directory),
 //!   `POST /embed` (Leaf-PCA projection), plus `GET /healthz` and
 //!   `GET /stats` (counts, batch histogram, latency percentiles).
-//!   [`serve::router`] fronts R replica serve processes behind one
-//!   address over pooled keep-alive connections: round-robin for OOS
-//!   queries, row-range ownership for `/neighbors` row lookups,
-//!   fleet-merged `/stats`. Served and routed answers are
-//!   bitwise-identical to the in-process batch paths.
+//!   The model plane is hot-swappable: `POST /admin/reload` (or
+//!   SIGHUP) atomically swaps in a freshly loaded bundle behind a
+//!   generation counter — in-flight queries finish on their snapshot,
+//!   nothing is dropped, and every response carries
+//!   `model_generation`. [`serve::router`] fronts R replica serve
+//!   processes behind one address over pooled keep-alive connections:
+//!   round-robin for OOS queries, row-range ownership for `/neighbors`
+//!   row lookups, fleet-merged `/stats`, and rolling fleet-wide
+//!   reloads. Served and routed answers are bitwise-identical to the
+//!   in-process batch paths.
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.

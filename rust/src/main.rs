@@ -6,12 +6,14 @@
 //! flags parsed by the tiny in-repo parser (the offline vendor set has
 //! no clap).
 
-use forest_kernels::bench_support::{peak_rss_bytes, time, write_bench_json, BenchRecord};
+use forest_kernels::bench_support::{
+    doubling_sizes, peak_rss_bytes, rss_bytes, time, write_bench_json, BenchRecord,
+};
 use forest_kernels::coordinator::shard::{self, ShardReader, ShardSink};
 use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::error::{Context, Result};
-use forest_kernels::model::{self, BundleMeta, ModelBundle};
+use forest_kernels::model::{self, BundleMeta, MmapMode, ModelBundle};
 use forest_kernels::serve::{self, ServeConfig};
 use forest_kernels::sparse::{Csr, QuantMode};
 use forest_kernels::{anyhow, bail, exec};
@@ -79,7 +81,7 @@ Global flags:
                    training, factor build, coordinator); default = cores,
                    also settable via FK_THREADS
 
-Model bundles (fk-bundle, v2; v1 files still load):
+Model bundles (fk-bundle-v3, section-aligned; v1/v2 files still load):
   fit      --dataset covertype --n 20000 --trees 50 --method gap
            [--out model.fkb] [--quantize none|int8|int4]
            (train the forest, fit the SWLC factors, and persist the
@@ -107,6 +109,7 @@ Pipeline commands:
   embed    --dataset pbmc --n 5000 [--pca-dims 24] [--model model.fkb --queries 1000]
   serve    --model model.fkb [--addr 127.0.0.1:7878] [--batch 32]
            [--linger-ms 2] [--shards DIR] [--embed-dims 8] [--replicas R]
+           [--mmap auto|on|off]
            (long-running HTTP/1.1 keep-alive server over real TCP:
             POST /predict, /neighbors, /embed + GET /healthz, /stats;
             single queries are micro-batched into exec-pool tiles;
@@ -114,14 +117,22 @@ Pipeline commands:
             paths; --shards serves /neighbors row lookups from a
             materialized shard directory; --replicas R spawns R serve
             processes on ephemeral ports and fronts them with the
-            replica router on --addr)
+            replica router on --addr; --mmap picks the bundle load
+            path: `auto` (default) maps v3 bundles zero-copy via
+            mmap(2) for O(1) load, `on` requires it, `off` decodes
+            onto the heap — every response carries the serving
+            model_generation either way; POST /admin/reload (or
+            SIGHUP) atomically swaps in a freshly loaded copy of
+            --model with zero dropped queries)
   route    --backends host:port,host:port,... [--addr 127.0.0.1:7979]
            (replica router over already-running serve processes: health-
             checks the backends at bind, round-robins /predict, /embed,
             and OOS /neighbors over pooled keep-alive connections, pins
             /neighbors row lookups to the row-range owner, and merges
             GET /stats across the fleet; routed responses are byte-
-            identical to direct ones)
+            identical to direct ones; POST /admin/reload drives a
+            rolling reload across the fleet — one backend at a time,
+            never retried — so the model refreshes with zero downtime)
   materialize --dataset covertype --n 20000 --method kerf
               --sink csr|shards|topk|topk-shards [--out kernel-shards]
               [--mem-budget 256M | --stripe-rows 4096]
@@ -176,6 +187,13 @@ Paper harnesses (DESIGN.md experiment index):
                   prices the speedup the other modes record;
                   --route-replicas R adds a `routed` mode through the
                   replica router over R in-process servers)
+  bench-load     [--min-n 2000 --max-n 16000 --trees 24] [--replicas 4]
+                 [--json-out BENCH_load.json]
+                 (fk-bundle-v3 load-path economics: parse-vs-mmap cold
+                  and warm load time vs bundle size, first-query
+                  latency from a cold process, and the aggregate heap
+                  R replicas would pay under each mode — the mmap rows
+                  should stay flat while the heap rows grow with N)
   bench-learned  [--dataset airlines --n 20000]  (§5 ablation: uniform vs
                  impurity-enriched vs learned tree-weight kernels)
   bench-quantize [--n 8192 --trees 48 --min-leaf 64 --method kerf]
@@ -217,6 +235,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "bench-materialize" => cmd_bench_materialize(args),
         "bench-shard-merge" => cmd_bench_shard_merge(args),
         "bench-serve" => cmd_bench_serve(args),
+        "bench-load" => cmd_bench_load(args),
         "bench-fig41" => cmd_fig41(args),
         "bench-fig42" => cmd_fig42(args),
         "bench-figh1" => cmd_figh1(args),
@@ -303,6 +322,18 @@ fn apply_quant(args: &Args, bundle: &mut ModelBundle) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--mmap auto|on|off` (default `auto`): how `--model` bundles
+/// are bound — zero-copy mmap(2) when the file is fk-bundle-v3 and the
+/// target supports it, or a full heap decode.
+fn parse_mmap(args: &Args) -> Result<MmapMode> {
+    match args.get("mmap") {
+        None => Ok(MmapMode::Auto),
+        Some(s) => {
+            MmapMode::from_name(s).ok_or_else(|| anyhow!("--mmap wants auto|on|off, got {s:?}"))
+        }
+    }
+}
+
 /// The model every pipeline command runs on: loaded from `--model`
 /// (nothing retrains — the bundle's factors are bitwise the fitted
 /// ones), or trained + fitted from the dataset/forest flags. Flags
@@ -311,8 +342,16 @@ fn apply_quant(args: &Args, bundle: &mut ModelBundle) -> Result<()> {
 /// `--seed` stays free because the query-set helpers legitimately use
 /// it to draw fresh queries against a fixed model.
 fn load_or_fit(args: &Args) -> Result<ModelBundle> {
+    load_or_fit_with(args, MmapMode::Off).map(|(b, _)| b)
+}
+
+/// [`load_or_fit`] with an explicit bundle bind mode. Returns the
+/// bundle plus how it is resident: `"mmap"` (sections borrowed from
+/// the mapped file), `"heap"` (decoded + fully verified), or `"fit"`
+/// (trained in-process, no file involved).
+fn load_or_fit_with(args: &Args, mmap: MmapMode) -> Result<(ModelBundle, &'static str)> {
     if let Some(path) = args.get("model") {
-        let bundle = ModelBundle::load(Path::new(path))
+        let (bundle, load_mode) = ModelBundle::load_with_mode(Path::new(path), mmap)
             .with_context(|| format!("loading --model {path}"))?;
         if let Some(m) = args.get("method") {
             if m != bundle.kernel.kind.name() {
@@ -344,7 +383,8 @@ fn load_or_fit(args: &Args) -> Result<ModelBundle> {
             }
         }
         println!(
-            "loaded {path}: dataset={} N={} T={} method={}{} ({:.1} factor MB, no retraining)",
+            "loaded {path} via {load_mode}: dataset={} N={} T={} method={}{} \
+             ({:.1} factor MB, no retraining)",
             bundle.meta.dataset,
             bundle.kernel.ctx.n,
             bundle.kernel.ctx.t,
@@ -357,7 +397,7 @@ fn load_or_fit(args: &Args) -> Result<ModelBundle> {
         );
         let mut bundle = bundle;
         apply_quant(args, &mut bundle)?;
-        Ok(bundle)
+        Ok((bundle, load_mode))
     } else {
         let (data, name) = load_data(args)?;
         let kind = method(args)?;
@@ -368,7 +408,7 @@ fn load_or_fit(args: &Args) -> Result<ModelBundle> {
             BundleMeta { dataset: name, n: data.n, seed: cfg.seed, trees: forest.n_trees() };
         let mut bundle = ModelBundle { forest, kernel, meta };
         apply_quant(args, &mut bundle)?;
-        Ok(bundle)
+        Ok((bundle, "fit"))
     }
 }
 
@@ -405,7 +445,8 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let (written, sizes) = saved?;
     println!(
         "{name}: N={} T={} L={} method={}{} | train {secs_train:.2}s fit {secs_fit:.2}s | \
-         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v2, FNV-1a checksummed)",
+         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v3, section-aligned, \
+         FNV-1a checksummed)",
         data.n,
         bundle.forest.n_trees(),
         bundle.kernel.ctx.l,
@@ -595,7 +636,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if replicas >= 2 {
         return cmd_serve_replicated(args, replicas);
     }
-    let bundle = load_or_fit(args)?;
+    let mmap = parse_mmap(args)?;
+    let (bundle, load_mode) = load_or_fit_with(args, mmap)?;
     let shards = match args.get("shards") {
         Some(dir) => Some(ShardReader::open(Path::new(dir))?),
         None => None,
@@ -607,12 +649,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         embed_dims: args.usize_or("embed-dims", 8),
         ..ServeConfig::default()
     };
-    let server = serve::Server::bind(bundle, shards, cfg)?;
+    // The reload source: only a file-backed model can be hot-swapped.
+    let source = args.get("model").map(|p| (PathBuf::from(p), mmap));
+    let reloadable = source.is_some();
+    let server = serve::Server::bind_with_source(bundle, shards, cfg, source, load_mode)?;
     println!("serving on http://{}", server.addr());
     println!("  POST /predict    {{\"x\": [f32; d] | [[f32; d], ..]}}");
     println!("  POST /neighbors  {{\"x\": [f32; d], \"k\": 10}} | {{\"row\": 0, \"k\": 10}}");
     println!("  POST /embed      {{\"x\": [f32; d] | [[f32; d], ..]}}");
     println!("  GET  /healthz    GET /stats");
+    if reloadable {
+        println!("  POST /admin/reload  (or SIGHUP) hot-swaps --model; load mode: {load_mode}");
+    } else {
+        println!("  model fit in-process ({load_mode}); /admin/reload needs --model");
+    }
     server.run()
 }
 
@@ -628,7 +678,7 @@ fn spawn_replica(
     use std::io::BufRead;
     let mut c = std::process::Command::new(exe);
     c.arg("serve").arg("--model").arg(model_path).arg("--addr").arg("127.0.0.1:0");
-    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads", "quantize"] {
+    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads", "quantize", "mmap"] {
         if let Some(v) = args.get(key) {
             c.arg(format!("--{key}")).arg(v);
         }
@@ -1648,6 +1698,160 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     for rh in replica_handles {
         rh.stop();
+    }
+    if let Some(path) = args.get("json-out") {
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
+/// fk-bundle-v3 load-path economics, the numbers behind `--mmap`: for
+/// doubling bundle sizes, time the heap decode vs the zero-copy mmap
+/// bind ("cold" = first load in this process — the page cache is warm
+/// from the save, so this isolates decode + allocation, which is the
+/// part `--mmap` deletes; "warm" = best of 3 repeats), the full
+/// cold-start-to-first-answer latency (load + bind + one `/predict`),
+/// and the aggregate RSS that `--replicas R` processes would pay per
+/// mode (R live bundles in this process; mapped sections are shared
+/// file-backed pages, so the mmap rows should stay near-flat while the
+/// heap rows grow with N). Emitted as `BENCH_load.json`.
+fn cmd_bench_load(args: &Args) -> Result<()> {
+    let min_n = args.usize_or("min-n", 2_000);
+    let max_n = args.usize_or("max-n", 16_000);
+    let trees = args.usize_or("trees", 24);
+    let replicas = args.usize_or("replicas", 4).max(1);
+    let dataset = args.str_or("dataset", "covertype");
+    let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let seed = args.u64_or("seed", 7);
+    let kind = method(args)?;
+    let mmap_ok = model::mmap::supported();
+    if !mmap_ok {
+        println!("# mmap(2) unsupported on this target — heap rows only");
+    }
+    println!(
+        "# bundle load economics (dataset={dataset} T={trees}, RSS probe = {replicas} live \
+         bundles per mode)"
+    );
+    println!("n\tbundle_MB\tmode\tcold_ms\twarm_ms\tfirst_query_ms\trss_{replicas}x_MB");
+    let mut records: Vec<BenchRecord> = vec![];
+    for n in doubling_sizes(min_n, max_n) {
+        let data = spec.generate(n, seed);
+        let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
+        let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+        let kernel = ForestKernel::fit(&forest, &data, kind);
+        let meta = BundleMeta { dataset: dataset.to_string(), n, seed, trees: forest.n_trees() };
+        let d = data.d;
+        let bundle = ModelBundle { forest, kernel, meta };
+        let path = std::env::temp_dir()
+            .join(format!("fk-bench-load-{}-{n}.fkb", std::process::id()));
+        let file_bytes = bundle.save(&path)?;
+        drop(bundle);
+        // One query row for the cold-start-to-first-answer probe.
+        let q = spec.generate(1, seed ^ 0x51EED);
+        let mut body = String::from("{\"x\": [");
+        for f in 0..d {
+            if f > 0 {
+                body.push_str(", ");
+            }
+            body.push_str(&format!("{}", q.x(0, f)));
+        }
+        body.push_str("]}");
+
+        let modes: &[(&str, MmapMode)] = if mmap_ok {
+            &[("heap", MmapMode::Off), ("mmap", MmapMode::On)]
+        } else {
+            &[("heap", MmapMode::Off)]
+        };
+        let mut heap_cold: Option<f64> = None;
+        for &(mode, mm) in modes {
+            let (first, cold) = time(|| ModelBundle::load_with_mode(&path, mm));
+            let (first_bundle, got_mode) = first?;
+            if got_mode != mode {
+                bail!("bench-load: asked for {mode} but the loader bound {got_mode}");
+            }
+            drop(first_bundle);
+            let mut warm = f64::INFINITY;
+            for _ in 0..3 {
+                let (b, s) = time(|| ModelBundle::load_with_mode(&path, mm));
+                drop(b?);
+                warm = warm.min(s);
+            }
+            // Cold start to first answer: load + bind + one /predict.
+            let t0 = std::time::Instant::now();
+            let (b, _) = ModelBundle::load_with_mode(&path, mm)?;
+            let server = serve::Server::bind(
+                b,
+                None,
+                ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+            )?;
+            let addr = server.addr();
+            let handle = server.spawn();
+            let (status, _) = serve::http::http_request(&addr, "POST", "/predict", &body)?;
+            let first_query = t0.elapsed().as_secs_f64();
+            handle.stop();
+            if status != 200 {
+                bail!("bench-load: first /predict returned {status}");
+            }
+            // Aggregate resident cost of an R-replica fleet per mode.
+            let rss0 = rss_bytes();
+            let mut fleet = Vec::with_capacity(replicas);
+            for _ in 0..replicas {
+                fleet.push(ModelBundle::load_with_mode(&path, mm)?.0);
+            }
+            let rss_delta = rss_bytes().saturating_sub(rss0);
+            drop(fleet);
+
+            println!(
+                "{n}\t{:.2}\t{mode}\t{:.2}\t{:.2}\t{:.2}\t{:.2}",
+                file_bytes as f64 / 1e6,
+                cold * 1e3,
+                warm * 1e3,
+                first_query * 1e3,
+                rss_delta as f64 / 1e6,
+            );
+            if mode == "heap" {
+                heap_cold = Some(cold);
+            }
+            let speedup = if mode == "heap" {
+                1.0
+            } else {
+                heap_cold.map_or(1.0, |h| h / cold.max(1e-9))
+            };
+            records.push(BenchRecord {
+                name: format!("bundle-load/{mode}/cold"),
+                n,
+                wall_secs: cold,
+                predicted_flops: file_bytes,
+                threads: 1,
+                speedup_vs_serial: speedup,
+            });
+            records.push(BenchRecord {
+                name: format!("bundle-load/{mode}/warm"),
+                n,
+                wall_secs: warm,
+                predicted_flops: file_bytes,
+                threads: 1,
+                speedup_vs_serial: 1.0,
+            });
+            records.push(BenchRecord {
+                name: format!("bundle-load/{mode}/first-query"),
+                n,
+                wall_secs: first_query,
+                predicted_flops: file_bytes,
+                threads: 1,
+                speedup_vs_serial: 1.0,
+            });
+            records.push(BenchRecord {
+                name: format!("bundle-load/{mode}/rss-replicas={replicas}"),
+                n,
+                wall_secs: cold * replicas as f64,
+                predicted_flops: rss_delta as u64,
+                threads: replicas,
+                speedup_vs_serial: 1.0,
+            });
+        }
+        std::fs::remove_file(&path).ok();
     }
     if let Some(path) = args.get("json-out") {
         write_bench_json(std::path::Path::new(path), &records)?;

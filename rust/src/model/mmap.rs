@@ -1,0 +1,182 @@
+//! Zero-dependency `mmap(2)` wrapper for `fk-bundle-v3` files.
+//!
+//! The crate vendors everything, so instead of the `libc`/`memmap2`
+//! crates this module declares the two syscall wrappers it needs via
+//! `extern "C"` and confines all the unsafety to [`Mapping`]. The
+//! mapping is read-only (`PROT_READ`) and private; dropping the last
+//! `Arc<Mapping>` unmaps it.
+//!
+//! Availability is a compile-time property: mapped bundles reinterpret
+//! on-disk little-endian `u64` sections as `&[usize]`, so the fast
+//! path is only compiled on 64-bit little-endian Unix targets
+//! ([`supported()`]). Everywhere else — and for legacy v1/v2 bundles,
+//! which are not section-aligned — the loader falls back to the heap
+//! decoder, which is bitwise-identical, just not zero-copy.
+//!
+//! ## The truncation hazard (why `save` renames)
+//!
+//! A file that is truncated or rewritten in place while mapped raises
+//! `SIGBUS` on the next page fault in any process still holding the
+//! old mapping. `ModelBundle::save` therefore always writes to a
+//! temporary file and `rename(2)`s it over the destination: the old
+//! inode (and every live mapping of it) survives until its last
+//! reader drops, which is what makes the hot-reload recipe
+//! (`fit --out model.fkb` onto a *served* path, then
+//! `POST /admin/reload`) safe. Follow the same discipline if you move
+//! bundles around with external tooling — `mv` yes, `cp` onto the
+//! served path no.
+
+use crate::error::Result;
+use std::fs::File;
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // Stable on every Unix this crate targets (POSIX; values for
+    // PROT_READ/MAP_PRIVATE are 1/2 on Linux, macOS, and the BSDs).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+/// Whether this build can memory-map bundles at all.
+///
+/// Requires Unix (`mmap`), a 64-bit `usize` (mapped `u64` index
+/// sections are reinterpreted as `&[usize]`), and a little-endian CPU
+/// (sections are stored little-endian and read in place).
+pub fn supported() -> bool {
+    cfg!(all(unix, target_pointer_width = "64", target_endian = "little"))
+}
+
+/// A read-only, page-aligned mapping of an entire bundle file.
+///
+/// Held behind an `Arc` that every borrowed `Buf` section anchors;
+/// the region is unmapped when the last anchor drops.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the region is immutable (PROT_READ, private) for the life
+// of the value, so shared references from any thread are fine.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `file` read-only in its entirety.
+    #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+    pub fn map(file: &File) -> Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(crate::error::Error::new("cannot mmap an empty file"));
+        }
+        if len > usize::MAX as u64 {
+            return Err(crate::error::Error::new("file too large to map"));
+        }
+        let len = len as usize;
+        // SAFETY: fd is valid for the duration of the call; we request
+        // a fresh private read-only mapping and check for MAP_FAILED.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED || ptr.is_null() {
+            return Err(crate::error::Error::new("mmap failed"));
+        }
+        Ok(Mapping { ptr: ptr as *const u8, len })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64", target_endian = "little")))]
+    pub fn map(_file: &File) -> Result<Mapping> {
+        Err(crate::error::Error::new(
+            "mmap bundle loading is not supported on this target (needs 64-bit little-endian unix); use --mmap off",
+        ))
+    }
+
+    /// The mapped file contents.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the live mapping (or are never
+        // constructed on unsupported targets).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_ptr(&self) -> *const u8 {
+        self.ptr
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+        // SAFETY: exactly the region returned by mmap; mapped once,
+        // unmapped once.
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_a_real_file_and_reads_it_back() {
+        if !supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join(format!("fk-mmap-test-{}.bin", std::process::id()));
+        let payload: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        {
+            let mut f = std::fs::File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+        }
+        let f = std::fs::File::open(&path).unwrap();
+        let m = Mapping::map(&f).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(m.bytes(), &payload[..]);
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_files_are_rejected() {
+        if !supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join(format!("fk-mmap-empty-{}.bin", std::process::id()));
+        std::fs::File::create(&path).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        assert!(Mapping::map(&f).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

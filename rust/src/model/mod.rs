@@ -1,40 +1,86 @@
-//! The versioned on-disk model bundle (`fk-bundle-v1`).
+//! The versioned on-disk model bundle (`fk-bundle-v3`).
 //!
 //! A bundle persists everything a serving or materialization process
 //! needs so that **no command ever retrains**: the trained [`Forest`]
 //! (trees, binning thresholds, in-bag bookkeeping, tree weights), the
-//! ensemble context θ, the SWLC factors `Q`/`W` as CSR, the
+//! ensemble context θ, the SWLC factors `Q`/`W`/`Wᵀ`, the
 //! [`ProximityKind`], and the label/class metadata. Loading a bundle
 //! reconstructs a [`ForestKernel`] that is *bitwise-identical* to the
 //! one `ForestKernel::fit` produced — factors, kernel products, and
 //! predictions all round-trip exactly (enforced by
 //! `rust/tests/model_bundle.rs`).
 //!
-//! # File format (`model.fkb`, little-endian throughout)
+//! # File format v3 (`model.fkb`, little-endian throughout)
 //!
-//! | offset | size | field                                    |
-//! |--------|------|------------------------------------------|
-//! | 0      | 8    | magic `b"FKBNDL1\0"`                     |
-//! | 8      | 4    | format version (`u32`, currently 2)      |
-//! | 12     | 8    | payload length (`u64`)                   |
-//! | 20     | 8    | FNV-1a 64 of the payload (`u64`)         |
-//! | 28     | …    | payload (see [`bytes`] for the encoding) |
+//! | offset  | size | field                                           |
+//! |---------|------|-------------------------------------------------|
+//! | 0       | 8    | magic `b"FKBNDL1\0"`                            |
+//! | 8       | 4    | format version (`u32`, currently 3)             |
+//! | 12      | 8    | payload length (`u64`, file length − 28)        |
+//! | 20      | 8    | FNV-1a 64 of the *structured region* (`u64`)    |
+//! | 28      | 8    | section count `S` (`u64`)                       |
+//! | 36      | 8    | structured stream length (`u64`)                |
+//! | 44      | 40·S | section table, one entry per large array        |
+//! | 44+40·S | …    | structured stream ([`bytes`] encoding)          |
+//! | aligned | …    | section payloads, each 64-byte aligned          |
 //!
-//! The checksum reuses [`crate::coordinator::shard::fnv1a64`] — the
-//! same integrity convention as the kernel shard files — and is
-//! verified before any payload byte is interpreted. `f32` values are
-//! stored as raw bits, so factors and leaf statistics survive the trip
-//! without rounding.
+//! Each section-table entry is 40 bytes: absolute file offset (`u64`),
+//! byte length (`u64`), element count (`u64`), FNV-1a 64 of the section
+//! bytes (`u64`), element dtype (`u8`: 0 = u8, 1 = u16, 2 = u32,
+//! 3 = u64, 4 = f32), alignment (`u8`, always 64), and 6 pad bytes.
 //!
-//! **Version 2** adds a factor-form byte ahead of the factor section:
-//! form 0 stores the exact CSR factors (the v1 layout and the default),
-//! form 1 stores block-quantized [`QCsr`] factors instead — written by
-//! `fit --out --quantize {int8,int4}` for a several-times-smaller
-//! artifact. A quantized bundle is lossy by design: the loader
-//! dequantizes the stored factors into the kernel's canonical `Q`/`W`
-//! (so every downstream path works unchanged), re-attaches the stored
-//! quantized `Q` bitwise, and re-quantizes the recomputed `Wᵀ` with the
-//! same deterministic rule. Version-1 files load unchanged.
+//! The *structured region* is bytes `[28, 44 + 40·S + stream_len)` —
+//! the section counts, the table, and the structured stream. The
+//! header checksum covers exactly that region (reusing
+//! [`crate::coordinator::shard::fnv1a64`], the same integrity
+//! convention as the kernel shard files), so the metadata that *drives*
+//! decoding is always verified before a byte of it is interpreted.
+//! `f32` values are stored as raw bits throughout, so factors and leaf
+//! statistics survive the trip without rounding.
+//!
+//! The structured stream mirrors the legacy inline encoding, except
+//! every large array (CSR `indptr`/`indices`/`values`, quantized block
+//! scales/packed values/delta-varint columns, the forest node arrays in
+//! structure-of-arrays form, the context arrays) is replaced by an
+//! inline `u64` *section id*. Because section payloads are raw packed
+//! little-endian values at 64-byte-aligned offsets, a v3 file can be
+//! loaded two ways:
+//!
+//! * **heap** — every section is checksum-verified, copied into owned
+//!   memory, and structurally validated (`Csr::check`), exactly like
+//!   the legacy loader. This is the default everywhere and the only
+//!   path for untrusted artifacts.
+//! * **mmap** — the file is mapped ([`mmap::Mapping`]) and the factor
+//!   and context arrays *borrow* the mapping ([`Buf`]) instead of
+//!   owning copies: load time is O(1) in the factor size, replicas
+//!   share one page cache, and products over the mapped factors are
+//!   bitwise-identical because they read the same bytes. The mapped
+//!   path trusts the artifact: the structured region is still
+//!   checksummed (it gates the table and every shape), but per-section
+//!   checksums and O(nnz) structural validation are skipped — that is
+//!   what makes the bind O(1). Only map bundles you wrote.
+//!
+//! The forest itself is always eagerly rebuilt on the heap (routing
+//! wants the array-of-structs node layout); it is a small fraction of a
+//! bundle's bytes.
+//!
+//! **Version 3** additionally stores `Wᵀ` (exact form) and the
+//! quantized `Wᵀ` (quantized form) so no load path ever transposes;
+//! a re-saved bundle round-trips byte-identically. **Version 2** added
+//! a factor-form byte: form 0 stores exact CSR factors, form 1 stores
+//! block-quantized [`QCsr`] factors — written by `fit --out
+//! --quantize {int8,int4}` for a several-times-smaller artifact. A
+//! quantized bundle is lossy by design: the loader dequantizes the
+//! stored factors into the kernel's canonical `Q`/`W` (so every
+//! downstream path works unchanged) and re-attaches the stored
+//! quantized factors bitwise. Version-1/2 files load unchanged via the
+//! heap decoder; saving always writes v3.
+//!
+//! Saves are atomic: the bytes are written to a sibling temp file and
+//! `rename(2)`d into place, so a process that has the *old* file
+//! mapped keeps reading the old inode safely (see [`mmap`] for the
+//! truncation hazard this avoids) — the foundation of the
+//! `POST /admin/reload` hot-swap recipe.
 //!
 //! Produced by `repro fit --out model.fkb`; consumed via `--model` by
 //! `kernel`, `predict`, `embed`, `materialize`, `serve`, and the
@@ -42,24 +88,90 @@
 //! of retraining the same forest P times).
 
 pub mod bytes;
+pub mod mmap;
 
 use crate::coordinator::shard::fnv1a64;
 use crate::error::{Context, Result};
 use crate::forest::{Binner, Forest, ForestKind, Node, Tree};
 use crate::sparse::qcsr::{self, QCsr, QuantMode};
-use crate::sparse::Csr;
+use crate::sparse::{Buf, Csr};
 use crate::swlc::{EnsembleContext, ForestKernel, ProximityKind, QuantizedFactors};
 use crate::{anyhow, bail};
 use bytes::{ByteReader, ByteWriter};
+use mmap::Mapping;
+use std::any::Any;
+use std::fs::File;
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"FKBNDL1\0";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 const HEADER_BYTES: usize = 28;
+/// Section payloads start on cache-line boundaries — a multiple of the
+/// alignment of every element type we store, so mapped sections can be
+/// reinterpreted in place.
+const SECTION_ALIGN: usize = 64;
+const SECTION_ENTRY_BYTES: usize = 40;
+/// The `section count` + `structured stream length` words between the
+/// header and the section table.
+const V3_PREFIX_BYTES: usize = 16;
 
 /// Factor-section forms (v2+).
 const FORM_EXACT: u8 = 0;
 const FORM_QUANTIZED: u8 = 1;
+
+const DT_U8: u8 = 0;
+const DT_U16: u8 = 1;
+const DT_U32: u8 = 2;
+const DT_U64: u8 = 3;
+const DT_F32: u8 = 4;
+
+fn dtype_size(dtype: u8) -> Option<usize> {
+    Some(match dtype {
+        DT_U8 => 1,
+        DT_U16 => 2,
+        DT_U32 => 4,
+        DT_U64 => 8,
+        DT_F32 => 4,
+        _ => return None,
+    })
+}
+
+fn round_up(v: usize, align: usize) -> usize {
+    (v + align - 1) / align * align
+}
+
+/// How `load_with_mode` should back the factor arrays.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MmapMode {
+    /// Map v3 bundles when the target supports it, heap otherwise.
+    #[default]
+    Auto,
+    /// Require the zero-copy path; error on legacy bundles or
+    /// unsupported targets instead of silently copying.
+    On,
+    /// Always decode onto the heap (full per-section verification).
+    Off,
+}
+
+impl MmapMode {
+    pub fn from_name(name: &str) -> Option<MmapMode> {
+        Some(match name {
+            "auto" => MmapMode::Auto,
+            "on" => MmapMode::On,
+            "off" => MmapMode::Off,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MmapMode::Auto => "auto",
+            MmapMode::On => "on",
+            MmapMode::Off => "off",
+        }
+    }
+}
 
 /// Provenance recorded alongside the model (display/auditing only —
 /// nothing downstream depends on it).
@@ -100,6 +212,687 @@ fn forest_kind_from_code(code: u8) -> Result<ForestKind> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Section elements
+// ---------------------------------------------------------------------------
+
+/// Element types a v3 section can hold. `usize` is stored on disk as
+/// `u64`; the mapped path reinterprets it in place, which is why
+/// [`mmap::supported`] requires a 64-bit little-endian target.
+trait SectionElem: Copy + 'static {
+    const DTYPE: u8;
+    fn encode_into(v: &[Self], out: &mut Vec<u8>);
+    fn decode(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl SectionElem for u8 {
+    const DTYPE: u8 = DT_U8;
+    fn encode_into(v: &[u8], out: &mut Vec<u8>) {
+        out.extend_from_slice(v);
+    }
+    fn decode(bytes: &[u8]) -> Vec<u8> {
+        bytes.to_vec()
+    }
+}
+
+impl SectionElem for u16 {
+    const DTYPE: u8 = DT_U16;
+    fn encode_into(v: &[u16], out: &mut Vec<u8>) {
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn decode(bytes: &[u8]) -> Vec<u16> {
+        bytes.chunks_exact(2).map(|b| u16::from_le_bytes(b.try_into().unwrap())).collect()
+    }
+}
+
+impl SectionElem for u32 {
+    const DTYPE: u8 = DT_U32;
+    fn encode_into(v: &[u32], out: &mut Vec<u8>) {
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn decode(bytes: &[u8]) -> Vec<u32> {
+        bytes.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())).collect()
+    }
+}
+
+impl SectionElem for usize {
+    const DTYPE: u8 = DT_U64;
+    fn encode_into(v: &[usize], out: &mut Vec<u8>) {
+        for &x in v {
+            out.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+    }
+    fn decode(bytes: &[u8]) -> Vec<usize> {
+        bytes.chunks_exact(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()) as usize).collect()
+    }
+}
+
+impl SectionElem for f32 {
+    const DTYPE: u8 = DT_F32;
+    fn encode_into(v: &[f32], out: &mut Vec<u8>) {
+        for &x in v {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+    fn decode(bytes: &[u8]) -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v3 encoding
+// ---------------------------------------------------------------------------
+
+/// Collects section payloads while the structured stream is encoded;
+/// [`SectionAcc::put`] registers the array and writes its section id
+/// inline into the stream.
+#[derive(Default)]
+struct SectionAcc {
+    /// `(dtype, elem_count, packed bytes)` per section, in id order.
+    blobs: Vec<(u8, u64, Vec<u8>)>,
+    payload_bytes: usize,
+}
+
+impl SectionAcc {
+    fn put<T: SectionElem>(&mut self, w: &mut ByteWriter, v: &[T]) {
+        let mut packed = Vec::with_capacity(v.len() * std::mem::size_of::<T>());
+        T::encode_into(v, &mut packed);
+        w.put_u64(self.blobs.len() as u64);
+        self.payload_bytes += packed.len();
+        self.blobs.push((T::DTYPE, v.len() as u64, packed));
+    }
+
+    fn bytes(&self) -> usize {
+        self.payload_bytes
+    }
+}
+
+fn put_csr_v3(w: &mut ByteWriter, acc: &mut SectionAcc, m: &Csr) {
+    w.put_u64(m.n_rows as u64);
+    w.put_u64(m.n_cols as u64);
+    acc.put(w, &m.indptr);
+    acc.put(w, &m.indices);
+    acc.put(w, &m.data);
+}
+
+fn put_qcsr_v3(w: &mut ByteWriter, acc: &mut SectionAcc, m: &QCsr) {
+    w.put_u64(m.n_rows as u64);
+    w.put_u64(m.n_cols as u64);
+    w.put_u8(m.mode.code());
+    acc.put(w, &m.indptr);
+    acc.put(w, &m.col_bytes);
+    acc.put(w, &m.qdata);
+    acc.put(w, &m.scales);
+}
+
+/// Encode a complete v3 file (header through the last section).
+fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<u8>, SectionSizes) {
+    let mut w = ByteWriter::new();
+    let mut acc = SectionAcc::default();
+    // Identity.
+    w.put_str(kernel.kind.name());
+    w.put_u8(forest_kind_code(forest.kind));
+    // Provenance.
+    w.put_str(&meta.dataset);
+    w.put_u64(meta.n as u64);
+    w.put_u64(meta.seed);
+    w.put_u64(meta.trees as u64);
+    // Forest: scalars and per-tree counts stay inline; the node arrays
+    // go out as structure-of-arrays sections concatenated over trees.
+    let forest_mark = (w.len(), acc.bytes());
+    w.put_u64(forest.n_classes as u64);
+    w.put_f32(forest.init_score);
+    w.put_f32(forest.learning_rate);
+    w.put_u64(forest.n_train as u64);
+    acc.put(&mut w, &forest.tree_weights);
+    acc.put(&mut w, &forest.leaf_offsets);
+    w.put_u64(forest.inbag.len() as u64);
+    let mut inbag_cat: Vec<u16> = Vec::new();
+    for bag in &forest.inbag {
+        w.put_u64(bag.len() as u64);
+        inbag_cat.extend_from_slice(bag);
+    }
+    acc.put(&mut w, &inbag_cat);
+    w.put_u64(forest.trees.len() as u64);
+    let total_nodes: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+    let mut features: Vec<u16> = Vec::with_capacity(total_nodes);
+    let mut thresholds: Vec<u8> = Vec::with_capacity(total_nodes);
+    let mut lefts: Vec<u32> = Vec::with_capacity(total_nodes);
+    let mut rights: Vec<u32> = Vec::with_capacity(total_nodes);
+    let mut leaf_stats_cat: Vec<f32> = Vec::new();
+    for tree in &forest.trees {
+        w.put_u64(tree.nodes.len() as u64);
+        w.put_u64(tree.n_leaves as u64);
+        w.put_u64(tree.leaf_stats.len() as u64);
+        w.put_u64(tree.depth as u64);
+        for n in &tree.nodes {
+            features.push(n.feature);
+            thresholds.push(n.threshold);
+            lefts.push(n.left);
+            rights.push(n.right);
+        }
+        leaf_stats_cat.extend_from_slice(&tree.leaf_stats);
+    }
+    acc.put(&mut w, &features);
+    acc.put(&mut w, &thresholds);
+    acc.put(&mut w, &lefts);
+    acc.put(&mut w, &rights);
+    acc.put(&mut w, &leaf_stats_cat);
+    // Binner.
+    w.put_u64(forest.binner.n_bins as u64);
+    w.put_u64(forest.binner.edges.len() as u64);
+    let mut edges_cat: Vec<f32> = Vec::new();
+    for e in &forest.binner.edges {
+        w.put_u64(e.len() as u64);
+        edges_cat.extend_from_slice(e);
+    }
+    acc.put(&mut w, &edges_cat);
+    let ctx_mark = (w.len(), acc.bytes());
+    // Ensemble context θ.
+    let ctx = &kernel.ctx;
+    w.put_u64(ctx.n as u64);
+    w.put_u64(ctx.t as u64);
+    w.put_u64(ctx.l as u64);
+    acc.put(&mut w, &ctx.leaf_of);
+    acc.put(&mut w, &ctx.leaf_mass);
+    acc.put(&mut w, &ctx.inbag_mass);
+    acc.put(&mut w, &ctx.inbag_count);
+    acc.put(&mut w, &ctx.oob_count);
+    acc.put(&mut w, &ctx.tree_weights);
+    acc.put(&mut w, &ctx.y);
+    w.put_u64(ctx.n_classes as u64);
+    let factors_mark = (w.len(), acc.bytes());
+    // Factors. Unlike v1/v2, `Wᵀ` IS stored: the zero-copy load then
+    // never transposes (O(1) bind for exact bundles). A symmetric
+    // kernel's `W` is still elided (`W = Q`, an O(1) clone at load).
+    // When the kernel has a quantized mode, the quantized factors
+    // replace the exact CSRs on disk (form 1) — that is the whole
+    // artifact-size win; the loader dequantizes them back into the
+    // canonical slots.
+    w.put_u8(kernel.symmetric as u8);
+    let mut factors = 0usize;
+    let mut quantized = 0usize;
+    match kernel.quantized() {
+        Some(qf) => {
+            w.put_u8(FORM_QUANTIZED);
+            w.put_u8(qf.mode.code());
+            // The attached quantized Q and Wᵀ are written verbatim (so
+            // a loaded bundle re-saves bitwise); W has no attached
+            // quantized form and is quantized here when asymmetric.
+            put_qcsr_v3(&mut w, &mut acc, &qf.q);
+            if !kernel.symmetric {
+                put_qcsr_v3(&mut w, &mut acc, &qcsr::quantize(&kernel.w, qf.mode));
+            }
+            put_qcsr_v3(&mut w, &mut acc, &qf.wt);
+            quantized = (w.len() - factors_mark.0) + (acc.bytes() - factors_mark.1);
+        }
+        None => {
+            w.put_u8(FORM_EXACT);
+            put_csr_v3(&mut w, &mut acc, &kernel.q);
+            if !kernel.symmetric {
+                put_csr_v3(&mut w, &mut acc, &kernel.w);
+            }
+            put_csr_v3(&mut w, &mut acc, kernel.w_transpose());
+            factors = (w.len() - factors_mark.0) + (acc.bytes() - factors_mark.1);
+        }
+    }
+    // Assembly: header, counts, table, stream, aligned sections.
+    let structured = w.into_inner();
+    let count = acc.blobs.len();
+    let table_end = HEADER_BYTES + V3_PREFIX_BYTES + count * SECTION_ENTRY_BYTES;
+    let structured_end = table_end + structured.len();
+    let mut offsets = Vec::with_capacity(count);
+    let mut cursor = structured_end;
+    for (_, _, packed) in &acc.blobs {
+        cursor = round_up(cursor, SECTION_ALIGN);
+        offsets.push(cursor);
+        cursor += packed.len();
+    }
+    let total = cursor;
+    let mut out = vec![0u8; total];
+    out[..8].copy_from_slice(MAGIC);
+    out[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    out[12..20].copy_from_slice(&((total - HEADER_BYTES) as u64).to_le_bytes());
+    out[28..36].copy_from_slice(&(count as u64).to_le_bytes());
+    out[36..44].copy_from_slice(&(structured.len() as u64).to_le_bytes());
+    for (i, (dtype, elems, packed)) in acc.blobs.iter().enumerate() {
+        let at = HEADER_BYTES + V3_PREFIX_BYTES + i * SECTION_ENTRY_BYTES;
+        out[at..at + 8].copy_from_slice(&(offsets[i] as u64).to_le_bytes());
+        out[at + 8..at + 16].copy_from_slice(&(packed.len() as u64).to_le_bytes());
+        out[at + 16..at + 24].copy_from_slice(&elems.to_le_bytes());
+        out[at + 24..at + 32].copy_from_slice(&fnv1a64(packed).to_le_bytes());
+        out[at + 32] = *dtype;
+        out[at + 33] = SECTION_ALIGN as u8;
+    }
+    out[table_end..structured_end].copy_from_slice(&structured);
+    let checksum = fnv1a64(&out[HEADER_BYTES..structured_end]);
+    out[20..28].copy_from_slice(&checksum.to_le_bytes());
+    for (i, (_, _, packed)) in acc.blobs.iter().enumerate() {
+        out[offsets[i]..offsets[i] + packed.len()].copy_from_slice(packed);
+    }
+    let sizes = SectionSizes {
+        forest: (ctx_mark.0 - forest_mark.0) + (ctx_mark.1 - forest_mark.1),
+        context: (factors_mark.0 - ctx_mark.0) + (factors_mark.1 - ctx_mark.1),
+        factors,
+        quantized,
+        total: total - HEADER_BYTES,
+    };
+    (out, sizes)
+}
+
+// ---------------------------------------------------------------------------
+// v3 decoding
+// ---------------------------------------------------------------------------
+
+struct SectionEntry {
+    offset: usize,
+    byte_len: usize,
+    elem_count: usize,
+    checksum: u64,
+    dtype: u8,
+}
+
+/// Where the v3 bytes live: an owned read (verify-and-copy) or a shared
+/// file mapping (zero-copy borrow).
+enum V3Source {
+    Heap(Vec<u8>),
+    Mapped(Arc<Mapping>),
+}
+
+impl V3Source {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            V3Source::Heap(b) => b,
+            V3Source::Mapped(m) => m.bytes(),
+        }
+    }
+}
+
+struct Sections {
+    entries: Vec<SectionEntry>,
+    source: V3Source,
+}
+
+impl Sections {
+    /// Whether this load path runs the expensive per-section and
+    /// structural validation (heap yes, mapped no — see module docs).
+    fn verifying(&self) -> bool {
+        matches!(self.source, V3Source::Heap(_))
+    }
+
+    /// Read an inline section id from the structured stream and resolve
+    /// it: heap sources checksum and copy, mapped sources borrow the
+    /// mapping in place.
+    fn take<T: SectionElem>(&self, r: &mut ByteReader) -> Result<Buf<T>> {
+        let idx = r.take_u64()? as usize;
+        let e = self
+            .entries
+            .get(idx)
+            .ok_or_else(|| anyhow!("bundle references unknown section {idx}"))?;
+        if e.dtype != T::DTYPE {
+            bail!("bundle section {idx} holds dtype {} where {} was expected", e.dtype, T::DTYPE);
+        }
+        let raw = &self.source.bytes()[e.offset..e.offset + e.byte_len];
+        match &self.source {
+            V3Source::Heap(_) => {
+                if fnv1a64(raw) != e.checksum {
+                    bail!("bundle section {idx} checksum mismatch");
+                }
+                Ok(T::decode(raw).into())
+            }
+            V3Source::Mapped(m) => {
+                // SAFETY: the table validator proved the offset is
+                // 64-byte-aligned (≥ align_of::<T>() for every element
+                // type), in bounds, and byte_len == elem_count ·
+                // size_of::<T>(); the mapping is read-only and the Arc
+                // anchor keeps it alive as long as the Buf.
+                Ok(unsafe {
+                    Buf::from_anchor(
+                        raw.as_ptr() as *const T,
+                        e.elem_count,
+                        Arc::clone(m) as Arc<dyn Any + Send + Sync>,
+                    )
+                })
+            }
+        }
+    }
+}
+
+fn take_csr_v3(s: &Sections, r: &mut ByteReader, verify: bool) -> Result<Csr> {
+    let n_rows = r.take_u64()? as usize;
+    let n_cols = r.take_u64()? as usize;
+    let indptr: Buf<usize> = s.take(r)?;
+    let indices: Buf<u32> = s.take(r)?;
+    let data: Buf<f32> = s.take(r)?;
+    if indptr.len() != n_rows + 1 || indices.len() != data.len() {
+        bail!("bundle CSR shape is inconsistent ({n_rows} rows, {} indptr)", indptr.len());
+    }
+    if indptr[0] != 0 || indptr[n_rows] != indices.len() {
+        bail!("bundle CSR indptr does not cover its {} entries", indices.len());
+    }
+    let m = Csr { n_rows, n_cols, indptr, indices, data };
+    if verify {
+        m.check().map_err(|e| anyhow!("bundle CSR is corrupt: {e}"))?;
+    }
+    Ok(m)
+}
+
+fn take_qcsr_v3(s: &Sections, r: &mut ByteReader) -> Result<QCsr> {
+    let n_rows = r.take_u64()? as usize;
+    let n_cols = r.take_u64()? as usize;
+    let mode = QuantMode::from_code(r.take_u8()?)
+        .ok_or_else(|| anyhow!("bundle quantized factor has unknown mode code"))?;
+    let indptr: Buf<usize> = s.take(r)?;
+    let col_bytes: Buf<u8> = s.take(r)?;
+    let qdata: Buf<u8> = s.take(r)?;
+    let scales: Buf<f32> = s.take(r)?;
+    // `from_parts` walks the compressed streams to rebuild the derived
+    // row pointers, validating as it goes — quantized loads are O(nnz)
+    // on both paths (the raw streams still borrow the mapping).
+    QCsr::from_parts(n_rows, n_cols, mode, indptr, col_bytes, qdata, scales)
+        .map_err(|e| anyhow!("bundle quantized factor is corrupt: {e}"))
+}
+
+/// Split a concatenated section back into per-group vectors, validating
+/// the inline lengths against the section's actual element count.
+fn split_concat<T: Copy>(cat: &[T], lens: &[usize], what: &str) -> Result<Vec<Vec<T>>> {
+    let mut out = Vec::with_capacity(lens.len());
+    let mut at = 0usize;
+    for &len in lens {
+        let end = at
+            .checked_add(len)
+            .filter(|&e| e <= cat.len())
+            .ok_or_else(|| anyhow!("bundle {what} lengths overflow their section"))?;
+        out.push(cat[at..end].to_vec());
+        at = end;
+    }
+    if at != cat.len() {
+        bail!("bundle {what} section has {} trailing elements", cat.len() - at);
+    }
+    Ok(out)
+}
+
+fn decode_v3(source: V3Source) -> Result<ModelBundle> {
+    // --- structured region: bounds, checksum, section table ---
+    let file_len = source.bytes().len();
+    if file_len < HEADER_BYTES + V3_PREFIX_BYTES {
+        bail!("bundle truncated before the v3 section table");
+    }
+    let head = source.bytes();
+    let want = u64::from_le_bytes(head[20..28].try_into().unwrap());
+    let count = u64::from_le_bytes(head[28..36].try_into().unwrap()) as usize;
+    let structured_len = u64::from_le_bytes(head[36..44].try_into().unwrap()) as usize;
+    let table_end_wide = (HEADER_BYTES + V3_PREFIX_BYTES) as u128
+        + count as u128 * SECTION_ENTRY_BYTES as u128;
+    let structured_end_wide = table_end_wide + structured_len as u128;
+    if structured_end_wide > file_len as u128 {
+        bail!(
+            "bundle structured region out of bounds ({count} sections, {structured_len} stream bytes, {file_len} file bytes)"
+        );
+    }
+    let (table_end, structured_end) = (table_end_wide as usize, structured_end_wide as usize);
+    if fnv1a64(&head[HEADER_BYTES..structured_end]) != want {
+        bail!("checksum mismatch over the structured region");
+    }
+    let mut entries = Vec::with_capacity(count);
+    for i in 0..count {
+        let at = HEADER_BYTES + V3_PREFIX_BYTES + i * SECTION_ENTRY_BYTES;
+        let offset = u64::from_le_bytes(head[at..at + 8].try_into().unwrap());
+        let byte_len = u64::from_le_bytes(head[at + 8..at + 16].try_into().unwrap());
+        let elem_count = u64::from_le_bytes(head[at + 16..at + 24].try_into().unwrap());
+        let checksum = u64::from_le_bytes(head[at + 24..at + 32].try_into().unwrap());
+        let dtype = head[at + 32];
+        let align = head[at + 33];
+        let size = dtype_size(dtype)
+            .ok_or_else(|| anyhow!("bundle section {i} has unknown dtype {dtype}"))?;
+        if align as usize != SECTION_ALIGN {
+            bail!("bundle section {i} alignment {align} is not {SECTION_ALIGN}");
+        }
+        if offset % SECTION_ALIGN as u64 != 0 {
+            bail!("bundle section {i} offset {offset} is misaligned");
+        }
+        if (offset as u128) < structured_end as u128
+            || offset as u128 + byte_len as u128 > file_len as u128
+        {
+            bail!("bundle section {i} is out of bounds ({offset}+{byte_len} of {file_len})");
+        }
+        if elem_count as u128 * size as u128 != byte_len as u128 {
+            bail!("bundle section {i} length {byte_len} disagrees with {elem_count} elements of {size} bytes");
+        }
+        entries.push(SectionEntry {
+            offset: offset as usize,
+            byte_len: byte_len as usize,
+            elem_count: elem_count as usize,
+            checksum,
+            dtype,
+        });
+    }
+    let sections = Sections { entries, source };
+    let stream = &sections.source.bytes()[table_end..structured_end];
+    let mut r = ByteReader::new(stream);
+    // --- identity + provenance ---
+    let kind_name = r.take_str()?;
+    let kind = ProximityKind::from_name(&kind_name)
+        .ok_or_else(|| anyhow!("bundle holds unknown proximity kind {kind_name:?}"))?;
+    let forest_kind = forest_kind_from_code(r.take_u8()?)?;
+    let meta = BundleMeta {
+        dataset: r.take_str()?,
+        n: r.take_u64()? as usize,
+        seed: r.take_u64()?,
+        trees: r.take_u64()? as usize,
+    };
+    // --- forest (always heap-materialized: routing wants AoS nodes) ---
+    let n_classes = r.take_u64()? as usize;
+    let init_score = r.take_f32()?;
+    let learning_rate = r.take_f32()?;
+    let n_train = r.take_u64()? as usize;
+    let tree_weights = sections.take::<f32>(&mut r)?.into_vec();
+    let leaf_offsets = sections.take::<u32>(&mut r)?.into_vec();
+    let n_inbag = r.take_u64()? as usize;
+    if (n_inbag as u128) * 8 > r.remaining() as u128 {
+        bail!("bundle corrupt: {n_inbag} in-bag vectors claimed");
+    }
+    let mut bag_lens = Vec::with_capacity(n_inbag);
+    for _ in 0..n_inbag {
+        bag_lens.push(r.take_u64()? as usize);
+    }
+    let inbag_cat = sections.take::<u16>(&mut r)?;
+    let inbag = split_concat(&inbag_cat, &bag_lens, "in-bag")?;
+    let n_trees = r.take_u64()? as usize;
+    if (n_trees as u128) * 32 > r.remaining() as u128 {
+        bail!("bundle corrupt: {n_trees} trees claimed");
+    }
+    let mut tree_shapes = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        let n_nodes = r.take_u64()? as usize;
+        let n_leaves = r.take_u64()? as usize;
+        let stats_len = r.take_u64()? as usize;
+        let depth = r.take_u64()? as usize;
+        tree_shapes.push((n_nodes, n_leaves, stats_len, depth));
+    }
+    let features = sections.take::<u16>(&mut r)?;
+    let thresholds = sections.take::<u8>(&mut r)?;
+    let lefts = sections.take::<u32>(&mut r)?;
+    let rights = sections.take::<u32>(&mut r)?;
+    let leaf_stats_cat = sections.take::<f32>(&mut r)?;
+    let total_nodes: u128 = tree_shapes.iter().map(|s| s.0 as u128).sum();
+    if total_nodes != features.len() as u128
+        || features.len() != thresholds.len()
+        || features.len() != lefts.len()
+        || features.len() != rights.len()
+    {
+        bail!(
+            "bundle node sections disagree ({total_nodes} nodes claimed, {} stored)",
+            features.len()
+        );
+    }
+    let mut trees = Vec::with_capacity(n_trees);
+    let (mut nb, mut sb) = (0usize, 0usize);
+    for (n_nodes, n_leaves, stats_len, depth) in tree_shapes {
+        let se = sb
+            .checked_add(stats_len)
+            .filter(|&e| e <= leaf_stats_cat.len())
+            .ok_or_else(|| anyhow!("bundle leaf-stat lengths overflow their section"))?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for k in nb..nb + n_nodes {
+            nodes.push(Node {
+                feature: features[k],
+                threshold: thresholds[k],
+                left: lefts[k],
+                right: rights[k],
+            });
+        }
+        trees.push(Tree { nodes, n_leaves, leaf_stats: leaf_stats_cat[sb..se].to_vec(), depth });
+        nb += n_nodes;
+        sb = se;
+    }
+    if sb != leaf_stats_cat.len() {
+        bail!("bundle leaf-stat section has {} trailing elements", leaf_stats_cat.len() - sb);
+    }
+    // --- binner ---
+    let n_bins = r.take_u64()? as usize;
+    let n_features = r.take_u64()? as usize;
+    if (n_features as u128) * 8 > r.remaining() as u128 {
+        bail!("bundle corrupt: binner claims {n_features} features");
+    }
+    let mut edge_lens = Vec::with_capacity(n_features);
+    for _ in 0..n_features {
+        edge_lens.push(r.take_u64()? as usize);
+    }
+    let edges_cat = sections.take::<f32>(&mut r)?;
+    let edges = split_concat(&edges_cat, &edge_lens, "binner edge")?;
+    let forest = Forest {
+        kind: forest_kind,
+        trees,
+        binner: Binner { edges, n_bins },
+        leaf_offsets,
+        inbag,
+        tree_weights,
+        n_classes,
+        init_score,
+        learning_rate,
+        n_train,
+    };
+    // --- ensemble context θ (zero-copy on the mapped path) ---
+    let n = r.take_u64()? as usize;
+    let t = r.take_u64()? as usize;
+    let l = r.take_u64()? as usize;
+    let ctx = EnsembleContext {
+        n,
+        t,
+        l,
+        leaf_of: sections.take(&mut r)?,
+        leaf_mass: sections.take(&mut r)?,
+        inbag_mass: sections.take(&mut r)?,
+        inbag_count: sections.take(&mut r)?,
+        oob_count: sections.take(&mut r)?,
+        tree_weights: sections.take(&mut r)?,
+        y: sections.take(&mut r)?,
+        n_classes: r.take_u64()? as usize,
+    };
+    // Cross-section consistency checks.
+    if forest.trees.len() != ctx.t {
+        bail!("bundle forest has {} trees but context says {}", forest.trees.len(), ctx.t);
+    }
+    if forest.n_leaves_total() != ctx.l {
+        bail!("bundle forest has {} leaves but context says {}", forest.n_leaves_total(), ctx.l);
+    }
+    if ctx.leaf_of.len() != ctx.n * ctx.t {
+        bail!(
+            "bundle context leaf table is {} entries, expected N*T = {}",
+            ctx.leaf_of.len(),
+            ctx.n * ctx.t
+        );
+    }
+    // --- factors ---
+    let symmetric = r.take_u8()? != 0;
+    if symmetric != kind.symmetric() {
+        bail!("bundle symmetry flag disagrees with proximity kind {kind_name}");
+    }
+    let form = r.take_u8()?;
+    let verify = sections.verifying();
+    let kernel = match form {
+        FORM_EXACT => {
+            let q = take_csr_v3(&sections, &mut r, verify)?;
+            let w = if symmetric { q.clone() } else { take_csr_v3(&sections, &mut r, verify)? };
+            let wt = take_csr_v3(&sections, &mut r, verify)?;
+            if r.remaining() != 0 {
+                bail!("bundle has {} trailing stream bytes", r.remaining());
+            }
+            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
+                bail!(
+                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
+                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
+                );
+            }
+            if wt.n_rows != ctx.l || wt.n_cols != ctx.n || wt.nnz() != w.nnz() {
+                bail!(
+                    "bundle Wᵀ is {}x{} with {} entries, expected {}x{} with {}",
+                    wt.n_rows, wt.n_cols, wt.nnz(), ctx.l, ctx.n, w.nnz()
+                );
+            }
+            ForestKernel::from_parts_with_wt(kind, ctx, q, w, wt, symmetric)
+        }
+        FORM_QUANTIZED => {
+            let mode = QuantMode::from_code(r.take_u8()?)
+                .ok_or_else(|| anyhow!("bundle quantized section has unknown mode code"))?;
+            let qq = take_qcsr_v3(&sections, &mut r)?;
+            if qq.mode != mode {
+                bail!("bundle quantized Q mode disagrees with the section header");
+            }
+            let q = qq.dequantize();
+            let w = if symmetric {
+                q.clone()
+            } else {
+                let qw = take_qcsr_v3(&sections, &mut r)?;
+                if qw.mode != mode {
+                    bail!("bundle quantized W mode disagrees with the section header");
+                }
+                qw.dequantize()
+            };
+            let qwt = take_qcsr_v3(&sections, &mut r)?;
+            if qwt.mode != mode {
+                bail!("bundle quantized Wᵀ mode disagrees with the section header");
+            }
+            if r.remaining() != 0 {
+                bail!("bundle has {} trailing stream bytes", r.remaining());
+            }
+            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
+                bail!(
+                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
+                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
+                );
+            }
+            if qwt.n_rows != ctx.l || qwt.n_cols != ctx.n {
+                bail!(
+                    "bundle quantized Wᵀ is {}x{}, expected {}x{}",
+                    qwt.n_rows, qwt.n_cols, ctx.l, ctx.n
+                );
+            }
+            // The exact slots hold the dequantization (every downstream
+            // path works unchanged); the stored quantized Q and Wᵀ are
+            // re-attached bitwise so products and re-saves reproduce
+            // the fitted kernel exactly.
+            let mut k = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
+            k.attach_quantized(QuantizedFactors { mode, q: qq, wt: qwt });
+            k
+        }
+        other => bail!("bundle has unknown factor form {other}"),
+    };
+    Ok(ModelBundle { forest, kernel, meta })
+}
+
+// ---------------------------------------------------------------------------
+// Legacy v1/v2 decoding (and the v2 encoder kept for compat tests)
+// ---------------------------------------------------------------------------
+
 fn put_csr(w: &mut ByteWriter, m: &Csr) {
     w.put_u64(m.n_rows as u64);
     w.put_u64(m.n_cols as u64);
@@ -117,7 +910,7 @@ fn take_csr(r: &mut ByteReader) -> Result<Csr> {
     if indptr.len() != n_rows + 1 || indices.len() != data.len() {
         bail!("bundle CSR shape is inconsistent ({n_rows} rows, {} indptr)", indptr.len());
     }
-    let m = Csr { n_rows, n_cols, indptr, indices, data };
+    let m = Csr { n_rows, n_cols, indptr: indptr.into(), indices: indices.into(), data: data.into() };
     m.check().map_err(|e| anyhow!("bundle CSR is corrupt: {e}"))?;
     Ok(m)
 }
@@ -161,6 +954,7 @@ pub fn encoded_qcsr_bytes(m: &QCsr) -> usize {
 
 /// Byte sizes of the major payload sections of a just-encoded bundle,
 /// reported by `fit --out` so compression wins are visible at the CLI.
+/// Alignment padding and the section table are counted in `total` only.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SectionSizes {
     /// Trees, bags, binner, tree weights.
@@ -175,7 +969,9 @@ pub struct SectionSizes {
     pub total: usize,
 }
 
-fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<u8>, SectionSizes) {
+/// The legacy v2 inline payload encoding (still decoded; written only
+/// by [`save_legacy_v2`] for compatibility tests).
+fn encode_payload_v2(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Vec<u8> {
     let mut w = ByteWriter::new();
     // Identity.
     w.put_str(kernel.kind.name());
@@ -186,7 +982,6 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     w.put_u64(meta.seed);
     w.put_u64(meta.trees as u64);
     // Forest.
-    let forest_start = w.len();
     w.put_u64(forest.n_classes as u64);
     w.put_f32(forest.init_score);
     w.put_f32(forest.learning_rate);
@@ -216,7 +1011,6 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     for e in &forest.binner.edges {
         w.put_vec_f32(e);
     }
-    let forest_end = w.len();
     // Ensemble context θ.
     let ctx = &kernel.ctx;
     w.put_u64(ctx.n as u64);
@@ -230,50 +1024,29 @@ fn encode_payload(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> 
     w.put_vec_f32(&ctx.tree_weights);
     w.put_vec_u32(&ctx.y);
     w.put_u64(ctx.n_classes as u64);
-    let ctx_end = w.len();
-    // Factors. `Wᵀ` is never stored: the loader recomputes it with the
-    // same deterministic transpose `fit` uses. When the kernel has a
-    // quantized mode, the quantized factors *replace* the exact CSRs on
-    // disk (form 1) — that is the whole artifact-size win; the loader
-    // dequantizes them back into the canonical slots.
+    // Factors (v2 never stores Wᵀ; the loader transposes).
     w.put_u8(kernel.symmetric as u8);
-    let mut factors = 0usize;
-    let mut quantized = 0usize;
     match kernel.quantized() {
         Some(qf) => {
             w.put_u8(FORM_QUANTIZED);
             w.put_u8(qf.mode.code());
-            let qstart = w.len();
-            // The attached quantized Q is written verbatim (so a loaded
-            // bundle re-saves bitwise); W has no attached quantized form
-            // (only Wᵀ does) and is quantized here.
             put_qcsr(&mut w, &qf.q);
             if !kernel.symmetric {
                 put_qcsr(&mut w, &qcsr::quantize(&kernel.w, qf.mode));
             }
-            quantized = w.len() - qstart;
         }
         None => {
             w.put_u8(FORM_EXACT);
-            let fstart = w.len();
             put_csr(&mut w, &kernel.q);
             if !kernel.symmetric {
                 put_csr(&mut w, &kernel.w);
             }
-            factors = w.len() - fstart;
         }
     }
-    let sizes = SectionSizes {
-        forest: forest_end - forest_start,
-        context: ctx_end - forest_end,
-        factors,
-        quantized,
-        total: w.len(),
-    };
-    (w.into_inner(), sizes)
+    w.into_inner()
 }
 
-fn decode_payload(buf: &[u8], version: u32) -> Result<ModelBundle> {
+fn decode_payload_v2(buf: &[u8], version: u32) -> Result<ModelBundle> {
     let mut r = ByteReader::new(buf);
     // Identity.
     let kind_name = r.take_str()?;
@@ -350,13 +1123,13 @@ fn decode_payload(buf: &[u8], version: u32) -> Result<ModelBundle> {
         n,
         t,
         l,
-        leaf_of: r.take_vec_u32()?,
-        leaf_mass: r.take_vec_f32()?,
-        inbag_mass: r.take_vec_f32()?,
-        inbag_count: r.take_vec_u16()?,
-        oob_count: r.take_vec_u32()?,
-        tree_weights: r.take_vec_f32()?,
-        y: r.take_vec_u32()?,
+        leaf_of: r.take_vec_u32()?.into(),
+        leaf_mass: r.take_vec_f32()?.into(),
+        inbag_mass: r.take_vec_f32()?.into(),
+        inbag_count: r.take_vec_u16()?.into(),
+        oob_count: r.take_vec_u32()?.into(),
+        tree_weights: r.take_vec_f32()?.into(),
+        y: r.take_vec_u32()?.into(),
         n_classes: r.take_u64()? as usize,
     };
     // Factors. v1 files predate the form byte and are always exact.
@@ -424,17 +1197,103 @@ fn decode_payload(buf: &[u8], version: u32) -> Result<ModelBundle> {
     Ok(ModelBundle { forest, kernel, meta })
 }
 
+// ---------------------------------------------------------------------------
+// Save / load
+// ---------------------------------------------------------------------------
+
+/// Write `bytes` to a sibling temp file and `rename(2)` it over `path`.
+/// The rename is what makes re-saving onto a *served* (mapped) path
+/// safe: live mappings keep the old inode; truncating in place would
+/// raise SIGBUS in every process still reading it (see [`mmap`]).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp-{}", std::process::id()));
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing model bundle {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+fn check_payload_len(buf: &[u8], path: &Path) -> Result<()> {
+    let payload_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    if buf.len() as u128 != (HEADER_BYTES as u128) + payload_len as u128 {
+        bail!(
+            "{}: {} bytes on disk, header claims {}",
+            path.display(),
+            buf.len(),
+            HEADER_BYTES + payload_len
+        );
+    }
+    Ok(())
+}
+
 impl ModelBundle {
-    /// Serialize to `path` as an `fk-bundle-v1` file. Returns the total
-    /// bytes written (header + payload).
+    /// Serialize to `path` as an `fk-bundle-v3` file (atomically).
+    /// Returns the total bytes written (header + payload).
     pub fn save(&self, path: &Path) -> Result<u64> {
         save(path, &self.forest, &self.kernel, &self.meta)
     }
 
-    /// Load and checksum-verify a bundle.
+    /// Load and verify a bundle onto the heap (every section
+    /// checksummed and structurally validated).
     pub fn load(path: &Path) -> Result<ModelBundle> {
+        Self::load_with_mode(path, MmapMode::Off).map(|(b, _)| b)
+    }
+
+    /// Load a bundle with an explicit backing-store policy. Returns the
+    /// bundle and the load mode actually used (`"mmap"` or `"heap"`) —
+    /// [`MmapMode::Auto`] maps v3 bundles where the target supports it
+    /// and falls back to the heap decoder for legacy v1/v2 files.
+    pub fn load_with_mode(path: &Path, mode: MmapMode) -> Result<(ModelBundle, &'static str)> {
+        let file =
+            File::open(path).with_context(|| format!("opening model bundle {}", path.display()))?;
+        let mut head = [0u8; HEADER_BYTES];
+        {
+            use std::io::Read;
+            (&file)
+                .read_exact(&mut head)
+                .map_err(|_| anyhow!("{}: not an fk-bundle file (too short)", path.display()))?;
+        }
+        if head[..8] != MAGIC[..] {
+            bail!("{}: not an fk-bundle file (bad magic)", path.display());
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        if version == 0 || version > VERSION {
+            bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
+        }
+        let use_mmap = match mode {
+            MmapMode::Off => false,
+            MmapMode::Auto => version >= 3 && mmap::supported(),
+            MmapMode::On => {
+                if version < 3 {
+                    bail!(
+                        "{}: --mmap on needs an fk-bundle-v3 file (found v{version}; load and re-save to upgrade)",
+                        path.display()
+                    );
+                }
+                if !mmap::supported() {
+                    bail!(
+                        "{}: mmap loading is unsupported on this target (needs 64-bit little-endian unix); use --mmap off",
+                        path.display()
+                    );
+                }
+                true
+            }
+        };
+        if use_mmap {
+            let mapping = Arc::new(Mapping::map(&file)?);
+            check_payload_len(mapping.bytes(), path)?;
+            let b = decode_v3(V3Source::Mapped(mapping))
+                .with_context(|| format!("decoding model bundle {}", path.display()))?;
+            return Ok((b, "mmap"));
+        }
+        drop(file);
         let buf = std::fs::read(path)
             .with_context(|| format!("reading model bundle {}", path.display()))?;
+        // Re-validate from the full read: saves are rename-atomic, so
+        // the file may legitimately have been swapped since the peek.
         if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
             bail!("{}: not an fk-bundle file (bad magic)", path.display());
         }
@@ -442,23 +1301,21 @@ impl ModelBundle {
         if version == 0 || version > VERSION {
             bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
         }
-        let payload_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
-        let want = u64::from_le_bytes(buf[20..28].try_into().unwrap());
-        if buf.len() != HEADER_BYTES + payload_len {
-            bail!(
-                "{}: {} bytes on disk, header claims {}",
-                path.display(),
-                buf.len(),
-                HEADER_BYTES + payload_len
-            );
-        }
-        let payload = &buf[HEADER_BYTES..];
-        let got = fnv1a64(payload);
-        if got != want {
-            bail!("{}: checksum mismatch (header {want:016x}, payload {got:016x})", path.display());
-        }
-        decode_payload(payload, version)
-            .with_context(|| format!("decoding model bundle {}", path.display()))
+        check_payload_len(&buf, path)?;
+        let b = if version >= 3 {
+            decode_v3(V3Source::Heap(buf))
+                .with_context(|| format!("decoding model bundle {}", path.display()))?
+        } else {
+            let payload = &buf[HEADER_BYTES..];
+            let want = u64::from_le_bytes(buf[20..28].try_into().unwrap());
+            let got = fnv1a64(payload);
+            if got != want {
+                bail!("{}: checksum mismatch (header {want:016x}, payload {got:016x})", path.display());
+            }
+            decode_payload_v2(payload, version)
+                .with_context(|| format!("decoding model bundle {}", path.display()))?
+        };
+        Ok((b, "heap"))
     }
 }
 
@@ -475,16 +1332,30 @@ pub fn save_with_sizes(
     kernel: &ForestKernel,
     meta: &BundleMeta,
 ) -> Result<(u64, SectionSizes)> {
-    let (payload, sizes) = encode_payload(forest, kernel, meta);
+    let (buf, sizes) = encode_v3(forest, kernel, meta);
+    write_atomic(path, &buf)?;
+    Ok((buf.len() as u64, sizes))
+}
+
+/// Serialize with the legacy v2 inline layout (whole-payload checksum,
+/// no section table). Kept so the compatibility tests can fabricate
+/// old-format files; new bundles are always v3.
+#[doc(hidden)]
+pub fn save_legacy_v2(
+    path: &Path,
+    forest: &Forest,
+    kernel: &ForestKernel,
+    meta: &BundleMeta,
+) -> Result<u64> {
+    let payload = encode_payload_v2(forest, kernel, meta);
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&2u32.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
     buf.extend_from_slice(&payload);
-    std::fs::write(path, &buf)
-        .with_context(|| format!("writing model bundle {}", path.display()))?;
-    Ok((buf.len() as u64, sizes))
+    write_atomic(path, &buf)?;
+    Ok(buf.len() as u64)
 }
 
 #[cfg(test)]
@@ -522,16 +1393,84 @@ mod tests {
     }
 
     #[test]
+    fn mmap_and_heap_loads_are_bitwise_identical() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("mmap");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let (heap, hm) = ModelBundle::load_with_mode(&path, MmapMode::Off).unwrap();
+        assert_eq!(hm, "heap");
+        assert!(!heap.kernel.q.indptr.is_mapped());
+        if !mmap::supported() {
+            assert!(ModelBundle::load_with_mode(&path, MmapMode::On).is_err());
+            std::fs::remove_file(&path).ok();
+            return;
+        }
+        let (mapped, mm) = ModelBundle::load_with_mode(&path, MmapMode::On).unwrap();
+        assert_eq!(mm, "mmap");
+        assert!(mapped.kernel.q.indptr.is_mapped(), "v3 factors must borrow the mapping");
+        assert!(mapped.kernel.ctx.leaf_of.is_mapped());
+        assert_eq!(mapped.kernel.q, heap.kernel.q);
+        assert_eq!(mapped.kernel.w, heap.kernel.w);
+        assert_eq!(mapped.kernel.w_transpose(), heap.kernel.w_transpose());
+        assert_eq!(mapped.kernel.ctx.leaf_mass, heap.kernel.ctx.leaf_mass);
+        assert_eq!(mapped.meta, heap.meta);
+        let (auto, am) = ModelBundle::load_with_mode(&path, MmapMode::Auto).unwrap();
+        assert_eq!(am, "mmap");
+        assert_eq!(auto.kernel.q, heap.kernel.q);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v2_bundles_load_via_the_heap_fallback() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("legacy-v2");
+        save_legacy_v2(&path, &forest, &kernel, &meta).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 2);
+        let (b, m) = ModelBundle::load_with_mode(&path, MmapMode::Auto).unwrap();
+        assert_eq!(m, "heap", "legacy bundles must fall back to the heap decoder");
+        assert_eq!(b.kernel.q, kernel.q);
+        assert_eq!(b.kernel.w_transpose(), kernel.w_transpose());
+        let err = ModelBundle::load_with_mode(&path, MmapMode::On).unwrap_err().to_string();
+        assert!(err.contains("v3"), "wrong error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn corrupt_payload_fails_checksum() {
         let (forest, kernel, meta) = fixture();
         let path = tmpfile("corrupt");
         save(&path, &forest, &kernel, &meta).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
+        // The file tail is section data (the last factor array); the
+        // heap loader must catch the flip via the section checksum.
         let last = bytes.len() - 1;
         bytes[last] ^= 0x01;
         std::fs::write(&path, &bytes).unwrap();
         let err = ModelBundle::load(&path).unwrap_err().to_string();
         assert!(err.contains("checksum"), "wrong error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_section_table_fails_structurally() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("misaligned");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Knock section 0's offset off its 64-byte boundary, then
+        // re-seal the structured region so only the table is at fault.
+        let at = HEADER_BYTES + V3_PREFIX_BYTES;
+        let old = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+        bytes[at..at + 8].copy_from_slice(&(old + 1).to_le_bytes());
+        let count = u64::from_le_bytes(bytes[28..36].try_into().unwrap()) as usize;
+        let structured_len = u64::from_le_bytes(bytes[36..44].try_into().unwrap()) as usize;
+        let structured_end = HEADER_BYTES + V3_PREFIX_BYTES + count * SECTION_ENTRY_BYTES + structured_len;
+        let reseal = fnv1a64(&bytes[HEADER_BYTES..structured_end]);
+        bytes[20..28].copy_from_slice(&reseal.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelBundle::load(&path).unwrap_err().to_string();
+        assert!(err.contains("misaligned"), "wrong error: {err}");
         std::fs::remove_file(&path).ok();
     }
 
@@ -562,11 +1501,12 @@ mod tests {
         let b = ModelBundle::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(b.kernel.quantization(), Some(QuantMode::Int8));
-        // The stored quantized Q survives bitwise; the exact slot holds
-        // its dequantization.
+        // The stored quantized Q and Wᵀ survive bitwise; the exact slot
+        // holds the dequantization.
         let qf_orig = kernel.quantized().unwrap();
         let qf_load = b.kernel.quantized().unwrap();
         assert_eq!(qf_load.q, qf_orig.q);
+        assert_eq!(qf_load.wt, qf_orig.wt);
         assert_eq!(b.kernel.q, qf_orig.q.dequantize());
     }
 

@@ -291,9 +291,13 @@ pub fn http_request(
 
 /// A persistent keep-alive client: one TCP connection reused across
 /// requests, transparently re-established when the server closes it
-/// (idle reaping, restart). The retry-on-reuse is safe for this API —
-/// every endpoint is a read — and only fires when the *reused*
-/// connection fails, never twice on a fresh one.
+/// (idle reaping, restart). Retry-on-reuse is **per request**:
+/// [`HttpClient::request`] retries once on a fresh connection when the
+/// reused one fails — safe for the read endpoints it serves — while
+/// [`HttpClient::request_once`] never retries, which is what
+/// non-idempotent calls (`POST /admin/reload`) must use: a request
+/// whose response was lost may still have been *applied*, and a blind
+/// resend would apply it twice.
 pub struct HttpClient {
     addr: SocketAddr,
     conn: Option<(TcpStream, ConnReader)>,
@@ -324,14 +328,34 @@ impl HttpClient {
 
     /// Send one request on the pooled connection and read its framed
     /// response. A failure on a reused connection drops it and retries
-    /// exactly once on a fresh one.
+    /// exactly once on a fresh one — only safe for idempotent (read)
+    /// requests; use [`HttpClient::request_once`] for anything that
+    /// mutates server state.
     pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request_with_retry(method, path, body, true)
+    }
+
+    /// [`HttpClient::request`] without the reuse retry: a transport
+    /// failure surfaces immediately, even on a stale pooled connection.
+    /// Required for non-idempotent requests, where "resend blindly"
+    /// risks applying the action twice.
+    pub fn request_once(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request_with_retry(method, path, body, false)
+    }
+
+    fn request_with_retry(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        retry_on_reuse: bool,
+    ) -> Result<(u16, String)> {
         let reused = self.conn.is_some();
         match self.try_request(method, path, body) {
             Ok(out) => Ok(out),
             Err(e) => {
                 self.conn = None;
-                if !reused {
+                if !reused || !retry_on_reuse {
                     return Err(e);
                 }
                 let out = self.try_request(method, path, body);
@@ -365,14 +389,31 @@ impl ClientPool {
 
     /// Run one request on a pooled connection (creating one when all
     /// are busy); the connection returns to the pool only on success.
+    /// Retries once on a stale reused connection — reads only.
     pub fn request(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request_with_retry(method, path, body, true)
+    }
+
+    /// [`ClientPool::request`] without the reuse retry, for
+    /// non-idempotent requests (`POST /admin/reload`).
+    pub fn request_once(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request_with_retry(method, path, body, false)
+    }
+
+    fn request_with_retry(
+        &self,
+        method: &str,
+        path: &str,
+        body: &str,
+        retry_on_reuse: bool,
+    ) -> Result<(u16, String)> {
         let mut client = self
             .idle
             .lock()
             .unwrap()
             .pop()
             .unwrap_or_else(|| HttpClient::new(self.addr));
-        let out = client.request(method, path, body);
+        let out = client.request_with_retry(method, path, body, retry_on_reuse);
         if out.is_ok() {
             self.idle.lock().unwrap().push(client);
         }
@@ -509,6 +550,28 @@ mod tests {
         // opens a fresh connection instead of writing into a corpse.
         assert_eq!(client.request("GET", "/y", "").unwrap().0, 200);
         server.join().unwrap();
+    }
+
+    #[test]
+    fn request_once_does_not_retry_on_a_stale_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Answer one request claiming keep-alive, then close the
+        // connection anyway — the classic stale-pooled-connection shape.
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut reader = ConnReader::new();
+            let _ = reader.read_request(&mut stream).unwrap().unwrap();
+            write_response(&mut stream, 200, "OK", "{}", true).unwrap();
+            // Dropping listener + stream: any reconnect attempt fails.
+        });
+        let mut client = HttpClient::new(addr);
+        assert_eq!(client.request("GET", "/x", "").unwrap().0, 200);
+        server.join().unwrap();
+        // The pooled connection is now dead. `request` would eat the
+        // failure and retry; `request_once` must surface it so a
+        // non-idempotent call is never silently resent.
+        assert!(client.request_once("POST", "/admin/reload", "").is_err());
     }
 
     #[test]

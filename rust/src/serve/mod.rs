@@ -37,6 +37,18 @@
 //!   embedding fitted at startup),
 //!   `GET /healthz` and `GET /stats` (request counts, batch-size
 //!   histogram, p50/p95/p99 latency — see [`stats`]).
+//! * **Hot bundle swap** — the model plane is "always-up". A server
+//!   started from `--model` keeps its source path: `POST /admin/reload`
+//!   (or `SIGHUP`) re-loads the bundle file — zero-copy mapped when the
+//!   load mode allows — fits the embedding basis, and atomically swaps
+//!   the new [`ModelState`] in behind an `Arc` generation counter.
+//!   In-flight queries keep the snapshot they started on (an `Arc`
+//!   clone), new queries see the new generation, and **no request is
+//!   ever dropped**: the swap is one pointer store under a briefly-held
+//!   write lock. Every response carries `model_generation`; `/healthz`
+//!   and `/stats` also report the load mode (`mmap`/`heap`). The
+//!   replica router's `POST /admin/reload` drives the same call across
+//!   its backends sequentially (rolling), over non-retrying requests.
 //!
 //! Served answers are **bitwise-identical** to the in-process batch
 //! paths (`rust/tests/serve_http.rs` drives a real TCP round trip and
@@ -54,15 +66,16 @@ use crate::coordinator::Stripe;
 use crate::data::Dataset;
 use crate::error::{Context, Result};
 use crate::exec::queue::BoundedQueue;
-use crate::model::ModelBundle;
+use crate::model::{MmapMode, ModelBundle};
 use crate::runtime::json::Json;
 use crate::spectral::knn::{knn_row, rank_row};
 use crate::spectral::pca::{leaf_pca, leaf_pca_project, leaf_pca_project_q};
 use crate::swlc::predict;
 use crate::{anyhow, bail};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 pub use stats::Stats;
@@ -114,13 +127,14 @@ enum Reply {
     Neighbors { ids: Vec<u32>, proximities: Vec<f32>, dists: Vec<f32> },
 }
 
-/// One enqueued query awaiting its tile.
+/// One enqueued query awaiting its tile. The reply travels with the
+/// generation of the model snapshot that executed it.
 struct Job {
     kind: JobKind,
     x: Vec<f32>,
     /// `/neighbors` only: how many neighbors to return.
     k: usize,
-    tx: mpsc::Sender<Result<Reply>>,
+    tx: mpsc::Sender<Result<(u64, Reply)>>,
 }
 
 /// Single-stripe LRU over a shard directory for `/neighbors` row mode.
@@ -158,19 +172,65 @@ impl ShardCache {
     }
 }
 
-/// Everything the connection and batcher threads share.
-pub struct ServerState {
-    bundle: ModelBundle,
-    cfg: ServeConfig,
+/// One immutable model snapshot: the bundle plus everything derived
+/// from it (feature dimension, the fitted embedding basis) and the
+/// provenance of this particular load. Requests take an `Arc` of the
+/// current snapshot and keep it for their whole lifetime, so a reload
+/// can swap the pointer without ever invalidating in-flight work.
+pub struct ModelState {
+    pub bundle: ModelBundle,
     /// Feature dimension the binner was fitted on.
     d: usize,
-    /// Leaf-PCA basis fitted at startup (deterministic in the config).
+    /// Leaf-PCA basis fitted at load (deterministic in the config).
     embed_scores: Vec<f32>,
     embed_vals: Vec<f32>,
+    /// Monotonic swap counter: 1 at bind, +1 per successful reload.
+    pub generation: u64,
+    /// How this snapshot's factors are backed: `"mmap"` or `"heap"`.
+    pub load_mode: &'static str,
+}
+
+impl ModelState {
+    fn build(
+        bundle: ModelBundle,
+        cfg: &ServeConfig,
+        generation: u64,
+        load_mode: &'static str,
+    ) -> ModelState {
+        let n = bundle.kernel.ctx.n;
+        let dims = cfg.embed_dims.clamp(1, n);
+        let (embed_scores, embed_vals) =
+            leaf_pca(&bundle.kernel.q, dims, cfg.embed_iters, false, cfg.embed_seed);
+        let d = bundle.forest.binner.edges.len();
+        ModelState { bundle, d, embed_scores, embed_vals, generation, load_mode }
+    }
+}
+
+/// Everything the connection and batcher threads share.
+pub struct ServerState {
+    /// The live model snapshot. Read-locked for an instant per request
+    /// (to clone the `Arc`), write-locked for an instant per reload (to
+    /// store the new pointer) — queries never wait on a load.
+    model: RwLock<Arc<ModelState>>,
+    /// Where `/admin/reload` re-loads from; `None` (in-process fit,
+    /// no `--model`) makes reload a 400.
+    model_source: Option<(PathBuf, MmapMode)>,
+    /// Serializes reloads so two concurrent requests can't both build
+    /// generation G+1 from G; never held on the query path.
+    reload: Mutex<()>,
+    cfg: ServeConfig,
     shards: Option<ShardCache>,
     pub stats: Stats,
     queue: BoundedQueue<Job>,
     shutdown: AtomicBool,
+}
+
+impl ServerState {
+    /// The current model snapshot (an `Arc` clone under a momentary
+    /// read lock).
+    pub fn model(&self) -> Arc<ModelState> {
+        self.model.read().unwrap().clone()
+    }
 }
 
 /// A bound (but not yet running) server.
@@ -209,6 +269,20 @@ impl Server {
         shards: Option<ShardReader>,
         cfg: ServeConfig,
     ) -> Result<Server> {
+        Server::bind_with_source(bundle, shards, cfg, None, "heap")
+    }
+
+    /// [`Server::bind`] for a bundle loaded from a file: `source`
+    /// records the path + load policy so `POST /admin/reload` (and
+    /// SIGHUP) can hot-swap a rewritten bundle, and `load_mode` reports
+    /// how this first load was backed (`"mmap"`/`"heap"`).
+    pub fn bind_with_source(
+        bundle: ModelBundle,
+        shards: Option<ShardReader>,
+        cfg: ServeConfig,
+        source: Option<(PathBuf, MmapMode)>,
+        load_mode: &'static str,
+    ) -> Result<Server> {
         let n = bundle.kernel.ctx.n;
         if let Some(r) = &shards {
             if KernelSource::n_rows(r) != n {
@@ -225,23 +299,19 @@ impl Server {
                 );
             }
         }
-        let dims = cfg.embed_dims.clamp(1, n);
-        let (embed_scores, embed_vals) =
-            leaf_pca(&bundle.kernel.q, dims, cfg.embed_iters, false, cfg.embed_seed);
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let d = bundle.forest.binner.edges.len();
+        let model = ModelState::build(bundle, &cfg, 1, load_mode);
         let state = Arc::new(ServerState {
             queue: BoundedQueue::new(cfg.queue_depth),
-            d,
-            embed_scores,
-            embed_vals,
+            model: RwLock::new(Arc::new(model)),
+            model_source: source,
+            reload: Mutex::new(()),
             shards: shards.map(|reader| ShardCache { reader, last: Mutex::new(None) }),
             stats: Stats::new(),
             shutdown: AtomicBool::new(false),
             cfg,
-            bundle,
         });
         Ok(Server { state, listener, addr })
     }
@@ -265,6 +335,23 @@ impl Server {
                 .spawn(move || batch_loop(st))
                 .context("spawning the batcher thread")?
         };
+        #[cfg(unix)]
+        if state.model_source.is_some() {
+            sighup::install();
+            let st = state.clone();
+            std::thread::Builder::new()
+                .name("fk-serve-sighup".into())
+                .spawn(move || {
+                    while !st.shutdown.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(100));
+                        if sighup::take() {
+                            let resp = reload_endpoint(&st);
+                            eprintln!("SIGHUP reload -> {}: {}", resp.status, resp.body);
+                        }
+                    }
+                })
+                .context("spawning the SIGHUP watcher")?;
+        }
         for conn in self.listener.incoming() {
             if state.shutdown.load(Ordering::SeqCst) {
                 break;
@@ -292,10 +379,42 @@ impl Server {
     }
 }
 
+/// Tiny unix-signal shim: `SIGHUP` sets a flag a watcher thread polls.
+/// Raw `signal(2)` FFI keeps the crate dependency-free; the handler
+/// body is async-signal-safe (one relaxed atomic store).
+#[cfg(unix)]
+mod sighup {
+    use std::os::raw::c_int;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    const SIGHUP: c_int = 1;
+    static FLAG: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sighup(_sig: c_int) {
+        FLAG.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: c_int, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGHUP, on_sighup as extern "C" fn(c_int) as usize);
+        }
+    }
+
+    pub fn take() -> bool {
+        FLAG.swap(false, Ordering::Relaxed)
+    }
+}
+
 /// Drain the queue into per-endpoint tiles until the queue closes.
+/// Each drained batch snapshots the model once: every job in it runs —
+/// and is answered — on one consistent generation.
 fn batch_loop(st: Arc<ServerState>) {
     while let Some(batch) = st.queue.drain_batch(st.cfg.max_batch, st.cfg.linger) {
         st.stats.record_batch(batch.len());
+        let ms = st.model();
         let mut groups: [Vec<Job>; 3] = Default::default();
         for job in batch {
             groups[job.kind as usize].push(job);
@@ -305,10 +424,10 @@ fn batch_loop(st: Arc<ServerState>) {
                 continue;
             }
             let kind = group[0].kind;
-            match run_tile(&st, kind, &group) {
+            match run_tile(&ms, kind, &group) {
                 Ok(replies) => {
                     for (job, reply) in group.into_iter().zip(replies) {
-                        let _ = job.tx.send(Ok(reply));
+                        let _ = job.tx.send(Ok((ms.generation, reply)));
                     }
                 }
                 Err(e) => {
@@ -326,15 +445,15 @@ fn batch_loop(st: Arc<ServerState>) {
 /// forest once, then answer every query from the shared products. Each
 /// output row depends only on its own query row, so results are
 /// bitwise-independent of how requests were batched.
-fn run_tile(st: &ServerState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>> {
-    let kernel = &st.bundle.kernel;
-    let forest = &st.bundle.forest;
+fn run_tile(ms: &ModelState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>> {
+    let kernel = &ms.bundle.kernel;
+    let forest = &ms.bundle.forest;
     let b = group.len();
-    let mut x = Vec::with_capacity(b * st.d);
+    let mut x = Vec::with_capacity(b * ms.d);
     for job in group {
         x.extend_from_slice(&job.x);
     }
-    let data = Dataset { x, y: vec![0.0; b], n: b, d: st.d, n_classes: kernel.ctx.n_classes };
+    let data = Dataset { x, y: vec![0.0; b], n: b, d: ms.d, n_classes: kernel.ctx.n_classes };
     let qn = kernel.oos_query_map(forest, &data);
     match kind {
         JobKind::Predict => {
@@ -353,12 +472,12 @@ fn run_tile(st: &ServerState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>
                 .collect())
         }
         JobKind::Embed => {
-            let dims = st.embed_vals.len();
+            let dims = ms.embed_vals.len();
             // Quantized bundles project tiles off the compressed Q; the
             // exact factor stays the default path.
             let coords = match kernel.quantized() {
-                Some(qf) => leaf_pca_project_q(&qf.q, &st.embed_scores, &st.embed_vals, &qn),
-                None => leaf_pca_project(&kernel.q, &st.embed_scores, &st.embed_vals, &qn),
+                Some(qf) => leaf_pca_project_q(&qf.q, &ms.embed_scores, &ms.embed_vals, &qn),
+                None => leaf_pca_project(&kernel.q, &ms.embed_scores, &ms.embed_vals, &qn),
             };
             Ok((0..b)
                 .map(|i| Reply::Embed { coords: coords[i * dims..(i + 1) * dims].to_vec() })
@@ -418,7 +537,7 @@ impl Response {
 pub(crate) fn unroutable(method: &str, path: &str) -> Response {
     let allow = match path {
         "/healthz" | "/stats" => Some("GET"),
-        "/predict" | "/embed" | "/neighbors" => Some("POST"),
+        "/predict" | "/embed" | "/neighbors" | "/admin/reload" => Some("POST"),
         _ => None,
     };
     match allow {
@@ -435,7 +554,8 @@ pub(crate) fn unroutable(method: &str, path: &str) -> Response {
             reason: "Not Found",
             body: format!(
                 "{{\"error\": {}, \"endpoints\": \
-                 [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\"]}}",
+                 [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\", \
+                 \"/admin/reload\"]}}",
                 json_escape(&format!("no route for {method} {path}")),
             ),
         },
@@ -505,8 +625,18 @@ fn route(st: &ServerState, req: &http::Request) -> Result<Response> {
         }
         ("GET", "/stats") => {
             st.stats.stats.fetch_add(1, Ordering::Relaxed);
-            Ok(Response::ok(st.stats.to_json()))
+            // Prepend the model-plane fields to the counter document so
+            // operators can see which generation the numbers describe.
+            let ms = st.model();
+            let counters = st.stats.to_json();
+            Ok(Response::ok(format!(
+                "{{\"model_generation\": {}, \"load_mode\": {}, {}",
+                ms.generation,
+                json_escape(ms.load_mode),
+                &counters[1..],
+            )))
         }
+        ("POST", "/admin/reload") => Ok(reload_endpoint(st)),
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
             Ok(Response::ok(predict_endpoint(st, req)?))
@@ -570,7 +700,15 @@ fn parse_queries(j: &Json, d: usize) -> Result<Vec<Vec<f32>>> {
 }
 
 /// Enqueue one job per query row and await the replies in row order.
-fn submit(st: &ServerState, kind: JobKind, rows: Vec<Vec<f32>>, k: usize) -> Result<Vec<Reply>> {
+/// Each reply carries the generation of the snapshot that computed it
+/// (rows of one request can straddle a hot swap; each row reports the
+/// model that actually answered it).
+fn submit(
+    st: &ServerState,
+    kind: JobKind,
+    rows: Vec<Vec<f32>>,
+    k: usize,
+) -> Result<Vec<(u64, Reply)>> {
     let mut rxs = Vec::with_capacity(rows.len());
     for x in rows {
         let (tx, rx) = mpsc::channel();
@@ -623,37 +761,112 @@ fn json_u32_array(vs: &[u32]) -> String {
     out
 }
 
+/// `POST /admin/reload`: re-load the bundle from the server's source
+/// path and swap it in. The old snapshot keeps serving until the
+/// moment of the pointer store, and in-flight requests finish on it —
+/// a failed load leaves the server exactly as it was (status 500, old
+/// generation reported). Returns 400 when the server has no file
+/// source (fitted in-process) or the new bundle is shaped incompatibly
+/// with the live one (different N / kind / feature dim — the roster
+/// invariants the replica router and queued jobs rely on).
+fn reload_endpoint(st: &ServerState) -> Response {
+    let Some((path, mode)) = &st.model_source else {
+        return Response {
+            status: 400,
+            reason: "Bad Request",
+            body: format!(
+                "{{\"error\": {}}}",
+                json_escape("this server was fitted in-process; start with --model to enable /admin/reload"),
+            ),
+        };
+    };
+    // One reload at a time; queries never touch this lock.
+    let _g = st.reload.lock().unwrap();
+    let old = st.model();
+    let (bundle, load_mode) = match ModelBundle::load_with_mode(path, *mode) {
+        Ok(v) => v,
+        Err(e) => {
+            st.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Response {
+                status: 500,
+                reason: "Internal Server Error",
+                body: format!(
+                    "{{\"error\": {}, \"model_generation\": {}}}",
+                    json_escape(&format!("reload failed, still serving the old bundle: {e:#}")),
+                    old.generation,
+                ),
+            };
+        }
+    };
+    let (ok, wk) = (&old.bundle.kernel, &bundle.kernel);
+    let new_d = bundle.forest.binner.edges.len();
+    if wk.ctx.n != ok.ctx.n || wk.kind.name() != ok.kind.name() || new_d != old.d {
+        return Response {
+            status: 400,
+            reason: "Bad Request",
+            body: format!(
+                "{{\"error\": {}, \"model_generation\": {}}}",
+                json_escape(&format!(
+                    "bundle at {} is shaped incompatibly with the live model \
+                     (n {} -> {}, kind {} -> {}, features {} -> {}); restart to switch models",
+                    path.display(),
+                    ok.ctx.n, wk.ctx.n,
+                    ok.kind.name(), wk.kind.name(),
+                    old.d, new_d,
+                )),
+                old.generation,
+            ),
+        };
+    }
+    let next = Arc::new(ModelState::build(bundle, &st.cfg, old.generation + 1, load_mode));
+    let generation = next.generation;
+    *st.model.write().unwrap() = next;
+    Response::ok(format!(
+        "{{\"status\": \"reloaded\", \"model_generation\": {generation}, \
+         \"load_mode\": {}, \"path\": {}}}",
+        json_escape(load_mode),
+        json_escape(&path.display().to_string()),
+    ))
+}
+
 fn healthz_body(st: &ServerState) -> String {
-    let m = &st.bundle.meta;
-    let k = &st.bundle.kernel;
+    let ms = st.model();
+    let m = &ms.bundle.meta;
+    let k = &ms.bundle.kernel;
     format!(
         "{{\"status\": \"ok\", \"model\": {{\"dataset\": {}, \"n\": {}, \"trees\": {}, \
          \"kind\": {}, \"forest\": {}, \"classes\": {}, \"features\": {}, \"leaves\": {}}}, \
-         \"neighbors_source\": {}, \"embed_dims\": {}}}",
+         \"neighbors_source\": {}, \"embed_dims\": {}, \"model_generation\": {}, \
+         \"load_mode\": {}, \"reloadable\": {}}}",
         json_escape(&m.dataset),
         k.ctx.n,
         k.ctx.t,
         json_escape(k.kind.name()),
-        json_escape(&format!("{:?}", st.bundle.forest.kind)),
+        json_escape(&format!("{:?}", ms.bundle.forest.kind)),
         k.ctx.n_classes,
-        st.d,
+        ms.d,
         k.ctx.l,
         if st.shards.is_some() { "\"shards\"" } else { "\"factors\"" },
-        st.embed_vals.len(),
+        ms.embed_vals.len(),
+        ms.generation,
+        json_escape(ms.load_mode),
+        st.model_source.is_some(),
     )
 }
 
 fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
-    let c = st.bundle.kernel.ctx.n_classes;
+    let ms = st.model();
+    let c = ms.bundle.kernel.ctx.n_classes;
     if c < 2 {
         bail!("/predict needs a classification model (bundle has {c} classes)");
     }
     let body = parse_body(req)?;
-    let rows = parse_queries(&body, st.d)?;
+    let rows = parse_queries(&body, ms.d)?;
     let replies = submit(st, JobKind::Predict, rows, 0)?;
+    let gen = replies.first().map_or(ms.generation, |r| r.0);
     let mut preds = String::from("[");
     let mut scores = String::from("[");
-    for (i, r) in replies.iter().enumerate() {
+    for (i, (_, r)) in replies.iter().enumerate() {
         let (label, s) = match r {
             Reply::Predict { label, scores } => (label, scores),
             _ => bail!("internal: unexpected reply kind"),
@@ -667,15 +880,19 @@ fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     }
     preds.push(']');
     scores.push(']');
-    Ok(format!("{{\"predictions\": {preds}, \"scores\": {scores}}}"))
+    Ok(format!(
+        "{{\"predictions\": {preds}, \"scores\": {scores}, \"model_generation\": {gen}}}"
+    ))
 }
 
 fn embed_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
+    let ms = st.model();
     let body = parse_body(req)?;
-    let rows = parse_queries(&body, st.d)?;
+    let rows = parse_queries(&body, ms.d)?;
     let replies = submit(st, JobKind::Embed, rows, 0)?;
+    let gen = replies.first().map_or(ms.generation, |r| r.0);
     let mut coords = String::from("[");
-    for (i, r) in replies.iter().enumerate() {
+    for (i, (_, r)) in replies.iter().enumerate() {
         let c = match r {
             Reply::Embed { coords } => coords,
             _ => bail!("internal: unexpected reply kind"),
@@ -686,10 +903,14 @@ fn embed_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
         coords.push_str(&json_f32_array(c));
     }
     coords.push(']');
-    Ok(format!("{{\"dims\": {}, \"coords\": {coords}}}", st.embed_vals.len()))
+    Ok(format!(
+        "{{\"dims\": {}, \"coords\": {coords}, \"model_generation\": {gen}}}",
+        ms.embed_vals.len()
+    ))
 }
 
 fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
+    let ms = st.model();
     let body = parse_body(req)?;
     let k = match body.get("k") {
         Some(v) => v.as_usize().ok_or_else(|| anyhow!("\"k\" must be a positive integer"))?,
@@ -698,7 +919,7 @@ fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     if k == 0 {
         bail!("\"k\" must be >= 1");
     }
-    let n = st.bundle.kernel.ctx.n;
+    let n = ms.bundle.kernel.ctx.n;
     if let Some(row_json) = body.get("row") {
         // Training-row lookup: serve the materialized kernel row (from
         // the shard directory when attached, else computed on the fly —
@@ -716,21 +937,23 @@ fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
         let (cols, vals) = match &st.shards {
             Some(cache) => cache.row(row)?,
             None => {
-                let stripe = coordinator::stripe_product(&st.bundle.kernel, row, row + 1);
+                let stripe = coordinator::stripe_product(&ms.bundle.kernel, row, row + 1);
                 let (c, v) = stripe.row(0);
                 (c.to_vec(), v.to_vec())
             }
         };
         let (ids, dists) = knn_row(row, n, &cols, &vals, k);
         return Ok(format!(
-            "{{\"row\": {row}, \"k\": {k}, \"ids\": {}, \"dists\": {}, \"source\": {}}}",
+            "{{\"row\": {row}, \"k\": {k}, \"ids\": {}, \"dists\": {}, \"source\": {}, \
+             \"model_generation\": {}}}",
             json_u32_array(&ids),
             json_f32_array(&dists),
             if st.shards.is_some() { "\"shards\"" } else { "\"factors\"" },
+            ms.generation,
         ));
     }
     // OOS query: rank the cross-proximity row from the factors.
-    let rows = parse_queries(&body, st.d)?;
+    let rows = parse_queries(&body, ms.d)?;
     if rows.len() != 1 {
         bail!("/neighbors takes one query per request (got {})", rows.len());
     }
@@ -739,9 +962,9 @@ fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     }
     let replies = submit(st, JobKind::Neighbors, rows, k)?;
     match &replies[0] {
-        Reply::Neighbors { ids, proximities, dists } => Ok(format!(
+        (gen, Reply::Neighbors { ids, proximities, dists }) => Ok(format!(
             "{{\"k\": {k}, \"ids\": {}, \"proximities\": {}, \"dists\": {}, \
-             \"source\": \"factors\"}}",
+             \"source\": \"factors\", \"model_generation\": {gen}}}",
             json_u32_array(ids),
             json_f32_array(proximities),
             json_f32_array(dists),

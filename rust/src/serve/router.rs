@@ -27,6 +27,7 @@
 //! 502 Bad Gateway.
 
 use super::{unroutable, Response};
+use crate::bench_support::json_escape;
 use crate::error::{Context, Result};
 use crate::runtime::json::Json;
 use crate::serve::http::{self, ClientPool};
@@ -224,6 +225,7 @@ fn route(st: &RouterState, req: &http::Request) -> Response {
             st.stats.stats.fetch_add(1, Ordering::Relaxed);
             Response::ok(merged_stats(st))
         }
+        ("POST", "/admin/reload") => reload_fleet(st),
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
             forward(st, rr_next(st), "/predict", &req.body)
@@ -271,6 +273,8 @@ fn reason_for(status: u16) -> &'static str {
 /// Forward one request, starting at backend `start` and failing over
 /// replica by replica. The backend's response body is relayed
 /// **verbatim** — routed answers are byte-identical to direct ones.
+/// Only the read endpoints go through here (retry/failover is safe for
+/// them); `/admin/reload` mutates and takes [`reload_fleet`] instead.
 fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response {
     let body = match std::str::from_utf8(body) {
         Ok(s) => s,
@@ -296,6 +300,54 @@ fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response 
         status: 502,
         reason: "Bad Gateway",
         body: format!("{{\"error\": \"all {nb} backend replica(s) unreachable\"}}"),
+    }
+}
+
+/// `POST /admin/reload` at the router: a **rolling** reload — backends
+/// are reloaded one at a time, in roster order, so at every instant the
+/// rest of the fleet is serving and the round-robin failover keeps
+/// queries flowing (zero dropped requests across the swap). Each
+/// backend call is **non-retrying** ([`ClientPool::request_once`]):
+/// reload is not idempotent-safe to resend blindly — a lost response
+/// may still have applied, and a blind retry would bump the generation
+/// twice. 200 only when every backend reloaded; otherwise 502 with the
+/// per-backend outcomes.
+fn reload_fleet(st: &RouterState) -> Response {
+    let mut all_ok = true;
+    let mut out = String::from("[");
+    for (i, b) in st.backends.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        match b.pool.request_once("POST", "/admin/reload", "") {
+            Ok((status, body)) => {
+                if status != 200 {
+                    all_ok = false;
+                }
+                out.push_str(&format!(
+                    "{{\"addr\": \"{}\", \"status\": {status}, \"response\": {body}}}",
+                    b.addr
+                ));
+            }
+            Err(e) => {
+                all_ok = false;
+                out.push_str(&format!(
+                    "{{\"addr\": \"{}\", \"error\": {}}}",
+                    b.addr,
+                    json_escape(&e.to_string())
+                ));
+            }
+        }
+    }
+    out.push(']');
+    if !all_ok {
+        st.stats.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let status = if all_ok { 200 } else { 502 };
+    Response {
+        status,
+        reason: reason_for(status),
+        body: format!("{{\"role\": \"router\", \"reload\": {out}}}"),
     }
 }
 

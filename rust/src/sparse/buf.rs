@@ -1,0 +1,242 @@
+//! Borrowed-or-owned array storage for the sparse factor types.
+//!
+//! [`Buf<T>`] is the `Cow`-style representation that lets one `Csr` /
+//! `QCsr` / context-array type back every large array either with a
+//! heap `Vec<T>` (the classic path: training, `from_triplets`,
+//! heap-decoded bundles) or with a slice *borrowed from a shared
+//! memory mapping* (`fk-bundle-v3` served with `--mmap`). Every read
+//! path in the crate goes through `Deref<Target = [T]>`, so the two
+//! backings are indistinguishable to the kernels — SpGEMM/SpMM over a
+//! mapped factor is bitwise-identical to the same product over an
+//! owned copy, because it literally reads the same bytes.
+//!
+//! Mutation is copy-on-write: the first `&mut [T]` access of a mapped
+//! buffer materializes an owned copy (`DerefMut`), so in-place editors
+//! like `sort_and_dedup_rows` keep working unchanged — they just stop
+//! being zero-copy, which is exactly the semantics a private view of a
+//! shared read-only artifact should have.
+//!
+//! The mapped variant carries a type-erased `Arc` anchor keeping the
+//! underlying mapping alive (`model::mmap::Mapping` in practice; the
+//! erasure keeps `sparse` independent of `model`). Cloning a mapped
+//! buffer is an `Arc` bump, never a data copy — which is why a
+//! symmetric kernel's `w = q.clone()` stays O(1) on a mapped bundle.
+
+use std::any::Any;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+/// An owned `Vec<T>` or a slice borrowed from a shared anchor (a file
+/// mapping). See the module docs for the contract.
+pub enum Buf<T: Copy + 'static> {
+    Owned(Vec<T>),
+    Mapped {
+        /// First element; valid for `len` elements as long as `anchor`
+        /// is alive, and correctly aligned for `T` (the bundle writer
+        /// 64-byte-aligns every section).
+        ptr: *const T,
+        len: usize,
+        /// Keeps the backing storage (the `mmap` region) alive.
+        anchor: Arc<dyn Any + Send + Sync>,
+    },
+}
+
+impl<T: Copy + 'static> Buf<T> {
+    /// Wrap a slice of a shared anchor without copying.
+    ///
+    /// # Safety
+    /// `ptr` must point to `len` valid, initialized, `T`-aligned
+    /// elements that stay valid and unwritten for the anchor's
+    /// lifetime.
+    pub unsafe fn from_anchor(
+        ptr: *const T,
+        len: usize,
+        anchor: Arc<dyn Any + Send + Sync>,
+    ) -> Buf<T> {
+        Buf::Mapped { ptr, len, anchor }
+    }
+
+    /// Whether this buffer still borrows a mapping (false once any
+    /// mutation has triggered the copy-on-write).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Buf::Mapped { .. })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+
+    /// Extract the owned vector, copying out of a mapping if needed.
+    pub fn into_vec(self) -> Vec<T> {
+        match self {
+            Buf::Owned(v) => v,
+            Buf::Mapped { .. } => self.to_vec(),
+        }
+    }
+}
+
+impl<T: Copy + 'static> Deref for Buf<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match self {
+            Buf::Owned(v) => v,
+            // SAFETY: `from_anchor`'s contract — valid for `len`
+            // elements while `anchor` (held by self) is alive.
+            Buf::Mapped { ptr, len, .. } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+        }
+    }
+}
+
+impl<T: Copy + 'static> DerefMut for Buf<T> {
+    /// Copy-on-write: mutation of a mapped buffer first materializes
+    /// an owned copy (the mapping itself is read-only).
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        if self.is_mapped() {
+            *self = Buf::Owned(self.to_vec());
+        }
+        match self {
+            Buf::Owned(v) => v,
+            Buf::Mapped { .. } => unreachable!("just converted to Owned"),
+        }
+    }
+}
+
+// SAFETY: the mapped variant is an immutable view of read-only memory
+// whose lifetime is pinned by the Arc anchor; T itself is plain data.
+unsafe impl<T: Copy + Send + 'static> Send for Buf<T> {}
+unsafe impl<T: Copy + Sync + 'static> Sync for Buf<T> {}
+
+impl<T: Copy + 'static> Clone for Buf<T> {
+    /// Owned clones copy the data; mapped clones bump the anchor.
+    fn clone(&self) -> Buf<T> {
+        match self {
+            Buf::Owned(v) => Buf::Owned(v.clone()),
+            Buf::Mapped { ptr, len, anchor } => {
+                Buf::Mapped { ptr: *ptr, len: *len, anchor: Arc::clone(anchor) }
+            }
+        }
+    }
+}
+
+impl<T: Copy + 'static> Default for Buf<T> {
+    fn default() -> Buf<T> {
+        Buf::Owned(Vec::new())
+    }
+}
+
+impl<T: Copy + 'static> From<Vec<T>> for Buf<T> {
+    fn from(v: Vec<T>) -> Buf<T> {
+        Buf::Owned(v)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug + 'static> std::fmt::Debug for Buf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Render as the slice: backing is an implementation detail.
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq for Buf<T> {
+    fn eq(&self, other: &Buf<T>) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq<Vec<T>> for Buf<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq<Buf<T>> for Vec<T> {
+    fn eq(&self, other: &Buf<T>) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq<[T]> for Buf<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        **self == *other
+    }
+}
+
+impl<T: Copy + PartialEq + 'static, const N: usize> PartialEq<[T; N]> for Buf<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        **self == *other
+    }
+}
+
+impl<'a, T: Copy + 'static> IntoIterator for &'a Buf<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<T: Copy + 'static> FromIterator<T> for Buf<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Buf<T> {
+        Buf::Owned(iter.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An owned Vec posing as the anchor, standing in for a Mapping.
+    fn mapped_from(v: Vec<u32>) -> Buf<u32> {
+        let anchor: Arc<Vec<u32>> = Arc::new(v);
+        let ptr = anchor.as_ptr();
+        let len = anchor.len();
+        unsafe { Buf::from_anchor(ptr, len, anchor as Arc<dyn Any + Send + Sync>) }
+    }
+
+    #[test]
+    fn owned_and_mapped_read_identically() {
+        let owned: Buf<u32> = vec![3, 1, 4, 1, 5].into();
+        let mapped = mapped_from(vec![3, 1, 4, 1, 5]);
+        assert!(!owned.is_mapped());
+        assert!(mapped.is_mapped());
+        assert_eq!(owned, mapped);
+        assert_eq!(&mapped[1..3], &[1, 4]);
+        assert_eq!(mapped.iter().sum::<u32>(), 14);
+        let collected: Vec<u32> = (&mapped).into_iter().copied().collect();
+        assert_eq!(collected, vec![3, 1, 4, 1, 5]);
+    }
+
+    #[test]
+    fn mutation_of_mapped_is_copy_on_write() {
+        let mut b = mapped_from(vec![10, 20, 30]);
+        assert!(b.is_mapped());
+        b[1] = 99;
+        assert!(!b.is_mapped(), "first mutation must own the data");
+        assert_eq!(b, vec![10, 99, 30]);
+    }
+
+    #[test]
+    fn clone_of_mapped_shares_the_anchor() {
+        let b = mapped_from(vec![7, 8]);
+        let c = b.clone();
+        assert!(c.is_mapped());
+        assert_eq!(b, c);
+        if let (Buf::Mapped { ptr: p1, .. }, Buf::Mapped { ptr: p2, .. }) = (&b, &c) {
+            assert_eq!(p1, p2, "clone must alias, not copy");
+        }
+    }
+
+    #[test]
+    fn equality_against_vecs_and_slices() {
+        let b: Buf<u32> = vec![1, 2].into();
+        assert_eq!(b, vec![1, 2]);
+        assert_eq!(vec![1, 2], b);
+        assert_eq!(b, [1, 2]);
+        assert!(b != vec![1, 3]);
+        assert_eq!(b.into_vec(), vec![1, 2]);
+    }
+}

@@ -1,5 +1,6 @@
 //! Compressed Sparse Row matrices.
 
+use super::buf::Buf;
 use crate::exec;
 
 /// Output-column tile width for `spmm`/`spmm_t`: the dense `X` panel is
@@ -16,23 +17,34 @@ const SPMM_K_TILE: usize = 16;
 /// the largest leaf space we target (L ≈ N·T with N = 10M, T = 100 would
 /// overflow; the library asserts on construction), while halving index
 /// memory versus `usize` — index traffic dominates SpGEMM bandwidth.
+///
+/// The three arrays are [`Buf`]s: owned `Vec`s on every construction
+/// path, or zero-copy views into a mapped `fk-bundle-v3` file. Reads
+/// are identical either way (`Buf: Deref<Target = [T]>`); in-place
+/// mutation of a mapped matrix copies-on-write.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     pub n_rows: usize,
     pub n_cols: usize,
     /// Row pointer array, length `n_rows + 1`.
-    pub indptr: Vec<usize>,
+    pub indptr: Buf<usize>,
     /// Column indices, length `nnz`, sorted within each row.
-    pub indices: Vec<u32>,
+    pub indices: Buf<u32>,
     /// Values, length `nnz`.
-    pub data: Vec<f32>,
+    pub data: Buf<f32>,
 }
 
 impl Csr {
     /// An all-zero matrix.
     pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
         assert!(n_cols <= u32::MAX as usize, "column dim {n_cols} overflows u32");
-        Csr { n_rows, n_cols, indptr: vec![0; n_rows + 1], indices: vec![], data: vec![] }
+        Csr {
+            n_rows,
+            n_cols,
+            indptr: vec![0; n_rows + 1].into(),
+            indices: Vec::new().into(),
+            data: Vec::new().into(),
+        }
     }
 
     /// Number of stored entries.
@@ -73,7 +85,13 @@ impl Csr {
             data[k] = v;
             cursor[r] += 1;
         }
-        let mut m = Csr { n_rows, n_cols, indptr, indices, data };
+        let mut m = Csr {
+            n_rows,
+            n_cols,
+            indptr: indptr.into(),
+            indices: indices.into(),
+            data: data.into(),
+        };
         m.sort_and_dedup_rows();
         m
     }
@@ -104,7 +122,7 @@ impl Csr {
             finalize_row(&mut indices, &mut data, start);
             indptr.push(indices.len());
         }
-        Csr { n_rows, n_cols, indptr, indices, data }
+        Csr { n_rows, n_cols, indptr: indptr.into(), indices: indices.into(), data: data.into() }
     }
 
     /// Parallel [`Csr::from_rows`]: rows are partitioned across the
@@ -156,7 +174,7 @@ impl Csr {
         if indptr.len() == 1 {
             indptr.resize(n_rows + 1, 0);
         }
-        Csr { n_rows, n_cols, indptr, indices, data }
+        Csr { n_rows, n_cols, indptr: indptr.into(), indices: indices.into(), data: data.into() }
     }
 
     fn sort_and_dedup_rows(&mut self) {
@@ -182,9 +200,9 @@ impl Csr {
             }
             new_indptr.push(new_indices.len());
         }
-        self.indices = new_indices;
-        self.data = new_data;
-        self.indptr = new_indptr;
+        self.indices = new_indices.into();
+        self.data = new_data.into();
+        self.indptr = new_indptr.into();
     }
 
     /// Transpose (CSR of the transposed matrix) by counting sort —
@@ -255,7 +273,13 @@ impl Csr {
                 }
             });
         }
-        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, data }
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            indptr: indptr.into(),
+            indices: indices.into(),
+            data: data.into(),
+        }
     }
 
     fn transpose_serial(&self) -> Csr {
@@ -280,7 +304,13 @@ impl Csr {
                 cursor[c] += 1;
             }
         }
-        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, data }
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            indptr: indptr.into(),
+            indices: indices.into(),
+            data: data.into(),
+        }
     }
 
     /// Dense representation (row-major) — tests and small blocks only.
@@ -483,8 +513,8 @@ impl Csr {
             n_rows: rows.len(),
             n_cols: self.n_cols,
             indptr: self.indptr[rows.start..=rows.end].iter().map(|&p| p - lo).collect(),
-            indices: self.indices[lo..hi].to_vec(),
-            data: self.data[lo..hi].to_vec(),
+            indices: self.indices[lo..hi].to_vec().into(),
+            data: self.data[lo..hi].to_vec().into(),
         }
     }
 

@@ -13,11 +13,13 @@
 //! int8/int4 factors ([`QCsr`]) with delta-compressed indices and
 //! quantized SpGEMM/SpMM kernels that accumulate in f32.
 
+pub mod buf;
 mod csr;
 mod ops;
 pub mod qcsr;
 mod spgemm;
 
+pub use buf::Buf;
 pub use csr::Csr;
 pub use ops::{scale_cols, scale_rows};
 pub use qcsr::{QCsr, QuantMode};

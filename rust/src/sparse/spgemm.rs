@@ -188,7 +188,13 @@ pub fn spgemm_with_threads(a: &Csr, b: &Csr, n_threads: usize) -> Csr {
         // Zero-row input: parallel_ranges produced no blocks.
         indptr.resize(a.n_rows + 1, 0);
     }
-    Csr { n_rows: a.n_rows, n_cols: b.n_cols, indptr, indices, data }
+    Csr {
+        n_rows: a.n_rows,
+        n_cols: b.n_cols,
+        indptr: indptr.into(),
+        indices: indices.into(),
+        data: data.into(),
+    }
 }
 
 /// Serial SpGEMM reusing a caller-owned [`SpaScratch`] across calls —
@@ -201,7 +207,13 @@ pub fn spgemm_with_scratch(a: &Csr, b: &Csr, spa: &mut SpaScratch) -> Csr {
     assert!(a.n_rows < u32::MAX as usize);
     spa.ensure(b.n_cols);
     let blk = spgemm_rows(a, b, 0..a.n_rows, spa);
-    Csr { n_rows: a.n_rows, n_cols: b.n_cols, indptr: blk.indptr, indices: blk.indices, data: blk.data }
+    Csr {
+        n_rows: a.n_rows,
+        n_cols: b.n_cols,
+        indptr: blk.indptr.into(),
+        indices: blk.indices.into(),
+        data: blk.data.into(),
+    }
 }
 
 /// In-place LSD radix-256 sort of `keys`, using `tmp` as the ping-pong

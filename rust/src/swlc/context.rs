@@ -13,30 +13,35 @@
 
 use crate::data::Dataset;
 use crate::forest::Forest;
+use crate::sparse::Buf;
 
 /// Ensemble context θ for a trained forest over its training set.
+///
+/// The per-sample/per-leaf arrays are [`Buf`]s so a mapped
+/// `fk-bundle-v3` can serve them zero-copy; every constructor in this
+/// module builds owned vectors.
 pub struct EnsembleContext {
     pub n: usize,
     pub t: usize,
     /// Total number of leaves L across the ensemble.
     pub l: usize,
     /// Sample-major `N×T` global leaf ids: `leaf_of[i*T + t] = ℓ_t(x_i)`.
-    pub leaf_of: Vec<u32>,
+    pub leaf_of: Buf<u32>,
     /// `M(j)`: number of training samples routed to leaf j (length L).
-    pub leaf_mass: Vec<f32>,
+    pub leaf_mass: Buf<f32>,
     /// `M_inbag(j)`: bootstrap draws in leaf j (length L). Equals
     /// `leaf_mass` when the ensemble has no bootstrap.
-    pub inbag_mass: Vec<f32>,
+    pub inbag_mass: Buf<f32>,
     /// `c_t(x_i)` in sample-major `N×T`; empty ⇒ no bootstrap (every
     /// sample in-bag once, never OOB).
-    pub inbag_count: Vec<u16>,
+    pub inbag_count: Buf<u16>,
     /// `S(x_i) = Σ_t o_t(x_i)`: number of trees where sample i is OOB.
-    pub oob_count: Vec<u32>,
+    pub oob_count: Buf<u32>,
     /// Additive model weights `w_t` (GBT; all 1 for bagged kinds).
-    pub tree_weights: Vec<f32>,
+    pub tree_weights: Buf<f32>,
     /// Training labels as class ids (classification) — used by kDN and
     /// proximity-weighted prediction. Empty for regression.
-    pub y: Vec<u32>,
+    pub y: Buf<u32>,
     pub n_classes: usize,
 }
 
@@ -91,13 +96,13 @@ impl EnsembleContext {
             n,
             t,
             l,
-            leaf_of,
-            leaf_mass,
-            inbag_mass,
-            inbag_count,
-            oob_count,
-            tree_weights: forest.tree_weights.clone(),
-            y,
+            leaf_of: leaf_of.into(),
+            leaf_mass: leaf_mass.into(),
+            inbag_mass: inbag_mass.into(),
+            inbag_count: inbag_count.into(),
+            oob_count: oob_count.into(),
+            tree_weights: forest.tree_weights.clone().into(),
+            y: y.into(),
             n_classes: data.n_classes,
         }
     }

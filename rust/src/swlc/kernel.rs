@@ -111,6 +111,30 @@ impl ForestKernel {
         ForestKernel { kind, ctx, q, w, wt, symmetric, quant: None }
     }
 
+    /// [`ForestKernel::from_parts`] with the cached transpose supplied
+    /// by the caller instead of recomputed — the `fk-bundle-v3` load
+    /// path, which persists `Wᵀ` so a mapped bundle binds without any
+    /// O(nnz) work. The caller vouches that `wt` is the transpose of
+    /// `w` (the v3 writer stores the fitted one verbatim); only shape
+    /// consistency is checked here.
+    pub fn from_parts_with_wt(
+        kind: ProximityKind,
+        ctx: EnsembleContext,
+        q: Csr,
+        w: Csr,
+        wt: Csr,
+        symmetric: bool,
+    ) -> ForestKernel {
+        assert_eq!(q.n_rows, ctx.n);
+        assert_eq!(q.n_cols, ctx.l);
+        assert_eq!(w.n_rows, ctx.n);
+        assert_eq!(w.n_cols, ctx.l);
+        assert_eq!(wt.n_rows, ctx.l);
+        assert_eq!(wt.n_cols, ctx.n);
+        assert_eq!(wt.nnz(), w.nnz());
+        ForestKernel { kind, ctx, q, w, wt, symmetric, quant: None }
+    }
+
     /// Switch the quantized fast path on (`Some(mode)`) or off (`None`).
     /// Enabling quantizes `Q` and `Wᵀ` with the deterministic block rule
     /// of [`qcsr::quantize`]; the exact factors are kept — quantization
@@ -285,9 +309,9 @@ pub fn set_unit_diagonal_offset(p: &mut Csr, row_offset: usize) {
         }
         indptr.push(indices.len());
     }
-    p.indices = indices;
-    p.data = data;
-    p.indptr = indptr;
+    p.indices = indices.into();
+    p.data = data.into();
+    p.indptr = indptr.into();
 }
 
 #[cfg(test)]

@@ -2,11 +2,13 @@
 //! the context, and the SWLC factors **bitwise** for every supported
 //! `ForestKind` × `ProximityKind` combination, and every downstream
 //! computation (kernel product, training prediction, OOS prediction)
-//! must agree exactly between the fitted and the loaded model.
+//! must agree exactly between the fitted and the loaded model — on
+//! both load paths: the verified heap decode and the zero-copy
+//! fk-bundle-v3 mmap bind.
 
 use forest_kernels::data::synth;
 use forest_kernels::forest::{Criterion, Forest, ForestKind, TrainConfig};
-use forest_kernels::model::{save, BundleMeta, ModelBundle};
+use forest_kernels::model::{mmap, save, save_legacy_v2, BundleMeta, MmapMode, ModelBundle};
 use forest_kernels::swlc::{predict, ForestKernel, ProximityKind};
 use std::path::PathBuf;
 
@@ -71,7 +73,15 @@ fn roundtrip_one(fk: ForestKind, kind: ProximityKind, seed: u64) {
     let path = tmpfile(&tag);
     save(&path, &forest, &kernel, &meta).unwrap();
     let loaded = ModelBundle::load(&path).unwrap();
+    // The zero-copy bind must return bitwise the same model (the
+    // mapping outlives the unlink below — Unix keeps the inode alive).
+    let (mapped, map_mode) = ModelBundle::load_with_mode(&path, MmapMode::Auto).unwrap();
     std::fs::remove_file(&path).ok();
+    if mmap::supported() {
+        assert_eq!(map_mode, "mmap", "{tag}: auto should map a v3 bundle");
+    } else {
+        assert_eq!(map_mode, "heap", "{tag}: auto should fall back off-unix");
+    }
 
     // Forest round-trips exactly (Tree/Node derive PartialEq; leaf
     // statistics are f32 payloads compared as raw bits).
@@ -141,6 +151,39 @@ fn roundtrip_one(fk: ForestKind, kind: ProximityKind, seed: u64) {
         predict::predict_oos(&kernel, &qn_orig),
         "{tag}: OOS predictions"
     );
+
+    // The mapped bundle agrees bitwise with the heap decode, and
+    // SpGEMM/prediction run directly on the borrowed sections.
+    assert_csr_bitwise(&mapped.kernel.q, &loaded.kernel.q, &format!("{tag}: mmap Q"));
+    assert_csr_bitwise(&mapped.kernel.w, &loaded.kernel.w, &format!("{tag}: mmap W"));
+    assert_csr_bitwise(
+        mapped.kernel.w_transpose(),
+        loaded.kernel.w_transpose(),
+        &format!("{tag}: mmap Wt"),
+    );
+    assert_eq!(mapped.kernel.ctx.leaf_of, loaded.kernel.ctx.leaf_of, "{tag}: mmap leaf_of");
+    assert_eq!(
+        bits(&mapped.kernel.ctx.leaf_mass),
+        bits(&loaded.kernel.ctx.leaf_mass),
+        "{tag}: mmap leaf_mass"
+    );
+    assert_csr_bitwise(
+        &mapped.kernel.proximity_matrix(),
+        &kernel.proximity_matrix(),
+        &format!("{tag}: mmap P"),
+    );
+    assert_eq!(
+        predict::predict_train(&mapped.kernel),
+        predict::predict_train(&kernel),
+        "{tag}: mmap training predictions"
+    );
+    let qn_map = mapped.kernel.oos_query_map(&mapped.forest, &queries);
+    assert_csr_bitwise(&qn_map, &qn_orig, &format!("{tag}: mmap Q_new"));
+    assert_eq!(
+        predict::predict_oos(&mapped.kernel, &qn_map),
+        predict::predict_oos(&kernel, &qn_orig),
+        "{tag}: mmap OOS predictions"
+    );
 }
 
 #[test]
@@ -164,13 +207,14 @@ fn gbt_bundles_roundtrip_bitwise() {
     }
 }
 
-/// Quantized bundles (v2 form 1) across a forest-kind × proximity-kind
-/// × mode grid: the mode and the stored quantized `Q` round-trip
-/// bitwise, the exact slots hold its dequantization, and two
-/// independent loads agree bitwise on the full product and on OOS
-/// predictions. (The fitted-vs-loaded product is *not* asserted: a
-/// quantized bundle is lossy by design, and the loaded kernel's `Wᵀ` is
-/// re-quantized from the dequantized factors.)
+/// Quantized bundles (v3 form 1) across a forest-kind × proximity-kind
+/// × mode grid: the mode, the stored quantized `Q`, **and** the stored
+/// quantized `Wᵀ` round-trip bitwise (v3 persists `Wᵀ` verbatim — no
+/// re-quantization on load), the exact slots hold `Q`'s
+/// dequantization, and the verified heap decode and the mmap bind
+/// agree bitwise on the full product and on OOS predictions. (The
+/// fitted-vs-loaded *exact* slots are not compared against the fitted
+/// exact factors: a quantized bundle is lossy by design.)
 #[test]
 fn quantized_bundles_roundtrip_for_kind_grid() {
     use forest_kernels::sparse::qcsr::QuantMode;
@@ -187,18 +231,22 @@ fn quantized_bundles_roundtrip_for_kind_grid() {
         let (forest, data) = train(fk, seed);
         let mut kernel = ForestKernel::fit(&forest, &data, kind);
         kernel.set_quantization(Some(mode));
-        let qf_orig = kernel.quantized().expect("mode attached").q.clone();
+        let qf_orig_q = kernel.quantized().expect("mode attached").q.clone();
+        let qf_orig_wt = kernel.quantized().expect("mode attached").wt.clone();
         let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: 9 };
         let path = tmpfile(&format!("quant-{tag}"));
         save(&path, &forest, &kernel, &meta).unwrap();
         let a = ModelBundle::load(&path).unwrap();
-        let b = ModelBundle::load(&path).unwrap();
+        // The second load takes the zero-copy path where supported, so
+        // every cross-load assertion below is also a heap-vs-mmap one.
+        let (b, _) = ModelBundle::load_with_mode(&path, MmapMode::Auto).unwrap();
         std::fs::remove_file(&path).ok();
 
         assert_eq!(a.kernel.quantization(), Some(mode), "{tag}: mode lost");
         let qf_load = a.kernel.quantized().expect("loaded bundle keeps quantized Q");
-        assert_eq!(qf_load.q, qf_orig, "{tag}: stored quantized Q differs");
-        assert_csr_bitwise(&a.kernel.q, &qf_orig.dequantize(), &format!("{tag}: Q slot"));
+        assert_eq!(qf_load.q, qf_orig_q, "{tag}: stored quantized Q differs");
+        assert_eq!(qf_load.wt, qf_orig_wt, "{tag}: stored quantized Wt differs");
+        assert_csr_bitwise(&a.kernel.q, &qf_orig_q.dequantize(), &format!("{tag}: Q slot"));
         if kernel.symmetric {
             assert_csr_bitwise(&a.kernel.w, &a.kernel.q, &format!("{tag}: symmetric W"));
         }
@@ -242,13 +290,14 @@ fn symmetric_quantized_bundle_resaves_byte_identical() {
     assert_eq!(b1, b2, "re-saved quantized bundle bytes differ");
 }
 
-/// Truncation *inside* the quantized factor section must fail cleanly
-/// even when the header (payload length + FNV checksum) is fixed up to
-/// match the shortened payload — the structural validation in the QCsr
-/// decoder is the last line of defense, not the checksum.
+/// Truncation *inside* the aligned section region must fail cleanly in
+/// **both** load modes even when the header's payload length is fixed
+/// up to match the shortened file — the structured-region checksum does
+/// not cover section bytes, so the per-entry bounds validation is the
+/// last line of defense (it is all the mmap path gets: the zero-copy
+/// bind never reads the section payloads at load time).
 #[test]
-fn quantized_section_truncation_fails_cleanly_past_the_checksum() {
-    use forest_kernels::coordinator::shard::fnv1a64;
+fn section_truncation_fails_structurally_past_the_checksum() {
     use forest_kernels::sparse::qcsr::QuantMode;
     const HEADER: usize = 28;
     let (forest, data) = train(ForestKind::RandomForest, 99);
@@ -262,20 +311,64 @@ fn quantized_section_truncation_fails_cleanly_past_the_checksum() {
         if HEADER + cut >= full.len() {
             continue;
         }
-        let payload = &full[HEADER..full.len() - cut];
-        let mut bytes = Vec::with_capacity(HEADER + payload.len());
-        bytes.extend_from_slice(&full[..12]); // magic + version
-        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        bytes.extend_from_slice(&fnv1a64(payload).to_le_bytes());
-        bytes.extend_from_slice(payload);
+        let mut bytes = full[..full.len() - cut].to_vec();
+        // Fix the payload length so only the section table can object;
+        // the checksum (bytes 20..28) covers the structured region,
+        // which is untouched, so it still verifies.
+        let plen = (bytes.len() - HEADER) as u64;
+        bytes[12..20].copy_from_slice(&plen.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
-        let err = ModelBundle::load(&path).unwrap_err().to_string();
-        assert!(
-            !err.contains("checksum mismatch"),
-            "cut {cut}: expected a structural error, got checksum: {err}"
-        );
+        for mode in [MmapMode::Off, MmapMode::On] {
+            if mode == MmapMode::On && !mmap::supported() {
+                continue;
+            }
+            let err = ModelBundle::load_with_mode(&path, mode).unwrap_err().to_string();
+            assert!(
+                err.contains("out of bounds"),
+                "cut {cut} ({}): expected a section-bounds error, got: {err}",
+                mode.name()
+            );
+            assert!(
+                !err.contains("checksum mismatch"),
+                "cut {cut} ({}): structural validation should fire first: {err}",
+                mode.name()
+            );
+        }
     }
     std::fs::remove_file(&path).ok();
+}
+
+/// v2 (and the v1 files it subsumes) keep loading through the verified
+/// heap fallback, bitwise-identical to a v3 save of the same model —
+/// and `--mmap on` refuses them instead of silently copying.
+#[test]
+fn legacy_v2_bundles_heap_load_bitwise_identical_to_v3() {
+    let (forest, data) = train(ForestKind::RandomForest, 55);
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::RfGap);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 55, trees: 9 };
+    let p2 = tmpfile("legacy-v2");
+    let p3 = tmpfile("current-v3");
+    save_legacy_v2(&p2, &forest, &kernel, &meta).unwrap();
+    save(&p3, &forest, &kernel, &meta).unwrap();
+    let (old, old_mode) = ModelBundle::load_with_mode(&p2, MmapMode::Auto).unwrap();
+    assert_eq!(old_mode, "heap", "a v2 file must take the heap fallback even under auto");
+    let err = ModelBundle::load_with_mode(&p2, MmapMode::On).unwrap_err().to_string();
+    assert!(err.contains("v3"), "--mmap on should name the v3 requirement, got: {err}");
+    let new = ModelBundle::load(&p3).unwrap();
+    std::fs::remove_file(&p2).ok();
+    std::fs::remove_file(&p3).ok();
+
+    assert_csr_bitwise(&old.kernel.q, &new.kernel.q, "legacy Q");
+    assert_csr_bitwise(&old.kernel.w, &new.kernel.w, "legacy W");
+    assert_csr_bitwise(old.kernel.w_transpose(), new.kernel.w_transpose(), "legacy Wt");
+    assert_eq!(old.kernel.ctx.leaf_of, new.kernel.ctx.leaf_of, "legacy leaf_of");
+    assert_eq!(bits(&old.kernel.ctx.leaf_mass), bits(&new.kernel.ctx.leaf_mass), "legacy mass");
+    assert_eq!(old.meta.dataset, new.meta.dataset, "legacy meta");
+    assert_eq!(
+        predict::predict_train(&old.kernel),
+        predict::predict_train(&new.kernel),
+        "legacy training predictions"
+    );
 }
 
 #[test]

@@ -1,0 +1,361 @@
+//! Hot bundle swap, end to end over real TCP: `POST /admin/reload`
+//! atomically swaps in a freshly loaded bundle while queries are in
+//! flight — **zero requests fail**, generations increment monotonically,
+//! every response names the generation that answered it, and the swap
+//! changes no payload byte when the file is unchanged (leaf-PCA and the
+//! factors are deterministic). The replica router's reload is rolling:
+//! every backend reloads exactly once, and routed answers stay
+//! byte-identical to direct ones. The mmap and heap binds must also be
+//! byte-identical to each other on every endpoint.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{mmap, BundleMeta, MmapMode, ModelBundle};
+use forest_kernels::runtime::json::Json;
+use forest_kernels::serve::http::{self, HttpClient};
+use forest_kernels::serve::router::{Router, RouterConfig};
+use forest_kernels::serve::{ServeConfig, Server};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+use forest_kernels::Dataset;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const N: usize = 140;
+const D: usize = 5;
+const C: usize = 3;
+const TREES: usize = 10;
+
+fn fixture(seed: u64) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, C, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    ModelBundle { forest, kernel, meta }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        embed_dims: 4,
+        embed_iters: 20,
+        embed_seed: 9,
+        ..Default::default()
+    }
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fk-reload-e2e-{tag}-{}.fkb", std::process::id()))
+}
+
+fn row_json(data: &Dataset, i: usize) -> String {
+    let mut s = String::from("[");
+    for f in 0..data.d {
+        if f > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}", data.x(i, f)));
+    }
+    s.push(']');
+    s
+}
+
+fn predict_bodies(seed: u64, count: usize) -> Vec<String> {
+    let queries = synth::gaussian_blobs(count, D, C, 2.2, seed);
+    (0..count).map(|i| format!("{{\"x\": {}}}", row_json(&queries, i))).collect()
+}
+
+/// Split a response into (body with the generation digits removed, the
+/// generation): payloads can then be compared bitwise *across*
+/// generations of an unchanged model file.
+fn split_gen(body: &str) -> (String, u64) {
+    let key = "\"model_generation\": ";
+    let i = body.rfind(key).unwrap_or_else(|| panic!("no model_generation in: {body}"));
+    let start = i + key.len();
+    let end = body[start..]
+        .find(|c: char| !c.is_ascii_digit())
+        .map_or(body.len(), |e| start + e);
+    let gen = body[start..end].parse().expect("generation is a number");
+    (format!("{}{}", &body[..start], &body[end..]), gen)
+}
+
+/// Bind a server that serves `path`, loaded under `mode`.
+fn bind_from_file(path: &PathBuf, mode: MmapMode) -> Server {
+    let (bundle, load_mode) = ModelBundle::load_with_mode(path, mode).unwrap();
+    Server::bind_with_source(bundle, None, serve_cfg(), Some((path.clone(), mode)), load_mode)
+        .unwrap()
+}
+
+#[test]
+fn reload_increments_the_generation_and_changes_no_payload_byte() {
+    let path = tmpfile("basic");
+    fixture(21).save(&path).unwrap();
+    let server = bind_from_file(&path, MmapMode::Auto);
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    // Generation 1 is visible everywhere before any reload.
+    let (status, health) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&health).unwrap();
+    assert_eq!(j.get("model_generation").and_then(Json::as_usize), Some(1), "{health}");
+    assert!(health.contains("\"reloadable\": true"), "{health}");
+    let want_mode = if mmap::supported() { "mmap" } else { "heap" };
+    assert_eq!(j.get("load_mode").and_then(Json::as_str), Some(want_mode), "{health}");
+
+    let bodies = predict_bodies(333, 4);
+    let before: Vec<(String, u64)> = bodies
+        .iter()
+        .map(|b| {
+            let (s, body) = http::http_request(&addr, "POST", "/predict", b).unwrap();
+            assert_eq!(s, 200, "{body}");
+            split_gen(&body)
+        })
+        .collect();
+    assert!(before.iter().all(|&(_, g)| g == 1), "pre-reload answers carry generation 1");
+
+    // Swap. Same file bytes -> same model -> same payloads, new tag.
+    let (status, out) = http::http_request(&addr, "POST", "/admin/reload", "").unwrap();
+    assert_eq!(status, 200, "{out}");
+    let j = Json::parse(&out).unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("reloaded"), "{out}");
+    assert_eq!(j.get("model_generation").and_then(Json::as_usize), Some(2), "{out}");
+
+    for (body, (stripped, _)) in bodies.iter().zip(&before) {
+        let (s, got) = http::http_request(&addr, "POST", "/predict", body).unwrap();
+        assert_eq!(s, 200);
+        let (got_stripped, got_gen) = split_gen(&got);
+        assert_eq!(got_gen, 2, "post-reload answers carry the new generation");
+        assert_eq!(&got_stripped, stripped, "an unchanged file must answer bitwise the same");
+    }
+    // /embed and /neighbors carry the generation too.
+    let q = format!("{{\"x\": {}}}", row_json(&synth::gaussian_blobs(1, D, C, 2.2, 7), 0));
+    let (_, e) = http::http_request(&addr, "POST", "/embed", &q).unwrap();
+    assert_eq!(split_gen(&e).1, 2, "{e}");
+    let (_, nb) = http::http_request(&addr, "POST", "/neighbors", "{\"row\": 3, \"k\": 5}").unwrap();
+    assert_eq!(split_gen(&nb).1, 2, "{nb}");
+    let (_, stats) = http::http_request(&addr, "GET", "/stats", "").unwrap();
+    let j = Json::parse(&stats).unwrap();
+    assert_eq!(j.get("model_generation").and_then(Json::as_usize), Some(2), "{stats}");
+
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+/// The headline invariant: hammer `/predict` from several client
+/// threads (keep-alive and one-shot) while the main thread re-saves the
+/// bundle and reloads repeatedly — **every** request must succeed with
+/// a payload bitwise equal to the reference, and the generations
+/// observed must climb from 1 to 1 + reloads with nothing dropped.
+#[test]
+fn queries_never_fail_across_hot_swaps() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let path = tmpfile("hammer");
+    let model = fixture(22);
+    model.save(&path).unwrap();
+    let server = bind_from_file(&path, MmapMode::Auto);
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let bodies = predict_bodies(909, 6);
+    let reference: Vec<String> = bodies
+        .iter()
+        .map(|b| {
+            let (s, body) = http::http_request(&addr, "POST", "/predict", b).unwrap();
+            assert_eq!(s, 200, "{body}");
+            split_gen(&body).0
+        })
+        .collect();
+
+    const RELOADS: u64 = 5;
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for t in 0..3usize {
+            let done = &done;
+            let bodies = &bodies;
+            let reference = &reference;
+            scope.spawn(move || {
+                let mut client = (t % 2 == 0).then(|| HttpClient::new(addr));
+                let mut max_gen = 0u64;
+                let mut i = 0usize;
+                while !done.load(Ordering::Relaxed) {
+                    let b = &bodies[i % bodies.len()];
+                    let out = match client.as_mut() {
+                        Some(cl) => cl.request("POST", "/predict", b),
+                        None => http::http_request(&addr, "POST", "/predict", b),
+                    };
+                    let (status, body) = out.expect("a query failed during a hot swap");
+                    assert_eq!(status, 200, "failed during swap: {body}");
+                    let (stripped, gen) = split_gen(&body);
+                    assert_eq!(&stripped, &reference[i % bodies.len()], "payload changed");
+                    assert!(gen >= max_gen, "generation went backwards: {max_gen} -> {gen}");
+                    assert!(gen <= 1 + RELOADS, "generation overshot: {gen}");
+                    max_gen = gen;
+                    i += 1;
+                }
+            });
+        }
+        // The swapper: re-save the same model (atomic rename over the
+        // live mapping) and reload, RELOADS times.
+        for r in 0..RELOADS {
+            model.save(&path).unwrap();
+            let (status, out) = http::http_request(&addr, "POST", "/admin/reload", "").unwrap();
+            assert_eq!(status, 200, "reload {r}: {out}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+
+    let (_, health) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    let j = Json::parse(&health).unwrap();
+    assert_eq!(
+        j.get("model_generation").and_then(Json::as_usize),
+        Some(1 + RELOADS as usize),
+        "{health}"
+    );
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn reload_without_a_model_source_is_400_and_shape_changes_are_rejected() {
+    // No --model: the server was fitted in-process, nothing to reload.
+    let server = Server::bind(fixture(23), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+    let (status, body) = http::http_request(&addr, "POST", "/admin/reload", "").unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("--model"), "{body}");
+    handle.stop();
+
+    // A reload that changes the model shape must be refused and the
+    // old snapshot must keep serving.
+    let path = tmpfile("shape");
+    fixture(24).save(&path).unwrap();
+    let server = bind_from_file(&path, MmapMode::Auto);
+    let addr = server.addr();
+    let handle = server.spawn();
+    let probes = predict_bodies(11, 1);
+    let probe = &probes[0];
+    let (_, before) = http::http_request(&addr, "POST", "/predict", probe).unwrap();
+
+    // Overwrite with a model of a different N (atomic, like a bad deploy).
+    let data = synth::gaussian_blobs(N / 2, D, C, 2.2, 77);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed: 77, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 77, trees: TREES };
+    ModelBundle { forest, kernel, meta }.save(&path).unwrap();
+
+    let (status, out) = http::http_request(&addr, "POST", "/admin/reload", "").unwrap();
+    assert_eq!(status, 400, "{out}");
+    assert!(out.contains("incompatibly"), "{out}");
+    let (status, after) = http::http_request(&addr, "POST", "/predict", probe).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(after, before, "a refused reload must leave the old model serving");
+    let (_, health) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    let j = Json::parse(&health).unwrap();
+    assert_eq!(j.get("model_generation").and_then(Json::as_usize), Some(1), "{health}");
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn router_reload_rolls_the_fleet_and_stays_bitwise_transparent() {
+    let path = tmpfile("fleet");
+    fixture(25).save(&path).unwrap();
+    let backend_a = bind_from_file(&path, MmapMode::Auto);
+    let backend_b = bind_from_file(&path, MmapMode::Auto);
+    let addr_a = backend_a.addr();
+    let addr_b = backend_b.addr();
+    let h_a = backend_a.spawn();
+    let h_b = backend_b.spawn();
+    let router = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr_a.to_string(), addr_b.to_string()],
+    })
+    .unwrap();
+    let raddr = router.addr();
+    let rh = router.spawn();
+    let mut client = HttpClient::new(raddr);
+
+    let (status, out) = client.request("POST", "/admin/reload", "").unwrap();
+    assert_eq!(status, 200, "{out}");
+    let j = Json::parse(&out).unwrap();
+    assert_eq!(j.get("role").and_then(Json::as_str), Some("router"), "{out}");
+    let per_backend = j.get("reload").and_then(Json::as_arr).unwrap();
+    assert_eq!(per_backend.len(), 2, "{out}");
+    for (i, entry) in per_backend.iter().enumerate() {
+        assert_eq!(entry.get("status").and_then(Json::as_usize), Some(200), "backend {i}: {out}");
+        assert_eq!(
+            entry.get("response").and_then(|r| r.get("model_generation")).and_then(Json::as_usize),
+            Some(2),
+            "backend {i} did not reach generation 2: {out}"
+        );
+    }
+    // Every backend really swapped — and the fleet keeps answering
+    // byte-identically to a direct backend hit.
+    for addr in [&addr_a, &addr_b] {
+        let (_, health) = http::http_request(addr, "GET", "/healthz", "").unwrap();
+        let j = Json::parse(&health).unwrap();
+        assert_eq!(j.get("model_generation").and_then(Json::as_usize), Some(2), "{health}");
+    }
+    for body in &predict_bodies(444, 4) {
+        let direct = http::http_request(&addr_a, "POST", "/predict", body).unwrap();
+        let routed = client.request("POST", "/predict", body).unwrap();
+        assert_eq!(routed, direct, "routed bytes differ from direct after the rolling reload");
+    }
+
+    rh.stop();
+    h_a.stop();
+    h_b.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+/// A v3 bundle served `--mmap on` answers every endpoint byte-for-byte
+/// like the fully verified heap decode of the same file.
+#[test]
+fn mmap_and_heap_servers_answer_bitwise_identically() {
+    if !mmap::supported() {
+        return;
+    }
+    let path = tmpfile("modes");
+    fixture(26).save(&path).unwrap();
+    let heap = bind_from_file(&path, MmapMode::Off);
+    let mapped = bind_from_file(&path, MmapMode::On);
+    let addr_h = heap.addr();
+    let addr_m = mapped.addr();
+    let hh = heap.spawn();
+    let hm = mapped.spawn();
+
+    for body in &predict_bodies(555, 5) {
+        let h = http::http_request(&addr_h, "POST", "/predict", body).unwrap();
+        let m = http::http_request(&addr_m, "POST", "/predict", body).unwrap();
+        assert_eq!(m, h, "/predict differs between mmap and heap");
+    }
+    let q = format!("{{\"x\": {}}}", row_json(&synth::gaussian_blobs(2, D, C, 2.2, 5), 1));
+    let h = http::http_request(&addr_h, "POST", "/embed", &q).unwrap();
+    let m = http::http_request(&addr_m, "POST", "/embed", &q).unwrap();
+    assert_eq!(m, h, "/embed differs between mmap and heap");
+    for body in [q.as_str(), "{\"row\": 9, \"k\": 7}"] {
+        let h = http::http_request(&addr_h, "POST", "/neighbors", body).unwrap();
+        let m = http::http_request(&addr_m, "POST", "/neighbors", body).unwrap();
+        assert_eq!(m, h, "/neighbors differs between mmap and heap");
+    }
+    // The two servers disagree only on how the model is resident.
+    let (_, h) = http::http_request(&addr_h, "GET", "/healthz", "").unwrap();
+    let (_, m) = http::http_request(&addr_m, "GET", "/healthz", "").unwrap();
+    assert_eq!(Json::parse(&h).unwrap().get("load_mode").and_then(Json::as_str), Some("heap"));
+    assert_eq!(Json::parse(&m).unwrap().get("load_mode").and_then(Json::as_str), Some("mmap"));
+    assert_eq!(
+        m.replace("\"load_mode\": \"mmap\"", "\"load_mode\": \"heap\""),
+        h,
+        "healthz differs beyond load_mode"
+    );
+
+    hh.stop();
+    hm.stop();
+    std::fs::remove_file(&path).ok();
+}
