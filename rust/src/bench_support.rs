@@ -137,6 +137,26 @@ mod tests {
             arr[1].get("name").and_then(|v| v.as_str()),
             Some("naive \"quote\"")
         );
+        // And all the way back into records via the reader the
+        // bench-compare gate uses.
+        let back = read_bench_json(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "spgemm/covertype");
+        assert_eq!(back[0].n, 4096);
+        assert!((back[0].wall_secs - 0.125).abs() < 1e-9);
+        assert_eq!(back[0].predicted_flops, 123456);
+        assert!((back[1].speedup_vs_serial - 1.0).abs() < 1e-9);
+        assert_eq!(back[1].name, "naive \"quote\"");
+    }
+
+    #[test]
+    fn read_bench_json_rejects_malformed_documents() {
+        let path = std::env::temp_dir().join("fk_bench_records_bad.json");
+        std::fs::write(&path, "{\"rows\": []}").unwrap();
+        assert!(read_bench_json(&path).is_err());
+        std::fs::write(&path, "{\"records\": [{\"name\": \"x\"}]}").unwrap();
+        assert!(read_bench_json(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }
 
@@ -191,6 +211,46 @@ pub fn json_escape(s: &str) -> String {
     }
     out.push('"');
     out
+}
+
+/// Read a [`write_bench_json`] artifact back into records — the
+/// bench-compare regression gate parses baseline and current runs this
+/// way. Optional fields fall back to their neutral values so older
+/// artifacts (or hand-trimmed baselines) stay comparable.
+pub fn read_bench_json(path: &std::path::Path) -> crate::error::Result<Vec<BenchRecord>> {
+    use crate::runtime::json::Json;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| crate::anyhow!("parsing {}: {e}", path.display()))?;
+    let recs = j
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::anyhow!("{} has no \"records\" array", path.display()))?;
+    let mut out = Vec::with_capacity(recs.len());
+    for r in recs {
+        let name = r.get("name").and_then(Json::as_str);
+        let n = r.get("n").and_then(Json::as_usize);
+        let wall = r.get("wall_secs").and_then(Json::as_f64);
+        let (Some(name), Some(n), Some(wall)) = (name, n, wall) else {
+            crate::bail!("{} holds a record without name/n/wall_secs", path.display());
+        };
+        out.push(BenchRecord {
+            name: name.to_string(),
+            n,
+            wall_secs: wall,
+            predicted_flops: r
+                .get("predicted_flops")
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64,
+            threads: r.get("threads").and_then(Json::as_usize).unwrap_or(1),
+            speedup_vs_serial: r
+                .get("speedup_vs_serial")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0),
+        });
+    }
+    Ok(out)
 }
 
 /// Write bench records as a JSON document (hand-rolled — the offline

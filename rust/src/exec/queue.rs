@@ -104,6 +104,13 @@ impl<T> BoundedQueue<T> {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// Maximum pending items before [`BoundedQueue::push`] blocks —
+    /// the admission-control layer probes `len()` against this to
+    /// detect queue pressure before committing a request to a tier.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -112,6 +119,15 @@ impl<T> BoundedQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn capacity_reports_the_bound() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(7);
+        assert_eq!(q.capacity(), 7);
+        // cap 0 is clamped to 1 so a push can always make progress.
+        let q: BoundedQueue<u32> = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+    }
 
     #[test]
     fn fifo_order_preserved() {

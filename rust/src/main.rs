@@ -7,13 +7,14 @@
 //! no clap).
 
 use forest_kernels::bench_support::{
-    doubling_sizes, peak_rss_bytes, rss_bytes, time, write_bench_json, BenchRecord,
+    doubling_sizes, peak_rss_bytes, read_bench_json, rss_bytes, time, write_bench_json,
+    BenchRecord,
 };
 use forest_kernels::coordinator::shard::{self, ShardReader, ShardSink};
 use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::error::{Context, Result};
-use forest_kernels::model::{self, BundleMeta, MmapMode, ModelBundle};
+use forest_kernels::model::{self, BundleMeta, CompanionModel, MmapMode, ModelBundle};
 use forest_kernels::serve::{self, ServeConfig};
 use forest_kernels::sparse::{Csr, QuantMode};
 use forest_kernels::{anyhow, bail, exec};
@@ -81,15 +82,21 @@ Global flags:
                    training, factor build, coordinator); default = cores,
                    also settable via FK_THREADS
 
-Model bundles (fk-bundle-v3, section-aligned; v1/v2 files still load):
+Model bundles (fk-bundle-v4, section-aligned; v1/v2/v3 files still load):
   fit      --dataset covertype --n 20000 --trees 50 --method gap
            [--out model.fkb] [--quantize none|int8|int4]
+           [--companion depth=D,subsample=F]
            (train the forest, fit the SWLC factors, and persist the
             whole model — forest, binning thresholds, context θ, Q/W
             factors, labels — as one checksummed binary bundle;
             --quantize stores block-quantized factors instead of exact
             CSRs for a several-times-smaller artifact, and prints the
-            per-section byte sizes either way)
+            per-section byte sizes either way; --companion also trains
+            a depth-capped (D), subsampled (F·N bootstrap draws per
+            tree) companion forest + factors and persists both tiers
+            in the one bundle — serve answers {\"budget\": \"cheap\"}
+            /predict requests from it at a fraction of the full-tier
+            latency)
   every command below also accepts --model model.fkb: the bundle is
   loaded instead of retraining (bitwise-identical factors), and
   `shards run` forwards it to all P workers so the forest is fit once.
@@ -114,7 +121,12 @@ Pipeline commands:
             POST /predict, /neighbors, /embed + GET /healthz, /stats;
             single queries are micro-batched into exec-pool tiles;
             answers are bitwise-identical to the in-process batch
-            paths; --shards serves /neighbors row lookups from a
+            paths; /predict accepts {\"budget\": \"cheap\"|\"full\"|
+            \"auto\"} when the bundle holds a --companion model —
+            cheap runs the shallow tier, auto sheds to it under queue
+            pressure instead of timing out, and /neighbors + /embed
+            are always full-tier; --shards serves /neighbors row
+            lookups from a
             materialized shard directory; --replicas R spawns R serve
             processes on ephemeral ports and fronts them with the
             replica router on --addr; --mmap picks the bundle load
@@ -201,6 +213,22 @@ Paper harnesses (DESIGN.md experiment index):
                  (exact vs int8/int4 factors: serialized bytes/row,
                   full-kernel SpGEMM throughput, and neighbor recall@10
                   / recall@100 of the quantized product vs the exact one)
+  bench-tiered   [--n 6000 --trees 40 --queries 256] [--depths 3,5]
+                 [--subsamples 0.1,0.25] [--json-out BENCH_tiered.json]
+                 (price the accuracy-vs-p99 frontier of tiered serving:
+                  for each companion depth × subsample point, serve the
+                  two-tier bundle and drive /predict at both budgets —
+                  per-tier p50/p95/p99 + OOS accuracy show what the
+                  cheap tier buys and what it costs)
+
+CI gate:
+  bench-compare  --baseline DIR --current DIR [--max-regress 0.25]
+                 (compare every BENCH_*.json present in both dirs,
+                  record-by-record on wall_secs; fails on any
+                  regression past --max-regress, prints a per-metric
+                  markdown table — appended to $GITHUB_STEP_SUMMARY
+                  when set — and exits 0 with a seed notice when the
+                  baseline dir is empty or missing)
 ";
 
 fn main() {
@@ -236,6 +264,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "bench-shard-merge" => cmd_bench_shard_merge(args),
         "bench-serve" => cmd_bench_serve(args),
         "bench-load" => cmd_bench_load(args),
+        "bench-tiered" => cmd_bench_tiered(args),
+        "bench-compare" => cmd_bench_compare(args),
         "bench-fig41" => cmd_fig41(args),
         "bench-fig42" => cmd_fig42(args),
         "bench-figh1" => cmd_figh1(args),
@@ -317,9 +347,78 @@ fn apply_quant(args: &Args, bundle: &mut ModelBundle) -> Result<()> {
             have.name()
         ),
         (Some(_), Some(_)) => {} // same mode, already attached
-        (None, want) => bundle.kernel.set_quantization(want),
+        (None, want) => {
+            bundle.kernel.set_quantization(want);
+            // The tiers quantize together: a cheap-tier answer from an
+            // int8 bundle should be int8 too.
+            if let Some(c) = bundle.companion.as_mut() {
+                c.kernel.set_quantization(want);
+            }
+        }
     }
     Ok(())
+}
+
+/// Parse `--companion depth=D,subsample=F`: D caps the companion
+/// trees' depth, F ∈ (0, 1] scales the per-tree bootstrap draws to
+/// F·N. Omitted keys take the shallow defaults depth=4,
+/// subsample=0.25.
+fn parse_companion(args: &Args) -> Result<Option<(usize, f32)>> {
+    let Some(spec) = args.get("companion") else { return Ok(None) };
+    let (mut depth, mut subsample) = (4usize, 0.25f32);
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((key, val)) = part.split_once('=') else {
+            bail!("--companion wants depth=D,subsample=F (got {part:?})");
+        };
+        match key.trim() {
+            "depth" => {
+                depth =
+                    val.trim().parse().map_err(|_| anyhow!("bad companion depth {val:?}"))?;
+            }
+            "subsample" => {
+                subsample = val
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad companion subsample {val:?}"))?;
+            }
+            other => bail!("unknown --companion key {other:?} (depth|subsample)"),
+        }
+    }
+    if depth == 0 {
+        bail!("--companion depth must be >= 1");
+    }
+    if !(subsample > 0.0 && subsample <= 1.0) {
+        bail!("--companion subsample must be in (0, 1], got {subsample}");
+    }
+    Ok(Some((depth, subsample)))
+}
+
+/// Train the cheap tier next to the full forest: the same dataset and
+/// proximity kind, but depth-capped at D with F·N bootstrap draws per
+/// tree — the DiNo/RanBu recipe for a fraction-of-the-cost predictor.
+/// Returns the companion plus its train/fit seconds, or `None` when
+/// `--companion` is absent.
+fn train_companion(
+    args: &Args,
+    data: &forest_kernels::Dataset,
+    kind: ProximityKind,
+    cfg: &TrainConfig,
+) -> Result<Option<(CompanionModel, f64, f64)>> {
+    let Some((depth, subsample)) = parse_companion(args)? else { return Ok(None) };
+    let draws = ((subsample as f64 * data.n as f64).ceil() as usize).max(1);
+    let ccfg =
+        TrainConfig { max_depth: Some(depth), max_samples: Some(draws), ..cfg.clone() };
+    let (forest, secs_train) =
+        time(|| forest_kernels::experiments::train_for(data, kind, &ccfg));
+    let (mut kernel, secs_fit) = time(|| ForestKernel::fit(&forest, data, kind));
+    if let Some(mode) = parse_quant(args)?.flatten() {
+        kernel.set_quantization(Some(mode));
+    }
+    Ok(Some((CompanionModel { forest, kernel, depth, subsample }, secs_train, secs_fit)))
 }
 
 /// Parse `--mmap auto|on|off` (default `auto`): how `--model` bundles
@@ -406,7 +505,8 @@ fn load_or_fit_with(args: &Args, mmap: MmapMode) -> Result<(ModelBundle, &'stati
         let kernel = ForestKernel::fit(&forest, &data, kind);
         let meta =
             BundleMeta { dataset: name, n: data.n, seed: cfg.seed, trees: forest.n_trees() };
-        let mut bundle = ModelBundle { forest, kernel, meta };
+        let companion = train_companion(args, &data, kind, &cfg)?.map(|(c, _, _)| c);
+        let mut bundle = ModelBundle { forest, kernel, meta, companion };
         apply_quant(args, &mut bundle)?;
         Ok((bundle, "fit"))
     }
@@ -436,16 +536,37 @@ fn cmd_fit(args: &Args) -> Result<()> {
     if let Some(mode) = parse_quant(args)?.flatten() {
         kernel.set_quantization(Some(mode));
     }
+    let companion = match train_companion(args, &data, kind, &cfg)? {
+        Some((c, secs_ctrain, secs_cfit)) => {
+            println!(
+                "companion: depth<={} subsample={} -> T={} L={} | train {secs_ctrain:.2}s \
+                 fit {secs_cfit:.2}s",
+                c.depth,
+                c.subsample,
+                c.forest.n_trees(),
+                c.kernel.ctx.l,
+            );
+            Some(c)
+        }
+        None => None,
+    };
     let meta =
         BundleMeta { dataset: name.clone(), n: data.n, seed: cfg.seed, trees: forest.n_trees() };
     let out = PathBuf::from(args.str_or("out", "model.fkb"));
-    let bundle = ModelBundle { forest, kernel, meta };
-    let (saved, secs_save) =
-        time(|| model::save_with_sizes(&out, &bundle.forest, &bundle.kernel, &bundle.meta));
+    let bundle = ModelBundle { forest, kernel, meta, companion };
+    let (saved, secs_save) = time(|| {
+        model::save_with_sizes(
+            &out,
+            &bundle.forest,
+            &bundle.kernel,
+            &bundle.meta,
+            bundle.companion.as_ref(),
+        )
+    });
     let (written, sizes) = saved?;
     println!(
         "{name}: N={} T={} L={} method={}{} | train {secs_train:.2}s fit {secs_fit:.2}s | \
-         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v3, section-aligned, \
+         wrote {:.1} MB to {} in {secs_save:.2}s (fk-bundle-v4, section-aligned, \
          FNV-1a checksummed)",
         data.n,
         bundle.forest.n_trees(),
@@ -460,11 +581,12 @@ fn cmd_fit(args: &Args) -> Result<()> {
     );
     println!(
         "  sections: forest {:.2} MB | context {:.2} MB | exact factors {:.2} MB | \
-         quantized factors {:.2} MB",
+         quantized factors {:.2} MB | companion {:.2} MB",
         sizes.forest as f64 / 1e6,
         sizes.context as f64 / 1e6,
         sizes.factors as f64 / 1e6,
         sizes.quantized as f64 / 1e6,
+        sizes.companion as f64 / 1e6,
     );
     Ok(())
 }
@@ -638,6 +760,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mmap = parse_mmap(args)?;
     let (bundle, load_mode) = load_or_fit_with(args, mmap)?;
+    let tiered = bundle.companion.is_some();
+    if let Some(c) = &bundle.companion {
+        println!(
+            "companion tier: depth<={} subsample={} T={} ({:.1} factor MB)",
+            c.depth,
+            c.subsample,
+            c.forest.n_trees(),
+            c.kernel.factor_bytes() as f64 / 1e6,
+        );
+    }
     let shards = match args.get("shards") {
         Some(dir) => Some(ShardReader::open(Path::new(dir))?),
         None => None,
@@ -654,7 +786,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let reloadable = source.is_some();
     let server = serve::Server::bind_with_source(bundle, shards, cfg, source, load_mode)?;
     println!("serving on http://{}", server.addr());
-    println!("  POST /predict    {{\"x\": [f32; d] | [[f32; d], ..]}}");
+    println!(
+        "  POST /predict    {{\"x\": [f32; d] | [[f32; d], ..]\
+         {}}}",
+        if tiered { ", \"budget\": \"cheap\"|\"full\"|\"auto\"" } else { "" }
+    );
     println!("  POST /neighbors  {{\"x\": [f32; d], \"k\": 10}} | {{\"row\": 0, \"k\": 10}}");
     println!("  POST /embed      {{\"x\": [f32; d] | [[f32; d], ..]}}");
     println!("  GET  /healthz    GET /stats");
@@ -1527,6 +1663,23 @@ fn drive_predict(
     Ok((wall, lats))
 }
 
+/// Persist `bundle` at `path` for the duration of `f`, removing the
+/// file on **every** exit path — success or error. The replica-spawn
+/// cleanup used to run only after a fully healthy fleet, so a child
+/// failing its health-check *after* loading the bundle left the temp
+/// file behind; routing all temp-bundle use through here closes that
+/// branch too.
+fn with_temp_bundle<T>(
+    path: &Path,
+    bundle: &ModelBundle,
+    f: impl FnOnce(&Path) -> Result<T>,
+) -> Result<T> {
+    bundle.save(path)?;
+    let out = f(path);
+    std::fs::remove_file(path).ok();
+    out
+}
+
 /// Spawn the HTTP server in-process on an ephemeral port and drive
 /// `/predict` with real TCP clients: QPS + latency percentiles across
 /// client-side batch size × client thread count × transport
@@ -1568,7 +1721,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     let route_replicas = args.usize_or("route-replicas", 0);
 
-    let bundle = ModelBundle { forest, kernel, meta };
+    let bundle = ModelBundle { forest, kernel, meta, companion: None };
     // The routed fleet loads the persisted bundle — bitwise the same
     // model, exactly the production replication path.
     let mut replica_handles = vec![];
@@ -1577,18 +1730,19 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     if route_replicas >= 2 {
         let model_path = std::env::temp_dir()
             .join(format!("fk-bench-serve-model-{}.fkb", std::process::id()));
-        bundle.save(&model_path)?;
-        let mut backend_addrs = Vec::with_capacity(route_replicas);
-        for _ in 0..route_replicas {
-            let replica = serve::Server::bind(
-                ModelBundle::load(&model_path)?,
-                None,
-                ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
-            )?;
-            backend_addrs.push(replica.addr().to_string());
-            replica_handles.push(replica.spawn());
-        }
-        std::fs::remove_file(&model_path).ok();
+        let backend_addrs = with_temp_bundle(&model_path, &bundle, |p| {
+            let mut addrs = Vec::with_capacity(route_replicas);
+            for _ in 0..route_replicas {
+                let replica = serve::Server::bind(
+                    ModelBundle::load(p)?,
+                    None,
+                    ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+                )?;
+                addrs.push(replica.addr().to_string());
+                replica_handles.push(replica.spawn());
+            }
+            Ok(addrs)
+        })?;
         let router = serve::router::Router::bind(serve::router::RouterConfig {
             addr: "127.0.0.1:0".into(),
             backends: backend_addrs,
@@ -1742,7 +1896,7 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
         let kernel = ForestKernel::fit(&forest, &data, kind);
         let meta = BundleMeta { dataset: dataset.to_string(), n, seed, trees: forest.n_trees() };
         let d = data.d;
-        let bundle = ModelBundle { forest, kernel, meta };
+        let bundle = ModelBundle { forest, kernel, meta, companion: None };
         let path = std::env::temp_dir()
             .join(format!("fk-bench-load-{}-{n}.fkb", std::process::id()));
         let file_bytes = bundle.save(&path)?;
@@ -1856,6 +2010,316 @@ fn cmd_bench_load(args: &Args) -> Result<()> {
     if let Some(path) = args.get("json-out") {
         write_bench_json(std::path::Path::new(path), &records)?;
         println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
+/// `bench-tiered`: price the accuracy-vs-p99 frontier of two-tier
+/// serving. For every companion (depth × subsample) grid point, a
+/// two-tier bundle is persisted, loaded, and served in-process, then
+/// `/predict` is driven at both budgets with real TCP clients — the
+/// per-tier latency percentiles plus each tier's OOS accuracy are the
+/// frontier records of BENCH_tiered.json. The cheap tier's records
+/// carry their speedup over the full tier measured at the same grid
+/// point, so the artifact shows directly what shedding to the
+/// companion buys (p99) and costs (accuracy).
+fn cmd_bench_tiered(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 6_000);
+    let trees = args.usize_or("trees", 40);
+    let dataset = args.str_or("dataset", "covertype");
+    let spec = registry::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let seed = args.u64_or("seed", 9);
+    let data = spec.generate(n, seed);
+    let kind = method(args)?;
+    let cfg = TrainConfig { n_trees: trees, seed, ..Default::default() };
+    let forest = forest_kernels::experiments::train_for(&data, kind, &cfg);
+    let kernel = ForestKernel::fit(&forest, &data, kind);
+    let d = data.d;
+    let total_queries = args.usize_or("queries", 256).max(1);
+    let queries = spec.generate(total_queries, seed ^ 0x51EED);
+    let clients = args.usize_or("clients", 2).max(1);
+    let depths: Vec<usize> =
+        args.str_or("depths", "3,5").split(',').filter_map(|s| s.parse().ok()).collect();
+    let subsamples: Vec<f32> =
+        args.str_or("subsamples", "0.1,0.25").split(',').filter_map(|s| s.parse().ok()).collect();
+    if depths.is_empty() || subsamples.is_empty() {
+        bail!("bench-tiered needs non-empty --depths and --subsamples lists");
+    }
+
+    // Full-tier OOS accuracy is a property of the full model alone —
+    // measured once, shared by every grid point.
+    let full_acc = {
+        let qn = kernel.oos_query_map(&forest, &queries);
+        predict::accuracy(&predict::predict_oos(&kernel, &qn), &queries.y)
+    };
+    // One single-row body per query, each pinned to a budget — the
+    // latency-sensitive request shape the tiers exist for.
+    let render = |budget: &str| -> Vec<String> {
+        (0..total_queries)
+            .map(|i| {
+                let mut body = String::from("{\"x\": [");
+                for f in 0..d {
+                    if f > 0 {
+                        body.push_str(", ");
+                    }
+                    body.push_str(&format!("{}", queries.x(i, f)));
+                }
+                body.push_str(&format!("], \"budget\": \"{budget}\"}}"));
+                body
+            })
+            .collect()
+    };
+    let bodies_full = render("full");
+    let bodies_cheap = render("cheap");
+
+    println!(
+        "# tiered serving frontier (dataset={dataset} N={n} T={trees} \
+         queries={total_queries} clients={clients})"
+    );
+    println!("depth\tsub\ttier\tacc\tsecs\tq/s\tp50_ms\tp95_ms\tp99_ms");
+    let mut records: Vec<BenchRecord> = vec![];
+    for &depth in &depths {
+        for &subsample in &subsamples {
+            let draws = ((subsample as f64 * n as f64).ceil() as usize).max(1);
+            let ccfg =
+                TrainConfig { max_depth: Some(depth), max_samples: Some(draws), ..cfg.clone() };
+            let c_forest = forest_kernels::experiments::train_for(&data, kind, &ccfg);
+            let c_kernel = ForestKernel::fit(&c_forest, &data, kind);
+            let cheap_acc = {
+                let qn = c_kernel.oos_query_map(&c_forest, &queries);
+                predict::accuracy(&predict::predict_oos(&c_kernel, &qn), &queries.y)
+            };
+            let companion =
+                CompanionModel { forest: c_forest, kernel: c_kernel, depth, subsample };
+            let meta = BundleMeta {
+                dataset: dataset.to_string(),
+                n,
+                seed,
+                trees: forest.n_trees(),
+            };
+            // Through the persisted v4 bundle — the production path a
+            // tiered server actually takes.
+            let path = std::env::temp_dir().join(format!(
+                "fk-bench-tiered-{}-{depth}-{}.fkb",
+                std::process::id(),
+                (subsample * 1000.0) as u32
+            ));
+            model::save_with_sizes(&path, &forest, &kernel, &meta, Some(&companion))?;
+            let loaded = ModelBundle::load(&path);
+            std::fs::remove_file(&path).ok();
+            let server = serve::Server::bind(
+                loaded?,
+                None,
+                ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+            )?;
+            let addr = server.addr();
+            let handle = server.spawn();
+            // Warm-up doubles as the tier sanity check: a cheap-budget
+            // request must actually be answered by the companion.
+            let (status, body) =
+                serve::http::http_request(&addr, "POST", "/predict", &bodies_cheap[0])?;
+            if status != 200 {
+                bail!("bench-tiered warm-up returned {status}: {body}");
+            }
+            if !body.contains("\"tier\": \"cheap\"") {
+                bail!("cheap budget was not served by the cheap tier: {body}");
+            }
+            let mut full_wall = None;
+            let mut full_p99 = None;
+            for (tier, bodies, acc) in
+                [("full", &bodies_full, full_acc), ("cheap", &bodies_cheap, cheap_acc)]
+            {
+                let label = format!("depth={depth}, subsample={subsample}, tier={tier}");
+                let (wall, lats) = drive_predict(&addr, bodies, clients, true, &label)?;
+                let pct = |q: f64| lats[(((lats.len() - 1) as f64) * q).round() as usize];
+                let qps = total_queries as f64 / wall.max(1e-9);
+                println!(
+                    "{depth}\t{subsample}\t{tier}\t{acc:.4}\t{wall:.3}\t{qps:.0}\t\
+                     {:.2}\t{:.2}\t{:.2}",
+                    pct(0.5) * 1e3,
+                    pct(0.95) * 1e3,
+                    pct(0.99) * 1e3
+                );
+                if tier == "full" {
+                    full_wall = Some(wall);
+                    full_p99 = Some(pct(0.99));
+                }
+                records.push(BenchRecord {
+                    name: format!("tiered-predict/D={depth}/F={subsample}/{tier}"),
+                    n: total_queries,
+                    wall_secs: wall,
+                    predicted_flops: 0,
+                    threads: clients,
+                    speedup_vs_serial: full_wall.map_or(1.0, |fw| fw / wall.max(1e-9)),
+                });
+                for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                    records.push(BenchRecord {
+                        name: format!("tiered-latency/D={depth}/F={subsample}/{tier}/{tag}"),
+                        n: total_queries,
+                        wall_secs: pct(q),
+                        predicted_flops: 0,
+                        threads: clients,
+                        speedup_vs_serial: if tag == "p99" {
+                            full_p99.map_or(1.0, |fp| fp / pct(q).max(1e-12))
+                        } else {
+                            1.0
+                        },
+                    });
+                }
+                records.push(BenchRecord {
+                    name: format!("tiered-accuracy/D={depth}/F={subsample}/{tier}"),
+                    n: total_queries,
+                    wall_secs: acc,
+                    predicted_flops: 0,
+                    threads: 1,
+                    speedup_vs_serial: 1.0,
+                });
+            }
+            handle.stop();
+        }
+    }
+    if let Some(path) = args.get("json-out") {
+        write_bench_json(std::path::Path::new(path), &records)?;
+        println!("wrote {} records to {path}", records.len());
+    }
+    Ok(())
+}
+
+/// Append markdown to the GitHub Actions job summary when running
+/// under CI (`$GITHUB_STEP_SUMMARY` set), a no-op anywhere else.
+fn append_step_summary(md: &str) -> Result<()> {
+    let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") else { return Ok(()) };
+    if path.is_empty() {
+        return Ok(());
+    }
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("opening $GITHUB_STEP_SUMMARY {path}"))?;
+    f.write_all(md.as_bytes()).context("writing $GITHUB_STEP_SUMMARY")?;
+    Ok(())
+}
+
+/// The per-record regression fraction the bench-compare gate tests:
+/// positive = current is slower than baseline.
+fn regress_fraction(baseline_secs: f64, current_secs: f64) -> f64 {
+    (current_secs - baseline_secs) / baseline_secs.max(1e-12)
+}
+
+/// `bench-compare`: the CI bench-regression gate. Every BENCH_*.json
+/// present in both `--baseline` and `--current` is compared record by
+/// record (keyed on name + n) on wall_secs; any record slower than its
+/// baseline by more than `--max-regress` fails the command. The
+/// per-metric markdown table goes to stdout and is appended to
+/// `$GITHUB_STEP_SUMMARY` when set. A missing or empty baseline dir
+/// seeds instead of failing — the run exits 0 so `actions/cache` can
+/// save the current artifacts as the next run's baseline. Records that
+/// are deterministic per seed (accuracy, recall) reproduce bitwise
+/// between runs and so never trip the wall-clock gate.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let baseline = PathBuf::from(
+        args.get("baseline").ok_or_else(|| anyhow!("bench-compare needs --baseline DIR"))?,
+    );
+    let current = PathBuf::from(
+        args.get("current").ok_or_else(|| anyhow!("bench-compare needs --current DIR"))?,
+    );
+    let max_regress: f64 =
+        args.get("max-regress").and_then(|v| v.parse().ok()).unwrap_or(0.25);
+    let bench_files = |dir: &Path| -> Vec<String> {
+        let mut out = vec![];
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if name.starts_with("BENCH_") && name.ends_with(".json") {
+                    out.push(name);
+                }
+            }
+        }
+        out.sort();
+        out
+    };
+    let base_files = bench_files(&baseline);
+    let cur_files = bench_files(&current);
+    if cur_files.is_empty() {
+        bail!("--current {} holds no BENCH_*.json artifacts", current.display());
+    }
+    if base_files.is_empty() {
+        let note = format!(
+            "No baseline under `{}` — seeded from `{}` ({} artifact(s)); \
+             the next run compares against these.",
+            baseline.display(),
+            current.display(),
+            cur_files.len()
+        );
+        println!("bench-compare: {note}");
+        append_step_summary(&format!("### Bench regression gate\n\n{note}\n"))?;
+        return Ok(());
+    }
+
+    let mut table = String::from(
+        "| artifact | metric | n | baseline_s | current_s | delta | status |\n\
+         |---|---|---:|---:|---:|---:|---|\n",
+    );
+    let mut regressions: Vec<String> = vec![];
+    let mut compared = 0usize;
+    for f in &cur_files {
+        if !base_files.contains(f) {
+            table.push_str(&format!("| {f} | *new artifact, no baseline* | | | | | seeded |\n"));
+            continue;
+        }
+        let base_recs = read_bench_json(&baseline.join(f))?;
+        let cur_recs = read_bench_json(&current.join(f))?;
+        let mut base_map: HashMap<(String, usize), f64> = HashMap::new();
+        for r in &base_recs {
+            base_map.insert((r.name.clone(), r.n), r.wall_secs);
+        }
+        for r in &cur_recs {
+            let Some(&b) = base_map.get(&(r.name.clone(), r.n)) else { continue };
+            compared += 1;
+            let delta = regress_fraction(b, r.wall_secs);
+            let regressed = delta > max_regress;
+            let status = if regressed { "**REGRESSED**" } else { "ok" };
+            table.push_str(&format!(
+                "| {f} | {} | {} | {b:.4} | {:.4} | {:+.1}% | {status} |\n",
+                r.name,
+                r.n,
+                r.wall_secs,
+                delta * 100.0
+            ));
+            if regressed {
+                regressions.push(format!(
+                    "{f}:{} (n={}) {b:.4}s -> {:.4}s ({:+.1}%)",
+                    r.name,
+                    r.n,
+                    r.wall_secs,
+                    delta * 100.0
+                ));
+            }
+        }
+    }
+    let verdict = if regressions.is_empty() {
+        format!(
+            "{compared} metric(s) compared — none slower than baseline by more than {:.0}%.",
+            max_regress * 100.0
+        )
+    } else {
+        format!(
+            "{} of {compared} metric(s) regressed past {:.0}%.",
+            regressions.len(),
+            max_regress * 100.0
+        )
+    };
+    println!("{table}");
+    println!("bench-compare: {verdict}");
+    append_step_summary(&format!("### Bench regression gate\n\n{verdict}\n\n{table}\n"))?;
+    if !regressions.is_empty() {
+        bail!(
+            "bench-compare: throughput regressions past {:.0}%:\n  {}",
+            max_regress * 100.0,
+            regressions.join("\n  ")
+        );
     }
     Ok(())
 }
@@ -2278,4 +2742,72 @@ fn cmd_learned(args: &Args) -> Result<()> {
     let (amin, amax) = alpha.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &a| (lo.min(a), hi.max(a)));
     println!("alpha range: [{amin:.3}, {amax:.3}] over {} trees", alpha.len());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_of(argv: &[&str]) -> Args {
+        Args::parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn companion_spec_parses_and_validates() {
+        assert_eq!(parse_companion(&args_of(&[])).unwrap(), None);
+        assert_eq!(
+            parse_companion(&args_of(&["--companion", "depth=3,subsample=0.5"])).unwrap(),
+            Some((3, 0.5))
+        );
+        // Omitted keys take the shallow defaults.
+        assert_eq!(
+            parse_companion(&args_of(&["--companion", "depth=6"])).unwrap(),
+            Some((6, 0.25))
+        );
+        assert_eq!(
+            parse_companion(&args_of(&["--companion", "subsample=1.0"])).unwrap(),
+            Some((4, 1.0))
+        );
+        assert!(parse_companion(&args_of(&["--companion", "depth=0"])).is_err());
+        assert!(parse_companion(&args_of(&["--companion", "subsample=1.5"])).is_err());
+        assert!(parse_companion(&args_of(&["--companion", "subsample=0"])).is_err());
+        assert!(parse_companion(&args_of(&["--companion", "width=3"])).is_err());
+        assert!(parse_companion(&args_of(&["--companion", "depth"])).is_err());
+    }
+
+    #[test]
+    fn regress_fraction_signs() {
+        assert!((regress_fraction(1.0, 1.5) - 0.5).abs() < 1e-12);
+        assert!((regress_fraction(2.0, 1.0) + 0.5).abs() < 1e-12);
+        assert!(regress_fraction(1.0, 1.0).abs() < 1e-12);
+    }
+
+    /// The PR 5 replica-spawn cleanup only ran after a fully healthy
+    /// fleet: a child failing its health-check *after* loading the
+    /// bundle returned early and left the temp file behind. All
+    /// temp-bundle use now goes through `with_temp_bundle`, which
+    /// removes the file on the error path too.
+    #[test]
+    fn temp_bundle_removed_even_when_replica_setup_fails() {
+        let spec = registry::by_name("covertype").unwrap();
+        let data = spec.generate(120, 3);
+        let cfg = TrainConfig { n_trees: 3, seed: 3, ..Default::default() };
+        let forest = Forest::train(&data, &cfg);
+        let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+        let meta = BundleMeta { dataset: "covertype".into(), n: data.n, seed: 3, trees: 3 };
+        let bundle = ModelBundle { forest, kernel, meta, companion: None };
+        let path = std::env::temp_dir()
+            .join(format!("fk-temp-bundle-cleanup-{}.fkb", std::process::id()));
+
+        let out: Result<()> = with_temp_bundle(&path, &bundle, |p| {
+            assert!(p.exists(), "bundle must be on disk while the fleet spawns");
+            bail!("replica failed health-check after load")
+        });
+        assert!(out.is_err());
+        assert!(!path.exists(), "temp bundle left behind on the error path");
+
+        let out = with_temp_bundle(&path, &bundle, |p| Ok(p.exists()));
+        assert!(out.unwrap());
+        assert!(!path.exists(), "temp bundle left behind on the success path");
+    }
 }

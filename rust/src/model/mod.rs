@@ -64,17 +64,27 @@
 //! wants the array-of-structs node layout); it is a small fraction of a
 //! bundle's bytes.
 //!
-//! **Version 3** additionally stores `Wᵀ` (exact form) and the
-//! quantized `Wᵀ` (quantized form) so no load path ever transposes;
-//! a re-saved bundle round-trips byte-identically. **Version 2** added
-//! a factor-form byte: form 0 stores exact CSR factors, form 1 stores
-//! block-quantized [`QCsr`] factors — written by `fit --out
-//! --quantize {int8,int4}` for a several-times-smaller artifact. A
-//! quantized bundle is lossy by design: the loader dequantizes the
-//! stored factors into the kernel's canonical `Q`/`W` (so every
-//! downstream path works unchanged) and re-attaches the stored
-//! quantized factors bitwise. Version-1/2 files load unchanged via the
-//! heap decoder; saving always writes v3.
+//! **Version 4** appends an optional *companion model* after the main
+//! factors: a presence byte, the companion's training knobs (depth cap,
+//! subsample fraction), and then a second forest + context + factor
+//! block encoded through exactly the same section machinery — so the
+//! companion is mmap-compatible and quantizable like the main factors.
+//! The companion is a shallow, subsampled forest fitted by
+//! `fit --companion depth=D,subsample=F` that the serve plane uses to
+//! answer cheap-tier `/predict` requests; a bundle without one writes a
+//! single zero byte. The section layout is otherwise identical to v3,
+//! so v3 files decode through the same path (the companion block is
+//! simply absent). **Version 3** additionally stores `Wᵀ` (exact form)
+//! and the quantized `Wᵀ` (quantized form) so no load path ever
+//! transposes; a re-saved bundle round-trips byte-identically.
+//! **Version 2** added a factor-form byte: form 0 stores exact CSR
+//! factors, form 1 stores block-quantized [`QCsr`] factors — written by
+//! `fit --out --quantize {int8,int4}` for a several-times-smaller
+//! artifact. A quantized bundle is lossy by design: the loader
+//! dequantizes the stored factors into the kernel's canonical `Q`/`W`
+//! (so every downstream path works unchanged) and re-attaches the
+//! stored quantized factors bitwise. Version-1/2 files load unchanged
+//! via the heap decoder; saving always writes v4.
 //!
 //! Saves are atomic: the bytes are written to a sibling temp file and
 //! `rename(2)`d into place, so a process that has the *old* file
@@ -105,7 +115,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"FKBNDL1\0";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
+/// First version with the aligned section table (mmap-compatible).
+const SECTIONED_VERSION: u32 = 3;
 const HEADER_BYTES: usize = 28;
 /// Section payloads start on cache-line boundaries — a multiple of the
 /// alignment of every element type we store, so mapped sections can be
@@ -187,12 +199,27 @@ pub struct BundleMeta {
     pub trees: usize,
 }
 
+/// A shallow, subsampled companion forest persisted alongside the main
+/// model (v4). The serve plane answers cheap-tier `/predict` requests
+/// from this kernel in a fraction of the full-tier cost; `/neighbors`
+/// and `/embed` always use the main model.
+pub struct CompanionModel {
+    pub forest: Forest,
+    pub kernel: ForestKernel,
+    /// Depth cap the companion was trained with.
+    pub depth: usize,
+    /// Per-tree bootstrap subsample fraction in `(0, 1]`.
+    pub subsample: f32,
+}
+
 /// A loaded (or freshly fitted) model: the forest, the fitted SWLC
-/// kernel, and provenance metadata.
+/// kernel, provenance metadata, and (v4) an optional latency-tier
+/// companion model.
 pub struct ModelBundle {
     pub forest: Forest,
     pub kernel: ForestKernel,
     pub meta: BundleMeta,
+    pub companion: Option<CompanionModel>,
 }
 
 fn forest_kind_code(kind: ForestKind) -> u8 {
@@ -332,34 +359,23 @@ fn put_qcsr_v3(w: &mut ByteWriter, acc: &mut SectionAcc, m: &QCsr) {
     acc.put(w, &m.scales);
 }
 
-/// Encode a complete v3 file (header through the last section).
-fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<u8>, SectionSizes) {
-    let mut w = ByteWriter::new();
-    let mut acc = SectionAcc::default();
-    // Identity.
-    w.put_str(kernel.kind.name());
-    w.put_u8(forest_kind_code(forest.kind));
-    // Provenance.
-    w.put_str(&meta.dataset);
-    w.put_u64(meta.n as u64);
-    w.put_u64(meta.seed);
-    w.put_u64(meta.trees as u64);
-    // Forest: scalars and per-tree counts stay inline; the node arrays
-    // go out as structure-of-arrays sections concatenated over trees.
-    let forest_mark = (w.len(), acc.bytes());
+/// Forest scalars and per-tree counts stay inline; the node arrays go
+/// out as structure-of-arrays sections concatenated over trees. Shared
+/// by the main model and the v4 companion block.
+fn put_forest(w: &mut ByteWriter, acc: &mut SectionAcc, forest: &Forest) {
     w.put_u64(forest.n_classes as u64);
     w.put_f32(forest.init_score);
     w.put_f32(forest.learning_rate);
     w.put_u64(forest.n_train as u64);
-    acc.put(&mut w, &forest.tree_weights);
-    acc.put(&mut w, &forest.leaf_offsets);
+    acc.put(w, &forest.tree_weights);
+    acc.put(w, &forest.leaf_offsets);
     w.put_u64(forest.inbag.len() as u64);
     let mut inbag_cat: Vec<u16> = Vec::new();
     for bag in &forest.inbag {
         w.put_u64(bag.len() as u64);
         inbag_cat.extend_from_slice(bag);
     }
-    acc.put(&mut w, &inbag_cat);
+    acc.put(w, &inbag_cat);
     w.put_u64(forest.trees.len() as u64);
     let total_nodes: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
     let mut features: Vec<u16> = Vec::with_capacity(total_nodes);
@@ -380,11 +396,11 @@ fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<
         }
         leaf_stats_cat.extend_from_slice(&tree.leaf_stats);
     }
-    acc.put(&mut w, &features);
-    acc.put(&mut w, &thresholds);
-    acc.put(&mut w, &lefts);
-    acc.put(&mut w, &rights);
-    acc.put(&mut w, &leaf_stats_cat);
+    acc.put(w, &features);
+    acc.put(w, &thresholds);
+    acc.put(w, &lefts);
+    acc.put(w, &rights);
+    acc.put(w, &leaf_stats_cat);
     // Binner.
     w.put_u64(forest.binner.n_bins as u64);
     w.put_u64(forest.binner.edges.len() as u64);
@@ -393,32 +409,33 @@ fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<
         w.put_u64(e.len() as u64);
         edges_cat.extend_from_slice(e);
     }
-    acc.put(&mut w, &edges_cat);
-    let ctx_mark = (w.len(), acc.bytes());
-    // Ensemble context θ.
-    let ctx = &kernel.ctx;
+    acc.put(w, &edges_cat);
+}
+
+/// Ensemble context θ.
+fn put_context(w: &mut ByteWriter, acc: &mut SectionAcc, ctx: &EnsembleContext) {
     w.put_u64(ctx.n as u64);
     w.put_u64(ctx.t as u64);
     w.put_u64(ctx.l as u64);
-    acc.put(&mut w, &ctx.leaf_of);
-    acc.put(&mut w, &ctx.leaf_mass);
-    acc.put(&mut w, &ctx.inbag_mass);
-    acc.put(&mut w, &ctx.inbag_count);
-    acc.put(&mut w, &ctx.oob_count);
-    acc.put(&mut w, &ctx.tree_weights);
-    acc.put(&mut w, &ctx.y);
+    acc.put(w, &ctx.leaf_of);
+    acc.put(w, &ctx.leaf_mass);
+    acc.put(w, &ctx.inbag_mass);
+    acc.put(w, &ctx.inbag_count);
+    acc.put(w, &ctx.oob_count);
+    acc.put(w, &ctx.tree_weights);
+    acc.put(w, &ctx.y);
     w.put_u64(ctx.n_classes as u64);
-    let factors_mark = (w.len(), acc.bytes());
-    // Factors. Unlike v1/v2, `Wᵀ` IS stored: the zero-copy load then
-    // never transposes (O(1) bind for exact bundles). A symmetric
-    // kernel's `W` is still elided (`W = Q`, an O(1) clone at load).
-    // When the kernel has a quantized mode, the quantized factors
-    // replace the exact CSRs on disk (form 1) — that is the whole
-    // artifact-size win; the loader dequantizes them back into the
-    // canonical slots.
+}
+
+/// Factors. Unlike v1/v2, `Wᵀ` IS stored: the zero-copy load then
+/// never transposes (O(1) bind for exact bundles). A symmetric
+/// kernel's `W` is still elided (`W = Q`, an O(1) clone at load).
+/// When the kernel has a quantized mode, the quantized factors
+/// replace the exact CSRs on disk (form 1) — that is the whole
+/// artifact-size win; the loader dequantizes them back into the
+/// canonical slots.
+fn put_factors(w: &mut ByteWriter, acc: &mut SectionAcc, kernel: &ForestKernel) {
     w.put_u8(kernel.symmetric as u8);
-    let mut factors = 0usize;
-    let mut quantized = 0usize;
     match kernel.quantized() {
         Some(qf) => {
             w.put_u8(FORM_QUANTIZED);
@@ -426,23 +443,66 @@ fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<
             // The attached quantized Q and Wᵀ are written verbatim (so
             // a loaded bundle re-saves bitwise); W has no attached
             // quantized form and is quantized here when asymmetric.
-            put_qcsr_v3(&mut w, &mut acc, &qf.q);
+            put_qcsr_v3(w, acc, &qf.q);
             if !kernel.symmetric {
-                put_qcsr_v3(&mut w, &mut acc, &qcsr::quantize(&kernel.w, qf.mode));
+                put_qcsr_v3(w, acc, &qcsr::quantize(&kernel.w, qf.mode));
             }
-            put_qcsr_v3(&mut w, &mut acc, &qf.wt);
-            quantized = (w.len() - factors_mark.0) + (acc.bytes() - factors_mark.1);
+            put_qcsr_v3(w, acc, &qf.wt);
         }
         None => {
             w.put_u8(FORM_EXACT);
-            put_csr_v3(&mut w, &mut acc, &kernel.q);
+            put_csr_v3(w, acc, &kernel.q);
             if !kernel.symmetric {
-                put_csr_v3(&mut w, &mut acc, &kernel.w);
+                put_csr_v3(w, acc, &kernel.w);
             }
-            put_csr_v3(&mut w, &mut acc, kernel.w_transpose());
-            factors = (w.len() - factors_mark.0) + (acc.bytes() - factors_mark.1);
+            put_csr_v3(w, acc, kernel.w_transpose());
         }
     }
+}
+
+/// Encode a complete v4 file (header through the last section).
+fn encode_v4(
+    forest: &Forest,
+    kernel: &ForestKernel,
+    meta: &BundleMeta,
+    companion: Option<&CompanionModel>,
+) -> (Vec<u8>, SectionSizes) {
+    let mut w = ByteWriter::new();
+    let mut acc = SectionAcc::default();
+    // Identity.
+    w.put_str(kernel.kind.name());
+    w.put_u8(forest_kind_code(forest.kind));
+    // Provenance.
+    w.put_str(&meta.dataset);
+    w.put_u64(meta.n as u64);
+    w.put_u64(meta.seed);
+    w.put_u64(meta.trees as u64);
+    let forest_mark = (w.len(), acc.bytes());
+    put_forest(&mut w, &mut acc, forest);
+    let ctx_mark = (w.len(), acc.bytes());
+    put_context(&mut w, &mut acc, &kernel.ctx);
+    let factors_mark = (w.len(), acc.bytes());
+    put_factors(&mut w, &mut acc, kernel);
+    let factors_bytes = (w.len() - factors_mark.0) + (acc.bytes() - factors_mark.1);
+    let (factors, quantized) =
+        if kernel.quantized().is_some() { (0, factors_bytes) } else { (factors_bytes, 0) };
+    // Companion model (v4): presence byte, training knobs, then a
+    // second forest/context/factor block through the same sections.
+    let companion_mark = (w.len(), acc.bytes());
+    match companion {
+        Some(c) => {
+            w.put_u8(1);
+            w.put_u64(c.depth as u64);
+            w.put_f32(c.subsample);
+            w.put_str(c.kernel.kind.name());
+            w.put_u8(forest_kind_code(c.forest.kind));
+            put_forest(&mut w, &mut acc, &c.forest);
+            put_context(&mut w, &mut acc, &c.kernel.ctx);
+            put_factors(&mut w, &mut acc, &c.kernel);
+        }
+        None => w.put_u8(0),
+    }
+    let companion_bytes = (w.len() - companion_mark.0) + (acc.bytes() - companion_mark.1);
     // Assembly: header, counts, table, stream, aligned sections.
     let structured = w.into_inner();
     let count = acc.blobs.len();
@@ -482,6 +542,7 @@ fn encode_v3(forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> (Vec<
         context: (factors_mark.0 - ctx_mark.0) + (factors_mark.1 - ctx_mark.1),
         factors,
         quantized,
+        companion: if companion.is_some() { companion_bytes } else { 0 },
         total: total - HEADER_BYTES,
     };
     (out, sizes)
@@ -619,7 +680,221 @@ fn split_concat<T: Copy>(cat: &[T], lens: &[usize], what: &str) -> Result<Vec<Ve
     Ok(out)
 }
 
-fn decode_v3(source: V3Source) -> Result<ModelBundle> {
+/// Decode one forest block (always heap-materialized: routing wants
+/// the array-of-structs node layout). Shared by the main model and the
+/// v4 companion block.
+fn take_forest(sections: &Sections, r: &mut ByteReader, forest_kind: ForestKind) -> Result<Forest> {
+    let n_classes = r.take_u64()? as usize;
+    let init_score = r.take_f32()?;
+    let learning_rate = r.take_f32()?;
+    let n_train = r.take_u64()? as usize;
+    let tree_weights = sections.take::<f32>(r)?.into_vec();
+    let leaf_offsets = sections.take::<u32>(r)?.into_vec();
+    let n_inbag = r.take_u64()? as usize;
+    if (n_inbag as u128) * 8 > r.remaining() as u128 {
+        bail!("bundle corrupt: {n_inbag} in-bag vectors claimed");
+    }
+    let mut bag_lens = Vec::with_capacity(n_inbag);
+    for _ in 0..n_inbag {
+        bag_lens.push(r.take_u64()? as usize);
+    }
+    let inbag_cat = sections.take::<u16>(r)?;
+    let inbag = split_concat(&inbag_cat, &bag_lens, "in-bag")?;
+    let n_trees = r.take_u64()? as usize;
+    if (n_trees as u128) * 32 > r.remaining() as u128 {
+        bail!("bundle corrupt: {n_trees} trees claimed");
+    }
+    let mut tree_shapes = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        let n_nodes = r.take_u64()? as usize;
+        let n_leaves = r.take_u64()? as usize;
+        let stats_len = r.take_u64()? as usize;
+        let depth = r.take_u64()? as usize;
+        tree_shapes.push((n_nodes, n_leaves, stats_len, depth));
+    }
+    let features = sections.take::<u16>(r)?;
+    let thresholds = sections.take::<u8>(r)?;
+    let lefts = sections.take::<u32>(r)?;
+    let rights = sections.take::<u32>(r)?;
+    let leaf_stats_cat = sections.take::<f32>(r)?;
+    let total_nodes: u128 = tree_shapes.iter().map(|s| s.0 as u128).sum();
+    if total_nodes != features.len() as u128
+        || features.len() != thresholds.len()
+        || features.len() != lefts.len()
+        || features.len() != rights.len()
+    {
+        bail!(
+            "bundle node sections disagree ({total_nodes} nodes claimed, {} stored)",
+            features.len()
+        );
+    }
+    let mut trees = Vec::with_capacity(n_trees);
+    let (mut nb, mut sb) = (0usize, 0usize);
+    for (n_nodes, n_leaves, stats_len, depth) in tree_shapes {
+        let se = sb
+            .checked_add(stats_len)
+            .filter(|&e| e <= leaf_stats_cat.len())
+            .ok_or_else(|| anyhow!("bundle leaf-stat lengths overflow their section"))?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for k in nb..nb + n_nodes {
+            nodes.push(Node {
+                feature: features[k],
+                threshold: thresholds[k],
+                left: lefts[k],
+                right: rights[k],
+            });
+        }
+        trees.push(Tree { nodes, n_leaves, leaf_stats: leaf_stats_cat[sb..se].to_vec(), depth });
+        nb += n_nodes;
+        sb = se;
+    }
+    if sb != leaf_stats_cat.len() {
+        bail!("bundle leaf-stat section has {} trailing elements", leaf_stats_cat.len() - sb);
+    }
+    // --- binner ---
+    let n_bins = r.take_u64()? as usize;
+    let n_features = r.take_u64()? as usize;
+    if (n_features as u128) * 8 > r.remaining() as u128 {
+        bail!("bundle corrupt: binner claims {n_features} features");
+    }
+    let mut edge_lens = Vec::with_capacity(n_features);
+    for _ in 0..n_features {
+        edge_lens.push(r.take_u64()? as usize);
+    }
+    let edges_cat = sections.take::<f32>(r)?;
+    let edges = split_concat(&edges_cat, &edge_lens, "binner edge")?;
+    Ok(Forest {
+        kind: forest_kind,
+        trees,
+        binner: Binner { edges, n_bins },
+        leaf_offsets,
+        inbag,
+        tree_weights,
+        n_classes,
+        init_score,
+        learning_rate,
+        n_train,
+    })
+}
+
+/// Decode one ensemble-context block (zero-copy on the mapped path).
+fn take_context(sections: &Sections, r: &mut ByteReader) -> Result<EnsembleContext> {
+    let n = r.take_u64()? as usize;
+    let t = r.take_u64()? as usize;
+    let l = r.take_u64()? as usize;
+    Ok(EnsembleContext {
+        n,
+        t,
+        l,
+        leaf_of: sections.take(r)?,
+        leaf_mass: sections.take(r)?,
+        inbag_mass: sections.take(r)?,
+        inbag_count: sections.take(r)?,
+        oob_count: sections.take(r)?,
+        tree_weights: sections.take(r)?,
+        y: sections.take(r)?,
+        n_classes: r.take_u64()? as usize,
+    })
+}
+
+/// Cross-section consistency between a forest and its context θ.
+fn check_forest_ctx(forest: &Forest, ctx: &EnsembleContext) -> Result<()> {
+    if forest.trees.len() != ctx.t {
+        bail!("bundle forest has {} trees but context says {}", forest.trees.len(), ctx.t);
+    }
+    if forest.n_leaves_total() != ctx.l {
+        bail!("bundle forest has {} leaves but context says {}", forest.n_leaves_total(), ctx.l);
+    }
+    if ctx.leaf_of.len() != ctx.n * ctx.t {
+        bail!(
+            "bundle context leaf table is {} entries, expected N*T = {}",
+            ctx.leaf_of.len(),
+            ctx.n * ctx.t
+        );
+    }
+    Ok(())
+}
+
+/// Decode one factor block into a fitted kernel. Shared by the main
+/// model and the v4 companion block; the caller owns the trailing-byte
+/// check once every block has been consumed.
+fn take_factors(
+    sections: &Sections,
+    r: &mut ByteReader,
+    kind: ProximityKind,
+    ctx: EnsembleContext,
+) -> Result<ForestKernel> {
+    let verify = sections.verifying();
+    let symmetric = r.take_u8()? != 0;
+    if symmetric != kind.symmetric() {
+        bail!("bundle symmetry flag disagrees with proximity kind {}", kind.name());
+    }
+    let form = r.take_u8()?;
+    Ok(match form {
+        FORM_EXACT => {
+            let q = take_csr_v3(sections, r, verify)?;
+            let w = if symmetric { q.clone() } else { take_csr_v3(sections, r, verify)? };
+            let wt = take_csr_v3(sections, r, verify)?;
+            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
+                bail!(
+                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
+                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
+                );
+            }
+            if wt.n_rows != ctx.l || wt.n_cols != ctx.n || wt.nnz() != w.nnz() {
+                bail!(
+                    "bundle Wᵀ is {}x{} with {} entries, expected {}x{} with {}",
+                    wt.n_rows, wt.n_cols, wt.nnz(), ctx.l, ctx.n, w.nnz()
+                );
+            }
+            ForestKernel::from_parts_with_wt(kind, ctx, q, w, wt, symmetric)
+        }
+        FORM_QUANTIZED => {
+            let mode = QuantMode::from_code(r.take_u8()?)
+                .ok_or_else(|| anyhow!("bundle quantized section has unknown mode code"))?;
+            let qq = take_qcsr_v3(sections, r)?;
+            if qq.mode != mode {
+                bail!("bundle quantized Q mode disagrees with the section header");
+            }
+            let q = qq.dequantize();
+            let w = if symmetric {
+                q.clone()
+            } else {
+                let qw = take_qcsr_v3(sections, r)?;
+                if qw.mode != mode {
+                    bail!("bundle quantized W mode disagrees with the section header");
+                }
+                qw.dequantize()
+            };
+            let qwt = take_qcsr_v3(sections, r)?;
+            if qwt.mode != mode {
+                bail!("bundle quantized Wᵀ mode disagrees with the section header");
+            }
+            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
+                bail!(
+                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
+                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
+                );
+            }
+            if qwt.n_rows != ctx.l || qwt.n_cols != ctx.n {
+                bail!(
+                    "bundle quantized Wᵀ is {}x{}, expected {}x{}",
+                    qwt.n_rows, qwt.n_cols, ctx.l, ctx.n
+                );
+            }
+            // The exact slots hold the dequantization (every downstream
+            // path works unchanged); the stored quantized Q and Wᵀ are
+            // re-attached bitwise so products and re-saves reproduce
+            // the fitted kernel exactly.
+            let mut k = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
+            k.attach_quantized(QuantizedFactors { mode, q: qq, wt: qwt });
+            k
+        }
+        other => bail!("bundle has unknown factor form {other}"),
+    })
+}
+
+fn decode_v4(source: V3Source, version: u32) -> Result<ModelBundle> {
     // --- structured region: bounds, checksum, section table ---
     let file_len = source.bytes().len();
     if file_len < HEADER_BYTES + V3_PREFIX_BYTES {
@@ -688,205 +963,38 @@ fn decode_v3(source: V3Source) -> Result<ModelBundle> {
         seed: r.take_u64()?,
         trees: r.take_u64()? as usize,
     };
-    // --- forest (always heap-materialized: routing wants AoS nodes) ---
-    let n_classes = r.take_u64()? as usize;
-    let init_score = r.take_f32()?;
-    let learning_rate = r.take_f32()?;
-    let n_train = r.take_u64()? as usize;
-    let tree_weights = sections.take::<f32>(&mut r)?.into_vec();
-    let leaf_offsets = sections.take::<u32>(&mut r)?.into_vec();
-    let n_inbag = r.take_u64()? as usize;
-    if (n_inbag as u128) * 8 > r.remaining() as u128 {
-        bail!("bundle corrupt: {n_inbag} in-bag vectors claimed");
-    }
-    let mut bag_lens = Vec::with_capacity(n_inbag);
-    for _ in 0..n_inbag {
-        bag_lens.push(r.take_u64()? as usize);
-    }
-    let inbag_cat = sections.take::<u16>(&mut r)?;
-    let inbag = split_concat(&inbag_cat, &bag_lens, "in-bag")?;
-    let n_trees = r.take_u64()? as usize;
-    if (n_trees as u128) * 32 > r.remaining() as u128 {
-        bail!("bundle corrupt: {n_trees} trees claimed");
-    }
-    let mut tree_shapes = Vec::with_capacity(n_trees);
-    for _ in 0..n_trees {
-        let n_nodes = r.take_u64()? as usize;
-        let n_leaves = r.take_u64()? as usize;
-        let stats_len = r.take_u64()? as usize;
-        let depth = r.take_u64()? as usize;
-        tree_shapes.push((n_nodes, n_leaves, stats_len, depth));
-    }
-    let features = sections.take::<u16>(&mut r)?;
-    let thresholds = sections.take::<u8>(&mut r)?;
-    let lefts = sections.take::<u32>(&mut r)?;
-    let rights = sections.take::<u32>(&mut r)?;
-    let leaf_stats_cat = sections.take::<f32>(&mut r)?;
-    let total_nodes: u128 = tree_shapes.iter().map(|s| s.0 as u128).sum();
-    if total_nodes != features.len() as u128
-        || features.len() != thresholds.len()
-        || features.len() != lefts.len()
-        || features.len() != rights.len()
-    {
-        bail!(
-            "bundle node sections disagree ({total_nodes} nodes claimed, {} stored)",
-            features.len()
-        );
-    }
-    let mut trees = Vec::with_capacity(n_trees);
-    let (mut nb, mut sb) = (0usize, 0usize);
-    for (n_nodes, n_leaves, stats_len, depth) in tree_shapes {
-        let se = sb
-            .checked_add(stats_len)
-            .filter(|&e| e <= leaf_stats_cat.len())
-            .ok_or_else(|| anyhow!("bundle leaf-stat lengths overflow their section"))?;
-        let mut nodes = Vec::with_capacity(n_nodes);
-        for k in nb..nb + n_nodes {
-            nodes.push(Node {
-                feature: features[k],
-                threshold: thresholds[k],
-                left: lefts[k],
-                right: rights[k],
-            });
+    // --- forest + context θ + factors through the shared helpers ---
+    let forest = take_forest(&sections, &mut r, forest_kind)?;
+    let ctx = take_context(&sections, &mut r)?;
+    check_forest_ctx(&forest, &ctx)?;
+    let kernel = take_factors(&sections, &mut r, kind, ctx)?;
+    // --- companion model (v4) ---
+    let companion = if version >= 4 {
+        match r.take_u8()? {
+            0 => None,
+            1 => {
+                let depth = r.take_u64()? as usize;
+                let subsample = r.take_f32()?;
+                let c_kind_name = r.take_str()?;
+                let c_kind = ProximityKind::from_name(&c_kind_name).ok_or_else(|| {
+                    anyhow!("bundle companion holds unknown proximity kind {c_kind_name:?}")
+                })?;
+                let c_forest_kind = forest_kind_from_code(r.take_u8()?)?;
+                let c_forest = take_forest(&sections, &mut r, c_forest_kind)?;
+                let c_ctx = take_context(&sections, &mut r)?;
+                check_forest_ctx(&c_forest, &c_ctx)?;
+                let c_kernel = take_factors(&sections, &mut r, c_kind, c_ctx)?;
+                Some(CompanionModel { forest: c_forest, kernel: c_kernel, depth, subsample })
+            }
+            other => bail!("bundle has unknown companion marker {other}"),
         }
-        trees.push(Tree { nodes, n_leaves, leaf_stats: leaf_stats_cat[sb..se].to_vec(), depth });
-        nb += n_nodes;
-        sb = se;
-    }
-    if sb != leaf_stats_cat.len() {
-        bail!("bundle leaf-stat section has {} trailing elements", leaf_stats_cat.len() - sb);
-    }
-    // --- binner ---
-    let n_bins = r.take_u64()? as usize;
-    let n_features = r.take_u64()? as usize;
-    if (n_features as u128) * 8 > r.remaining() as u128 {
-        bail!("bundle corrupt: binner claims {n_features} features");
-    }
-    let mut edge_lens = Vec::with_capacity(n_features);
-    for _ in 0..n_features {
-        edge_lens.push(r.take_u64()? as usize);
-    }
-    let edges_cat = sections.take::<f32>(&mut r)?;
-    let edges = split_concat(&edges_cat, &edge_lens, "binner edge")?;
-    let forest = Forest {
-        kind: forest_kind,
-        trees,
-        binner: Binner { edges, n_bins },
-        leaf_offsets,
-        inbag,
-        tree_weights,
-        n_classes,
-        init_score,
-        learning_rate,
-        n_train,
+    } else {
+        None
     };
-    // --- ensemble context θ (zero-copy on the mapped path) ---
-    let n = r.take_u64()? as usize;
-    let t = r.take_u64()? as usize;
-    let l = r.take_u64()? as usize;
-    let ctx = EnsembleContext {
-        n,
-        t,
-        l,
-        leaf_of: sections.take(&mut r)?,
-        leaf_mass: sections.take(&mut r)?,
-        inbag_mass: sections.take(&mut r)?,
-        inbag_count: sections.take(&mut r)?,
-        oob_count: sections.take(&mut r)?,
-        tree_weights: sections.take(&mut r)?,
-        y: sections.take(&mut r)?,
-        n_classes: r.take_u64()? as usize,
-    };
-    // Cross-section consistency checks.
-    if forest.trees.len() != ctx.t {
-        bail!("bundle forest has {} trees but context says {}", forest.trees.len(), ctx.t);
+    if r.remaining() != 0 {
+        bail!("bundle has {} trailing stream bytes", r.remaining());
     }
-    if forest.n_leaves_total() != ctx.l {
-        bail!("bundle forest has {} leaves but context says {}", forest.n_leaves_total(), ctx.l);
-    }
-    if ctx.leaf_of.len() != ctx.n * ctx.t {
-        bail!(
-            "bundle context leaf table is {} entries, expected N*T = {}",
-            ctx.leaf_of.len(),
-            ctx.n * ctx.t
-        );
-    }
-    // --- factors ---
-    let symmetric = r.take_u8()? != 0;
-    if symmetric != kind.symmetric() {
-        bail!("bundle symmetry flag disagrees with proximity kind {kind_name}");
-    }
-    let form = r.take_u8()?;
-    let verify = sections.verifying();
-    let kernel = match form {
-        FORM_EXACT => {
-            let q = take_csr_v3(&sections, &mut r, verify)?;
-            let w = if symmetric { q.clone() } else { take_csr_v3(&sections, &mut r, verify)? };
-            let wt = take_csr_v3(&sections, &mut r, verify)?;
-            if r.remaining() != 0 {
-                bail!("bundle has {} trailing stream bytes", r.remaining());
-            }
-            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
-                bail!(
-                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
-                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
-                );
-            }
-            if wt.n_rows != ctx.l || wt.n_cols != ctx.n || wt.nnz() != w.nnz() {
-                bail!(
-                    "bundle Wᵀ is {}x{} with {} entries, expected {}x{} with {}",
-                    wt.n_rows, wt.n_cols, wt.nnz(), ctx.l, ctx.n, w.nnz()
-                );
-            }
-            ForestKernel::from_parts_with_wt(kind, ctx, q, w, wt, symmetric)
-        }
-        FORM_QUANTIZED => {
-            let mode = QuantMode::from_code(r.take_u8()?)
-                .ok_or_else(|| anyhow!("bundle quantized section has unknown mode code"))?;
-            let qq = take_qcsr_v3(&sections, &mut r)?;
-            if qq.mode != mode {
-                bail!("bundle quantized Q mode disagrees with the section header");
-            }
-            let q = qq.dequantize();
-            let w = if symmetric {
-                q.clone()
-            } else {
-                let qw = take_qcsr_v3(&sections, &mut r)?;
-                if qw.mode != mode {
-                    bail!("bundle quantized W mode disagrees with the section header");
-                }
-                qw.dequantize()
-            };
-            let qwt = take_qcsr_v3(&sections, &mut r)?;
-            if qwt.mode != mode {
-                bail!("bundle quantized Wᵀ mode disagrees with the section header");
-            }
-            if r.remaining() != 0 {
-                bail!("bundle has {} trailing stream bytes", r.remaining());
-            }
-            if q.n_rows != ctx.n || q.n_cols != ctx.l || w.n_rows != ctx.n || w.n_cols != ctx.l {
-                bail!(
-                    "bundle factors are {}x{} / {}x{}, expected {}x{}",
-                    q.n_rows, q.n_cols, w.n_rows, w.n_cols, ctx.n, ctx.l
-                );
-            }
-            if qwt.n_rows != ctx.l || qwt.n_cols != ctx.n {
-                bail!(
-                    "bundle quantized Wᵀ is {}x{}, expected {}x{}",
-                    qwt.n_rows, qwt.n_cols, ctx.l, ctx.n
-                );
-            }
-            // The exact slots hold the dequantization (every downstream
-            // path works unchanged); the stored quantized Q and Wᵀ are
-            // re-attached bitwise so products and re-saves reproduce
-            // the fitted kernel exactly.
-            let mut k = ForestKernel::from_parts(kind, ctx, q, w, symmetric);
-            k.attach_quantized(QuantizedFactors { mode, q: qq, wt: qwt });
-            k
-        }
-        other => bail!("bundle has unknown factor form {other}"),
-    };
-    Ok(ModelBundle { forest, kernel, meta })
+    Ok(ModelBundle { forest, kernel, meta, companion })
 }
 
 // ---------------------------------------------------------------------------
@@ -965,6 +1073,8 @@ pub struct SectionSizes {
     pub factors: usize,
     /// Quantized factor section (0 in an exact bundle).
     pub quantized: usize,
+    /// Companion forest + context + factors (0 without `--companion`).
+    pub companion: usize,
     /// Whole payload, including identity/provenance.
     pub total: usize,
 }
@@ -1194,7 +1304,7 @@ fn decode_payload_v2(buf: &[u8], version: u32) -> Result<ModelBundle> {
         let wt_q = qcsr::quantize(kernel.w_transpose(), mode);
         kernel.attach_quantized(QuantizedFactors { mode, q: qq, wt: wt_q });
     }
-    Ok(ModelBundle { forest, kernel, meta })
+    Ok(ModelBundle { forest, kernel, meta, companion: None })
 }
 
 // ---------------------------------------------------------------------------
@@ -1230,10 +1340,12 @@ fn check_payload_len(buf: &[u8], path: &Path) -> Result<()> {
 }
 
 impl ModelBundle {
-    /// Serialize to `path` as an `fk-bundle-v3` file (atomically).
-    /// Returns the total bytes written (header + payload).
+    /// Serialize to `path` as an `fk-bundle-v4` file (atomically),
+    /// companion included when present. Returns the total bytes
+    /// written (header + payload).
     pub fn save(&self, path: &Path) -> Result<u64> {
-        save(path, &self.forest, &self.kernel, &self.meta)
+        save_with_sizes(path, &self.forest, &self.kernel, &self.meta, self.companion.as_ref())
+            .map(|(n, _)| n)
     }
 
     /// Load and verify a bundle onto the heap (every section
@@ -1265,9 +1377,9 @@ impl ModelBundle {
         }
         let use_mmap = match mode {
             MmapMode::Off => false,
-            MmapMode::Auto => version >= 3 && mmap::supported(),
+            MmapMode::Auto => version >= SECTIONED_VERSION && mmap::supported(),
             MmapMode::On => {
-                if version < 3 {
+                if version < SECTIONED_VERSION {
                     bail!(
                         "{}: --mmap on needs an fk-bundle-v3 file (found v{version}; load and re-save to upgrade)",
                         path.display()
@@ -1285,7 +1397,7 @@ impl ModelBundle {
         if use_mmap {
             let mapping = Arc::new(Mapping::map(&file)?);
             check_payload_len(mapping.bytes(), path)?;
-            let b = decode_v3(V3Source::Mapped(mapping))
+            let b = decode_v4(V3Source::Mapped(mapping), version)
                 .with_context(|| format!("decoding model bundle {}", path.display()))?;
             return Ok((b, "mmap"));
         }
@@ -1302,8 +1414,8 @@ impl ModelBundle {
             bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
         }
         check_payload_len(&buf, path)?;
-        let b = if version >= 3 {
-            decode_v3(V3Source::Heap(buf))
+        let b = if version >= SECTIONED_VERSION {
+            decode_v4(V3Source::Heap(buf), version)
                 .with_context(|| format!("decoding model bundle {}", path.display()))?
         } else {
             let payload = &buf[HEADER_BYTES..];
@@ -1319,20 +1431,23 @@ impl ModelBundle {
     }
 }
 
-/// Serialize a forest + fitted kernel + metadata to `path`.
+/// Serialize a forest + fitted kernel + metadata to `path` (no
+/// companion — use [`ModelBundle::save`] or [`save_with_sizes`] when
+/// one is present).
 pub fn save(path: &Path, forest: &Forest, kernel: &ForestKernel, meta: &BundleMeta) -> Result<u64> {
-    save_with_sizes(path, forest, kernel, meta).map(|(n, _)| n)
+    save_with_sizes(path, forest, kernel, meta, None).map(|(n, _)| n)
 }
 
-/// [`save`] that also reports the payload section sizes (for the
-/// `fit --out` CLI summary).
+/// [`save`] that also persists an optional companion model and reports
+/// the payload section sizes (for the `fit --out` CLI summary).
 pub fn save_with_sizes(
     path: &Path,
     forest: &Forest,
     kernel: &ForestKernel,
     meta: &BundleMeta,
+    companion: Option<&CompanionModel>,
 ) -> Result<(u64, SectionSizes)> {
-    let (buf, sizes) = encode_v3(forest, kernel, meta);
+    let (buf, sizes) = encode_v4(forest, kernel, meta, companion);
     write_atomic(path, &buf)?;
     Ok((buf.len() as u64, sizes))
 }
@@ -1493,7 +1608,7 @@ mod tests {
         let (forest, mut kernel, meta) = fixture();
         kernel.set_quantization(Some(QuantMode::Int8));
         let path = tmpfile("quantized");
-        let (written, sizes) = save_with_sizes(&path, &forest, &kernel, &meta).unwrap();
+        let (written, sizes) = save_with_sizes(&path, &forest, &kernel, &meta, None).unwrap();
         assert_eq!(written as usize, HEADER_BYTES + sizes.total);
         assert_eq!(sizes.factors, 0, "quantized bundle must not store exact factors");
         assert!(sizes.quantized > 0);
@@ -1514,10 +1629,99 @@ mod tests {
     fn exact_bundle_reports_factor_section() {
         let (forest, kernel, meta) = fixture();
         let path = tmpfile("sizes-exact");
-        let (_, sizes) = save_with_sizes(&path, &forest, &kernel, &meta).unwrap();
+        let (_, sizes) = save_with_sizes(&path, &forest, &kernel, &meta, None).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(sizes.quantized, 0);
+        assert_eq!(sizes.companion, 0);
         assert!(sizes.factors > 0);
+    }
+
+    fn companion_fixture(forest: &Forest) -> CompanionModel {
+        let data = synth::gaussian_blobs(80, 4, 3, 2.0, 11);
+        let cfg = TrainConfig {
+            n_trees: 4,
+            seed: 11,
+            max_depth: Some(3),
+            max_samples: Some(40),
+            ..Default::default()
+        };
+        let c_forest = Forest::train(&data, &cfg);
+        let c_kernel = ForestKernel::fit(&c_forest, &data, ProximityKind::Kerf);
+        assert_eq!(c_forest.n_classes, forest.n_classes);
+        CompanionModel { forest: c_forest, kernel: c_kernel, depth: 3, subsample: 0.5 }
+    }
+
+    #[test]
+    fn bundle_without_companion_loads_with_none() {
+        let (forest, kernel, meta) = fixture();
+        let path = tmpfile("no-companion");
+        save(&path, &forest, &kernel, &meta).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), VERSION);
+        let b = ModelBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(b.companion.is_none());
+    }
+
+    #[test]
+    fn companion_roundtrips_on_heap_and_mmap() {
+        let (forest, kernel, meta) = fixture();
+        let companion = companion_fixture(&forest);
+        let path = tmpfile("companion");
+        let (written, sizes) =
+            save_with_sizes(&path, &forest, &kernel, &meta, Some(&companion)).unwrap();
+        assert_eq!(written as usize, HEADER_BYTES + sizes.total);
+        assert!(sizes.companion > 0, "companion block must be accounted");
+        let b = ModelBundle::load(&path).unwrap();
+        let c = b.companion.as_ref().expect("companion must round-trip");
+        assert_eq!(c.depth, 3);
+        assert_eq!(c.subsample, 0.5);
+        assert_eq!(c.forest.trees.len(), companion.forest.trees.len());
+        assert_eq!(c.kernel.q, companion.kernel.q);
+        assert_eq!(c.kernel.w_transpose(), companion.kernel.w_transpose());
+        // The main model is untouched by the companion block.
+        assert_eq!(b.kernel.q, kernel.q);
+        if mmap::supported() {
+            let (mapped, mm) = ModelBundle::load_with_mode(&path, MmapMode::On).unwrap();
+            assert_eq!(mm, "mmap");
+            let mc = mapped.companion.as_ref().unwrap();
+            assert!(mc.kernel.q.indptr.is_mapped(), "companion factors must borrow the mapping");
+            assert_eq!(mc.kernel.q, companion.kernel.q);
+            assert_eq!(mc.kernel.w_transpose(), companion.kernel.w_transpose());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantized_companion_roundtrips() {
+        let (forest, mut kernel, meta) = fixture();
+        kernel.set_quantization(Some(QuantMode::Int8));
+        let mut companion = companion_fixture(&forest);
+        companion.kernel.set_quantization(Some(QuantMode::Int8));
+        let path = tmpfile("companion-quant");
+        save_with_sizes(&path, &forest, &kernel, &meta, Some(&companion)).unwrap();
+        let b = ModelBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let c = b.companion.unwrap();
+        assert_eq!(c.kernel.quantization(), Some(QuantMode::Int8));
+        let qf_orig = companion.kernel.quantized().unwrap();
+        let qf_load = c.kernel.quantized().unwrap();
+        assert_eq!(qf_load.q, qf_orig.q);
+        assert_eq!(qf_load.wt, qf_orig.wt);
+    }
+
+    #[test]
+    fn companion_bundle_resaves_bitwise() {
+        let (forest, kernel, meta) = fixture();
+        let companion = companion_fixture(&forest);
+        let path = tmpfile("companion-resave");
+        save_with_sizes(&path, &forest, &kernel, &meta, Some(&companion)).unwrap();
+        let original = std::fs::read(&path).unwrap();
+        let b = ModelBundle::load(&path).unwrap();
+        b.save(&path).unwrap();
+        let resaved = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(original, resaved, "load → save must reproduce the file bitwise");
     }
 
     #[test]

@@ -37,6 +37,16 @@
 //!   embedding fitted at startup),
 //!   `GET /healthz` and `GET /stats` (request counts, batch-size
 //!   histogram, p50/p95/p99 latency — see [`stats`]).
+//! * **Latency tiers** — a v4 bundle can carry a shallow, subsampled
+//!   *companion forest* (`fit --companion depth=D,subsample=F`).
+//!   `/predict` requests pick a tier per request via `"budget"`:
+//!   `"full"` (default) answers from the main model, `"cheap"` from the
+//!   companion (a fraction of the cost, bounded accuracy loss), and
+//!   `"auto"` is admission control — full until the batch queue can no
+//!   longer absorb the request, then shed to the cheap tier instead of
+//!   queueing behind a saturated server. `/neighbors` and `/embed` are
+//!   always full-tier. Responses carry `"tier"`; `/stats` reports
+//!   per-tier counts and latency reservoirs.
 //! * **Hot bundle swap** — the model plane is "always-up". A server
 //!   started from `--model` keeps its source path: `POST /admin/reload`
 //!   (or `SIGHUP`) re-loads the bundle file — zero-copy mapped when the
@@ -121,6 +131,25 @@ enum JobKind {
     Neighbors = 2,
 }
 
+/// Which model answers a job. `/predict` picks per request via
+/// `"budget"` (`"cheap"`/`"full"`/`"auto"`); `/neighbors` and `/embed`
+/// are always full-tier — proximity structure comes from the main
+/// forest only.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Full,
+    Cheap,
+}
+
+impl Tier {
+    fn name(self) -> &'static str {
+        match self {
+            Tier::Full => "full",
+            Tier::Cheap => "cheap",
+        }
+    }
+}
+
 enum Reply {
     Predict { label: u32, scores: Vec<f32> },
     Embed { coords: Vec<f32> },
@@ -131,6 +160,7 @@ enum Reply {
 /// generation of the model snapshot that executed it.
 struct Job {
     kind: JobKind,
+    tier: Tier,
     x: Vec<f32>,
     /// `/neighbors` only: how many neighbors to return.
     k: usize,
@@ -415,16 +445,24 @@ fn batch_loop(st: Arc<ServerState>) {
     while let Some(batch) = st.queue.drain_batch(st.cfg.max_batch, st.cfg.linger) {
         st.stats.record_batch(batch.len());
         let ms = st.model();
-        let mut groups: [Vec<Job>; 3] = Default::default();
+        // A tile must be homogeneous in (endpoint, tier): slots 0-2 are
+        // the full-tier endpoints, slot 3 is cheap-tier `/predict` (the
+        // only endpoint the companion model serves).
+        let mut groups: [Vec<Job>; 4] = Default::default();
         for job in batch {
-            groups[job.kind as usize].push(job);
+            let slot = match (job.kind, job.tier) {
+                (JobKind::Predict, Tier::Cheap) => 3,
+                (kind, _) => kind as usize,
+            };
+            groups[slot].push(job);
         }
         for group in groups {
             if group.is_empty() {
                 continue;
             }
             let kind = group[0].kind;
-            match run_tile(&ms, kind, &group) {
+            let tier = group[0].tier;
+            match run_tile(&ms, kind, tier, &group) {
                 Ok(replies) => {
                     for (job, reply) in group.into_iter().zip(replies) {
                         let _ = job.tx.send(Ok((ms.generation, reply)));
@@ -444,10 +482,18 @@ fn batch_loop(st: Arc<ServerState>) {
 /// Execute one homogeneous tile: route the whole batch through the
 /// forest once, then answer every query from the shared products. Each
 /// output row depends only on its own query row, so results are
-/// bitwise-independent of how requests were batched.
-fn run_tile(ms: &ModelState, kind: JobKind, group: &[Job]) -> Result<Vec<Reply>> {
-    let kernel = &ms.bundle.kernel;
-    let forest = &ms.bundle.forest;
+/// bitwise-independent of how requests were batched. Cheap-tier tiles
+/// swap in the companion forest + kernel; the math is identical.
+fn run_tile(ms: &ModelState, kind: JobKind, tier: Tier, group: &[Job]) -> Result<Vec<Reply>> {
+    let (kernel, forest) = match tier {
+        Tier::Full => (&ms.bundle.kernel, &ms.bundle.forest),
+        Tier::Cheap => {
+            let c = ms.bundle.companion.as_ref().ok_or_else(|| {
+                anyhow!("cheap tier requested but the bundle has no companion model")
+            })?;
+            (&c.kernel, &c.forest)
+        }
+    };
     let b = group.len();
     let mut x = Vec::with_capacity(b * ms.d);
     for job in group {
@@ -706,6 +752,7 @@ fn parse_queries(j: &Json, d: usize) -> Result<Vec<Vec<f32>>> {
 fn submit(
     st: &ServerState,
     kind: JobKind,
+    tier: Tier,
     rows: Vec<Vec<f32>>,
     k: usize,
 ) -> Result<Vec<(u64, Reply)>> {
@@ -713,7 +760,7 @@ fn submit(
     for x in rows {
         let (tx, rx) = mpsc::channel();
         st.queue
-            .push(Job { kind, x, k, tx })
+            .push(Job { kind, tier, x, k, tx })
             .map_err(|_| anyhow!("server is shutting down"))?;
         rxs.push(rx);
     }
@@ -833,9 +880,20 @@ fn healthz_body(st: &ServerState) -> String {
     let ms = st.model();
     let m = &ms.bundle.meta;
     let k = &ms.bundle.kernel;
+    let companion = match &ms.bundle.companion {
+        Some(c) => format!(
+            "{{\"depth\": {}, \"subsample\": {}, \"trees\": {}, \"leaves\": {}}}",
+            c.depth,
+            json_f32(c.subsample),
+            c.forest.trees.len(),
+            c.kernel.ctx.l,
+        ),
+        None => "null".into(),
+    };
     format!(
         "{{\"status\": \"ok\", \"model\": {{\"dataset\": {}, \"n\": {}, \"trees\": {}, \
          \"kind\": {}, \"forest\": {}, \"classes\": {}, \"features\": {}, \"leaves\": {}}}, \
+         \"companion\": {companion}, \
          \"neighbors_source\": {}, \"embed_dims\": {}, \"model_generation\": {}, \
          \"load_mode\": {}, \"reloadable\": {}}}",
         json_escape(&m.dataset),
@@ -854,6 +912,44 @@ fn healthz_body(st: &ServerState) -> String {
     )
 }
 
+/// Pick the serving tier for one `/predict` request. `"full"` (the
+/// default) and `"cheap"` are explicit; `"auto"` is the admission
+/// valve — it serves full until the batch queue can no longer absorb
+/// the request, then degrades to the companion tier instead of letting
+/// the caller block behind a saturated full-tier queue. Returns the
+/// tier and whether this was a pressure shed.
+fn choose_tier(
+    st: &ServerState,
+    budget: &str,
+    n_rows: usize,
+    has_companion: bool,
+) -> Result<(Tier, bool)> {
+    match budget {
+        "full" => Ok((Tier::Full, false)),
+        "cheap" => {
+            if !has_companion {
+                bail!(
+                    "budget \"cheap\" needs a bundle with a companion model \
+                     (re-fit with --companion depth=D,subsample=F)"
+                );
+            }
+            Ok((Tier::Cheap, false))
+        }
+        "auto" => {
+            st.stats.predict_auto.fetch_add(1, Ordering::Relaxed);
+            let pressured = st.queue.len() + n_rows > st.queue.capacity();
+            if has_companion && pressured {
+                Ok((Tier::Cheap, true))
+            } else {
+                Ok((Tier::Full, false))
+            }
+        }
+        other => {
+            bail!("unknown budget {other:?} (expected \"cheap\", \"full\", or \"auto\")")
+        }
+    }
+}
+
 fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     let ms = st.model();
     let c = ms.bundle.kernel.ctx.n_classes;
@@ -862,7 +958,22 @@ fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     }
     let body = parse_body(req)?;
     let rows = parse_queries(&body, ms.d)?;
-    let replies = submit(st, JobKind::Predict, rows, 0)?;
+    let budget = match body.get("budget") {
+        None => "full",
+        Some(j) => j.as_str().ok_or_else(|| anyhow!("\"budget\" must be a string"))?,
+    };
+    let (tier, shed) = choose_tier(st, budget, rows.len(), ms.bundle.companion.is_some())?;
+    if shed {
+        st.stats.shed_to_cheap.fetch_add(1, Ordering::Relaxed);
+    }
+    let (tier_counter, tier_latency) = match tier {
+        Tier::Full => (&st.stats.predict_full, &st.stats.full_tier_latency),
+        Tier::Cheap => (&st.stats.predict_cheap, &st.stats.cheap_tier_latency),
+    };
+    tier_counter.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let replies = submit(st, JobKind::Predict, tier, rows, 0)?;
+    tier_latency.record(t0.elapsed().as_secs_f64());
     let gen = replies.first().map_or(ms.generation, |r| r.0);
     let mut preds = String::from("[");
     let mut scores = String::from("[");
@@ -881,7 +992,9 @@ fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     preds.push(']');
     scores.push(']');
     Ok(format!(
-        "{{\"predictions\": {preds}, \"scores\": {scores}, \"model_generation\": {gen}}}"
+        "{{\"predictions\": {preds}, \"scores\": {scores}, \"tier\": \"{}\", \
+         \"model_generation\": {gen}}}",
+        tier.name(),
     ))
 }
 
@@ -889,7 +1002,7 @@ fn embed_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     let ms = st.model();
     let body = parse_body(req)?;
     let rows = parse_queries(&body, ms.d)?;
-    let replies = submit(st, JobKind::Embed, rows, 0)?;
+    let replies = submit(st, JobKind::Embed, Tier::Full, rows, 0)?;
     let gen = replies.first().map_or(ms.generation, |r| r.0);
     let mut coords = String::from("[");
     for (i, (_, r)) in replies.iter().enumerate() {
@@ -960,7 +1073,7 @@ fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     if k > n {
         bail!("k={k} exceeds the {n}-row gallery");
     }
-    let replies = submit(st, JobKind::Neighbors, rows, k)?;
+    let replies = submit(st, JobKind::Neighbors, Tier::Full, rows, k)?;
     match &replies[0] {
         (gen, Reply::Neighbors { ids, proximities, dists }) => Ok(format!(
             "{{\"k\": {k}, \"ids\": {}, \"proximities\": {}, \"dists\": {}, \

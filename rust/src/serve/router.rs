@@ -9,12 +9,19 @@
 //! verbatim (routed bytes == direct bytes).
 //!
 //! * `POST /predict`, `/embed`, and OOS `/neighbors` queries are
-//!   **round-robin**: any replica answers any query.
+//!   **round-robin**: any replica answers any query. `/predict` bodies
+//!   may carry a `"budget"` SLO (`cheap`/`full`/`auto`); the router
+//!   tallies the requested tier in its own stats and forwards the body
+//!   untouched — cheap-tier traffic fans out to any replica (every
+//!   replica holds the same companion), and the backend's admission
+//!   control makes the final `auto` call from its local queue depth.
 //! * `/neighbors` **row-mode** lookups go to the row-range *owner* —
 //!   the static partition of `[0, N)` into R contiguous ranges. Any
 //!   replica could answer (they are full copies), but pinning a row to
 //!   one replica keeps that replica's single-stripe shard cache hot
 //!   for its range instead of thrashing all caches over all stripes.
+//!   Row pinning is inherently a full-tier concern: `/neighbors` never
+//!   takes a budget and always runs the full factors.
 //! * `GET /stats` merges the fleet: summed counters via
 //!   [`stats::merge_counter_totals`] plus each backend's full document
 //!   (latency percentiles aren't additive, so they stay per-backend).
@@ -228,6 +235,7 @@ fn route(st: &RouterState, req: &http::Request) -> Response {
         ("POST", "/admin/reload") => reload_fleet(st),
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
+            note_predict_budget(st, &req.body);
             forward(st, rr_next(st), "/predict", &req.body)
         }
         ("POST", "/embed") => {
@@ -248,6 +256,28 @@ fn route(st: &RouterState, req: &http::Request) -> Response {
 
 fn rr_next(st: &RouterState) -> usize {
     st.rr.fetch_add(1, Ordering::Relaxed) % st.backends.len()
+}
+
+/// Tally the tier a `/predict` body *requests* in the router's own
+/// stats. The router forwards the body verbatim and cannot see which
+/// tier the backend ultimately serves (`auto` resolves against the
+/// backend's local queue), so: `full`/`cheap` count as the requested
+/// tier, `auto` counts only `predict_auto`, and malformed bodies or
+/// unknown budgets count nothing — the backend's 400 is authoritative.
+/// Fleet-wide served-by-tier truth lives in the backends' counters,
+/// which `/stats` sums under `"totals"`.
+fn note_predict_budget(st: &RouterState, body: &[u8]) {
+    let Some(j) = std::str::from_utf8(body).ok().and_then(|text| Json::parse(text).ok())
+    else {
+        return;
+    };
+    match j.get("budget").and_then(Json::as_str) {
+        None => st.stats.predict_full.fetch_add(1, Ordering::Relaxed),
+        Some("full") => st.stats.predict_full.fetch_add(1, Ordering::Relaxed),
+        Some("cheap") => st.stats.predict_cheap.fetch_add(1, Ordering::Relaxed),
+        Some("auto") => st.stats.predict_auto.fetch_add(1, Ordering::Relaxed),
+        Some(_) => 0,
+    };
 }
 
 /// The backend owning the `"row"` in a row-mode `/neighbors` body, or

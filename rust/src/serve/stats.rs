@@ -17,6 +17,62 @@ struct LatencyRing {
     next: usize,
 }
 
+/// A bounded latency reservoir (most recent [`RESERVOIR`] samples win)
+/// with a monotonic total. One instance covers all requests; the tier
+/// layer keeps one more per serving tier.
+pub struct Reservoir {
+    ring: Mutex<LatencyRing>,
+    total: AtomicU64,
+}
+
+impl Reservoir {
+    fn new() -> Reservoir {
+        Reservoir { ring: Mutex::new(LatencyRing::default()), total: AtomicU64::new(0) }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&self, secs: f64) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        if ring.samples.len() < RESERVOIR {
+            ring.samples.push(secs);
+        } else {
+            let slot = ring.next;
+            ring.samples[slot] = secs;
+        }
+        ring.next = (ring.next + 1) % RESERVOIR;
+    }
+
+    /// Samples ever recorded (not capped at the reservoir size).
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// `(p50, p95, p99)` over the reservoir, `None` when empty.
+    pub fn percentiles(&self) -> Option<(f64, f64, f64)> {
+        let ring = self.ring.lock().unwrap();
+        if ring.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = ring.samples.clone();
+        drop(ring);
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| sorted[(((sorted.len() - 1) as f64) * q).round() as usize];
+        Some((pick(0.50), pick(0.95), pick(0.99)))
+    }
+
+    fn to_json(&self) -> String {
+        let (p50, p95, p99) = self.percentiles().unwrap_or((0.0, 0.0, 0.0));
+        format!(
+            "{{\"samples\": {}, \"p50\": {:.6}, \"p95\": {:.6}, \"p99\": {:.6}}}",
+            self.count(),
+            p50,
+            p95,
+            p99,
+        )
+    }
+}
+
 /// Shared serving counters. All methods are `&self` (atomics + one
 /// short-lived mutex), so connection threads record without contention
 /// on the hot path.
@@ -30,11 +86,23 @@ pub struct Stats {
     /// Accepted TCP connections — with keep-alive this grows much
     /// slower than the request counters, which is the whole point.
     pub connections: AtomicU64,
+    /// `/predict` requests *served* on the full tier.
+    pub predict_full: AtomicU64,
+    /// `/predict` requests *served* on the cheap (companion) tier.
+    pub predict_cheap: AtomicU64,
+    /// `/predict` requests that *asked* for `"budget": "auto"` (the
+    /// router counts these without knowing the serving outcome).
+    pub predict_auto: AtomicU64,
+    /// Auto requests degraded to the cheap tier under queue pressure
+    /// (a subset of `predict_cheap`).
+    pub shed_to_cheap: AtomicU64,
+    /// Queue-wait + execution latency per serving tier.
+    pub full_tier_latency: Reservoir,
+    pub cheap_tier_latency: Reservoir,
     batch_hist: [AtomicU64; HIST_BUCKETS],
     batches: AtomicU64,
     batched_jobs: AtomicU64,
-    latencies: Mutex<LatencyRing>,
-    total_latency_samples: AtomicU64,
+    latency: Reservoir,
 }
 
 impl Stats {
@@ -47,11 +115,16 @@ impl Stats {
             stats: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             connections: AtomicU64::new(0),
+            predict_full: AtomicU64::new(0),
+            predict_cheap: AtomicU64::new(0),
+            predict_auto: AtomicU64::new(0),
+            shed_to_cheap: AtomicU64::new(0),
+            full_tier_latency: Reservoir::new(),
+            cheap_tier_latency: Reservoir::new(),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             batches: AtomicU64::new(0),
             batched_jobs: AtomicU64::new(0),
-            latencies: Mutex::new(LatencyRing::default()),
-            total_latency_samples: AtomicU64::new(0),
+            latency: Reservoir::new(),
         }
     }
 
@@ -65,28 +138,12 @@ impl Stats {
 
     /// Record one request's end-to-end latency (seconds).
     pub fn record_latency(&self, secs: f64) {
-        self.total_latency_samples.fetch_add(1, Ordering::Relaxed);
-        let mut ring = self.latencies.lock().unwrap();
-        if ring.samples.len() < RESERVOIR {
-            ring.samples.push(secs);
-        } else {
-            let slot = ring.next;
-            ring.samples[slot] = secs;
-        }
-        ring.next = (ring.next + 1) % RESERVOIR;
+        self.latency.record(secs);
     }
 
     /// `(p50, p95, p99)` over the reservoir, `None` when empty.
     pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
-        let ring = self.latencies.lock().unwrap();
-        if ring.samples.is_empty() {
-            return None;
-        }
-        let mut sorted = ring.samples.clone();
-        drop(ring);
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pick = |q: f64| sorted[(((sorted.len() - 1) as f64) * q).round() as usize];
-        Some((pick(0.50), pick(0.95), pick(0.99)))
+        self.latency.percentiles()
     }
 
     /// The `GET /stats` document.
@@ -111,16 +168,16 @@ impl Stats {
             hist.push_str(&format!("\"{label}\": {v}"));
         }
         hist.push('}');
-        let (p50, p95, p99) = self.latency_percentiles().unwrap_or((0.0, 0.0, 0.0));
         let batches = g(&self.batches);
         let jobs = g(&self.batched_jobs);
         format!(
             "{{\"requests\": {{\"predict\": {}, \"neighbors\": {}, \"embed\": {}, \
              \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \"connections\": {}, \
+             \"tiers\": {{\"predict_full\": {}, \"predict_cheap\": {}, \"predict_auto\": {}, \
+             \"shed_to_cheap\": {}, \"full_latency_secs\": {}, \"cheap_latency_secs\": {}}}, \
              \"batches\": {batches}, \"batched_jobs\": {jobs}, \
              \"mean_batch\": {:.3}, \"batch_size_hist\": {hist}, \
-             \"latency_secs\": {{\"samples\": {}, \"p50\": {:.6}, \"p95\": {:.6}, \
-             \"p99\": {:.6}}}}}",
+             \"latency_secs\": {}}}",
             g(&self.predict),
             g(&self.neighbors),
             g(&self.embed),
@@ -128,11 +185,14 @@ impl Stats {
             g(&self.stats),
             g(&self.errors),
             g(&self.connections),
+            g(&self.predict_full),
+            g(&self.predict_cheap),
+            g(&self.predict_auto),
+            g(&self.shed_to_cheap),
+            self.full_tier_latency.to_json(),
+            self.cheap_tier_latency.to_json(),
             if batches > 0 { jobs as f64 / batches as f64 } else { 0.0 },
-            g(&self.total_latency_samples),
-            p50,
-            p95,
-            p99,
+            self.latency.to_json(),
         )
     }
 }
@@ -162,7 +222,8 @@ pub fn merge_counter_totals(docs: &[Json]) -> String {
     format!(
         "{{\"requests\": {{\"predict\": {}, \"neighbors\": {}, \"embed\": {}, \
          \"healthz\": {}, \"stats\": {}}}, \"errors\": {}, \"connections\": {}, \
-         \"batches\": {}, \"batched_jobs\": {}}}",
+         \"tiers\": {{\"predict_full\": {}, \"predict_cheap\": {}, \"predict_auto\": {}, \
+         \"shed_to_cheap\": {}}}, \"batches\": {}, \"batched_jobs\": {}}}",
         sum(&["requests", "predict"]),
         sum(&["requests", "neighbors"]),
         sum(&["requests", "embed"]),
@@ -170,6 +231,10 @@ pub fn merge_counter_totals(docs: &[Json]) -> String {
         sum(&["requests", "stats"]),
         sum(&["errors"]),
         sum(&["connections"]),
+        sum(&["tiers", "predict_full"]),
+        sum(&["tiers", "predict_cheap"]),
+        sum(&["tiers", "predict_auto"]),
+        sum(&["tiers", "shed_to_cheap"]),
         sum(&["batches"]),
         sum(&["batched_jobs"]),
     )
@@ -211,8 +276,50 @@ mod tests {
         for i in 0..(RESERVOIR + 100) {
             s.record_latency(i as f64);
         }
-        assert_eq!(s.latencies.lock().unwrap().samples.len(), RESERVOIR);
-        assert_eq!(s.total_latency_samples.load(Ordering::Relaxed), (RESERVOIR + 100) as u64);
+        assert_eq!(s.latency.ring.lock().unwrap().samples.len(), RESERVOIR);
+        assert_eq!(s.latency.count(), (RESERVOIR + 100) as u64);
+    }
+
+    #[test]
+    fn tier_counters_and_reservoirs_render() {
+        let s = Stats::new();
+        s.predict_full.fetch_add(4, Ordering::Relaxed);
+        s.predict_cheap.fetch_add(2, Ordering::Relaxed);
+        s.predict_auto.fetch_add(3, Ordering::Relaxed);
+        s.shed_to_cheap.fetch_add(1, Ordering::Relaxed);
+        s.full_tier_latency.record(0.010);
+        s.cheap_tier_latency.record(0.001);
+        let j = Json::parse(&s.to_json()).unwrap();
+        let tier = |k: &str| j.get("tiers").and_then(|t| t.get(k)).and_then(Json::as_usize);
+        assert_eq!(tier("predict_full"), Some(4));
+        assert_eq!(tier("predict_cheap"), Some(2));
+        assert_eq!(tier("predict_auto"), Some(3));
+        assert_eq!(tier("shed_to_cheap"), Some(1));
+        let samples = |k: &str| {
+            j.get("tiers")
+                .and_then(|t| t.get(k))
+                .and_then(|r| r.get("samples"))
+                .and_then(Json::as_usize)
+        };
+        assert_eq!(samples("full_latency_secs"), Some(1));
+        assert_eq!(samples("cheap_latency_secs"), Some(1));
+    }
+
+    #[test]
+    fn tier_counters_merge_across_documents() {
+        let a = Stats::new();
+        a.predict_cheap.fetch_add(2, Ordering::Relaxed);
+        a.shed_to_cheap.fetch_add(1, Ordering::Relaxed);
+        let b = Stats::new();
+        b.predict_cheap.fetch_add(3, Ordering::Relaxed);
+        b.predict_full.fetch_add(7, Ordering::Relaxed);
+        let docs =
+            vec![Json::parse(&a.to_json()).unwrap(), Json::parse(&b.to_json()).unwrap()];
+        let t = Json::parse(&merge_counter_totals(&docs)).unwrap();
+        let tier = |k: &str| t.get("tiers").and_then(|x| x.get(k)).and_then(Json::as_usize);
+        assert_eq!(tier("predict_cheap"), Some(5));
+        assert_eq!(tier("predict_full"), Some(7));
+        assert_eq!(tier("shed_to_cheap"), Some(1));
     }
 
     #[test]

@@ -35,7 +35,7 @@ fn fixture(seed: u64) -> ModelBundle {
         Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
     let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
     let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
-    ModelBundle { forest, kernel, meta }
+    ModelBundle { forest, kernel, meta, companion: None }
 }
 
 fn serve_cfg() -> ServeConfig {

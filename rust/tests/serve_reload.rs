@@ -31,7 +31,7 @@ fn fixture(seed: u64) -> ModelBundle {
         Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
     let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
     let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
-    ModelBundle { forest, kernel, meta }
+    ModelBundle { forest, kernel, meta, companion: None }
 }
 
 fn serve_cfg() -> ServeConfig {
@@ -247,7 +247,7 @@ fn reload_without_a_model_source_is_400_and_shape_changes_are_rejected() {
         Forest::train(&data, &TrainConfig { n_trees: TREES, seed: 77, ..Default::default() });
     let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
     let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed: 77, trees: TREES };
-    ModelBundle { forest, kernel, meta }.save(&path).unwrap();
+    ModelBundle { forest, kernel, meta, companion: None }.save(&path).unwrap();
 
     let (status, out) = http::http_request(&addr, "POST", "/admin/reload", "").unwrap();
     assert_eq!(status, 400, "{out}");

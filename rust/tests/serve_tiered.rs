@@ -1,0 +1,331 @@
+//! Latency-tiered serving end-to-end: a v4 bundle carrying a shallow
+//! companion forest serves `/predict` at per-request budgets —
+//! `"cheap"` runs the companion, `"full"` (and the default) runs the
+//! main model **bitwise-identically to a tierless server**, and
+//! `"auto"` sheds to the cheap tier under queue pressure with zero
+//! 5xx. The CI `serve-tier-matrix` job re-runs the bitwise test across
+//! budget × mmap cells via `FK_TEST_BUDGET` / `FK_TEST_MMAP`.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{BundleMeta, CompanionModel, MmapMode, ModelBundle};
+use forest_kernels::runtime::json::Json;
+use forest_kernels::serve::{http, ServeConfig, Server};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+use forest_kernels::Dataset;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+const N: usize = 160;
+const D: usize = 5;
+const C: usize = 3;
+const TREES: usize = 12;
+const COMPANION_DEPTH: usize = 3;
+const COMPANION_SUBSAMPLE: f32 = 0.5;
+
+/// Deterministic two-tier fixture: the same full model as the tierless
+/// fixture (same seed → bitwise-identical forest + factors) plus a
+/// depth-capped, subsampled companion.
+fn fixture(seed: u64, with_companion: bool) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, C, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    let companion = with_companion.then(|| {
+        let ccfg = TrainConfig {
+            n_trees: TREES,
+            seed,
+            max_depth: Some(COMPANION_DEPTH),
+            max_samples: Some((N as f32 * COMPANION_SUBSAMPLE) as usize),
+            ..Default::default()
+        };
+        let c_forest = Forest::train(&data, &ccfg);
+        let c_kernel = ForestKernel::fit(&c_forest, &data, ProximityKind::Kerf);
+        CompanionModel {
+            forest: c_forest,
+            kernel: c_kernel,
+            depth: COMPANION_DEPTH,
+            subsample: COMPANION_SUBSAMPLE,
+        }
+    });
+    ModelBundle { forest, kernel, meta, companion }
+}
+
+/// Route the fixture through a saved file when the CI matrix asks for
+/// a specific bundle bind mode (`FK_TEST_MMAP=on|off`); plain
+/// in-process fixtures otherwise.
+fn bind_fixture(seed: u64, with_companion: bool, tag: &str) -> ModelBundle {
+    let mode = match std::env::var("FK_TEST_MMAP").ok().as_deref() {
+        Some("on") => Some(MmapMode::On),
+        Some("off") => Some(MmapMode::Off),
+        _ => None,
+    };
+    let bundle = fixture(seed, with_companion);
+    let Some(mode) = mode else { return bundle };
+    let path = std::env::temp_dir().join(format!(
+        "fk-serve-tiered-{tag}-{}-{}.fkb",
+        std::process::id(),
+        seed
+    ));
+    bundle.save(&path).unwrap();
+    let (loaded, _) = ModelBundle::load_with_mode(&path, mode).unwrap();
+    std::fs::remove_file(&path).ok();
+    loaded
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn row_json(data: &Dataset, i: usize) -> String {
+    let mut s = String::from("[");
+    for f in 0..data.d {
+        if f > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}", data.x(i, f)));
+    }
+    s.push(']');
+    s
+}
+
+fn tier_of(resp: &str) -> String {
+    Json::parse(resp)
+        .unwrap()
+        .get("tier")
+        .and_then(Json::as_str)
+        .expect("predict response carries a tier")
+        .to_string()
+}
+
+fn tier_counter(stats: &Json, key: &str) -> usize {
+    stats.get("tiers").and_then(|t| t.get(key)).and_then(Json::as_usize).unwrap()
+}
+
+/// The acceptance-criterion test, and the body of every CI
+/// `serve-tier-matrix` cell: full-tier responses from a tiered server
+/// are byte-for-byte the tierless server's responses, the matrix
+/// budget (`FK_TEST_BUDGET`, default `full`) is served without errors,
+/// and a cheap-budget answer really comes from the companion.
+#[test]
+fn full_tier_matches_tierless_server_bitwise() {
+    let tiered = Server::bind(bind_fixture(11, true, "tiered"), None, serve_cfg()).unwrap();
+    let tierless = Server::bind(bind_fixture(11, false, "plain"), None, serve_cfg()).unwrap();
+    let (t_addr, p_addr) = (tiered.addr(), tierless.addr());
+    let (t_handle, p_handle) = (tiered.spawn(), tierless.spawn());
+
+    let budget = std::env::var("FK_TEST_BUDGET").unwrap_or_else(|_| "full".into());
+    let queries = synth::gaussian_blobs(10, D, C, 2.2, 999);
+    for i in 0..queries.n {
+        let row = row_json(&queries, i);
+        // Explicit full budget and the budget-less default must both be
+        // byte-identical to the tierless server's answer.
+        for body in [
+            format!("{{\"x\": {row}}}"),
+            format!("{{\"x\": {row}, \"budget\": \"full\"}}"),
+        ] {
+            let (ts, tr) = http::http_request(&t_addr, "POST", "/predict", &body).unwrap();
+            // The tierless server ignores any budget-independent
+            // framing: compare against its plain-body answer.
+            let plain = format!("{{\"x\": {row}}}");
+            let (ps, pr) = http::http_request(&p_addr, "POST", "/predict", &plain).unwrap();
+            assert_eq!((ts, ps), (200, 200), "query {i}: {tr} / {pr}");
+            assert_eq!(tr, pr, "query {i}: full tier differs from the tierless server");
+            assert_eq!(tier_of(&tr), "full", "query {i}");
+        }
+        // The matrix cell's budget is always serveable on this bundle.
+        let body = format!("{{\"x\": {row}, \"budget\": \"{budget}\"}}");
+        let (status, resp) = http::http_request(&t_addr, "POST", "/predict", &body).unwrap();
+        assert_eq!(status, 200, "budget {budget}, query {i}: {resp}");
+        match budget.as_str() {
+            "cheap" => assert_eq!(tier_of(&resp), "cheap", "query {i}"),
+            // An unpressured queue never sheds: auto serves full.
+            _ => assert_eq!(tier_of(&resp), "full", "query {i}"),
+        }
+    }
+
+    // Cheap answers come from the companion: same query, different
+    // model, so the scores must differ from the full tier's.
+    let row = row_json(&queries, 0);
+    let (status, cheap) = http::http_request(
+        &t_addr,
+        "POST",
+        "/predict",
+        &format!("{{\"x\": {row}, \"budget\": \"cheap\"}}"),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{cheap}");
+    assert_eq!(tier_of(&cheap), "cheap");
+    let (_, full) = http::http_request(
+        &t_addr,
+        "POST",
+        "/predict",
+        &format!("{{\"x\": {row}, \"budget\": \"full\"}}"),
+    )
+    .unwrap();
+    let scores = |resp: &str| format!("{:?}", Json::parse(resp).unwrap().get("scores"));
+    assert_ne!(
+        scores(&cheap),
+        scores(&full),
+        "cheap tier returned the full model's scores — companion not in use"
+    );
+
+    // /healthz advertises the companion so routers/operators can see
+    // which replicas are tier-capable.
+    let (status, resp) = http::http_request(&t_addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&resp).unwrap();
+    let companion = j.get("companion").expect("healthz carries a companion object");
+    assert_eq!(companion.get("depth").and_then(Json::as_usize), Some(COMPANION_DEPTH));
+    assert_eq!(companion.get("trees").and_then(Json::as_usize), Some(TREES));
+    let (_, resp) = http::http_request(&p_addr, "GET", "/healthz", "").unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert!(
+        matches!(j.get("companion"), Some(Json::Null)),
+        "tierless healthz must report companion: null"
+    );
+
+    t_handle.stop();
+    p_handle.stop();
+}
+
+#[test]
+fn cheap_budget_without_companion_is_rejected_cleanly() {
+    let server = Server::bind(fixture(12, false), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+    let queries = synth::gaussian_blobs(1, D, C, 2.2, 333);
+    let row = row_json(&queries, 0);
+
+    let body = format!("{{\"x\": {row}, \"budget\": \"cheap\"}}");
+    let (status, resp) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("companion"), "unhelpful error: {resp}");
+
+    // Unknown budgets are 400s; auto without a companion serves full.
+    let body = format!("{{\"x\": {row}, \"budget\": \"luxurious\"}}");
+    let (status, _) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(status, 400);
+    let body = format!("{{\"x\": {row}, \"budget\": \"auto\"}}");
+    let (status, resp) = http::http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(tier_of(&resp), "full");
+
+    handle.stop();
+}
+
+/// The admission-control contract: hammered past the bounded queue's
+/// capacity, `auto` requests degrade to the cheap tier — never a 5xx,
+/// never a timeout — and the `/stats` tier counters stay mutually
+/// consistent while strictly growing.
+#[test]
+fn auto_sheds_to_cheap_under_queue_pressure_with_zero_errors() {
+    // queue_depth 2 with 8-row requests: every auto request sees
+    // queue_len + 8 > 2 and sheds deterministically.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        linger: Duration::from_millis(1),
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let server = Server::bind(fixture(13, true), None, cfg).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    let queries = synth::gaussian_blobs(8, D, C, 2.2, 444);
+    let mut batch = String::from("{\"x\": [");
+    for i in 0..queries.n {
+        if i > 0 {
+            batch.push_str(", ");
+        }
+        batch.push_str(&row_json(&queries, i));
+    }
+    let auto_body = format!("{batch}], \"budget\": \"auto\"}}");
+    let full_body = format!("{batch}], \"budget\": \"full\"}}");
+
+    let clients = 4;
+    let per_client = 8;
+    let five_xx = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                for _ in 0..per_client {
+                    let (status, resp) =
+                        http::http_request(&addr, "POST", "/predict", &auto_body).unwrap();
+                    if status >= 500 {
+                        five_xx.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        assert_eq!(status, 200, "{resp}");
+                        if tier_of(&resp) == "cheap" {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(five_xx.load(Ordering::Relaxed), 0, "admission control must not 5xx");
+    let total_auto = clients * per_client;
+    assert_eq!(
+        shed.load(Ordering::Relaxed),
+        total_auto,
+        "every over-capacity auto request should shed to the cheap tier"
+    );
+
+    // A couple of explicit full requests so both tiers have traffic.
+    for _ in 0..2 {
+        let (status, resp) =
+            http::http_request(&addr, "POST", "/predict", &full_body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        assert_eq!(tier_of(&resp), "full");
+    }
+
+    // Tier counters: mutually consistent now, and monotone between
+    // scrapes.
+    let scrape = || {
+        let (status, resp) = http::http_request(&addr, "GET", "/stats", "").unwrap();
+        assert_eq!(status, 200);
+        Json::parse(&resp).unwrap()
+    };
+    let j = scrape();
+    let (pf, pc) = (tier_counter(&j, "predict_full"), tier_counter(&j, "predict_cheap"));
+    let (pa, sh) = (tier_counter(&j, "predict_auto"), tier_counter(&j, "shed_to_cheap"));
+    let predict_total = j
+        .get("requests")
+        .and_then(|r| r.get("predict"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert_eq!(pa, total_auto, "every auto request is counted as requested-auto");
+    assert_eq!(sh, total_auto, "every auto request shed under pressure");
+    assert_eq!(pc, total_auto, "shed requests are served (and counted) cheap");
+    assert_eq!(pf, 2, "explicit full requests served full");
+    assert_eq!(pf + pc, predict_total, "served-by-tier counts must sum to /predict total");
+    assert!(sh <= pc, "sheds are a subset of cheap-served requests");
+    let samples = |key: &str| {
+        j.get("tiers")
+            .and_then(|t| t.get(key))
+            .and_then(|l| l.get("samples"))
+            .and_then(Json::as_usize)
+            .unwrap()
+    };
+    assert_eq!(samples("cheap_latency_secs"), pc);
+    assert_eq!(samples("full_latency_secs"), pf);
+
+    let j2 = scrape();
+    for key in ["predict_full", "predict_cheap", "predict_auto", "shed_to_cheap"] {
+        assert!(
+            tier_counter(&j2, key) >= tier_counter(&j, key),
+            "{key} went backwards between scrapes"
+        );
+    }
+
+    handle.stop();
+}
