@@ -52,6 +52,7 @@ pub mod shard;
 pub mod sink;
 
 use crate::exec::{self, StreamConfig};
+use crate::obs;
 use crate::sparse::qcsr::{self, QRowScratch};
 use crate::sparse::{spgemm_nnz_flops, spgemm_with_scratch, Csr, SpaScratch};
 use crate::swlc::ForestKernel;
@@ -168,9 +169,32 @@ fn materialize_cancellable(
             let t0 = std::time::Instant::now();
             let row_end = (row_start + stripe).min(range.end);
             let rows = stripe_product(kernel, row_start, row_end);
+            let elapsed = t0.elapsed();
             metrics.jobs.fetch_add(1, Ordering::Relaxed);
             metrics.nnz.fetch_add(rows.nnz() as u64, Ordering::Relaxed);
-            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            metrics.busy_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            // Process-wide mirrors of the per-call metrics, plus one
+            // trace event per stripe — all recorded after the product
+            // is computed, so instrumentation cannot perturb it.
+            crate::metric!(counter "fk_stripe_jobs_total", "SpGEMM stripe jobs completed.").inc();
+            crate::metric!(counter "fk_stripe_rows_total", "Kernel rows materialized by stripe jobs.")
+                .add((row_end - row_start) as u64);
+            crate::metric!(counter "fk_stripe_nnz_total", "Nonzeros produced by stripe jobs.")
+                .add(rows.nnz() as u64);
+            crate::metric!(
+                counter_secs "fk_stripe_seconds_total",
+                "Cumulative wall time inside stripe SpGEMM products."
+            )
+            .add_nanos(elapsed);
+            obs::event(
+                "spgemm.stripe",
+                crate::kv! {
+                    row_start: row_start,
+                    rows: row_end - row_start,
+                    nnz: rows.nnz(),
+                    secs: elapsed.as_secs_f64(),
+                },
+            );
             Stripe { row_start, rows }
         },
         |_, s| sink(s),

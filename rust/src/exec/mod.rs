@@ -37,6 +37,22 @@ use std::sync::{Condvar, Mutex};
 /// Process-wide thread-count override; 0 = unset (use env / hardware).
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
+/// Run one unit of pool work with busy-time accounting: the clock is
+/// read and the `fk_exec_busy_seconds_total` / `fk_exec_tasks_total`
+/// metrics are bumped strictly outside the task body, so instrumented
+/// results stay bitwise-identical to uninstrumented ones.
+fn timed_task<R>(f: impl FnOnce() -> R) -> R {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    crate::metric!(
+        counter_secs "fk_exec_busy_seconds_total",
+        "Cumulative exec-pool worker busy time (seconds inside task bodies)."
+    )
+    .add_nanos(t0.elapsed());
+    crate::metric!(counter "fk_exec_tasks_total", "Tasks executed by the exec pool.").inc();
+    r
+}
+
 /// Set the global worker count (the CLI `--threads` knob). `0` clears
 /// the override back to auto-detection.
 pub fn set_threads(n: usize) {
@@ -108,7 +124,11 @@ where
 {
     let n = tasks.len();
     if n <= 1 {
-        return tasks.into_iter().enumerate().map(|(i, s)| f(i, s)).collect();
+        return tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| timed_task(|| f(i, s)))
+            .collect();
     }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
@@ -117,9 +137,9 @@ where
         let mut tasks = tasks.into_iter().enumerate();
         let (i0, s0) = tasks.next().unwrap();
         for (i, s) in tasks {
-            handles.push(scope.spawn(move || (i, f(i, s))));
+            handles.push(scope.spawn(move || (i, timed_task(|| f(i, s)))));
         }
-        out[i0] = Some(f(i0, s0));
+        out[i0] = Some(timed_task(|| f(i0, s0)));
         for h in handles {
             let (i, r) = h.join().expect("exec worker panicked");
             out[i] = Some(r);
@@ -186,7 +206,8 @@ where
     let workers = cfg.n_workers.max(1).min(n_jobs);
     if workers == 1 {
         for j in 0..n_jobs {
-            sink(j, job(j));
+            let r = timed_task(|| job(j));
+            sink(j, r);
         }
         return;
     }
@@ -229,7 +250,8 @@ where
                 }
                 // A send error means the receiver is gone (sink side
                 // unwound); stop quietly so the scope can join.
-                if tx.send((j, job(j))).is_err() {
+                let r = timed_task(|| job(j));
+                if tx.send((j, r)).is_err() {
                     break;
                 }
             });

@@ -39,6 +39,7 @@ impl<T> BoundedQueue<T> {
     /// Enqueue `item`, blocking while the queue is full. Returns the
     /// item back as `Err` if the queue has been closed.
     pub fn push(&self, item: T) -> Result<(), T> {
+        let t0 = Instant::now();
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
@@ -50,8 +51,25 @@ impl<T> BoundedQueue<T> {
             g = self.not_full.wait(g).unwrap();
         }
         g.items.push_back(item);
+        let depth = g.items.len();
         drop(g);
         self.not_empty.notify_one();
+        // Queue-pressure telemetry, recorded after the item is enqueued
+        // so contended producers never serialize on the metric CAS.
+        crate::metric!(
+            histogram "fk_queue_wait_seconds",
+            "Producer blocking time in BoundedQueue::push (backpressure).",
+            crate::obs::LATENCY_BUCKETS
+        )
+        .observe(t0.elapsed().as_secs_f64());
+        crate::metric!(
+            histogram "fk_queue_depth",
+            "Queue depth observed right after each push.",
+            crate::obs::DEPTH_BUCKETS
+        )
+        .observe(depth as f64);
+        crate::metric!(gauge "fk_queue_depth_last", "Most recent post-push queue depth.")
+            .set(depth as f64);
         Ok(())
     }
 

@@ -103,6 +103,17 @@
 //!   row lookups, fleet-merged `/stats`, and rolling fleet-wide
 //!   reloads. Served and routed answers are bitwise-identical to the
 //!   in-process batch paths.
+//! * [`obs`] — the process-wide observability plane: a zero-dep
+//!   metrics registry (atomic counters, gauges, fixed-bucket
+//!   histograms) rendered as Prometheus text at `GET /metrics` on the
+//!   server and the router (which merges backend scrapes — counters
+//!   and histograms summed, gauges labelled per-replica), structured
+//!   tracing spans/events (`obs::span` + `kv!{..}`) emitted as JSONL
+//!   to the `--trace FILE` sink and a bounded ring at
+//!   `GET /debug/trace`, request-id minting/validation for
+//!   `x-request-id` propagation, and the `--slow-ms` slow-query log.
+//!   Every instrumentation point is bitwise-invisible to computed
+//!   outputs (asserted by `tests/obs.rs`).
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.
@@ -115,6 +126,7 @@ pub mod exec;
 pub mod experiments;
 pub mod forest;
 pub mod model;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

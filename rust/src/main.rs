@@ -15,6 +15,7 @@ use forest_kernels::coordinator::sink::{CsrSink, SparsifyConfig, SparsifySink};
 use forest_kernels::coordinator::{self, CoordinatorConfig};
 use forest_kernels::error::{Context, Result};
 use forest_kernels::model::{self, BundleMeta, CompanionModel, MmapMode, ModelBundle};
+use forest_kernels::obs;
 use forest_kernels::serve::{self, ServeConfig};
 use forest_kernels::sparse::{Csr, QuantMode};
 use forest_kernels::{anyhow, bail, exec};
@@ -81,6 +82,15 @@ Global flags:
   --threads N      worker threads for all parallel paths (SpGEMM, forest
                    training, factor build, coordinator); default = cores,
                    also settable via FK_THREADS
+  --trace FILE     write structured tracing spans/events as JSONL to FILE
+                   (fit, materialize, shards run, serve, route; `shards
+                   run` gives each worker FILE-partNNN.jsonl); tracing is
+                   observational only — traced runs produce bitwise-
+                   identical outputs to untraced ones
+  --slow-ms N      (serve / route) slow-query log: requests slower than
+                   N ms emit an `http.slow` JSONL event on stderr + the
+                   trace sink with request id, endpoint, status, tier,
+                   and duration
 
 Model bundles (fk-bundle-v4, section-aligned; v1/v2/v3 files still load):
   fit      --dataset covertype --n 20000 --trees 50 --method gap
@@ -116,10 +126,18 @@ Pipeline commands:
   embed    --dataset pbmc --n 5000 [--pca-dims 24] [--model model.fkb --queries 1000]
   serve    --model model.fkb [--addr 127.0.0.1:7878] [--batch 32]
            [--linger-ms 2] [--shards DIR] [--embed-dims 8] [--replicas R]
-           [--mmap auto|on|off]
+           [--mmap auto|on|off] [--slow-ms N] [--trace FILE]
            (long-running HTTP/1.1 keep-alive server over real TCP:
-            POST /predict, /neighbors, /embed + GET /healthz, /stats;
-            single queries are micro-batched into exec-pool tiles;
+            POST /predict, /neighbors, /embed + GET /healthz, /stats,
+            /metrics (Prometheus text exposition of the process-wide
+            registry: per-endpoint request counters + latency
+            histograms, per-tier latency, exec busy-time, queue
+            depth/wait, stripe SpGEMM totals, shard-cache hits/misses,
+            reload + shed counters), and /debug/trace (the in-memory
+            ring of recent trace events); every response echoes
+            x-request-id (client-supplied ids are also added to JSON
+            bodies); single queries are micro-batched into exec-pool
+            tiles;
             answers are bitwise-identical to the in-process batch
             paths; /predict accepts {\"budget\": \"cheap\"|\"full\"|
             \"auto\"} when the bundle holds a --companion model —
@@ -137,11 +155,16 @@ Pipeline commands:
             SIGHUP) atomically swaps in a freshly loaded copy of
             --model with zero dropped queries)
   route    --backends host:port,host:port,... [--addr 127.0.0.1:7979]
+           [--slow-ms N] [--trace FILE]
            (replica router over already-running serve processes: health-
             checks the backends at bind, round-robins /predict, /embed,
             and OOS /neighbors over pooled keep-alive connections, pins
             /neighbors row lookups to the row-range owner, and merges
-            GET /stats across the fleet; routed responses are byte-
+            GET /stats across the fleet; GET /metrics scrapes every
+            backend and serves the fleet-wide merged exposition
+            (counters/histograms summed, gauges per-replica under a
+            `backend` label); x-request-id is stamped on ingress and
+            relayed to the chosen replica; routed responses are byte-
             identical to direct ones; POST /admin/reload drives a
             rolling reload across the fleet — one backend at a time,
             never retried — so the model refreshes with zero downtime)
@@ -239,10 +262,21 @@ fn main() {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
+    obs::init();
     if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         exec::set_threads(n);
     }
-    if let Err(e) = dispatch(&cmd, &args) {
+    if let Some(path) = args.get("trace") {
+        if let Err(e) = obs::trace_to_file(path) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    let out = dispatch(&cmd, &args);
+    // The JSONL sink is buffered; flush whether the command succeeded
+    // or not, so a failing run still leaves its spans on disk.
+    obs::flush_trace();
+    if let Err(e) = out {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -530,9 +564,17 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let (data, name) = load_data(args)?;
     let kind = method(args)?;
     let cfg = train_cfg(args);
-    let (forest, secs_train) =
-        time(|| forest_kernels::experiments::train_for(&data, kind, &cfg));
-    let (mut kernel, secs_fit) = time(|| ForestKernel::fit(&forest, &data, kind));
+    let (forest, secs_train) = {
+        let _sp = obs::span_with(
+            "fit.train",
+            forest_kernels::kv! { dataset: name.as_str(), n: data.n, trees: cfg.n_trees },
+        );
+        time(|| forest_kernels::experiments::train_for(&data, kind, &cfg))
+    };
+    let (mut kernel, secs_fit) = {
+        let _sp = obs::span("fit.factors");
+        time(|| ForestKernel::fit(&forest, &data, kind))
+    };
     if let Some(mode) = parse_quant(args)?.flatten() {
         kernel.set_quantization(Some(mode));
     }
@@ -779,6 +821,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.usize_or("batch", 32).max(1),
         linger: Duration::from_millis(args.u64_or("linger-ms", 2)),
         embed_dims: args.usize_or("embed-dims", 8),
+        slow_ms: args.get("slow-ms").and_then(|v| v.parse().ok()),
         ..ServeConfig::default()
     };
     // The reload source: only a file-backed model can be hot-swapped.
@@ -793,7 +836,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("  POST /neighbors  {{\"x\": [f32; d], \"k\": 10}} | {{\"row\": 0, \"k\": 10}}");
     println!("  POST /embed      {{\"x\": [f32; d] | [[f32; d], ..]}}");
-    println!("  GET  /healthz    GET /stats");
+    println!("  GET  /healthz    GET /stats    GET /metrics    GET /debug/trace");
     if reloadable {
         println!("  POST /admin/reload  (or SIGHUP) hot-swaps --model; load mode: {load_mode}");
     } else {
@@ -814,7 +857,9 @@ fn spawn_replica(
     use std::io::BufRead;
     let mut c = std::process::Command::new(exe);
     c.arg("serve").arg("--model").arg(model_path).arg("--addr").arg("127.0.0.1:0");
-    for key in ["batch", "linger-ms", "embed-dims", "shards", "threads", "quantize", "mmap"] {
+    for key in
+        ["batch", "linger-ms", "embed-dims", "shards", "threads", "quantize", "mmap", "slow-ms"]
+    {
         if let Some(v) = args.get(key) {
             c.arg(format!("--{key}")).arg(v);
         }
@@ -907,10 +952,13 @@ fn cmd_serve_replicated(args: &Args, replicas: usize) -> Result<()> {
             return Err(e);
         }
     };
+    if let Some(ms) = args.get("slow-ms").and_then(|v| v.parse().ok()) {
+        router.set_slow_ms(ms);
+    }
     println!("routing on http://{} -> {replicas} replica(s)", router.addr());
     println!("  /predict /embed + OOS /neighbors: round-robin");
     println!("  /neighbors row lookups: row-range owner");
-    println!("  GET /stats: merged across the fleet");
+    println!("  GET /stats + GET /metrics: merged across the fleet");
     let out = router.run();
     kill_all(&mut children);
     out
@@ -933,6 +981,9 @@ fn cmd_route(args: &Args) -> Result<()> {
         backends,
     };
     let router = serve::router::Router::bind(cfg)?;
+    if let Some(ms) = args.get("slow-ms").and_then(|v| v.parse().ok()) {
+        router.set_slow_ms(ms);
+    }
     let owners = router.backends();
     println!("routing on http://{} -> {} backend(s)", router.addr(), owners.len());
     for (i, b) in owners.iter().enumerate() {
@@ -1002,6 +1053,10 @@ fn cmd_materialize(args: &Args) -> Result<()> {
     };
     let out = PathBuf::from(args.str_or("out", "kernel-shards"));
     let sink_name = args.str_or("sink", "csr");
+    let _sp = obs::span_with(
+        "materialize",
+        forest_kernels::kv! { n: n, sink: sink_name, stripe_rows: cc.stripe_rows },
+    );
     println!(
         "{name}: N={} method={} sink={sink_name} stripe_rows={} (factors {:.1} MB)",
         n,
@@ -1325,6 +1380,10 @@ fn cmd_shards_run(args: &Args) -> Result<()> {
     let dir = shard_dir(args);
     let ranges = coordinator::partition_rows(kernel, procs);
     let exe = std::env::current_exe().context("resolving the repro binary path")?;
+    let _sp = obs::span_with(
+        "shards.run",
+        forest_kernels::kv! { n: n, procs: ranges.len() },
+    );
     println!(
         "{name}: N={} method={} -> {} worker process(es) over {}",
         n,
@@ -1376,6 +1435,12 @@ fn cmd_shards_run(args: &Args) -> Result<()> {
         c.arg("--part").arg(k.to_string());
         c.arg("--shard-dir").arg(&dir);
         c.arg("--procs").arg(ranges.len().to_string());
+        // Each worker traces to its own file next to the parent's —
+        // one shared file would interleave JSONL lines across
+        // processes.
+        if let Some(base) = args.get("trace") {
+            c.arg("--trace").arg(trace_part_path(base, k));
+        }
         if let Some(t) = args.get("worker-threads") {
             c.arg("--threads").arg(t);
         }
@@ -1409,6 +1474,13 @@ fn cmd_shards_run(args: &Args) -> Result<()> {
         println!("verify-full: merged shards are bitwise-identical to the single-process CSR");
     }
     Ok(())
+}
+
+/// `base.jsonl` -> `base-part003.jsonl`: the per-worker trace file for
+/// one `shards run` child process.
+fn trace_part_path(base: &str, part: usize) -> String {
+    let stem = base.strip_suffix(".jsonl").unwrap_or(base);
+    format!("{stem}-part{part:03}.jsonl")
 }
 
 /// Bitwise CSR equality (f32 payloads compared as raw bits).

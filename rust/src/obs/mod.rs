@@ -1,0 +1,858 @@
+//! Process-wide observability plane: metrics registry + tracing spans.
+//!
+//! Zero-dependency (std only). Three metric kinds backed by atomics —
+//! [`Counter`], [`Gauge`], [`Histogram`] — live in a global registry
+//! keyed by `(name, labels)` and render as Prometheus text-exposition
+//! format via [`render_prometheus`] (served at `GET /metrics` by both
+//! the server and the router). [`parse_prometheus`] is the matching
+//! strict parser — it doubles as the exposition-format lint run by CI —
+//! and [`merge_prometheus`] folds several replica scrapes into one
+//! fleet view (counters and histograms sum; gauges stay per-replica
+//! behind a `backend` label).
+//!
+//! Every instrumentation point built on this module must be
+//! bitwise-invisible to computed outputs: handles only read clocks and
+//! bump atomics outside compute loops, never reorder work or touch
+//! float accumulation order (`tests/obs.rs` asserts traced runs are
+//! byte-identical to untraced ones).
+//!
+//! Structured tracing (spans, events, the `/debug/trace` ring and the
+//! `--trace FILE` JSONL sink) lives in [`trace`]; the common entry
+//! points are re-exported here as [`span`] and [`event`].
+
+pub mod trace;
+
+pub use trace::{
+    event, event_logged, flush_trace, recent_events_json, span, span_with, trace_file_enabled,
+    trace_to_file, Kv, SpanGuard,
+};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::bail;
+use crate::bench_support::json_escape;
+use crate::error::Result;
+
+/// Monotonically increasing integer metric. `_seconds_total` counters
+/// accumulate nanoseconds via [`Counter::add`] and are scaled to
+/// seconds at render time (see [`counter_secs`]).
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Accumulate an elapsed duration in nanoseconds (pair with
+    /// [`counter_secs`] so the rendered value is in seconds).
+    pub fn add_nanos(&self, d: std::time::Duration) {
+        self.v.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins float metric (f64 bits in an `AtomicU64`).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: non-cumulative bucket counts internally,
+/// rendered cumulatively with `_sum` and `_count` per Prometheus
+/// convention. `observe` is a couple of relaxed atomic ops plus one
+/// CAS loop for the f64 sum — safe on request/stripe granularity.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.partition_point(|b| v > *b);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Latency bucket bounds (seconds) shared by the request and tier
+/// histograms: 250µs .. 10s, roughly geometric.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Queue-depth bucket bounds (items).
+pub const DEPTH_BUCKETS: &[f64] = &[
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 4096.0,
+];
+
+enum MetricRef {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+impl MetricRef {
+    fn type_name(&self) -> &'static str {
+        match self {
+            MetricRef::Counter(_) => "counter",
+            MetricRef::Gauge(_) => "gauge",
+            MetricRef::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    /// Multiplier applied to counter values at render time (1e-9 turns
+    /// accumulated nanoseconds into seconds; 1.0 renders the raw count).
+    scale: f64,
+    metric: MetricRef,
+}
+
+fn registry() -> &'static Mutex<Vec<Entry>> {
+    static REG: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn process_start() -> Instant {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    *T0.get_or_init(Instant::now)
+}
+
+/// Pin the uptime origin. Called from `main` and from `Server::bind` /
+/// `Router::bind` so `fk_uptime_seconds` measures from process (or at
+/// worst server) start rather than from the first scrape.
+pub fn init() {
+    process_start();
+}
+
+/// Seconds since [`init`] (or since the first observability touch).
+pub fn uptime_secs() -> f64 {
+    process_start().elapsed().as_secs_f64()
+}
+
+/// Crate version baked in at compile time.
+pub fn build_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Git revision, when the build environment provides `FK_GIT_SHA`
+/// (CI exports it; local builds report "unknown").
+pub fn build_sha() -> &'static str {
+    option_env!("FK_GIT_SHA").unwrap_or("unknown")
+}
+
+fn owned_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn lookup_or_insert(
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    scale: f64,
+    make: impl FnOnce() -> MetricRef,
+) -> MetricRef {
+    let labels = owned_labels(labels);
+    let mut reg = registry().lock().unwrap();
+    if let Some(e) = reg.iter().find(|e| e.name == name && e.labels == labels) {
+        return match e.metric {
+            MetricRef::Counter(c) => MetricRef::Counter(c),
+            MetricRef::Gauge(g) => MetricRef::Gauge(g),
+            MetricRef::Histogram(h) => MetricRef::Histogram(h),
+        };
+    }
+    let metric = make();
+    let copy = match metric {
+        MetricRef::Counter(c) => MetricRef::Counter(c),
+        MetricRef::Gauge(g) => MetricRef::Gauge(g),
+        MetricRef::Histogram(h) => MetricRef::Histogram(h),
+    };
+    reg.push(Entry {
+        name: name.to_string(),
+        help: help.to_string(),
+        labels,
+        scale,
+        metric,
+    });
+    copy
+}
+
+/// Register (or fetch) a counter with no labels.
+pub fn counter(name: &str, help: &str) -> &'static Counter {
+    counter_with(name, help, &[])
+}
+
+/// Register (or fetch) a labelled counter. Re-registration with the
+/// same `(name, labels)` returns the existing handle, so call sites
+/// may cache the result in a `OnceLock` or call through every time.
+pub fn counter_with(name: &str, help: &str, labels: &[(&str, &str)]) -> &'static Counter {
+    counter_scaled(name, help, labels, 1.0)
+}
+
+/// Register a counter that accumulates nanoseconds (via
+/// [`Counter::add_nanos`]) and renders as seconds.
+pub fn counter_secs(name: &str, help: &str, labels: &[(&str, &str)]) -> &'static Counter {
+    counter_scaled(name, help, labels, 1e-9)
+}
+
+fn counter_scaled(name: &str, help: &str, labels: &[(&str, &str)], scale: f64) -> &'static Counter {
+    match lookup_or_insert(name, help, labels, scale, || {
+        MetricRef::Counter(Box::leak(Box::new(Counter {
+            v: AtomicU64::new(0),
+        })))
+    }) {
+        MetricRef::Counter(c) => c,
+        other => panic!("metric {name} already registered as {}", other.type_name()),
+    }
+}
+
+/// Register (or fetch) a labelled gauge.
+pub fn gauge_with(name: &str, help: &str, labels: &[(&str, &str)]) -> &'static Gauge {
+    match lookup_or_insert(name, help, labels, 1.0, || {
+        MetricRef::Gauge(Box::leak(Box::new(Gauge {
+            bits: AtomicU64::new(0f64.to_bits()),
+        })))
+    }) {
+        MetricRef::Gauge(g) => g,
+        other => panic!("metric {name} already registered as {}", other.type_name()),
+    }
+}
+
+/// Register (or fetch) a labelled fixed-bucket histogram.
+pub fn histogram_with(
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    bounds: &[f64],
+) -> &'static Histogram {
+    match lookup_or_insert(name, help, labels, 1.0, || {
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        MetricRef::Histogram(Box::leak(Box::new(Histogram {
+            bounds: bounds.to_vec(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        })))
+    }) {
+        MetricRef::Histogram(h) => h,
+        other => panic!("metric {name} already registered as {}", other.type_name()),
+    }
+}
+
+/// Register a metric handle once per call site: `metric!(counter NAME,
+/// HELP)`, `metric!(counter_secs NAME, HELP)`, `metric!(gauge NAME,
+/// HELP)` or `metric!(histogram NAME, HELP, BOUNDS)`. Expands to a
+/// `OnceLock`-cached `&'static` handle so hot paths skip the registry
+/// mutex after first use. Labelled variants take the label slice last.
+#[macro_export]
+macro_rules! metric {
+    (counter $name:expr, $help:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Counter> = std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::counter($name, $help))
+    }};
+    (counter $name:expr, $help:expr, $labels:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Counter> = std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::counter_with($name, $help, $labels))
+    }};
+    (counter_secs $name:expr, $help:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Counter> = std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::counter_secs($name, $help, &[]))
+    }};
+    (gauge $name:expr, $help:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Gauge> = std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::gauge_with($name, $help, &[]))
+    }};
+    (histogram $name:expr, $help:expr, $bounds:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Histogram> =
+            std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::histogram_with($name, $help, &[], $bounds))
+    }};
+    (histogram $name:expr, $help:expr, $bounds:expr, $labels:expr) => {{
+        static M: std::sync::OnceLock<&'static $crate::obs::Histogram> =
+            std::sync::OnceLock::new();
+        *M.get_or_init(|| $crate::obs::histogram_with($name, $help, $labels, $bounds))
+    }};
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn render_entry(out: &mut String, e: &Entry) {
+    match e.metric {
+        MetricRef::Counter(c) => {
+            let v = if e.scale == 1.0 {
+                fmt_value(c.get() as f64)
+            } else {
+                fmt_value(c.get() as f64 * e.scale)
+            };
+            out.push_str(&format!("{}{} {v}\n", e.name, label_block(&e.labels, None)));
+        }
+        MetricRef::Gauge(g) => {
+            out.push_str(&format!(
+                "{}{} {}\n",
+                e.name,
+                label_block(&e.labels, None),
+                fmt_value(g.get())
+            ));
+        }
+        MetricRef::Histogram(h) => {
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.buckets[i].load(Ordering::Relaxed);
+                let le = fmt_value(*b);
+                out.push_str(&format!(
+                    "{}_bucket{} {cum}\n",
+                    e.name,
+                    label_block(&e.labels, Some(("le", le.as_str())))
+                ));
+            }
+            cum += h.buckets[h.bounds.len()].load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "{}_bucket{} {cum}\n",
+                e.name,
+                label_block(&e.labels, Some(("le", "+Inf")))
+            ));
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                e.name,
+                label_block(&e.labels, None),
+                fmt_value(h.sum())
+            ));
+            out.push_str(&format!(
+                "{}_count{} {}\n",
+                e.name,
+                label_block(&e.labels, None),
+                h.count()
+            ));
+        }
+    }
+}
+
+/// Render the whole registry as Prometheus text-exposition format.
+/// Families are grouped under one `# HELP` / `# TYPE` pair in first
+/// registration order; `fk_uptime_seconds` and `fk_build_info` are
+/// refreshed on every render.
+pub fn render_prometheus() -> String {
+    gauge_with("fk_uptime_seconds", "Seconds since process start.", &[]).set(uptime_secs());
+    gauge_with(
+        "fk_build_info",
+        "Build metadata; value is always 1.",
+        &[("version", build_version()), ("git_sha", build_sha())],
+    )
+    .set(1.0);
+    let reg = registry().lock().unwrap();
+    let mut out = String::new();
+    let mut seen: Vec<&str> = Vec::new();
+    for e in reg.iter() {
+        if seen.contains(&e.name.as_str()) {
+            continue;
+        }
+        seen.push(&e.name);
+        out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+        out.push_str(&format!("# TYPE {} {}\n", e.name, e.metric.type_name()));
+        for same in reg.iter().filter(|s| s.name == e.name) {
+            render_entry(&mut out, same);
+        }
+    }
+    out
+}
+
+/// One sample line of a parsed scrape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed `/metrics` payload: samples in document order plus the
+/// declared family types (`name -> counter|gauge|histogram|...`).
+#[derive(Debug, Default)]
+pub struct Scrape {
+    pub samples: Vec<Sample>,
+    pub types: Vec<(String, String)>,
+    pub helps: Vec<(String, String)>,
+}
+
+impl Scrape {
+    pub fn type_of(&self, family: &str) -> Option<&str> {
+        self.types
+            .iter()
+            .find(|(n, _)| n == family)
+            .map(|(_, t)| t.as_str())
+    }
+
+    /// Family name a sample belongs to: histogram series `x_bucket`,
+    /// `x_sum`, `x_count` all roll up to `x`.
+    pub fn family_of(&self, sample_name: &str) -> String {
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sample_name.strip_suffix(suffix) {
+                if self.type_of(base) == Some("histogram") {
+                    return base.to_string();
+                }
+            }
+        }
+        sample_name.to_string()
+    }
+
+    /// Sum of all samples matching `name` and containing `labels` as a
+    /// subset (test + merge helper).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| {
+                s.name == name
+                    && labels
+                        .iter()
+                        .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+            })
+            .map(|s| s.value)
+            .sum()
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_labels(block: &str, line_no: usize) -> Result<Vec<(String, String)>> {
+    let mut labels = Vec::new();
+    let mut rest = block;
+    loop {
+        rest = rest.trim_start_matches(|c: char| c == ',' || c == ' ');
+        if rest.is_empty() {
+            return Ok(labels);
+        }
+        let eq = match rest.find('=') {
+            Some(i) => i,
+            None => bail!("line {line_no}: label without '='"),
+        };
+        let key = rest[..eq].trim();
+        if !valid_label_name(key) {
+            bail!("line {line_no}: bad label name {key:?}");
+        }
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            bail!("line {line_no}: label value for {key} not quoted");
+        }
+        rest = &rest[1..];
+        let mut val = String::new();
+        let mut chars = rest.char_indices();
+        let mut end = None;
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => val.push('\n'),
+                    Some((_, '\\')) => val.push('\\'),
+                    Some((_, '"')) => val.push('"'),
+                    _ => bail!("line {line_no}: bad escape in label value"),
+                },
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                c => val.push(c),
+            }
+        }
+        let end = match end {
+            Some(i) => i,
+            None => bail!("line {line_no}: unterminated label value"),
+        };
+        labels.push((key.to_string(), val));
+        rest = &rest[end + 1..];
+    }
+}
+
+/// Strict parser / lint for Prometheus text-exposition format. Rejects
+/// malformed comment lines, bad metric or label names, unquoted label
+/// values, unparsable sample values, and samples whose family has no
+/// preceding `# TYPE` declaration. CI runs this over live scrapes of
+/// both the server and the router.
+pub fn parse_prometheus(text: &str) -> Result<Scrape> {
+    let mut scrape = Scrape::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.trim_start();
+            if let Some(rest) = comment.strip_prefix("HELP ") {
+                let (name, help) = match rest.split_once(' ') {
+                    Some(p) => p,
+                    None => bail!("line {line_no}: HELP without text"),
+                };
+                if !valid_metric_name(name) {
+                    bail!("line {line_no}: bad metric name {name:?} in HELP");
+                }
+                scrape.helps.push((name.to_string(), help.to_string()));
+            } else if let Some(rest) = comment.strip_prefix("TYPE ") {
+                let (name, ty) = match rest.split_once(' ') {
+                    Some(p) => p,
+                    None => bail!("line {line_no}: TYPE without a type"),
+                };
+                if !valid_metric_name(name) {
+                    bail!("line {line_no}: bad metric name {name:?} in TYPE");
+                }
+                match ty {
+                    "counter" | "gauge" | "histogram" | "summary" | "untyped" => {}
+                    other => bail!("line {line_no}: unknown metric type {other:?}"),
+                }
+                scrape.types.push((name.to_string(), ty.to_string()));
+            } else {
+                bail!("line {line_no}: comment is neither HELP nor TYPE: {line:?}");
+            }
+            continue;
+        }
+        // Sample: name[{labels}] value [timestamp]
+        let (name_part, rest) = match line.find(|c| c == '{' || c == ' ') {
+            Some(i) => (&line[..i], &line[i..]),
+            None => bail!("line {line_no}: sample without value: {line:?}"),
+        };
+        if !valid_metric_name(name_part) {
+            bail!("line {line_no}: bad metric name {name_part:?}");
+        }
+        let (labels, value_part) = if let Some(body) = rest.strip_prefix('{') {
+            let close = match body.find('}') {
+                Some(i) => i,
+                None => bail!("line {line_no}: unterminated label block"),
+            };
+            (parse_labels(&body[..close], line_no)?, &body[close + 1..])
+        } else {
+            (Vec::new(), rest)
+        };
+        let mut fields = value_part.split_whitespace();
+        let value_str = match fields.next() {
+            Some(v) => v,
+            None => bail!("line {line_no}: sample without value: {line:?}"),
+        };
+        let value = match value_str {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => match v.parse::<f64>() {
+                Ok(x) => x,
+                Err(_) => bail!("line {line_no}: bad sample value {v:?}"),
+            },
+        };
+        if let Some(ts) = fields.next() {
+            if ts.parse::<i64>().is_err() {
+                bail!("line {line_no}: bad timestamp {ts:?}");
+            }
+        }
+        if fields.next().is_some() {
+            bail!("line {line_no}: trailing garbage after sample");
+        }
+        scrape.samples.push(Sample {
+            name: name_part.to_string(),
+            labels,
+            value,
+        });
+        let family = scrape.family_of(name_part);
+        if scrape.type_of(&family).is_none() {
+            bail!("line {line_no}: sample {name_part} has no preceding # TYPE {family}");
+        }
+    }
+    Ok(scrape)
+}
+
+/// Merge replica scrapes into one fleet view. Counters and histogram
+/// series sum across backends by `(name, labels)`; gauges (and untyped
+/// samples) are kept per-replica with an added `backend="<label>"`
+/// label. Family order follows first appearance across the scrapes,
+/// and the output re-parses cleanly under [`parse_prometheus`].
+pub fn merge_prometheus(scrapes: &[(String, Scrape)]) -> String {
+    // family -> (type, help) from the first scrape that declares it.
+    let mut families: Vec<(String, String, String)> = Vec::new();
+    for (_, s) in scrapes {
+        for (name, ty) in &s.types {
+            if !families.iter().any(|(n, _, _)| n == name) {
+                let help = s
+                    .helps
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, h)| h.clone())
+                    .unwrap_or_else(|| "merged by router".to_string());
+                families.push((name.clone(), ty.clone(), help));
+            }
+        }
+    }
+    let mut out = String::new();
+    for (family, ty, help) in &families {
+        out.push_str(&format!("# HELP {family} {help}\n"));
+        out.push_str(&format!("# TYPE {family} {ty}\n"));
+        let summed = matches!(ty.as_str(), "counter" | "histogram");
+        if summed {
+            // (sample name, labels) -> summed value, first-seen order.
+            let mut acc: Vec<(String, Vec<(String, String)>, f64)> = Vec::new();
+            for (_, s) in scrapes {
+                for sample in s.samples.iter().filter(|x| s.family_of(&x.name) == *family) {
+                    match acc
+                        .iter_mut()
+                        .find(|(n, l, _)| *n == sample.name && *l == sample.labels)
+                    {
+                        Some(slot) => slot.2 += sample.value,
+                        None => acc.push((sample.name.clone(), sample.labels.clone(), sample.value)),
+                    }
+                }
+            }
+            for (name, labels, value) in acc {
+                out.push_str(&format!(
+                    "{name}{} {}\n",
+                    label_block(&labels, None),
+                    fmt_value(value)
+                ));
+            }
+        } else {
+            for (backend, s) in scrapes {
+                for sample in s.samples.iter().filter(|x| s.family_of(&x.name) == *family) {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        sample.name,
+                        label_block(&sample.labels, Some(("backend", backend))),
+                        fmt_value(sample.value)
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fresh process-unique request id: `<pid hex>-<epoch-nanos hex>-<seq
+/// hex>`. Stamped on ingress whenever a request arrives without an
+/// `x-request-id` header.
+pub fn next_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    static ORIGIN: OnceLock<(u32, u64)> = OnceLock::new();
+    let (pid, t0) = *ORIGIN.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        (std::process::id(), nanos)
+    });
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("{pid:x}-{:x}-{seq:x}", t0 & 0xffff_ffff_ffff)
+}
+
+/// `true` when `id` is safe to echo back in a response header / JSON
+/// body: printable ASCII, no separators that could split a header.
+pub fn valid_request_id(id: &str) -> bool {
+    !id.is_empty() && id.len() <= 128 && id.bytes().all(|b| (0x21..=0x7e).contains(&b))
+}
+
+/// Emit the slow-query log record: a structured `http.slow` event in
+/// the trace ring / `--trace` sink and one JSONL line on stderr so the
+/// operator sees tail latency without tracing enabled.
+pub fn slow_query(request_id: &str, endpoint: &str, status: u16, tier: Option<&str>, secs: f64) {
+    metric!(
+        counter "fk_slow_queries_total",
+        "Requests slower than --slow-ms."
+    )
+    .inc();
+    let mut kvs = vec![
+        ("request_id", Kv::from(request_id)),
+        ("endpoint", Kv::from(endpoint)),
+        ("status", Kv::from(status as u64)),
+        ("ms", Kv::from(secs * 1e3)),
+    ];
+    if let Some(t) = tier {
+        kvs.push(("tier", Kv::from(t)));
+    }
+    event_logged("http.slow", kvs);
+}
+
+/// JSON string (with quotes) — re-exported escape helper for obs call
+/// sites that render ids or paths into JSONL events.
+pub fn json_str(s: &str) -> String {
+    json_escape(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_render_and_reparse() {
+        let c = counter_with("obs_test_requests_total", "test counter", &[("endpoint", "x")]);
+        c.add(3);
+        let g = gauge_with("obs_test_depth", "test gauge", &[]);
+        g.set(2.5);
+        let h = histogram_with("obs_test_latency_seconds", "test hist", &[], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = render_prometheus();
+        let scrape = parse_prometheus(&text).expect("self-render must pass the lint");
+        assert_eq!(
+            scrape.value("obs_test_requests_total", &[("endpoint", "x")]),
+            3.0
+        );
+        assert_eq!(scrape.value("obs_test_depth", &[]), 2.5);
+        assert_eq!(
+            scrape.value("obs_test_latency_seconds_bucket", &[("le", "0.1")]),
+            1.0
+        );
+        assert_eq!(
+            scrape.value("obs_test_latency_seconds_bucket", &[("le", "+Inf")]),
+            3.0
+        );
+        assert_eq!(scrape.value("obs_test_latency_seconds_count", &[]), 3.0);
+        assert!((scrape.value("obs_test_latency_seconds_sum", &[]) - 5.55).abs() < 1e-9);
+        assert_eq!(scrape.type_of("obs_test_requests_total"), Some("counter"));
+        assert_eq!(scrape.type_of("obs_test_latency_seconds"), Some("histogram"));
+        assert!(scrape.value("fk_build_info", &[("version", build_version())]) == 1.0);
+    }
+
+    #[test]
+    fn registration_is_idempotent() {
+        let a = counter("obs_test_idem_total", "x");
+        let b = counter("obs_test_idem_total", "x");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), b.get());
+        assert_eq!(a.get(), 2);
+    }
+
+    #[test]
+    fn lint_rejects_malformed_exposition() {
+        assert!(parse_prometheus("# BOGUS comment\n").is_err());
+        assert!(parse_prometheus("# TYPE x wibble\nx 1\n").is_err());
+        assert!(parse_prometheus("no_type_declared 1\n").is_err());
+        assert!(parse_prometheus("# TYPE m counter\nm{l=unquoted} 1\n").is_err());
+        assert!(parse_prometheus("# TYPE m counter\nm{9bad=\"v\"} 1\n").is_err());
+        assert!(parse_prometheus("# TYPE m counter\nm not_a_number\n").is_err());
+        assert!(parse_prometheus("# TYPE m counter\nm 1 2 3\n").is_err());
+        let ok = parse_prometheus("# HELP m help text\n# TYPE m counter\nm{a=\"b\\\"c\"} 4\n")
+            .unwrap();
+        assert_eq!(ok.value("m", &[("a", "b\"c")]), 4.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_labels_gauges() {
+        let a = parse_prometheus(
+            "# HELP r reqs\n# TYPE r counter\nr{endpoint=\"p\"} 2\n# TYPE d gauge\nd 5\n\
+             # TYPE h histogram\nh_bucket{le=\"+Inf\"} 2\nh_sum 0.5\nh_count 2\n",
+        )
+        .unwrap();
+        let b = parse_prometheus(
+            "# HELP r reqs\n# TYPE r counter\nr{endpoint=\"p\"} 3\n# TYPE d gauge\nd 7\n\
+             # TYPE h histogram\nh_bucket{le=\"+Inf\"} 1\nh_sum 0.25\nh_count 1\n",
+        )
+        .unwrap();
+        let merged = merge_prometheus(&[("b0".to_string(), a), ("b1".to_string(), b)]);
+        let scrape = parse_prometheus(&merged).expect("merged output must re-parse");
+        assert_eq!(scrape.value("r", &[("endpoint", "p")]), 5.0);
+        assert_eq!(scrape.value("d", &[("backend", "b0")]), 5.0);
+        assert_eq!(scrape.value("d", &[("backend", "b1")]), 7.0);
+        assert_eq!(scrape.value("h_bucket", &[("le", "+Inf")]), 3.0);
+        assert_eq!(scrape.value("h_count", &[]), 3.0);
+        assert!((scrape.value("h_sum", &[]) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_valid() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+        assert!(valid_request_id(&a));
+        assert!(!valid_request_id(""));
+        assert!(!valid_request_id("has space"));
+        assert!(!valid_request_id("crlf\r\ninjection"));
+        assert!(!valid_request_id(&"x".repeat(200)));
+    }
+}

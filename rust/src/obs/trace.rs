@@ -1,0 +1,354 @@
+//! Structured tracing: spans and point events rendered as JSONL.
+//!
+//! Every event lands in a bounded in-memory ring (served at
+//! `GET /debug/trace`) and, when `--trace FILE` armed the file sink via
+//! [`trace_to_file`], is appended to the file as one JSON object per
+//! line. Span records carry the span id, the parent span id (from a
+//! thread-local stack, so nested spans on one thread link up), the
+//! start timestamp, duration, and free-form key-values; point events
+//! carry the same minus duration.
+//!
+//! Emission is a clock read plus one short mutex push per event —
+//! spans are placed at coarse units only (a stripe, a reload, a slow
+//! request), never inside compute loops, so tracing stays
+//! bitwise-invisible to computed outputs.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::bench_support::json_escape;
+use crate::error::{Context, Result};
+
+/// Number of recent events retained for `GET /debug/trace`.
+const RING_CAP: usize = 256;
+
+/// A key-value payload value: numbers render bare, strings render
+/// JSON-escaped. Build lists with the [`crate::kv!`] macro.
+#[derive(Debug, Clone)]
+pub enum Kv {
+    U(u64),
+    I(i64),
+    F(f64),
+    S(String),
+}
+
+impl Kv {
+    fn render(&self) -> String {
+        match self {
+            Kv::U(v) => v.to_string(),
+            Kv::I(v) => v.to_string(),
+            Kv::F(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    json_escape(&v.to_string())
+                }
+            }
+            Kv::S(s) => json_escape(s),
+        }
+    }
+}
+
+impl From<u64> for Kv {
+    fn from(v: u64) -> Self {
+        Kv::U(v)
+    }
+}
+
+impl From<u32> for Kv {
+    fn from(v: u32) -> Self {
+        Kv::U(v as u64)
+    }
+}
+
+impl From<usize> for Kv {
+    fn from(v: usize) -> Self {
+        Kv::U(v as u64)
+    }
+}
+
+impl From<i64> for Kv {
+    fn from(v: i64) -> Self {
+        Kv::I(v)
+    }
+}
+
+impl From<f64> for Kv {
+    fn from(v: f64) -> Self {
+        Kv::F(v)
+    }
+}
+
+impl From<&str> for Kv {
+    fn from(v: &str) -> Self {
+        Kv::S(v.to_string())
+    }
+}
+
+impl From<String> for Kv {
+    fn from(v: String) -> Self {
+        Kv::S(v)
+    }
+}
+
+/// Build a key-value list for [`span`] / [`event`]:
+/// `kv! { rows: 512, sink: "csr" }`.
+#[macro_export]
+macro_rules! kv {
+    { $($k:ident : $v:expr),* $(,)? } => {
+        vec![ $( (stringify!($k), $crate::obs::Kv::from($v)) ),* ]
+    };
+}
+
+fn ring() -> &'static Mutex<VecDeque<String>> {
+    static RING: OnceLock<Mutex<VecDeque<String>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::with_capacity(RING_CAP)))
+}
+
+static FILE_ON: AtomicBool = AtomicBool::new(false);
+
+fn file_sink() -> &'static Mutex<Option<BufWriter<File>>> {
+    static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Arm the JSONL file sink (the `--trace FILE` flag). Subsequent spans
+/// and events append to `path`; call [`flush_trace`] before exit.
+pub fn trace_to_file(path: &str) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("creating trace file {path}"))?;
+    *file_sink().lock().unwrap() = Some(BufWriter::new(f));
+    FILE_ON.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Whether the `--trace` file sink is armed.
+pub fn trace_file_enabled() -> bool {
+    FILE_ON.load(Ordering::Acquire)
+}
+
+/// Flush buffered trace lines to the `--trace` file, if armed.
+pub fn flush_trace() {
+    if FILE_ON.load(Ordering::Acquire) {
+        if let Some(w) = file_sink().lock().unwrap().as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+fn emit(line: String, also_stderr: bool) {
+    if also_stderr {
+        eprintln!("{line}");
+    }
+    if FILE_ON.load(Ordering::Acquire) {
+        if let Some(w) = file_sink().lock().unwrap().as_mut() {
+            let _ = writeln!(w, "{line}");
+        }
+    }
+    let mut ring = ring().lock().unwrap();
+    if ring.len() == RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(line);
+}
+
+/// Recent events as a JSON document for `GET /debug/trace`:
+/// `{"count": N, "events": [...]}` (oldest first, capped at 256).
+pub fn recent_events_json() -> String {
+    let ring = ring().lock().unwrap();
+    let mut out = String::from("{\"count\": ");
+    out.push_str(&ring.len().to_string());
+    out.push_str(", \"events\": [");
+    for (i, e) in ring.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(e);
+    }
+    out.push_str("]}");
+    out
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn epoch_ms() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .unwrap_or(0.0)
+}
+
+fn render_kvs(out: &mut String, kvs: &[(&'static str, Kv)]) {
+    for (k, v) in kvs {
+        out.push_str(", ");
+        out.push_str(&json_escape(k));
+        out.push_str(": ");
+        out.push_str(&v.render());
+    }
+}
+
+/// Live span. Dropping it emits one JSONL record carrying the start
+/// timestamp, duration, parent linkage, and accumulated key-values.
+pub struct SpanGuard {
+    id: u64,
+    parent: Option<u64>,
+    name: &'static str,
+    t0: Instant,
+    start_ms: f64,
+    kvs: Vec<(&'static str, Kv)>,
+}
+
+impl SpanGuard {
+    /// Attach a key-value pair (builder style).
+    pub fn kv(mut self, key: &'static str, value: impl Into<Kv>) -> Self {
+        self.kvs.push((key, value.into()));
+        self
+    }
+
+    /// Attach a key-value pair in place (for values only known late,
+    /// e.g. an nnz computed inside the span).
+    pub fn add_kv(&mut self, key: &'static str, value: impl Into<Kv>) {
+        self.kvs.push((key, value.into()));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.last() == Some(&self.id) {
+                s.pop();
+            } else {
+                s.retain(|&id| id != self.id);
+            }
+        });
+        let mut line = format!(
+            "{{\"span\": {}, \"id\": {}, \"parent\": {}, \"ts_ms\": {:.3}, \"dur_ms\": {:.6}",
+            json_escape(self.name),
+            self.id,
+            self.parent
+                .map(|p| p.to_string())
+                .unwrap_or_else(|| "null".to_string()),
+            self.start_ms,
+            self.t0.elapsed().as_secs_f64() * 1e3,
+        );
+        render_kvs(&mut line, &self.kvs);
+        line.push('}');
+        emit(line, false);
+    }
+}
+
+/// Open a span. The record is emitted when the guard drops; nest spans
+/// freely — the per-thread stack links children to parents.
+pub fn span(name: &'static str) -> SpanGuard {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = SPAN_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let parent = s.last().copied();
+        s.push(id);
+        parent
+    });
+    SpanGuard {
+        id,
+        parent,
+        name,
+        t0: Instant::now(),
+        start_ms: epoch_ms(),
+        kvs: Vec::new(),
+    }
+}
+
+/// Open a span with an initial key-value list (`obs::span_with("x",
+/// kv!{rows: n})`).
+pub fn span_with(name: &'static str, kvs: Vec<(&'static str, Kv)>) -> SpanGuard {
+    let mut g = span(name);
+    g.kvs = kvs;
+    g
+}
+
+fn render_event(name: &str, kvs: &[(&'static str, Kv)]) -> String {
+    let parent = SPAN_STACK.with(|s| s.borrow().last().copied());
+    let mut line = format!(
+        "{{\"event\": {}, \"parent\": {}, \"ts_ms\": {:.3}",
+        json_escape(name),
+        parent
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "null".to_string()),
+        epoch_ms(),
+    );
+    render_kvs(&mut line, kvs);
+    line.push('}');
+    line
+}
+
+/// Emit a point event (no duration) to the ring and the file sink.
+pub fn event(name: &str, kvs: Vec<(&'static str, Kv)>) {
+    emit(render_event(name, &kvs), false);
+}
+
+/// Emit a point event that is also printed to stderr as one JSONL
+/// line — the structured replacement for ad-hoc `eprintln!`
+/// diagnostics (SIGHUP reload outcomes, slow queries).
+pub fn event_logged(name: &str, kvs: Vec<(&'static str, Kv)>) {
+    emit(render_event(name, &kvs), true);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_emit_json() {
+        {
+            let _outer = span("obs.test.outer").kv("rows", 42u64);
+            let _inner = span("obs.test.inner").kv("label", "x\"y");
+        }
+        event("obs.test.point", vec![("n", Kv::from(3u64))]);
+        let doc = recent_events_json();
+        // The ring is process-global, so only assert our own records.
+        assert!(doc.contains("\"span\": \"obs.test.inner\""));
+        assert!(doc.contains("\"span\": \"obs.test.outer\""));
+        assert!(doc.contains("\"label\": \"x\\\"y\""));
+        assert!(doc.contains("\"event\": \"obs.test.point\""));
+        // Inner span closed (and emitted) before outer: it must carry a
+        // non-null parent while the outer span's parent is null.
+        let inner_at = doc.find("\"span\": \"obs.test.inner\"").unwrap();
+        let inner_rec = &doc[inner_at..doc[inner_at..].find('}').unwrap() + inner_at];
+        assert!(!inner_rec.contains("\"parent\": null"));
+    }
+
+    #[test]
+    fn kv_macro_builds_typed_pairs() {
+        let kvs = crate::kv! { rows: 7usize, ratio: 0.5f64, sink: "csr" };
+        assert_eq!(kvs.len(), 3);
+        assert_eq!(kvs[0].0, "rows");
+        assert_eq!(kvs[0].1.render(), "7");
+        assert_eq!(kvs[1].1.render(), "0.5");
+        assert_eq!(kvs[2].1.render(), "\"csr\"");
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let dir = std::env::temp_dir().join(format!("obs-trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        trace_to_file(path.to_str().unwrap()).unwrap();
+        event("obs.test.file", vec![("ok", Kv::from(1u64))]);
+        flush_trace();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().any(|l| l.contains("obs.test.file")));
+        // Every line the sink wrote must be a JSON object.
+        for line in text.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

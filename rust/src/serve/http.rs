@@ -52,6 +52,17 @@ pub struct Request {
     /// `Connection: close`; HTTP/1.0 closes unless it sends an
     /// explicit `Connection: keep-alive`.
     pub keep_alive: bool,
+    /// `x-request-id` header, when the peer sent a well-formed one
+    /// (printable ASCII, ≤128 bytes — anything else is ignored so a
+    /// hostile value can never be reflected into a response header).
+    /// The ingress loop fills this with a freshly minted id otherwise.
+    pub request_id: Option<String>,
+    /// True when the id was minted by this process or an upstream
+    /// router (`x-request-id-gen: 1`) rather than supplied by the edge
+    /// client. Generated ids are echoed in the response *header* only;
+    /// client-supplied ids are additionally echoed in the JSON body —
+    /// keeping bodies byte-identical for clients that send no id.
+    pub request_id_generated: bool,
 }
 
 fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -152,6 +163,8 @@ impl ConnReader {
         }
         let mut content_len = 0usize;
         let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
+        let mut request_id = None;
+        let mut request_id_generated = false;
         for line in lines {
             if let Some((k, v)) = line.split_once(':') {
                 let k = k.trim();
@@ -167,6 +180,13 @@ impl ConnReader {
                     } else if v.eq_ignore_ascii_case("keep-alive") {
                         keep_alive = true;
                     }
+                } else if k.eq_ignore_ascii_case("x-request-id") {
+                    let v = v.trim();
+                    if crate::obs::valid_request_id(v) {
+                        request_id = Some(v.to_string());
+                    }
+                } else if k.eq_ignore_ascii_case("x-request-id-gen") {
+                    request_id_generated = v.trim() == "1";
                 }
             }
         }
@@ -178,7 +198,14 @@ impl ConnReader {
         let body = self.buf[body_start..body_start + content_len].to_vec();
         // Drain exactly this request; a pipelined successor stays put.
         self.buf.drain(..body_start + content_len);
-        Ok(Some(Request { method, path, body, keep_alive }))
+        Ok(Some(Request {
+            method,
+            path,
+            body,
+            keep_alive,
+            request_id,
+            request_id_generated,
+        }))
     }
 }
 
@@ -192,9 +219,29 @@ pub fn write_response(
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_ext(stream, status, reason, "application/json", body, keep_alive, None)
+}
+
+/// [`write_response`] with an explicit content type and an optional
+/// `x-request-id` echo header — the ingress loop's variant (`/metrics`
+/// serves Prometheus text, and every response carries its request id).
+/// The id is validated at parse/mint time, so it is header-safe here.
+pub fn write_response_ext(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+    request_id: Option<&str>,
+) -> std::io::Result<()> {
+    let id_header = match request_id {
+        Some(id) => format!("x-request-id: {id}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n{id_header}\r\n",
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
@@ -203,6 +250,13 @@ pub fn write_response(
     stream.flush()
 }
 
+/// Request-id relay parameter: the id plus whether it was *generated*
+/// inside the serving fabric (router ingress) rather than supplied by
+/// the edge client. Forwarded as `x-request-id` (+ `x-request-id-gen:
+/// 1` when generated) so replicas log the id but only body-echo
+/// client-supplied ones.
+pub type RequestIdFwd<'a> = Option<(&'a str, bool)>;
+
 fn send_request(
     stream: &mut TcpStream,
     addr: &SocketAddr,
@@ -210,10 +264,16 @@ fn send_request(
     path: &str,
     body: &str,
     keep_alive: bool,
+    rid: RequestIdFwd<'_>,
 ) -> std::io::Result<()> {
+    let id_headers = match rid {
+        Some((id, true)) => format!("x-request-id: {id}\r\nx-request-id-gen: 1\r\n"),
+        Some((id, false)) => format!("x-request-id: {id}\r\n"),
+        None => String::new(),
+    };
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: {}\r\n{id_headers}\r\n{body}",
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
@@ -283,7 +343,7 @@ pub fn http_request(
     body: &str,
 ) -> Result<(u16, String)> {
     let mut stream = connect(addr)?;
-    send_request(&mut stream, addr, method, path, body, false)?;
+    send_request(&mut stream, addr, method, path, body, false, None)?;
     let mut reader = ConnReader::new();
     let (status, body, _) = read_response(&mut stream, &mut reader)?;
     Ok((status, body))
@@ -312,13 +372,19 @@ impl HttpClient {
         self.addr
     }
 
-    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        rid: RequestIdFwd<'_>,
+    ) -> Result<(u16, String)> {
         if self.conn.is_none() {
             self.conn = Some((connect(&self.addr)?, ConnReader::new()));
         }
         let (stream, reader) = self.conn.as_mut().unwrap();
         let addr = self.addr;
-        send_request(stream, &addr, method, path, body, true)?;
+        send_request(stream, &addr, method, path, body, true, rid)?;
         let (status, resp, server_keeps) = read_response(stream, reader)?;
         if !server_keeps {
             self.conn = None;
@@ -332,7 +398,7 @@ impl HttpClient {
     /// requests; use [`HttpClient::request_once`] for anything that
     /// mutates server state.
     pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        self.request_with_retry(method, path, body, true)
+        self.request_fwd(method, path, body, None, true)
     }
 
     /// [`HttpClient::request`] without the reuse retry: a transport
@@ -340,25 +406,28 @@ impl HttpClient {
     /// Required for non-idempotent requests, where "resend blindly"
     /// risks applying the action twice.
     pub fn request_once(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        self.request_with_retry(method, path, body, false)
+        self.request_fwd(method, path, body, None, false)
     }
 
-    fn request_with_retry(
+    /// Full-control request: optional request-id relay headers plus
+    /// the retry-on-reuse switch. The router's relay path.
+    pub fn request_fwd(
         &mut self,
         method: &str,
         path: &str,
         body: &str,
+        rid: RequestIdFwd<'_>,
         retry_on_reuse: bool,
     ) -> Result<(u16, String)> {
         let reused = self.conn.is_some();
-        match self.try_request(method, path, body) {
+        match self.try_request(method, path, body, rid) {
             Ok(out) => Ok(out),
             Err(e) => {
                 self.conn = None;
                 if !reused || !retry_on_reuse {
                     return Err(e);
                 }
-                let out = self.try_request(method, path, body);
+                let out = self.try_request(method, path, body, rid);
                 if out.is_err() {
                     // Leave no half-read connection behind.
                     self.conn = None;
@@ -391,20 +460,23 @@ impl ClientPool {
     /// are busy); the connection returns to the pool only on success.
     /// Retries once on a stale reused connection — reads only.
     pub fn request(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        self.request_with_retry(method, path, body, true)
+        self.request_fwd(method, path, body, None, true)
     }
 
     /// [`ClientPool::request`] without the reuse retry, for
     /// non-idempotent requests (`POST /admin/reload`).
     pub fn request_once(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        self.request_with_retry(method, path, body, false)
+        self.request_fwd(method, path, body, None, false)
     }
 
-    fn request_with_retry(
+    /// Pooled request with request-id relay headers — what the router
+    /// uses so `x-request-id` survives the hop to the replica.
+    pub fn request_fwd(
         &self,
         method: &str,
         path: &str,
         body: &str,
+        rid: RequestIdFwd<'_>,
         retry_on_reuse: bool,
     ) -> Result<(u16, String)> {
         let mut client = self
@@ -413,7 +485,7 @@ impl ClientPool {
             .unwrap()
             .pop()
             .unwrap_or_else(|| HttpClient::new(self.addr));
-        let out = client.request_with_retry(method, path, body, retry_on_reuse);
+        let out = client.request_fwd(method, path, body, rid, retry_on_reuse);
         if out.is_ok() {
             self.idle.lock().unwrap().push(client);
         }

@@ -77,6 +77,7 @@ use crate::data::Dataset;
 use crate::error::{Context, Result};
 use crate::exec::queue::BoundedQueue;
 use crate::model::{MmapMode, ModelBundle};
+use crate::obs;
 use crate::runtime::json::Json;
 use crate::spectral::knn::{knn_row, rank_row};
 use crate::spectral::pca::{leaf_pca, leaf_pca_project, leaf_pca_project_q};
@@ -108,6 +109,11 @@ pub struct ServeConfig {
     pub embed_iters: usize,
     /// Seed of the (deterministic) embedding basis.
     pub embed_seed: u64,
+    /// Slow-query threshold (the `--slow-ms` flag): requests slower
+    /// than this emit a structured `http.slow` event carrying the
+    /// request id, endpoint, status, tier, and duration. `None`
+    /// disables the slow-query log.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -120,6 +126,7 @@ impl Default for ServeConfig {
             embed_dims: 8,
             embed_iters: 30,
             embed_seed: 17,
+            slow_ms: None,
         }
     }
 }
@@ -186,10 +193,20 @@ impl ShardCache {
             if let Some((s, stripe)) = g.as_ref() {
                 if *s == si {
                     let (c, v) = stripe.rows.row(i - stripe.row_start);
+                    crate::metric!(
+                        counter "fk_shard_cache_hits_total",
+                        "Neighbors row lookups served from the cached stripe."
+                    )
+                    .inc();
                     return Ok((c.to_vec(), v.to_vec()));
                 }
             }
         }
+        crate::metric!(
+            counter "fk_shard_cache_misses_total",
+            "Neighbors row lookups that had to read a stripe from disk."
+        )
+        .inc();
         // Miss: do the stripe I/O with the lock RELEASED, then swap the
         // result in. Concurrent misses on different stripes no longer
         // serialize behind the slowest disk read; two threads missing
@@ -313,6 +330,7 @@ impl Server {
         source: Option<(PathBuf, MmapMode)>,
         load_mode: &'static str,
     ) -> Result<Server> {
+        obs::init();
         let n = bundle.kernel.ctx.n;
         if let Some(r) = &shards {
             if KernelSource::n_rows(r) != n {
@@ -376,7 +394,10 @@ impl Server {
                         std::thread::sleep(Duration::from_millis(100));
                         if sighup::take() {
                             let resp = reload_endpoint(&st);
-                            eprintln!("SIGHUP reload -> {}: {}", resp.status, resp.body);
+                            crate::obs::event_logged(
+                                "serve.sighup_reload",
+                                crate::kv! { status: resp.status as u64, body: resp.body },
+                            );
                         }
                     }
                 })
@@ -582,7 +603,7 @@ impl Response {
 /// are byte-identical.
 pub(crate) fn unroutable(method: &str, path: &str) -> Response {
     let allow = match path {
-        "/healthz" | "/stats" => Some("GET"),
+        "/healthz" | "/stats" | "/metrics" | "/debug/trace" => Some("GET"),
         "/predict" | "/embed" | "/neighbors" | "/admin/reload" => Some("POST"),
         _ => None,
     };
@@ -601,11 +622,54 @@ pub(crate) fn unroutable(method: &str, path: &str) -> Response {
             body: format!(
                 "{{\"error\": {}, \"endpoints\": \
                  [\"/predict\", \"/neighbors\", \"/embed\", \"/healthz\", \"/stats\", \
-                 \"/admin/reload\"]}}",
+                 \"/metrics\", \"/debug/trace\", \"/admin/reload\"]}}",
                 json_escape(&format!("no route for {method} {path}")),
             ),
         },
     }
+}
+
+/// A stable, low-cardinality endpoint label for the registry metrics.
+fn endpoint_label(path: &str) -> &'static str {
+    match path {
+        "/predict" => "predict",
+        "/neighbors" => "neighbors",
+        "/embed" => "embed",
+        "/healthz" => "healthz",
+        "/stats" => "stats",
+        "/admin/reload" => "admin_reload",
+        "/metrics" => "metrics",
+        "/debug/trace" => "debug_trace",
+        _ => "other",
+    }
+}
+
+/// The per-endpoint request counter + latency histogram. The registry
+/// lookup is a short mutex-guarded scan — negligible at request
+/// granularity, and it keeps the handle table in one place.
+fn http_metrics(endpoint: &'static str) -> (&'static obs::Counter, &'static obs::Histogram) {
+    (
+        obs::counter_with(
+            "fk_http_requests_total",
+            "HTTP requests by endpoint (scrape endpoints excluded).",
+            &[("endpoint", endpoint)],
+        ),
+        obs::histogram_with(
+            "fk_http_request_seconds",
+            "Request latency by endpoint, first byte through response write.",
+            &[("endpoint", endpoint)],
+            obs::LATENCY_BUCKETS,
+        ),
+    )
+}
+
+/// Pull the `"tier"` field out of a response body for slow-query
+/// attribution. Only called on the slow path, so a substring scan is
+/// fine.
+fn body_tier(body: &str) -> Option<&str> {
+    let i = body.find("\"tier\": \"")?;
+    let rest = &body[i + 9..];
+    Some(&rest[..rest.find('"')?])
 }
 
 /// The shared keep-alive connection loop — one copy for the server
@@ -615,9 +679,20 @@ pub(crate) fn unroutable(method: &str, path: &str) -> Response {
 /// recorded like any other response, and closes on
 /// `Connection: close`, a write failure, or broken framing (carrying a
 /// desynchronized stream forward would corrupt it).
+///
+/// This is also the observability ingress: every parsed request is
+/// stamped with a request id (the client's validated `x-request-id`,
+/// or a freshly minted one), the id is echoed in the response header
+/// (and, for client-supplied ids only, appended to JSON bodies so
+/// untagged traffic keeps byte-identical responses), per-endpoint
+/// counters and latency histograms are recorded (except for the
+/// `/metrics` and `/debug/trace` scrape endpoints, so scraping does
+/// not perturb the numbers it reads), and requests slower than
+/// `slow_ms` land in the slow-query log with their tier.
 pub(crate) fn connection_loop(
     mut stream: TcpStream,
     stats: &Stats,
+    slow_ms: Option<u64>,
     mut route: impl FnMut(&http::Request) -> Result<Response>,
 ) {
     stream.set_nodelay(true).ok();
@@ -634,24 +709,90 @@ pub(crate) fn connection_loop(
             Ok(false) | Err(_) => return,
         }
         let t0 = Instant::now();
-        let (resp, keep) = match reader.read_request(&mut stream) {
-            Ok(Some(req)) => {
+        let (resp, keep, meta) = match reader.read_request(&mut stream) {
+            Ok(Some(mut req)) => {
                 let keep = req.keep_alive;
-                match route(&req) {
-                    Ok(resp) => (resp, keep),
+                if req.request_id.is_none() {
+                    req.request_id = Some(obs::next_request_id());
+                    req.request_id_generated = true;
+                }
+                let resp = match route(&req) {
+                    Ok(resp) => resp,
                     Err(e) => {
                         stats.errors.fetch_add(1, Ordering::Relaxed);
-                        (Response::bad_request(e), keep)
+                        crate::metric!(
+                            counter "fk_http_errors_total",
+                            "Requests answered with an error response."
+                        )
+                        .inc();
+                        Response::bad_request(e)
                     }
-                }
+                };
+                let rid = req.request_id.unwrap_or_default();
+                (resp, keep, Some((rid, req.request_id_generated, req.path)))
             }
             Ok(None) => return,
             Err(e) => {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
-                (Response::bad_request(e), false)
+                crate::metric!(
+                    counter "fk_http_errors_total",
+                    "Requests answered with an error response."
+                )
+                .inc();
+                (Response::bad_request(e), false, None)
             }
         };
-        let sent = http::write_response(&mut stream, resp.status, resp.reason, &resp.body, keep);
+        let sent = match meta {
+            Some((rid, generated, path)) => {
+                let mut body = resp.body;
+                // Body echo only for client-supplied ids: the id a
+                // replica sees on a router hop is marked generated, so
+                // echo happens exactly once, at the edge that received
+                // it — and untagged traffic keeps byte-identical
+                // bodies.
+                if !generated && body.starts_with('{') && body.ends_with('}') {
+                    body.pop();
+                    body.push_str(", \"request_id\": ");
+                    body.push_str(&json_escape(&rid));
+                    body.push('}');
+                }
+                let content_type = if path == "/metrics" {
+                    "text/plain; version=0.0.4"
+                } else {
+                    "application/json"
+                };
+                let sent = http::write_response_ext(
+                    &mut stream,
+                    resp.status,
+                    resp.reason,
+                    content_type,
+                    &body,
+                    keep,
+                    Some(&rid),
+                );
+                let dt = t0.elapsed().as_secs_f64();
+                if !matches!(path.as_str(), "/metrics" | "/debug/trace") {
+                    let (requests, latency) = http_metrics(endpoint_label(&path));
+                    requests.inc();
+                    latency.observe(dt);
+                }
+                if let Some(ms) = slow_ms {
+                    if dt * 1e3 >= ms as f64 {
+                        obs::slow_query(
+                            &rid,
+                            endpoint_label(&path),
+                            resp.status,
+                            body_tier(&body),
+                            dt,
+                        );
+                    }
+                }
+                sent
+            }
+            None => {
+                http::write_response(&mut stream, resp.status, resp.reason, &resp.body, keep)
+            }
+        };
         stats.record_latency(t0.elapsed().as_secs_f64());
         if !keep || sent.is_err() {
             return;
@@ -660,7 +801,7 @@ pub(crate) fn connection_loop(
 }
 
 fn handle_connection(st: &Arc<ServerState>, stream: TcpStream) {
-    connection_loop(stream, &st.stats, |req| route(st, req));
+    connection_loop(stream, &st.stats, st.cfg.slow_ms, |req| route(st, req));
 }
 
 fn route(st: &ServerState, req: &http::Request) -> Result<Response> {
@@ -671,17 +812,24 @@ fn route(st: &ServerState, req: &http::Request) -> Result<Response> {
         }
         ("GET", "/stats") => {
             st.stats.stats.fetch_add(1, Ordering::Relaxed);
-            // Prepend the model-plane fields to the counter document so
-            // operators can see which generation the numbers describe.
+            // Prepend the model-plane and build fields to the counter
+            // document so operators can see which generation and
+            // binary the numbers describe.
             let ms = st.model();
             let counters = st.stats.to_json();
             Ok(Response::ok(format!(
-                "{{\"model_generation\": {}, \"load_mode\": {}, {}",
+                "{{\"model_generation\": {}, \"load_mode\": {}, \
+                 \"uptime_secs\": {}, \"version\": {}, \"git_sha\": {}, {}",
                 ms.generation,
                 json_escape(ms.load_mode),
+                obs::uptime_secs() as u64,
+                json_escape(obs::build_version()),
+                json_escape(obs::build_sha()),
                 &counters[1..],
             )))
         }
+        ("GET", "/metrics") => Ok(Response::ok(obs::render_prometheus())),
+        ("GET", "/debug/trace") => Ok(Response::ok(obs::recent_events_json())),
         ("POST", "/admin/reload") => Ok(reload_endpoint(st)),
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
@@ -816,8 +964,25 @@ fn json_u32_array(vs: &[u32]) -> String {
 /// source (fitted in-process) or the new bundle is shaped incompatibly
 /// with the live one (different N / kind / feature dim — the roster
 /// invariants the replica router and queued jobs rely on).
+/// One reload outcome for the registry and the trace ring. `outcome`
+/// is the `fk_reload_total` label: "ok", "failed" (load error), or
+/// "refused" (no source / shape mismatch).
+fn note_reload(outcome: &'static str, detail: &str) {
+    obs::counter_with(
+        "fk_reload_total",
+        "Bundle reload attempts by outcome (ok / failed / refused).",
+        &[("outcome", outcome)],
+    )
+    .inc();
+    obs::event(
+        "serve.reload",
+        crate::kv! { outcome: outcome, detail: detail },
+    );
+}
+
 fn reload_endpoint(st: &ServerState) -> Response {
     let Some((path, mode)) = &st.model_source else {
+        note_reload("refused", "no file source (fitted in-process)");
         return Response {
             status: 400,
             reason: "Bad Request",
@@ -834,6 +999,7 @@ fn reload_endpoint(st: &ServerState) -> Response {
         Ok(v) => v,
         Err(e) => {
             st.stats.errors.fetch_add(1, Ordering::Relaxed);
+            note_reload("failed", &format!("{e:#}"));
             return Response {
                 status: 500,
                 reason: "Internal Server Error",
@@ -848,6 +1014,7 @@ fn reload_endpoint(st: &ServerState) -> Response {
     let (ok, wk) = (&old.bundle.kernel, &bundle.kernel);
     let new_d = bundle.forest.binner.edges.len();
     if wk.ctx.n != ok.ctx.n || wk.kind.name() != ok.kind.name() || new_d != old.d {
+        note_reload("refused", "incompatible bundle shape");
         return Response {
             status: 400,
             reason: "Bad Request",
@@ -868,6 +1035,7 @@ fn reload_endpoint(st: &ServerState) -> Response {
     let next = Arc::new(ModelState::build(bundle, &st.cfg, old.generation + 1, load_mode));
     let generation = next.generation;
     *st.model.write().unwrap() = next;
+    note_reload("ok", &format!("generation {generation} ({load_mode})"));
     Response::ok(format!(
         "{{\"status\": \"reloaded\", \"model_generation\": {generation}, \
          \"load_mode\": {}, \"path\": {}}}",
@@ -895,7 +1063,8 @@ fn healthz_body(st: &ServerState) -> String {
          \"kind\": {}, \"forest\": {}, \"classes\": {}, \"features\": {}, \"leaves\": {}}}, \
          \"companion\": {companion}, \
          \"neighbors_source\": {}, \"embed_dims\": {}, \"model_generation\": {}, \
-         \"load_mode\": {}, \"reloadable\": {}}}",
+         \"load_mode\": {}, \"reloadable\": {}, \"uptime_secs\": {}, \
+         \"version\": {}, \"git_sha\": {}}}",
         json_escape(&m.dataset),
         k.ctx.n,
         k.ctx.t,
@@ -909,6 +1078,9 @@ fn healthz_body(st: &ServerState) -> String {
         ms.generation,
         json_escape(ms.load_mode),
         st.model_source.is_some(),
+        obs::uptime_secs() as u64,
+        json_escape(obs::build_version()),
+        json_escape(obs::build_sha()),
     )
 }
 
@@ -965,6 +1137,11 @@ fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     let (tier, shed) = choose_tier(st, budget, rows.len(), ms.bundle.companion.is_some())?;
     if shed {
         st.stats.shed_to_cheap.fetch_add(1, Ordering::Relaxed);
+        crate::metric!(
+            counter "fk_shed_to_cheap_total",
+            "Auto-budget predicts degraded to the cheap tier under queue pressure."
+        )
+        .inc();
     }
     let (tier_counter, tier_latency) = match tier {
         Tier::Full => (&st.stats.predict_full, &st.stats.full_tier_latency),
@@ -973,7 +1150,15 @@ fn predict_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
     tier_counter.fetch_add(1, Ordering::Relaxed);
     let t0 = Instant::now();
     let replies = submit(st, JobKind::Predict, tier, rows, 0)?;
-    tier_latency.record(t0.elapsed().as_secs_f64());
+    let dt = t0.elapsed().as_secs_f64();
+    tier_latency.record(dt);
+    obs::histogram_with(
+        "fk_tier_latency_seconds",
+        "Predict latency by serving tier (queue wait + batch execution).",
+        &[("tier", tier.name())],
+        obs::LATENCY_BUCKETS,
+    )
+    .observe(dt);
     let gen = replies.first().map_or(ms.generation, |r| r.0);
     let mut preds = String::from("[");
     let mut scores = String::from("[");

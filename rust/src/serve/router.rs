@@ -36,13 +36,14 @@
 use super::{unroutable, Response};
 use crate::bench_support::json_escape;
 use crate::error::{Context, Result};
+use crate::obs;
 use crate::runtime::json::Json;
 use crate::serve::http::{self, ClientPool};
 use crate::serve::stats::{merge_counter_totals, Stats};
 use crate::{anyhow, bail};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Router tuning knobs.
@@ -74,6 +75,11 @@ pub struct RouterState {
     /// Round-robin cursor for the OOS endpoints.
     rr: AtomicUsize,
     pub stats: Stats,
+    /// Slow-query threshold in milliseconds; 0 disables the log. An
+    /// atomic (set via [`Router::set_slow_ms`]) rather than a
+    /// [`RouterConfig`] field so existing struct-literal constructions
+    /// of the config stay source-compatible.
+    slow_ms: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -116,6 +122,7 @@ impl Router {
     /// `GET /healthz` and agree on the model's N and kind), then bind
     /// the listener.
     pub fn bind(cfg: RouterConfig) -> Result<Router> {
+        obs::init();
         if cfg.backends.is_empty() {
             bail!("router needs at least one --backends address");
         }
@@ -173,9 +180,17 @@ impl Router {
             kind,
             rr: AtomicUsize::new(0),
             stats: Stats::new(),
+            slow_ms: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         });
         Ok(Router { state, listener, addr })
+    }
+
+    /// Enable the slow-query log (the `--slow-ms` flag): requests
+    /// slower than `ms` milliseconds emit a structured `http.slow`
+    /// event with the request id, endpoint, status, and tier.
+    pub fn set_slow_ms(&self, ms: u64) {
+        self.state.slow_ms.store(ms, Ordering::Relaxed);
     }
 
     /// The bound address (resolves port 0 to the actual port).
@@ -219,10 +234,19 @@ impl Router {
 }
 
 fn handle_connection(st: &Arc<RouterState>, stream: TcpStream) {
-    super::connection_loop(stream, &st.stats, |req| Ok(route(st, req)));
+    let slow_ms = match st.slow_ms.load(Ordering::Relaxed) {
+        0 => None,
+        ms => Some(ms),
+    };
+    super::connection_loop(stream, &st.stats, slow_ms, |req| Ok(route(st, req)));
 }
 
 fn route(st: &RouterState, req: &http::Request) -> Response {
+    // Relay the ingress request id on every backend hop, marked
+    // generated: the replica echoes it in its header and slow-query
+    // log but leaves the body alone — the router's connection loop
+    // does the (single) body echo for client-supplied ids.
+    let rid = req.request_id.as_deref();
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             st.stats.healthz.fetch_add(1, Ordering::Relaxed);
@@ -232,15 +256,17 @@ fn route(st: &RouterState, req: &http::Request) -> Response {
             st.stats.stats.fetch_add(1, Ordering::Relaxed);
             Response::ok(merged_stats(st))
         }
-        ("POST", "/admin/reload") => reload_fleet(st),
+        ("GET", "/metrics") => merged_metrics(st),
+        ("GET", "/debug/trace") => Response::ok(obs::recent_events_json()),
+        ("POST", "/admin/reload") => reload_fleet(st, rid),
         ("POST", "/predict") => {
             st.stats.predict.fetch_add(1, Ordering::Relaxed);
             note_predict_budget(st, &req.body);
-            forward(st, rr_next(st), "/predict", &req.body)
+            forward(st, rr_next(st), "/predict", &req.body, rid)
         }
         ("POST", "/embed") => {
             st.stats.embed.fetch_add(1, Ordering::Relaxed);
-            forward(st, rr_next(st), "/embed", &req.body)
+            forward(st, rr_next(st), "/embed", &req.body, rid)
         }
         ("POST", "/neighbors") => {
             st.stats.neighbors.fetch_add(1, Ordering::Relaxed);
@@ -248,7 +274,7 @@ fn route(st: &RouterState, req: &http::Request) -> Response {
             // anything unparseable — the backend's 400 must match a
             // direct request's) round-robin.
             let start = row_owner(st, &req.body).unwrap_or_else(|| rr_next(st));
-            forward(st, start, "/neighbors", &req.body)
+            forward(st, start, "/neighbors", &req.body, rid)
         }
         (m, p) => unroutable(m, p),
     }
@@ -305,7 +331,7 @@ fn reason_for(status: u16) -> &'static str {
 /// **verbatim** — routed answers are byte-identical to direct ones.
 /// Only the read endpoints go through here (retry/failover is safe for
 /// them); `/admin/reload` mutates and takes [`reload_fleet`] instead.
-fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response {
+fn forward(st: &RouterState, start: usize, path: &str, body: &[u8], rid: Option<&str>) -> Response {
     let body = match std::str::from_utf8(body) {
         Ok(s) => s,
         Err(_) => {
@@ -313,10 +339,11 @@ fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response 
             return Response::bad_request("request body is not UTF-8");
         }
     };
+    let rid_fwd = rid.map(|r| (r, true));
     let nb = st.backends.len();
     for attempt in 0..nb {
         let backend = &st.backends[(start + attempt) % nb];
-        match backend.pool.request("POST", path, body) {
+        match backend.pool.request_fwd("POST", path, body, rid_fwd, true) {
             Ok((status, resp)) => {
                 return Response { status, reason: reason_for(status), body: resp }
             }
@@ -342,14 +369,15 @@ fn forward(st: &RouterState, start: usize, path: &str, body: &[u8]) -> Response 
 /// may still have applied, and a blind retry would bump the generation
 /// twice. 200 only when every backend reloaded; otherwise 502 with the
 /// per-backend outcomes.
-fn reload_fleet(st: &RouterState) -> Response {
+fn reload_fleet(st: &RouterState, rid: Option<&str>) -> Response {
+    let rid_fwd = rid.map(|r| (r, true));
     let mut all_ok = true;
     let mut out = String::from("[");
     for (i, b) in st.backends.iter().enumerate() {
         if i > 0 {
             out.push_str(", ");
         }
-        match b.pool.request_once("POST", "/admin/reload", "") {
+        match b.pool.request_fwd("POST", "/admin/reload", "", rid_fwd, false) {
             Ok((status, body)) => {
                 if status != 200 {
                     all_ok = false;
@@ -381,6 +409,27 @@ fn reload_fleet(st: &RouterState) -> Response {
     }
 }
 
+/// `GET /metrics` at the router: the fleet-wide merged exposition.
+/// Each backend's `/metrics` is scraped over the pooled connections,
+/// parsed, and merged — counters and histograms **sum** across
+/// replicas, gauges stay **per-replica** behind a `backend` label
+/// (summing a queue depth across replicas would be a lie). Only the
+/// data plane is merged: the router's own counters live in its
+/// `/stats` document, so a router colocated with its backends (tests)
+/// never double-counts. Unreachable or malformed backends are skipped;
+/// the merged exposition stays valid.
+fn merged_metrics(st: &RouterState) -> Response {
+    let mut scrapes: Vec<(String, obs::Scrape)> = Vec::new();
+    for b in &st.backends {
+        if let Ok((200, body)) = b.pool.request("GET", "/metrics", "") {
+            if let Ok(s) = obs::parse_prometheus(&body) {
+                scrapes.push((b.addr.to_string(), s));
+            }
+        }
+    }
+    Response::ok(obs::merge_prometheus(&scrapes))
+}
+
 fn healthz_body(st: &RouterState) -> String {
     let mut backends = String::from("[");
     for (i, b) in st.backends.iter().enumerate() {
@@ -395,8 +444,13 @@ fn healthz_body(st: &RouterState) -> String {
     backends.push(']');
     format!(
         "{{\"status\": \"ok\", \"role\": \"router\", \"n\": {}, \"kind\": \"{}\", \
-         \"backends\": {backends}}}",
-        st.n, st.kind
+         \"backends\": {backends}, \"uptime_secs\": {}, \"version\": {}, \
+         \"git_sha\": {}}}",
+        st.n,
+        st.kind,
+        obs::uptime_secs() as u64,
+        json_escape(obs::build_version()),
+        json_escape(obs::build_sha()),
     )
 }
 

@@ -56,7 +56,11 @@ impl Reservoir {
         }
         let mut sorted = ring.samples.clone();
         drop(ring);
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. a
+        // poisoned clock delta) must not abort the stats path. NaNs
+        // order after every number under IEEE total order, so they
+        // land at the tail and only perturb the extreme percentiles.
+        sorted.sort_by(f64::total_cmp);
         let pick = |q: f64| sorted[(((sorted.len() - 1) as f64) * q).round() as usize];
         Some((pick(0.50), pick(0.95), pick(0.99)))
     }
@@ -268,6 +272,22 @@ mod tests {
         assert!((p50 - 51.0).abs() < 1.5, "p50={p50}");
         assert!((p95 - 95.0).abs() < 1.5, "p95={p95}");
         assert!((p99 - 99.0).abs() < 1.5, "p99={p99}");
+    }
+
+    #[test]
+    fn percentiles_survive_a_nan_sample() {
+        // Regression: sort_by(partial_cmp().unwrap()) panicked the
+        // stats path the moment a NaN latency landed in the ring.
+        let s = Stats::new();
+        for i in 1..=99 {
+            s.record_latency(i as f64);
+        }
+        s.record_latency(f64::NAN);
+        let (p50, _p95, _p99) = s.latency_percentiles().expect("non-empty reservoir");
+        assert!(p50.is_finite(), "median must ignore the NaN tail, got {p50}");
+        assert!((p50 - 50.0).abs() < 2.0, "p50={p50}");
+        // The JSON render must not panic either.
+        let _ = s.to_json();
     }
 
     #[test]

@@ -167,10 +167,22 @@ pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
 pub fn spgemm_with_threads(a: &Csr, b: &Csr, n_threads: usize) -> Csr {
     assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
     assert!(a.n_rows < u32::MAX as usize);
+    let t0 = std::time::Instant::now();
     let blocks = exec::parallel_ranges(a.n_rows, n_threads.max(1), |_, rows| {
         let mut spa = SpaScratch::new(b.n_cols);
         spgemm_rows(a, b, rows, &mut spa)
     });
+    // Whole-product accounting only (per call, outside the row loops);
+    // the coordinator's stripe path reports its own finer-grained
+    // fk_stripe_* series through spgemm_with_scratch.
+    crate::metric!(counter "fk_spgemm_calls_total", "Full SpGEMM products computed.").inc();
+    crate::metric!(counter "fk_spgemm_rows_total", "Rows produced by full SpGEMM products.")
+        .add(a.n_rows as u64);
+    crate::metric!(
+        counter_secs "fk_spgemm_seconds_total",
+        "Cumulative wall time inside full SpGEMM products."
+    )
+    .add_nanos(t0.elapsed());
 
     // Stitch the per-range blocks in row order.
     let nnz: usize = blocks.iter().map(|blk| blk.indices.len()).sum();

@@ -1,0 +1,325 @@
+//! The observability plane, end to end: `GET /metrics` serves valid
+//! Prometheus text exposition on the server and the router, the
+//! router-merged counters equal the sum of the backend scrapes,
+//! `x-request-id` propagates client → router → replica → response
+//! (and lands in the slow-query log), and tracing is **bitwise
+//! invisible** — a traced materialize produces byte-identical CSRs to
+//! an untraced one at 1 and 4 workers.
+
+use forest_kernels::coordinator::{self, CoordinatorConfig};
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{BundleMeta, ModelBundle};
+use forest_kernels::obs;
+use forest_kernels::runtime::json::Json;
+use forest_kernels::serve::http;
+use forest_kernels::serve::router::{Router, RouterConfig};
+use forest_kernels::serve::{ServeConfig, Server};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+use forest_kernels::Dataset;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+const N: usize = 160;
+const D: usize = 5;
+const C: usize = 3;
+const TREES: usize = 12;
+
+/// The metrics registry is process-global and the HTTP tests in this
+/// binary all drive traffic that bumps the same counters, so the tests
+/// that assert on counter values serialize behind this lock.
+static HTTP_TESTS: Mutex<()> = Mutex::new(());
+
+fn fixture(seed: u64) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, C, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    ModelBundle { forest, kernel, meta, companion: None }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        embed_dims: 4,
+        embed_iters: 20,
+        embed_seed: 9,
+        ..Default::default()
+    }
+}
+
+fn row_json(data: &Dataset, i: usize) -> String {
+    let mut s = String::from("[");
+    for f in 0..data.d {
+        if f > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{}", data.x(i, f)));
+    }
+    s.push(']');
+    s
+}
+
+fn predict_body(seed: u64, i: usize) -> String {
+    let queries = synth::gaussian_blobs(8, D, C, 2.2, seed);
+    format!("{{\"x\": {}}}", row_json(&queries, i % queries.n))
+}
+
+/// One raw HTTP/1.1 request over a fresh connection, returned as the
+/// full response text (headers + body). `Connection: close` in `req`
+/// makes the server end the stream, which ends the read.
+fn raw_request(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    out
+}
+
+#[test]
+fn metrics_endpoint_serves_valid_prometheus_exposition() {
+    let _g = HTTP_TESTS.lock().unwrap();
+    let server = Server::bind(fixture(5), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    // Touch every instrumented path once so the families are live.
+    for i in 0..3 {
+        let (status, _) =
+            http::http_request(&addr, "POST", "/predict", &predict_body(901, i)).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, _) =
+        http::http_request(&addr, "POST", "/neighbors", "{\"row\": 3, \"k\": 5}").unwrap();
+    assert_eq!(status, 200);
+    let (status, _) =
+        http::http_request(&addr, "POST", "/embed", &predict_body(902, 0)).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+
+    let (status, text) = http::http_request(&addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    let scrape = obs::parse_prometheus(&text)
+        .expect("/metrics must be valid Prometheus text exposition");
+
+    for family in [
+        "fk_http_requests_total",
+        "fk_http_request_seconds",
+        "fk_queue_wait_seconds",
+        "fk_queue_depth",
+        "fk_exec_tasks_total",
+        "fk_exec_busy_seconds_total",
+        "fk_uptime_seconds",
+        "fk_build_info",
+    ] {
+        assert!(
+            scrape.samples.iter().any(|s| scrape.family_of(&s.name) == family),
+            "missing metric family {family} in:\n{text}"
+        );
+    }
+    assert_eq!(scrape.type_of("fk_http_requests_total"), Some("counter"));
+    assert_eq!(scrape.type_of("fk_http_request_seconds"), Some("histogram"));
+    assert!(
+        scrape.samples.iter().any(|s| s.name == "fk_http_request_seconds_bucket"),
+        "histograms must expose _bucket samples"
+    );
+    assert!(
+        scrape.value("fk_http_requests_total", &[("endpoint", "predict")]) >= 3.0,
+        "the predict counter must cover the traffic just driven"
+    );
+
+    // Scraping /metrics must not count itself: two back-to-back
+    // scrapes agree on the request counters.
+    let (_, again) = http::http_request(&addr, "GET", "/metrics", "").unwrap();
+    let scrape2 = obs::parse_prometheus(&again).unwrap();
+    assert_eq!(
+        scrape.value("fk_http_requests_total", &[]),
+        scrape2.value("fk_http_requests_total", &[]),
+        "a /metrics scrape must not bump the request counters"
+    );
+
+    handle.stop();
+}
+
+#[test]
+fn router_metrics_merge_sums_backend_scrapes() {
+    let _g = HTTP_TESTS.lock().unwrap();
+    let backend_a = Server::bind(fixture(6), None, serve_cfg()).unwrap();
+    let backend_b = Server::bind(fixture(6), None, serve_cfg()).unwrap();
+    let (addr_a, addr_b) = (backend_a.addr(), backend_b.addr());
+    let h_a = backend_a.spawn();
+    let h_b = backend_b.spawn();
+    let router = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr_a.to_string(), addr_b.to_string()],
+    })
+    .unwrap();
+    let raddr = router.addr();
+    let rh = router.spawn();
+
+    for i in 0..4 {
+        let (status, _) =
+            http::http_request(&raddr, "POST", "/predict", &predict_body(903, i)).unwrap();
+        assert_eq!(status, 200);
+    }
+
+    let (status, merged_text) = http::http_request(&raddr, "GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    let merged = obs::parse_prometheus(&merged_text)
+        .expect("the router-merged exposition must re-parse");
+    let (_, text_a) = http::http_request(&addr_a, "GET", "/metrics", "").unwrap();
+    let (_, text_b) = http::http_request(&addr_b, "GET", "/metrics", "").unwrap();
+    let scrape_a = obs::parse_prometheus(&text_a).unwrap();
+    let scrape_b = obs::parse_prometheus(&text_b).unwrap();
+
+    // Counters sum across the fleet. The traffic counters are
+    // quiescent here (nothing else is running under the lock, and
+    // /metrics doesn't count itself), so merged == a + b exactly.
+    for labels in
+        [[("endpoint", "predict")], [("endpoint", "neighbors")], [("endpoint", "embed")]]
+    {
+        let want = scrape_a.value("fk_http_requests_total", &labels)
+            + scrape_b.value("fk_http_requests_total", &labels);
+        let got = merged.value("fk_http_requests_total", &labels);
+        assert_eq!(got, want, "merged fk_http_requests_total{labels:?}");
+    }
+    let want = scrape_a.value("fk_http_request_seconds_count", &[])
+        + scrape_b.value("fk_http_request_seconds_count", &[]);
+    assert_eq!(
+        merged.value("fk_http_request_seconds_count", &[]),
+        want,
+        "histogram counts must sum across backends"
+    );
+
+    // Gauges stay per-replica, distinguished by a backend label.
+    let uptime_samples: Vec<_> = merged
+        .samples
+        .iter()
+        .filter(|s| s.name == "fk_uptime_seconds")
+        .collect();
+    assert_eq!(uptime_samples.len(), 2, "one uptime gauge per backend");
+    for s in uptime_samples {
+        assert!(
+            s.labels.iter().any(|(k, _)| k == "backend"),
+            "per-replica gauges need a backend label"
+        );
+    }
+
+    rh.stop();
+    h_a.stop();
+    h_b.stop();
+}
+
+#[test]
+fn request_id_round_trips_through_router_and_slow_log() {
+    let _g = HTTP_TESTS.lock().unwrap();
+    let mut cfg = serve_cfg();
+    cfg.slow_ms = Some(0); // every request is "slow": exercises the log
+    let backend = Server::bind(fixture(7), None, cfg).unwrap();
+    let baddr = backend.addr();
+    let bh = backend.spawn();
+    let router = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![baddr.to_string()],
+    })
+    .unwrap();
+    router.set_slow_ms(1_000_000); // enabled but never firing: ids flow anyway
+    let raddr = router.addr();
+    let rh = router.spawn();
+
+    let body = predict_body(904, 0);
+    let tagged = format!(
+        "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\nx-request-id: abc-123\r\n\r\n{body}",
+        body.len()
+    );
+    let resp = raw_request(raddr, &tagged);
+    assert!(resp.starts_with("HTTP/1.1 200"), "unexpected response: {resp}");
+    assert!(
+        resp.to_ascii_lowercase().contains("x-request-id: abc-123"),
+        "client-supplied id must be echoed in the response header: {resp}"
+    );
+    assert!(
+        resp.contains("\"request_id\": \"abc-123\""),
+        "client-supplied id must be echoed in the JSON body: {resp}"
+    );
+    let json_body = &resp[resp.find("\r\n\r\n").unwrap() + 4..];
+    let j = Json::parse(json_body).expect("response body parses");
+    assert!(j.get("model_generation").is_some(), "request_id rides next to model_generation");
+    assert_eq!(j.get("request_id").and_then(Json::as_str), Some("abc-123"));
+
+    // Untagged traffic: an id is minted and echoed in the header, but
+    // the body stays byte-identical to what untagged clients always
+    // got — no request_id field.
+    let untagged = format!(
+        "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let resp = raw_request(raddr, &untagged);
+    assert!(resp.starts_with("HTTP/1.1 200"), "unexpected response: {resp}");
+    assert!(
+        resp.to_ascii_lowercase().contains("x-request-id: "),
+        "a generated id must still be echoed in the header: {resp}"
+    );
+    assert!(
+        !resp.contains("request_id\": "),
+        "generated ids must stay out of the body: {resp}"
+    );
+
+    // The replica's slow-query log (slow_ms = 0) saw the relayed id:
+    // it lands in the trace ring, served by GET /debug/trace.
+    let (status, trace) = http::http_request(&baddr, "GET", "/debug/trace", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(trace.contains("http.slow"), "slow-query events must reach the ring: {trace}");
+    assert!(
+        trace.contains("abc-123"),
+        "the relayed request id must appear in the slow-query log: {trace}"
+    );
+    assert!(trace.contains("\"tier\""), "slow predicts record their serving tier: {trace}");
+
+    rh.stop();
+    bh.stop();
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_to_materialize() {
+    let bundle = fixture(8);
+    let kernel = &bundle.kernel;
+    for workers in [1usize, 4] {
+        let cfg = CoordinatorConfig { stripe_rows: 48, n_workers: workers, queue_depth: 2 };
+        let (plain, _) = coordinator::materialize_to_csr(kernel, &cfg);
+        let trace_path = std::env::temp_dir().join(format!(
+            "fk-obs-trace-{}-{workers}.jsonl",
+            std::process::id()
+        ));
+        obs::trace_to_file(trace_path.to_str().unwrap()).unwrap();
+        let traced = {
+            let _sp = obs::span("test.materialize");
+            coordinator::materialize_to_csr(kernel, &cfg).0
+        };
+        obs::flush_trace();
+        let logged = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(
+            logged.lines().any(|l| l.contains("spgemm.stripe")),
+            "the traced run must have recorded stripe events"
+        );
+        std::fs::remove_file(&trace_path).ok();
+
+        assert_eq!(plain.n_rows, traced.n_rows);
+        assert_eq!(plain.indptr, traced.indptr, "workers={workers}: row structure differs");
+        assert_eq!(plain.indices, traced.indices, "workers={workers}: indices differ");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&plain.data),
+            bits(&traced.data),
+            "workers={workers}: traced materialize must be bitwise-identical"
+        );
+    }
+}
