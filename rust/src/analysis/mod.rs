@@ -1,0 +1,364 @@
+//! `fk-lint`: in-repo static analysis for the crate's real invariants.
+//!
+//! The compiler cannot see the contracts this crate actually rests
+//! on: bitwise parallel == serial determinism in the kernels, a serve
+//! plane that degrades (never dies) on untrusted input, `unsafe`
+//! confined to an allowlist and justified, Prometheus-clean metric
+//! names, and a zero-dependency manifest. This module is the analyzer
+//! behind the `fk-lint` binary and the `tests/lint_clean.rs` gate that
+//! keep those contracts machine-checked on every push.
+//!
+//! * [`scan`] — the token-level source scanner (comment/string/char
+//!   stripping, `#[cfg(test)]` region tracking, suppression parsing).
+//! * [`rules`] — the five rule families, suppression accounting, and
+//!   the [`Report`] type.
+//! * [`lint_dir`] / [`lint_sources`] — entry points for the binary,
+//!   the integration test, and the fixture self-tests below.
+//!
+//! The analyzer is std-only and parses nothing: every invariant it
+//! checks is visible at the lexical layer, which keeps it fast (one
+//! pass per file) and keeps the crate zero-dep — rule 5 applies to
+//! the linter too.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{Config, Finding, Report, MAX_SUPPRESSIONS, RULE_IDS, UNSAFE_ALLOWLIST};
+pub use scan::{scan_source, SourceFile};
+
+use crate::error::{Context, Result};
+use std::path::Path;
+
+/// Scan every `.rs` file under `src_root` (sorted, recursive) into
+/// stripped [`SourceFile`]s with root-relative `/`-separated paths.
+pub fn scan_dir(src_root: &Path) -> Result<Vec<SourceFile>> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        out.push(scan_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("walking {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("walking {}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a source tree on disk. The `zero-dep` rule reads
+/// `<src_root>/../Cargo.toml` when present (absent manifests pass —
+/// fixture trees don't carry one).
+pub fn lint_dir(src_root: &Path, cfg: &Config) -> Result<Report> {
+    let sources = scan_dir(src_root)?;
+    let manifest = src_root.parent().map(|p| p.join("Cargo.toml"));
+    let toml = match manifest {
+        Some(p) if p.is_file() => {
+            Some(std::fs::read_to_string(&p).with_context(|| format!("reading {}", p.display()))?)
+        }
+        _ => None,
+    };
+    Ok(rules::run(&sources, toml.as_deref(), cfg))
+}
+
+/// Lint in-memory sources — the fixture-test entry point. Each item
+/// is `(relative_path, source_text)`.
+pub fn lint_sources(files: &[(&str, &str)], cargo_toml: Option<&str>, cfg: &Config) -> Report {
+    let sources: Vec<SourceFile> =
+        files.iter().map(|(rel, text)| scan_source(rel, text)).collect();
+    rules::run(&sources, cargo_toml, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(rel: &str, text: &str) -> Report {
+        lint_sources(&[(rel, text)], None, &Config::all())
+    }
+
+    fn rules_of(report: &Report) -> Vec<&'static str> {
+        report.findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- scanner ----
+
+    #[test]
+    fn scanner_strips_comments_strings_and_chars() {
+        let src = "let x = \"unwrap() inside\"; // .unwrap() in comment\nlet c = '{'; /* panic! */\n";
+        let f = scan_source("serve/x.rs", src);
+        assert!(scan::find_token(&f.lines[0].code, ".unwrap()", 0).is_none());
+        assert!(f.lines[0].comment.contains(".unwrap()"));
+        assert_eq!(f.lines[0].strings, vec!["unwrap() inside".to_string()]);
+        // The '{' char literal must not corrupt brace depth or code.
+        assert!(!f.lines[1].code.contains('{'));
+    }
+
+    #[test]
+    fn scanner_counts_lines_through_string_continuations() {
+        // A `\`-newline continuation must still advance the line
+        // counter (a historic off-by-N source in serve/mod.rs).
+        let src = "let s = \"a \\\n   b\";\nlet t = s.unwrap();\n";
+        let f = scan_source("serve/x.rs", src);
+        assert_eq!(f.lines[0].strings, vec!["a b".to_string()]);
+        let r = lint_one("serve/x.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn scanner_handles_raw_strings_and_escaped_quotes() {
+        let src = "let a = r#\"x.unwrap() \"quoted\"\"#;\nlet b = \"\\\"y.unwrap()\\\"\";\nlet c = '\\'';\n";
+        let f = scan_source("serve/x.rs", src);
+        for line in &f.lines {
+            assert!(scan::find_token(&line.code, ".unwrap()", 0).is_none());
+        }
+        assert!(f.lines[0].strings[0].contains("x.unwrap()"));
+    }
+
+    #[test]
+    fn scanner_tracks_test_regions_by_brace_depth() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn live2() { z.unwrap(); }\n";
+        let f = scan_source("serve/x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+        let r = lint_one("serve/x.rs", src);
+        assert_eq!(r.findings.iter().map(|f| f.line).collect::<Vec<_>>(), vec![1, 6]);
+    }
+
+    // ---- rule 1: no-panic-in-serve ----
+
+    #[test]
+    fn no_panic_fires_on_each_forbidden_call() {
+        for snippet in [
+            "fn f() { x.unwrap(); }",
+            "fn f() { x.expect(\"boom\"); }",
+            "fn f() { panic!(\"boom\"); }",
+            "fn f() { unreachable!() }",
+            "fn f() { todo!() }",
+        ] {
+            let r = lint_one("serve/x.rs", snippet);
+            assert_eq!(rules_of(&r), vec!["no-panic-in-serve"], "snippet: {snippet}");
+        }
+    }
+
+    #[test]
+    fn no_panic_fires_on_literal_indexing_only() {
+        let r = lint_one("model/x.rs", "fn f(b: &[u8]) { let x = b[12]; }");
+        assert_eq!(rules_of(&r), vec!["no-panic-in-serve"]);
+        let r = lint_one("model/x.rs", "fn f(b: &[u8]) { let x = &b[20..28]; }");
+        assert_eq!(rules_of(&r), vec!["no-panic-in-serve"]);
+        // Computed subscripts, attributes, and array types are not
+        // flagged.
+        for ok in [
+            "fn f(b: &[u8], i: usize) { let x = b[i]; }",
+            "fn f(b: &[u8], at: usize) { let x = &b[at..at + 8]; }",
+            "#[derive(Clone)]\nstruct S;",
+            "fn f() -> [u8; 4] { [0u8; 4] }",
+            "fn f(d: &[usize]) { if let [a, b] = d[..] {} }",
+        ] {
+            let r = lint_one("model/x.rs", ok);
+            assert!(r.clean(), "should not fire on: {ok}\n{:?}", rules_of(&r));
+        }
+    }
+
+    #[test]
+    fn no_panic_scope_is_serve_model_runtime_only() {
+        assert!(lint_one("sparse/x.rs", "fn f() { x.unwrap(); }").clean());
+        assert!(lint_one("main.rs", "fn f() { x.unwrap(); }").clean());
+        assert!(!lint_one("runtime/x.rs", "fn f() { x.unwrap(); }").clean());
+        // unwrap_or_else is not unwrap.
+        assert!(lint_one("serve/x.rs", "fn f() { x.unwrap_or_else(|| 0); }").clean());
+    }
+
+    // ---- rule 2: safety-comment ----
+
+    #[test]
+    fn safety_comment_requires_justification_within_lookback() {
+        let bad = "fn f() { unsafe { work() } }";
+        let r = lint_one("sparse/buf.rs", bad);
+        assert_eq!(rules_of(&r), vec!["safety-comment"]);
+        let good = "// SAFETY: the caller upholds the contract.\nfn f() { unsafe { work() } }";
+        assert!(lint_one("sparse/buf.rs", good).clean());
+        // `# Safety` doc sections on unsafe fns also count.
+        let doc = "/// # Safety\n/// Caller keeps `i < len`.\npub unsafe fn g() {}";
+        assert!(lint_one("sparse/buf.rs", doc).clean());
+    }
+
+    #[test]
+    fn safety_comment_confines_unsafe_to_the_allowlist() {
+        let src = "// SAFETY: justified but misplaced.\nfn f() { unsafe { work() } }";
+        let r = lint_one("swlc/mod.rs", src);
+        assert_eq!(rules_of(&r), vec!["safety-comment"]);
+        assert!(r.findings[0].message.contains("allowlist"));
+    }
+
+    #[test]
+    fn safety_comment_ignores_the_deny_attribute() {
+        // `unsafe_op_in_unsafe_fn` is an ident containing "unsafe",
+        // not the keyword.
+        assert!(lint_one("lib.rs", "#![deny(unsafe_op_in_unsafe_fn)]\n").clean());
+    }
+
+    // ---- rule 3: determinism ----
+
+    #[test]
+    fn determinism_fires_in_kernel_modules_only() {
+        for tok in ["HashMap", "HashSet", "Instant::now", "SystemTime::now", "ThreadId"] {
+            let src = format!("fn f() {{ let x = std::it::{tok}(); }}");
+            let r = lint_one("sparse/x.rs", &src);
+            assert_eq!(rules_of(&r), vec!["determinism"], "token: {tok}");
+            assert!(lint_one("obs/x.rs", &src).clean(), "obs may use {tok}");
+        }
+        // Tests inside kernel modules may use hash collections.
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { let s: std::collections::HashSet<u32> = x; }\n}\n";
+        assert!(lint_one("spectral/knn.rs", test_src).clean());
+    }
+
+    // ---- rule 4: metric-hygiene ----
+
+    #[test]
+    fn metric_hygiene_checks_grammar_prefix_and_suffix() {
+        let bad_grammar = "fn f() { crate::metric!(counter \"fk bad name_total\", \"h\").inc(); }";
+        let r = lint_one("serve/x.rs", bad_grammar);
+        assert_eq!(rules_of(&r), vec!["metric-hygiene"]);
+        let bad_prefix = "fn f() { crate::metric!(counter \"queue_total\", \"h\").inc(); }";
+        assert_eq!(rules_of(&lint_one("serve/x.rs", bad_prefix)), vec!["metric-hygiene"]);
+        let counter_no_total = "fn f() { crate::metric!(counter \"fk_queue\", \"h\").inc(); }";
+        assert_eq!(rules_of(&lint_one("serve/x.rs", counter_no_total)), vec!["metric-hygiene"]);
+        let gauge_with_total = "fn f() { crate::metric!(gauge \"fk_depth_total\", \"h\").set(1.0); }";
+        assert_eq!(rules_of(&lint_one("serve/x.rs", gauge_with_total)), vec!["metric-hygiene"]);
+        let good = "fn f() { crate::metric!(counter \"fk_jobs_total\", \"h\").inc(); }";
+        assert!(lint_one("serve/x.rs", good).clean());
+    }
+
+    #[test]
+    fn metric_hygiene_handles_multiline_calls_and_direct_fns() {
+        let multiline = "fn f() {\n    crate::metric!(\n        counter \"fk_hits_total\",\n        \"Cache hits.\"\n    )\n    .inc();\n}";
+        assert!(lint_one("serve/x.rs", multiline).clean());
+        let direct = "fn f() { obs::histogram_with(\"fk_lat_seconds\", \"h\", &[], B).observe(1.0); }";
+        assert!(lint_one("serve/x.rs", direct).clean());
+        let direct_bad = "fn f() { obs::gauge_with(\"fk_lat_total\", \"h\", &[]).set(1.0); }";
+        assert_eq!(rules_of(&lint_one("serve/x.rs", direct_bad)), vec!["metric-hygiene"]);
+    }
+
+    #[test]
+    fn metric_hygiene_enforces_one_type_and_help_per_name() {
+        let two_kinds = "fn f() { crate::metric!(counter \"fk_x_total\", \"h\").inc(); }\nfn g() { crate::metric!(gauge \"fk_x_total\", \"h\").set(1.0); }";
+        let r = lint_one("serve/x.rs", two_kinds);
+        assert!(rules_of(&r).contains(&"metric-hygiene"));
+        // Same name + kind + help across sites is the per-label-set
+        // registration pattern and stays legal.
+        let dup_ok = "fn f() { crate::metric!(counter \"fk_x_total\", \"Same.\").inc(); }\nfn g() { crate::metric!(counter \"fk_x_total\", \"Same.\").inc(); }";
+        assert!(lint_one("serve/x.rs", dup_ok).clean());
+        let dup_help = "fn f() { crate::metric!(counter \"fk_x_total\", \"One.\").inc(); }\nfn g() { crate::metric!(counter \"fk_x_total\", \"Two.\").inc(); }";
+        assert!(rules_of(&lint_one("serve/x.rs", dup_help)).contains(&"metric-hygiene"));
+    }
+
+    #[test]
+    fn metric_hygiene_rejects_non_literal_names_outside_obs() {
+        let src = "fn f(name: &str) { obs::counter_with(name, \"h\", &[]).inc(); }";
+        assert_eq!(rules_of(&lint_one("serve/x.rs", src)), vec!["metric-hygiene"]);
+        assert!(lint_one("obs/mod.rs", src).clean());
+    }
+
+    #[test]
+    fn metric_hygiene_skips_tests_and_histogram_collisions_fire() {
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { crate::metric!(counter \"obs_test_x\", \"h\").inc(); }\n}\n";
+        assert!(lint_one("obs/mod.rs", test_src).clean());
+        let clash = "fn f() { crate::metric!(histogram \"fk_lat_seconds\", \"h\", B).observe(1.0); }\nfn g() { crate::metric!(gauge \"fk_lat_seconds_count\", \"h\").set(1.0); }";
+        assert!(rules_of(&lint_one("serve/x.rs", clash)).contains(&"metric-hygiene"));
+    }
+
+    // ---- rule 5: zero-dep ----
+
+    #[test]
+    fn zero_dep_allows_only_feature_gated_xla() {
+        let clean = "[package]\nname = \"forest_kernels\"\n\n[features]\nxla = []\n";
+        assert!(lint_sources(&[], Some(clean), &Config::all()).clean());
+        let with_dep = "[package]\nname = \"x\"\n\n[dependencies]\nserde = \"1\"\n";
+        let r = lint_sources(&[], Some(with_dep), &Config::all());
+        assert_eq!(rules_of(&r), vec!["zero-dep"]);
+        assert_eq!(r.findings[0].file, "Cargo.toml");
+        let xla_ok = "[dependencies]\nxla = { path = \"vendor/xla\", optional = true }\n";
+        assert!(lint_sources(&[], Some(xla_ok), &Config::all()).clean());
+        let dotted = "[dependencies.rand]\nversion = \"0.8\"\n";
+        assert_eq!(rules_of(&lint_sources(&[], Some(dotted), &Config::all())), vec!["zero-dep"]);
+        let dev = "[dev-dependencies]\nproptest = \"1\"\n";
+        assert_eq!(rules_of(&lint_sources(&[], Some(dev), &Config::all())), vec!["zero-dep"]);
+    }
+
+    // ---- suppressions ----
+
+    #[test]
+    fn suppression_covers_same_line_and_next_line() {
+        let trailing = "fn f() { x.unwrap(); } // fk-lint: allow(no-panic-in-serve) -- test fixture reason\n";
+        assert!(lint_one("serve/x.rs", trailing).clean());
+        let standalone = "// fk-lint: allow(no-panic-in-serve) -- test fixture reason\nfn f() { x.unwrap(); }\n";
+        assert!(lint_one("serve/x.rs", standalone).clean());
+        // Two lines down is out of range.
+        let far = "// fk-lint: allow(no-panic-in-serve) -- reason\nfn f() {\n    x.unwrap();\n}\n";
+        let r = lint_one("serve/x.rs", far);
+        assert!(rules_of(&r).contains(&"no-panic-in-serve"));
+    }
+
+    #[test]
+    fn suppression_requires_reason_and_known_rule() {
+        let no_reason = "fn f() { x.unwrap(); } // fk-lint: allow(no-panic-in-serve)\n";
+        let r = lint_one("serve/x.rs", no_reason);
+        assert!(rules_of(&r).contains(&"suppression"));
+        let unknown = "// fk-lint: allow(no-such-rule) -- because\nfn f() {}\n";
+        let r = lint_one("serve/x.rs", unknown);
+        assert!(rules_of(&r).contains(&"suppression"));
+    }
+
+    #[test]
+    fn unused_suppressions_are_findings() {
+        let src = "// fk-lint: allow(no-panic-in-serve) -- nothing here needs it\nfn f() {}\n";
+        let r = lint_one("serve/x.rs", src);
+        assert_eq!(rules_of(&r), vec!["suppression"]);
+        assert!(r.findings[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn suppression_budget_is_capped() {
+        let mut src = String::new();
+        for _ in 0..(MAX_SUPPRESSIONS + 1) {
+            src.push_str("fn f() { x.unwrap(); } // fk-lint: allow(no-panic-in-serve) -- r\n");
+        }
+        let r = lint_one("serve/x.rs", &src);
+        assert!(r.findings.iter().any(|f| f.message.contains("budget exceeded")));
+        assert_eq!(r.suppressions_total, MAX_SUPPRESSIONS + 1);
+    }
+
+    #[test]
+    fn rule_selection_via_config() {
+        let cfg = Config::from_list("determinism, zero-dep").unwrap();
+        let src = "fn f() { x.unwrap(); }";
+        let r = lint_sources(&[("serve/x.rs", src)], None, &cfg);
+        assert!(r.clean(), "no-panic rule was not enabled");
+        assert!(Config::from_list("no-such-rule").is_err());
+        assert!(Config::from_list("").is_err());
+    }
+}

@@ -1,0 +1,570 @@
+//! The five `fk-lint` rule families, the suppression mechanism, and
+//! the [`Report`] the binary and the self-tests consume.
+//!
+//! Every rule works on the stripped [`SourceFile`] representation from
+//! [`crate::analysis::scan`]; none of them parse Rust. See
+//! `rust/INVARIANTS.md` for the rationale behind each rule and the
+//! suppression policy.
+
+use super::scan::{find_token, literal_index_spans, SourceFile, STR_MARK};
+use crate::error::Result;
+use crate::{anyhow, bail};
+
+/// All rule ids, in reporting order. `--rules` accepts any subset.
+pub const RULE_IDS: &[&str] =
+    &["no-panic-in-serve", "safety-comment", "determinism", "metric-hygiene", "zero-dep"];
+
+/// Repo-wide ceiling on `fk-lint: allow(...)` annotations. Suppression
+/// is an escape hatch, not a lifestyle; when the repo accumulates this
+/// many, the lint fails until some are removed (or the invariant is
+/// renegotiated in INVARIANTS.md and this cap raised there + here).
+pub const MAX_SUPPRESSIONS: usize = 16;
+
+/// Files allowed to contain the token `unsafe` at all. Everything
+/// else fails `safety-comment` even with a SAFETY justification — the
+/// point is confinement, not paperwork.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "exec/mod.rs",
+    "forest/mod.rs",
+    "forest/tree.rs",
+    "model/mmap.rs",
+    "model/mod.rs",
+    "sparse/buf.rs",
+    "sparse/csr.rs",
+    "sparse/spgemm.rs",
+    "serve/mod.rs",
+];
+
+/// Request/decode paths where a panic kills a serving replica.
+pub const NO_PANIC_SCOPE: &[&str] = &["serve/", "model/", "runtime/"];
+
+/// Kernel-math modules where any nondeterminism (hash iteration
+/// order, wall-clock reads, thread identity) can silently break the
+/// parallel == serial bitwise contract.
+pub const DETERMINISM_SCOPE: &[&str] = &["sparse/", "swlc/", "spectral/", "forest/"];
+
+/// One violation: `file:line rule-id message`.
+#[derive(Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The outcome of a lint run.
+pub struct Report {
+    /// Surviving findings (suppressed ones removed), sorted by
+    /// file/line/rule.
+    pub findings: Vec<Finding>,
+    /// Suppressions that actually hid at least one finding.
+    pub suppressions_used: usize,
+    /// Total `fk-lint: allow` annotations seen (used or not).
+    pub suppressions_total: usize,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Which rules run. Built from `--rules a,b,c` or [`Config::all`].
+pub struct Config {
+    enabled: Vec<&'static str>,
+}
+
+impl Config {
+    pub fn all() -> Self {
+        Config { enabled: RULE_IDS.to_vec() }
+    }
+
+    /// Parse a `--rules` list; unknown ids are an error so a typo
+    /// can't silently disable enforcement.
+    pub fn from_list(list: &str) -> Result<Self> {
+        let mut enabled = Vec::new();
+        for part in list.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let id = RULE_IDS
+                .iter()
+                .find(|r| **r == part)
+                .ok_or_else(|| anyhow!("unknown rule id {:?} (known: {})", part, RULE_IDS.join(", ")))?;
+            enabled.push(*id);
+        }
+        if enabled.is_empty() {
+            bail!("--rules list selected no rules");
+        }
+        Ok(Config { enabled })
+    }
+
+    pub fn enabled(&self, id: &str) -> bool {
+        self.enabled.iter().any(|r| *r == id)
+    }
+}
+
+fn in_scope(rel: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| rel.starts_with(p))
+}
+
+/// Run the enabled rules over pre-scanned sources. `cargo_toml` is the
+/// manifest text for the `zero-dep` rule (`None` skips that rule, for
+/// fixture runs that only exercise source rules).
+pub fn run(sources: &[SourceFile], cargo_toml: Option<&str>, cfg: &Config) -> Report {
+    let mut raw: Vec<Finding> = Vec::new();
+    for src in sources {
+        if cfg.enabled("no-panic-in-serve") {
+            no_panic_rule(src, &mut raw);
+        }
+        if cfg.enabled("safety-comment") {
+            safety_comment_rule(src, &mut raw);
+        }
+        if cfg.enabled("determinism") {
+            determinism_rule(src, &mut raw);
+        }
+    }
+    if cfg.enabled("metric-hygiene") {
+        metric_hygiene_rule(sources, &mut raw);
+    }
+    if cfg.enabled("zero-dep") {
+        if let Some(toml) = cargo_toml {
+            zero_dep_rule(toml, &mut raw);
+        }
+    }
+
+    // Apply suppressions: an annotation covers findings on its own
+    // line (trailing form) and on the next line (standalone form).
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut used_total = 0usize;
+    let mut total = 0usize;
+    // Findings that belong to no scanned source (the `zero-dep` rule
+    // reports against Cargo.toml) have nowhere to hang a suppression;
+    // pass them straight through.
+    for f in &raw {
+        if !sources.iter().any(|s| s.rel == f.file) {
+            findings.push(f.clone());
+        }
+    }
+    for src in sources {
+        total += src.suppressions.len();
+        let mut used = vec![false; src.suppressions.len()];
+        for f in raw.iter().filter(|f| f.file == src.rel) {
+            let covering = src.suppressions.iter().position(|s| {
+                s.malformed.is_none()
+                    && (s.line == f.line || s.line + 1 == f.line)
+                    && s.rules.iter().any(|r| r == f.rule)
+            });
+            match covering {
+                Some(i) => used[i] = true,
+                None => findings.push(f.clone()),
+            }
+        }
+        for (s, was_used) in src.suppressions.iter().zip(&used) {
+            if let Some(why) = &s.malformed {
+                findings.push(Finding {
+                    file: src.rel.clone(),
+                    line: s.line,
+                    rule: "suppression",
+                    message: format!("malformed fk-lint annotation: {why}"),
+                });
+                continue;
+            }
+            if let Some(bad) = s.rules.iter().find(|r| !RULE_IDS.contains(&r.as_str())) {
+                findings.push(Finding {
+                    file: src.rel.clone(),
+                    line: s.line,
+                    rule: "suppression",
+                    message: format!("allow() names unknown rule {bad:?}"),
+                });
+                continue;
+            }
+            if *was_used {
+                used_total += 1;
+            } else if s.rules.iter().all(|r| cfg.enabled(r)) {
+                // Only call an annotation dead when every rule it
+                // names actually ran — a partial `--rules` run can't
+                // tell whether the others would have fired.
+                findings.push(Finding {
+                    file: src.rel.clone(),
+                    line: s.line,
+                    rule: "suppression",
+                    message: format!("unused allow({}) — remove it", s.rules.join(", ")),
+                });
+            }
+        }
+    }
+    if total > MAX_SUPPRESSIONS {
+        findings.push(Finding {
+            file: sources.first().map(|s| s.rel.clone()).unwrap_or_default(),
+            line: 1,
+            rule: "suppression",
+            message: format!(
+                "suppression budget exceeded: {total} fk-lint annotations repo-wide, cap is {MAX_SUPPRESSIONS}"
+            ),
+        });
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Report {
+        findings,
+        suppressions_used: used_total,
+        suppressions_total: total,
+        files_scanned: sources.len(),
+    }
+}
+
+/// Rule 1: `no-panic-in-serve`. A replica must degrade on bad input,
+/// never die; the request/decode paths may not contain panicking
+/// calls or fixed-offset slice indexing.
+fn no_panic_rule(src: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_scope(&src.rel, NO_PANIC_SCOPE) || src.rel.starts_with("bench_support") {
+        return;
+    }
+    const CALLS: &[(&str, &str)] = &[
+        (".unwrap()", "`.unwrap()` can panic a serving replica; use `?`/`ok_or_else` or a recovering helper"),
+        (".expect(", "`.expect(...)` can panic a serving replica; return a structured error instead"),
+        ("panic!", "`panic!` in a request/decode path kills the replica; bail with an error"),
+        ("unreachable!", "`unreachable!` in a request/decode path kills the replica on the day it is reached"),
+        ("todo!", "`todo!` must not ship in a request/decode path"),
+        ("unimplemented!", "`unimplemented!` must not ship in a request/decode path"),
+    ];
+    for (idx, line) in src.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (tok, msg) in CALLS {
+            if find_token(&line.code, tok, 0).is_some() {
+                out.push(Finding {
+                    file: src.rel.clone(),
+                    line: idx + 1,
+                    rule: "no-panic-in-serve",
+                    message: (*msg).to_string(),
+                });
+            }
+        }
+        for (_, subscript) in literal_index_spans(&line.code) {
+            out.push(Finding {
+                file: src.rel.clone(),
+                line: idx + 1,
+                rule: "no-panic-in-serve",
+                message: format!(
+                    "literal index `[{subscript}]` panics on short input; use `get(..)`/a checked helper"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule 2: `safety-comment`. `unsafe` is confined to the allowlist
+/// and every occurrence carries a `// SAFETY:` justification on the
+/// same line or within the lookback window above it. Test code is NOT
+/// exempt — unsafe in a test needs the same contract.
+fn safety_comment_rule(src: &SourceFile, out: &mut Vec<Finding>) {
+    let allowed = UNSAFE_ALLOWLIST.contains(&src.rel.as_str());
+    for (idx, line) in src.lines.iter().enumerate() {
+        if find_token(&line.code, "unsafe", 0).is_none() {
+            continue;
+        }
+        if !allowed {
+            out.push(Finding {
+                file: src.rel.clone(),
+                line: idx + 1,
+                rule: "safety-comment",
+                message: "`unsafe` outside the module allowlist (see analysis::rules::UNSAFE_ALLOWLIST)"
+                    .to_string(),
+            });
+        } else if !src.has_safety_comment(idx) {
+            out.push(Finding {
+                file: src.rel.clone(),
+                line: idx + 1,
+                rule: "safety-comment",
+                message: "`unsafe` without a `// SAFETY:` justification within 8 lines".to_string(),
+            });
+        }
+    }
+}
+
+/// Rule 3: `determinism`. Kernel math may not observe hash iteration
+/// order, wall clocks, or thread identity — any of them can break the
+/// bitwise parallel == serial contract. Timing belongs to `obs::`
+/// (see `obs::stopwatch`), keyed collections to `BTreeMap`/sorted vecs.
+fn determinism_rule(src: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_scope(&src.rel, DETERMINISM_SCOPE) {
+        return;
+    }
+    const TOKENS: &[(&str, &str)] = &[
+        ("HashMap", "HashMap iteration order is nondeterministic; use BTreeMap or a sorted Vec"),
+        ("HashSet", "HashSet iteration order is nondeterministic; use BTreeSet or a sorted Vec"),
+        ("Instant::now", "wall-clock reads belong to obs/bench layers; use `obs::stopwatch()`"),
+        ("SystemTime::now", "wall-clock reads belong to obs/bench layers; use `obs::stopwatch()`"),
+        ("thread::current", "thread identity must not influence kernel math"),
+        ("ThreadId", "thread identity must not influence kernel math"),
+    ];
+    for (idx, line) in src.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (tok, msg) in TOKENS {
+            if find_token(&line.code, tok, 0).is_some() {
+                out.push(Finding {
+                    file: src.rel.clone(),
+                    line: idx + 1,
+                    rule: "determinism",
+                    message: (*msg).to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// One metric registration discovered in source.
+struct MetricSite {
+    file: String,
+    line: usize,
+    /// counter | gauge | histogram.
+    kind: &'static str,
+    name: String,
+    help: Option<String>,
+}
+
+/// Rule 4: `metric-hygiene`. Every registration site uses a literal
+/// name matching the Prometheus grammar `obs::parse_prometheus`
+/// enforces on scrapes, carries the `fk_` prefix, agrees with the
+/// suffix convention (counters end `_total`, nothing else does), and
+/// each name has exactly one TYPE and one help string repo-wide.
+/// Duplicate call sites for the same name are fine when kind + help
+/// agree (per-label-set registration does this on purpose).
+fn metric_hygiene_rule(sources: &[SourceFile], out: &mut Vec<Finding>) {
+    // (token, kind-or-None-for-macro)
+    const SITES: &[(&str, Option<&str>)] = &[
+        ("metric!(", None),
+        ("counter_with(", Some("counter")),
+        ("counter_secs(", Some("counter")),
+        ("counter(", Some("counter")),
+        ("gauge_with(", Some("gauge")),
+        ("gauge(", Some("gauge")),
+        ("histogram_with(", Some("histogram")),
+        ("histogram(", Some("histogram")),
+    ];
+    let mut found: Vec<MetricSite> = Vec::new();
+    for src in sources {
+        for (idx, line) in src.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for (tok, kind) in SITES {
+                let mut at = 0usize;
+                while let Some(pos) = find_token(&line.code, tok, at) {
+                    at = pos + tok.len();
+                    // Skip the definitions themselves (`pub fn counter_with(`).
+                    if line.code[..pos].trim_end().ends_with("fn") {
+                        continue;
+                    }
+                    collect_site(src, idx, pos + tok.len(), *kind, &mut found, out);
+                }
+            }
+        }
+    }
+    // Cross-site checks.
+    for site in &found {
+        if !crate::obs::valid_metric_name(&site.name) {
+            push_metric_finding(out, site, format!(
+                "metric name {:?} fails the Prometheus grammar obs::parse_prometheus enforces",
+                site.name
+            ));
+        } else if !site.name.starts_with("fk_") {
+            push_metric_finding(out, site, format!(
+                "metric name {:?} must carry the crate's `fk_` prefix", site.name
+            ));
+        }
+        let is_total = site.name.ends_with("_total");
+        if site.kind == "counter" && !is_total {
+            push_metric_finding(out, site, format!(
+                "counter {:?} must end in `_total` (Prometheus counter convention)", site.name
+            ));
+        } else if site.kind != "counter" && is_total {
+            push_metric_finding(out, site, format!(
+                "{} {:?} must not end in `_total` — that suffix marks counters",
+                site.kind, site.name
+            ));
+        }
+    }
+    for (i, site) in found.iter().enumerate() {
+        for other in &found[..i] {
+            if other.name != site.name {
+                continue;
+            }
+            if other.kind != site.kind {
+                push_metric_finding(out, site, format!(
+                    "metric {:?} registered as {} here but as {} at {}:{} — one TYPE per name",
+                    site.name, site.kind, other.kind, other.file, other.line
+                ));
+            } else if site.help.is_some() && other.help.is_some() && site.help != other.help {
+                push_metric_finding(out, site, format!(
+                    "metric {:?} help text differs from the site at {}:{} — keep one help per name",
+                    site.name, other.file, other.line
+                ));
+            }
+        }
+        // A histogram exports `<name>_bucket/_sum/_count` series; no
+        // other metric may squat on those derived names.
+        if site.kind == "histogram" {
+            for suffix in ["_bucket", "_sum", "_count"] {
+                let derived = format!("{}{}", site.name, suffix);
+                if let Some(clash) = found.iter().find(|o| o.name == derived) {
+                    push_metric_finding(out, site, format!(
+                        "histogram {:?} derives series {:?}, which collides with the metric at {}:{}",
+                        site.name, derived, clash.file, clash.line
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn push_metric_finding(out: &mut Vec<Finding>, site: &MetricSite, message: String) {
+    out.push(Finding {
+        file: site.file.clone(),
+        line: site.line,
+        rule: "metric-hygiene",
+        message,
+    });
+}
+
+/// How many lines after a registration token the name/help literals
+/// may sit (rustfmt splits the long calls across lines).
+const METRIC_LOOKAHEAD: usize = 6;
+
+/// Parse one registration site starting just past the opening paren of
+/// the token found on `lines[idx]` at byte offset `after`.
+fn collect_site(
+    src: &SourceFile,
+    idx: usize,
+    after: usize,
+    fn_kind: Option<&'static str>,
+    found: &mut Vec<MetricSite>,
+    out: &mut Vec<Finding>,
+) {
+    // Flatten the call's argument text across the lookahead window,
+    // remembering which line each string sentinel resolves into.
+    let mut text = String::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    for (j, line) in src.lines.iter().enumerate().skip(idx).take(METRIC_LOOKAHEAD) {
+        let code = if j == idx { line.code.get(after..).unwrap_or("") } else { &line.code };
+        // Sentinels before `after` on the first line belong to earlier
+        // calls; skip that many of the line's strings.
+        let skip = if j == idx {
+            line.code.get(..after).unwrap_or("").matches(STR_MARK).count()
+        } else {
+            0
+        };
+        for s in line.strings.iter().skip(skip) {
+            strings.push((j + 1, s.clone()));
+        }
+        text.push_str(code);
+        text.push('\n');
+    }
+    let mut rest = text.trim_start();
+    let kind: &'static str = match fn_kind {
+        Some(k) => k,
+        None => {
+            // metric!(KIND "name", "help", ...): the kind is the first
+            // word of the argument text.
+            let word: String = rest.chars().take_while(|c| is_kind_char(*c)).collect();
+            rest = rest[word.len()..].trim_start();
+            match word.as_str() {
+                "counter" | "counter_secs" => "counter",
+                "gauge" => "gauge",
+                "histogram" => "histogram",
+                other => {
+                    out.push(Finding {
+                        file: src.rel.clone(),
+                        line: idx + 1,
+                        rule: "metric-hygiene",
+                        message: format!("metric! with unknown kind {other:?}"),
+                    });
+                    return;
+                }
+            }
+        }
+    };
+    // The name must be the first argument AND a string literal (its
+    // sentinel leads the remaining argument text). The registry
+    // plumbing in obs/ forwards `$name`/`name` parameters; anywhere
+    // else a non-literal name blinds the lint, which is itself a
+    // violation.
+    if !rest.starts_with(STR_MARK) {
+        if src.rel != "obs/mod.rs" {
+            out.push(Finding {
+                file: src.rel.clone(),
+                line: idx + 1,
+                rule: "metric-hygiene",
+                message: "metric registered with a non-literal name; the lint cannot check it"
+                    .to_string(),
+            });
+        }
+        return;
+    }
+    let Some((name_line, name)) = strings.first().cloned() else {
+        return;
+    };
+    let help = strings.get(1).map(|(_, h)| h.clone());
+    found.push(MetricSite { file: src.rel.clone(), line: name_line, kind, name, help });
+}
+
+fn is_kind_char(c: char) -> bool {
+    c.is_ascii_lowercase() || c == '_'
+}
+
+/// Rule 5: `zero-dep`. The manifest's dependency tables stay empty
+/// except the feature-gated `xla` backend. Absent tables pass.
+fn zero_dep_rule(cargo_toml: &str, out: &mut Vec<Finding>) {
+    let mut in_dep_table = false;
+    for (idx, raw_line) in cargo_toml.lines().enumerate() {
+        let line = raw_line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            let section = line.trim_matches(|c| c == '[' || c == ']');
+            in_dep_table = is_dep_section(section);
+            // `[dependencies.foo]` declares foo directly.
+            if let Some(dep) = section.strip_prefix("dependencies.") {
+                if dep != "xla" {
+                    out.push(zero_dep_finding(idx + 1, dep));
+                }
+            }
+            continue;
+        }
+        if in_dep_table {
+            let key = line.split('=').next().unwrap_or("").trim().trim_matches('"');
+            if !key.is_empty() && key != "xla" {
+                out.push(zero_dep_finding(idx + 1, key));
+            }
+        }
+    }
+}
+
+fn is_dep_section(section: &str) -> bool {
+    section == "dependencies"
+        || section == "dev-dependencies"
+        || section == "build-dependencies"
+        || (section.starts_with("target.") && section.ends_with("dependencies"))
+}
+
+fn zero_dep_finding(line: usize, dep: &str) -> Finding {
+    Finding {
+        file: "Cargo.toml".to_string(),
+        line,
+        rule: "zero-dep",
+        message: format!(
+            "dependency {dep:?} violates the zero-dep contract (only the feature-gated `xla` is allowed)"
+        ),
+    }
+}

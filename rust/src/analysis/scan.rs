@@ -1,0 +1,471 @@
+//! Token-level Rust source scanner for the `fk-lint` rules.
+//!
+//! This is deliberately *not* a parser: the invariants the rules check
+//! (forbidden call tokens, `unsafe` confinement, metric name literals)
+//! are all visible at the lexical layer, so a line-oriented scanner
+//! with exact comment/string/char-literal stripping is enough — and it
+//! keeps the analyzer zero-dependency and fast (one pass per file).
+//!
+//! [`scan_source`] splits a file into [`Line`]s, each carrying:
+//!
+//! * `code` — the source with comments removed, string literals
+//!   replaced by [`STR_MARK`] sentinels, and char literals replaced by
+//!   [`CHAR_MARK`] (so rules never match tokens inside literals, and
+//!   braces inside `'{'` or `"{}"` never corrupt depth tracking);
+//! * `comment` — the concatenated comment text of the line (where
+//!   `// SAFETY:` justifications and `// fk-lint: allow(...)`
+//!   suppressions live);
+//! * `strings` — the contents of string literals *started* on the
+//!   line, in order, so a rule that hits a `STR_MARK` can recover the
+//!   literal (the metric-hygiene rule resolves names this way);
+//! * `in_test` — whether the line sits inside a `#[cfg(test)]` item,
+//!   tracked by brace depth (test code is exempt from the panic and
+//!   determinism rules — panicking asserts are what tests are for).
+//!
+//! Raw strings (`r"…"`, `r#"…"#`), byte strings, byte chars, nested
+//! block comments, escaped quotes, and `\`-newline string
+//! continuations are all handled; lifetimes (`'a`) are distinguished
+//! from char literals by lookahead.
+
+/// Sentinel standing in for a string literal in [`Line::code`].
+pub const STR_MARK: char = '\u{1}';
+/// Sentinel standing in for a char / byte literal in [`Line::code`].
+pub const CHAR_MARK: char = '\u{2}';
+
+/// How many preceding lines a `// SAFETY:` comment may sit above the
+/// `unsafe` it justifies (multi-line justifications are common).
+pub const SAFETY_LOOKBACK: usize = 8;
+
+/// One scanned source line. See the module docs for field semantics.
+#[derive(Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+    pub strings: Vec<String>,
+    pub in_test: bool,
+}
+
+/// A `// fk-lint: allow(rule-a, rule-b) -- reason` annotation. It
+/// covers findings on its own line (trailing form) and on the next
+/// line (standalone form).
+pub struct Suppression {
+    /// 1-based line the annotation sits on.
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    /// Set when the annotation could not be parsed (no `allow(...)`
+    /// list, or no `-- reason`); the rules engine reports these.
+    pub malformed: Option<String>,
+}
+
+/// One scanned file: stripped lines plus its suppression annotations.
+pub struct SourceFile {
+    /// Path relative to the scanned source root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<Line>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl SourceFile {
+    /// Whether any comment within [`SAFETY_LOOKBACK`] lines above (or
+    /// on) 0-based line `idx` carries a safety justification.
+    pub fn has_safety_comment(&self, idx: usize) -> bool {
+        let lo = idx.saturating_sub(SAFETY_LOOKBACK);
+        self.lines
+            .get(lo..=idx)
+            .unwrap_or(&[])
+            .iter()
+            .any(|l| l.comment.contains("SAFETY:") || l.comment.contains("# Safety"))
+    }
+}
+
+/// Is `c` part of a Rust identifier (for word-boundary checks)?
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find `needle` in `code` as a whole word. A word-boundary check
+/// applies on each side only where the needle's own edge character is
+/// an identifier character — so `unsafe` won't match inside
+/// `unsafe_op_in_unsafe_fn`, while `metric!(` and `.expect(` match
+/// regardless of what follows the paren. Returns the byte offset of
+/// the first such match at or after `from`.
+pub fn find_token(code: &str, needle: &str, from: usize) -> Option<usize> {
+    let needs_before = needle.chars().next().is_some_and(is_ident_char);
+    let needs_after = needle.chars().next_back().is_some_and(is_ident_char);
+    let mut at = from;
+    while let Some(rel) = code.get(at..).and_then(|s| s.find(needle)) {
+        let start = at + rel;
+        let end = start + needle.len();
+        let before_ok = !needs_before
+            || code[..start].chars().next_back().is_none_or(|c| !is_ident_char(c));
+        let after_ok =
+            !needs_after || code[end..].chars().next().is_none_or(|c| !is_ident_char(c));
+        if before_ok && after_ok {
+            return Some(start);
+        }
+        at = start + needle.len().max(1);
+    }
+    None
+}
+
+fn parse_suppression(comment: &str, line: usize) -> Option<Suppression> {
+    // The annotation must START the comment (`// fk-lint: ...`) —
+    // prose that merely *mentions* the syntax (doc comments, the
+    // linter's own sources) is not an annotation.
+    let rest = comment.trim_start().strip_prefix("fk-lint:")?.trim_start();
+    let malformed = |why: &str| Suppression {
+        line,
+        rules: Vec::new(),
+        reason: String::new(),
+        malformed: Some(why.to_string()),
+    };
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(malformed("expected `allow(rule, ...)` after `fk-lint:`"));
+    };
+    let Some(close) = body.find(')') else {
+        return Some(malformed("unterminated `allow(` list"));
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(malformed("empty `allow()` list"));
+    }
+    let Some(reason) = body[close + 1..].split("--").nth(1).map(str::trim) else {
+        return Some(malformed("missing `-- reason` justification"));
+    };
+    if reason.is_empty() {
+        return Some(malformed("empty `-- reason` justification"));
+    }
+    Some(Suppression { line, rules, reason: reason.to_string(), malformed: None })
+}
+
+/// Lexing mode of the scanner's single pass.
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* */`.
+    BlockComment(u32),
+    /// `in_continuation`: skipping indentation after a `\`-newline.
+    Str { strip_ws: bool },
+    RawStr { hashes: u32 },
+}
+
+/// Scan one file into stripped lines. `rel` is kept verbatim as the
+/// reporting path.
+pub fn scan_source(rel: &str, text: &str) -> SourceFile {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut suppressions: Vec<Suppression> = Vec::new();
+    let mut mode = Mode::Code;
+    let mut depth: i64 = 0;
+    // #[cfg(test)] tracking: `pending` is set when the attribute has
+    // been seen and its item's `{` has not; `close_depth` is the depth
+    // the region's closing `}` returns below.
+    let mut pending_test = false;
+    let mut test_close_depth: Option<i64> = None;
+    // Index (into `lines`) of the line the current string started on.
+    let mut str_start_line = 0usize;
+    let mut cur_str = String::new();
+    let mut i = 0usize;
+
+    macro_rules! cur {
+        () => {
+            lines.last_mut().expect("lines is never empty")
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            // Strings and block comments continue across the newline;
+            // the raw-string / string content keeps its newline so
+            // literals round-trip — except inside a `\`-newline
+            // continuation, where Rust drops the newline itself.
+            match mode {
+                Mode::Str { strip_ws: false } | Mode::RawStr { .. } => cur_str.push('\n'),
+                _ => {}
+            }
+            let in_test = pending_test || test_close_depth.is_some();
+            let line_no = lines.len();
+            let line = cur!();
+            line.in_test = line.in_test || in_test;
+            if let Some(s) = parse_suppression(&line.comment, line_no) {
+                suppressions.push(s);
+            }
+            lines.push(Line::default());
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::LineComment => {
+                cur!().comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(nest) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if nest == 1 { Mode::Code } else { Mode::BlockComment(nest - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(nest + 1);
+                    i += 2;
+                } else {
+                    cur!().comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str { strip_ws } => {
+                if strip_ws && (c == ' ' || c == '\t') {
+                    i += 1;
+                } else if c == '\\' {
+                    match chars.get(i + 1) {
+                        // `\`-newline continuation: the newline is left
+                        // for the top-of-loop handler (so line counting
+                        // stays in one place); leading whitespace of
+                        // the next line is skipped per Rust semantics.
+                        Some('\n') => {
+                            mode = Mode::Str { strip_ws: true };
+                            i += 1;
+                        }
+                        Some('n') => {
+                            cur_str.push('\n');
+                            mode = Mode::Str { strip_ws: false };
+                            i += 2;
+                        }
+                        Some(&e) => {
+                            // Other escapes keep their raw spelling —
+                            // the rules only substring-match contents.
+                            cur_str.push(e);
+                            mode = Mode::Str { strip_ws: false };
+                            i += 2;
+                        }
+                        None => i += 1,
+                    }
+                } else if c == '"' {
+                    let done = std::mem::take(&mut cur_str);
+                    lines
+                        .get_mut(str_start_line)
+                        .expect("string start line exists")
+                        .strings
+                        .push(done);
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur_str.push(c);
+                    mode = Mode::Str { strip_ws: false };
+                    i += 1;
+                }
+            }
+            Mode::RawStr { hashes } => {
+                let closes = c == '"'
+                    && (1..=hashes as usize)
+                        .all(|k| chars.get(i + k) == Some(&'#'));
+                if closes {
+                    let done = std::mem::take(&mut cur_str);
+                    lines
+                        .get_mut(str_start_line)
+                        .expect("string start line exists")
+                        .strings
+                        .push(done);
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    cur_str.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let prev_ident =
+                    cur!().code.chars().next_back().is_some_and(is_ident_char);
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                // Raw / byte string prefixes (checked before the ident
+                // char lands in `code`): r"…", r#"…"#, b"…", br"…".
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let raw = chars.get(j) == Some(&'#') || (c != 'b' && chars.get(j) == Some(&'"'));
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        if raw || hashes > 0 {
+                            mode = Mode::RawStr { hashes };
+                        } else {
+                            // b"…" — ordinary escapes apply.
+                            mode = Mode::Str { strip_ws: false };
+                        }
+                        str_start_line = lines.len() - 1;
+                        cur_str.clear();
+                        cur!().code.push(STR_MARK);
+                        i = j + 1;
+                        continue;
+                    }
+                    if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                        // Byte char literal: consume like a char literal.
+                        i = consume_char_literal(&chars, i + 1);
+                        cur!().code.push(CHAR_MARK);
+                        continue;
+                    }
+                    // Plain identifier starting with r/b.
+                }
+                if c == '"' {
+                    mode = Mode::Str { strip_ws: false };
+                    str_start_line = lines.len() - 1;
+                    cur_str.clear();
+                    cur!().code.push(STR_MARK);
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' && !prev_ident {
+                    // Char literal vs lifetime: a literal is `'\…'` or
+                    // `'X'` (any single char then a quote); everything
+                    // else (`'a`, `'static`, `'_ `) is a lifetime.
+                    let is_literal = chars.get(i + 1) == Some(&'\\')
+                        || (chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\''));
+                    if is_literal {
+                        i = consume_char_literal(&chars, i);
+                        cur!().code.push(CHAR_MARK);
+                        continue;
+                    }
+                }
+                if c == '{' {
+                    depth += 1;
+                    if test_close_depth.is_none()
+                        && (pending_test || cur!().code.contains("#[cfg(test)]"))
+                    {
+                        test_close_depth = Some(depth);
+                        pending_test = false;
+                        cur!().in_test = true;
+                    }
+                } else if c == '}' {
+                    depth -= 1;
+                    if let Some(td) = test_close_depth {
+                        if depth < td {
+                            // The closing line is still test code.
+                            cur!().in_test = true;
+                            test_close_depth = None;
+                        }
+                    }
+                } else if c == ';' && pending_test && test_close_depth.is_none() {
+                    // `#[cfg(test)] use …;` — a braceless test item
+                    // ends at the semicolon.
+                    cur!().in_test = true;
+                    pending_test = false;
+                }
+                cur!().code.push(c);
+                if test_close_depth.is_none() && cur!().code.ends_with("#[cfg(test)]") {
+                    pending_test = true;
+                    cur!().in_test = true;
+                }
+                i += 1;
+            }
+        }
+    }
+    // Finalize the last (unterminated) line.
+    let line_no = lines.len();
+    let line = cur!();
+    line.in_test = line.in_test || pending_test || test_close_depth.is_some();
+    if let Some(s) = parse_suppression(&line.comment, line_no) {
+        suppressions.push(s);
+    }
+    SourceFile { rel: rel.to_string(), lines, suppressions }
+}
+
+/// Consume a char literal starting at the opening `'` at `at`; returns
+/// the index just past the closing quote. Escapes (`'\''`, `'\u{1}'`)
+/// are skipped pairwise, so an escaped quote never terminates early.
+fn consume_char_literal(chars: &[char], at: usize) -> usize {
+    let mut j = at + 1;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => return j + 1,
+            '\n' => return j, // malformed; don't eat the newline
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Byte spans inside `code` that index a slice/array with a *literal*
+/// subscript — `buf[12]`, `head[20..28]`, `&payload[1..]`, `x[..8]` —
+/// the fixed-offset decode pattern that panics on short input. A
+/// subscript mentioning any identifier (`buf[at + 8..]`, `v[i]`) is
+/// skipped: computed indices are usually range-checked by construction
+/// and flagging them all would drown the signal.
+pub fn literal_index_spans(code: &str) -> Vec<(usize, String)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < bytes.len() {
+        if bytes[k] != b'[' {
+            k += 1;
+            continue;
+        }
+        // Indexing needs an expression before the bracket: an ident
+        // char, a close-paren/bracket, or a `?` (`take(1)?[0]`).
+        // `#[attr]`, `vec![…]`, and `[T; N]` literals all fail this.
+        let before = code[..k].chars().next_back();
+        let indexes =
+            matches!(before, Some(c) if is_ident_char(c) || c == ')' || c == ']' || c == '?');
+        // Find the matching `]` on this line (nested brackets bail).
+        let mut close = None;
+        let mut depth_b = 0i32;
+        for (off, &b) in bytes.iter().enumerate().skip(k + 1) {
+            match b {
+                b'[' => depth_b += 1,
+                b']' if depth_b > 0 => depth_b -= 1,
+                b']' => {
+                    close = Some(off);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(close) = close else {
+            k += 1;
+            continue;
+        };
+        let inner = code[k + 1..close].trim();
+        if indexes && is_literal_subscript(inner) {
+            out.push((k, inner.to_string()));
+        }
+        k = close + 1;
+    }
+    out
+}
+
+/// `12`, `0x10`, `1_000`, `20..28`, `1..`, `..8`, `4..=7` — integer
+/// literals and ranges of them, with at least one digit present.
+fn is_literal_subscript(s: &str) -> bool {
+    fn int_or_empty(p: &str) -> bool {
+        p.trim().chars().all(|c| c.is_ascii_hexdigit() || c == '_' || c == 'x')
+    }
+    if s.is_empty() || !s.chars().any(|c| c.is_ascii_digit()) {
+        return false;
+    }
+    match s.split_once("..") {
+        Some((lo, hi)) => int_or_empty(lo) && int_or_empty(hi.strip_prefix('=').unwrap_or(hi)),
+        None => int_or_empty(s),
+    }
+}

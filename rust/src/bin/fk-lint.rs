@@ -1,0 +1,144 @@
+//! `fk-lint` — the crate's invariant linter. Walks a source tree and
+//! enforces the five rule families documented in `rust/INVARIANTS.md`:
+//! `no-panic-in-serve`, `safety-comment`, `determinism`,
+//! `metric-hygiene`, and `zero-dep`.
+//!
+//! ```text
+//! fk-lint [--root DIR] [--rules id,id,...] [--json]
+//! ```
+//!
+//! Findings print as `file:line rule-id message`, one per line (or a
+//! JSON array with `--json`). Exit status: 0 clean, 1 findings, 2
+//! usage or I/O error. Suppress a finding in source with
+//! `// fk-lint: allow(rule-id) -- reason` on the same or preceding
+//! line; suppressions are counted and capped repo-wide.
+
+use forest_kernels::analysis::{self, Config, Report, RULE_IDS};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: Option<PathBuf>,
+    rules: Option<String>,
+    json: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: fk-lint [--root DIR] [--rules id,id,...] [--json]\n\
+     \n\
+     Default root is ./rust/src (or ./src when run from rust/).\n\
+     Rules: no-panic-in-serve, safety-comment, determinism,\n\
+            metric-hygiene, zero-dep (all enabled by default)."
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut out = Args { root: None, rules: None, json: false };
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--root" => {
+                out.root = Some(PathBuf::from(
+                    argv.next().ok_or_else(|| "--root needs a directory".to_string())?,
+                ))
+            }
+            "--rules" => {
+                out.rules =
+                    Some(argv.next().ok_or_else(|| "--rules needs a list".to_string())?)
+            }
+            "--json" => out.json = true,
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+fn default_root() -> PathBuf {
+    let nested = PathBuf::from("rust/src");
+    if nested.is_dir() {
+        nested
+    } else {
+        PathBuf::from("src")
+    }
+}
+
+fn render_json(report: &Report) -> String {
+    use forest_kernels::obs::json_str;
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.message)
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str(&format!(
+        "],\n  \"files_scanned\": {},\n  \"suppressions_used\": {},\n  \"suppressions_total\": {}\n}}\n",
+        report.files_scanned, report.suppressions_used, report.suppressions_total
+    ));
+    out
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("fk-lint: {msg}\n{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match &args.rules {
+        Some(list) => match Config::from_list(list) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("fk-lint: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => Config::all(),
+    };
+    let root = args.root.unwrap_or_else(default_root);
+    if !root.is_dir() {
+        eprintln!("fk-lint: source root {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let report = match analysis::lint_dir(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fk-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.json {
+        print!("{}", render_json(&report));
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        eprintln!(
+            "fk-lint: {} file(s), {} finding(s), {} suppression(s) in use ({} total; rules: {})",
+            report.files_scanned,
+            report.findings.len(),
+            report.suppressions_used,
+            report.suppressions_total,
+            RULE_IDS.join(", ")
+        );
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -290,7 +290,13 @@ pub struct SharedSlice<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: SharedSlice is a bounds-tracked raw view of a `&mut [T]`
+// whose writes are index-disjoint by the `write` contract below; with
+// `T: Send`, moving or sharing the view across worker threads hands
+// out no aliased element access, so both auto-traits are sound.
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+// SAFETY: see the Send impl above — concurrent `&self` use only calls
+// `write` on caller-guaranteed disjoint indices.
 unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
@@ -316,7 +322,10 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, v: T) {
         debug_assert!(i < self.len);
-        *self.ptr.add(i) = v;
+        // SAFETY: the caller promises `i < len` (checked above in
+        // debug builds) and exclusive access to index `i`, so the
+        // write stays inside the borrowed slice and never races.
+        unsafe { *self.ptr.add(i) = v };
     }
 }
 
@@ -424,6 +433,8 @@ mod tests {
             let shared = SharedSlice::new(&mut buf);
             parallel_ranges(64, 4, |_, r| {
                 for i in r {
+                    // SAFETY: each worker owns the disjoint range `r`,
+                    // and every i is < 64 — the write contract holds.
                     unsafe { shared.write(i, i + 1) };
                 }
             });

@@ -45,6 +45,10 @@ impl Tree {
     pub fn apply_binned(&self, row: &[u8]) -> u32 {
         let mut node = 0usize;
         loop {
+            // SAFETY: `node` starts at the root (trees are never
+            // empty) and every `left`/`right` child id was written by
+            // the trainer as an index into this same `nodes` vec, so
+            // the chase can never leave the arena.
             let n = unsafe { self.nodes.get_unchecked(node) };
             if n.feature == LEAF {
                 return n.left;

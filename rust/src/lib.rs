@@ -117,7 +117,20 @@
 //! * [`bench_support`] — measurement helpers (wall time, peak RSS,
 //!   log-log slope fits, machine-readable bench records) shared by the
 //!   figure/table harnesses.
+//! * [`analysis`] — the in-repo static-analysis pass behind the
+//!   `fk-lint` binary: a token-level scanner plus five rule families
+//!   (`no-panic-in-serve`, `safety-comment`, `determinism`,
+//!   `metric-hygiene`, `zero-dep`) that machine-check the invariants
+//!   the compiler can't see. `tests/lint_clean.rs` pins the tree at
+//!   zero findings; `rust/INVARIANTS.md` documents each rule.
 
+// Unsafe code is audited: every `unsafe` block is explicit even
+// inside `unsafe fn` (so each gets its own `// SAFETY:` comment —
+// enforced by fk-lint's `safety-comment` rule), and the Miri CI job
+// executes the unsafe core under the interpreter.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;

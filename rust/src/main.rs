@@ -252,6 +252,13 @@ CI gate:
                   markdown table — appended to $GITHUB_STEP_SUMMARY
                   when set — and exits 0 with a seed notice when the
                   baseline dir is empty or missing)
+
+Tooling (separate binary):
+  fk-lint  [--root DIR] [--rules id,id,...] [--json]
+           (in-repo invariant lint over rust/src: no-panic-in-serve,
+            safety-comment, determinism, metric-hygiene, zero-dep —
+            see rust/INVARIANTS.md; exits 1 on findings, suppress a
+            line with `// fk-lint: allow(rule-id) -- reason`)
 ";
 
 fn main() {

@@ -10,6 +10,51 @@
 use crate::bail;
 use crate::error::Result;
 
+/// Zero-filled fixed-size copy of the first `N` bytes of `b`.
+///
+/// The panic-free building block behind every fixed-width decode in
+/// the model plane: callers guarantee the length by construction
+/// (`take(N)`, `chunks_exact(N)`, or an explicit bounds check), so a
+/// short slice can only mean a caller bug — and even then the result
+/// is a zero-padded value that fails the downstream magic/length/
+/// checksum validation with a structured error, never a panic.
+pub fn arr<const N: usize>(b: &[u8]) -> [u8; N] {
+    let mut out = [0u8; N];
+    let n = N.min(b.len());
+    if let (Some(dst), Some(src)) = (out.get_mut(..n), b.get(..n)) {
+        dst.copy_from_slice(src);
+    }
+    out
+}
+
+/// Little-endian `u32` at byte offset `at`; zero-padded when the
+/// buffer is short (see [`arr`] for why that is safe).
+pub fn u32_at(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(arr(buf.get(at..).unwrap_or(&[])))
+}
+
+/// Little-endian `u64` at byte offset `at`; zero-padded when short.
+pub fn u64_at(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(arr(buf.get(at..).unwrap_or(&[])))
+}
+
+/// Copy `src` into `out[at..]`. Out-of-range writes are a caller bug:
+/// loud under `debug_assertions`, a no-op (never a panic) in release —
+/// the encoder's own length bookkeeping is covered by round-trip
+/// tests, and a serving replica must not die on an encode slip.
+pub fn write_at(out: &mut [u8], at: usize, src: &[u8]) {
+    debug_assert!(
+        at.saturating_add(src.len()) <= out.len(),
+        "write_at: {}+{} exceeds {}",
+        at,
+        src.len(),
+        out.len()
+    );
+    if let Some(dst) = out.get_mut(at..at.saturating_add(src.len())) {
+        dst.copy_from_slice(src);
+    }
+}
+
 /// Append-only little-endian encoder.
 pub struct ByteWriter {
     buf: Vec<u8>,
@@ -127,19 +172,19 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn take_u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(u8::from_le_bytes(arr(self.take(1)?)))
     }
 
     pub fn take_u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(arr(self.take(2)?)))
     }
 
     pub fn take_u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(arr(self.take(4)?)))
     }
 
     pub fn take_u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr(self.take(8)?)))
     }
 
     pub fn take_f32(&mut self) -> Result<f32> {
@@ -167,7 +212,7 @@ impl<'a> ByteReader<'a> {
         let n = self.take_len(2)?;
         let mut out = Vec::with_capacity(n);
         for b in self.take(2 * n)?.chunks_exact(2) {
-            out.push(u16::from_le_bytes(b.try_into().unwrap()));
+            out.push(u16::from_le_bytes(arr(b)));
         }
         Ok(out)
     }
@@ -176,7 +221,7 @@ impl<'a> ByteReader<'a> {
         let n = self.take_len(4)?;
         let mut out = Vec::with_capacity(n);
         for b in self.take(4 * n)?.chunks_exact(4) {
-            out.push(u32::from_le_bytes(b.try_into().unwrap()));
+            out.push(u32::from_le_bytes(arr(b)));
         }
         Ok(out)
     }
@@ -185,7 +230,7 @@ impl<'a> ByteReader<'a> {
         let n = self.take_len(8)?;
         let mut out = Vec::with_capacity(n);
         for b in self.take(8 * n)?.chunks_exact(8) {
-            out.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+            out.push(u64::from_le_bytes(arr(b)) as usize);
         }
         Ok(out)
     }
@@ -194,7 +239,7 @@ impl<'a> ByteReader<'a> {
         let n = self.take_len(4)?;
         let mut out = Vec::with_capacity(n);
         for b in self.take(4 * n)?.chunks_exact(4) {
-            out.push(f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())));
+            out.push(f32::from_bits(u32::from_le_bytes(arr(b))));
         }
         Ok(out)
     }

@@ -270,7 +270,7 @@ impl SectionElem for u16 {
         }
     }
     fn decode(bytes: &[u8]) -> Vec<u16> {
-        bytes.chunks_exact(2).map(|b| u16::from_le_bytes(b.try_into().unwrap())).collect()
+        bytes.chunks_exact(2).map(|b| u16::from_le_bytes(bytes::arr(b))).collect()
     }
 }
 
@@ -282,7 +282,7 @@ impl SectionElem for u32 {
         }
     }
     fn decode(bytes: &[u8]) -> Vec<u32> {
-        bytes.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())).collect()
+        bytes.chunks_exact(4).map(|b| u32::from_le_bytes(bytes::arr(b))).collect()
     }
 }
 
@@ -294,7 +294,7 @@ impl SectionElem for usize {
         }
     }
     fn decode(bytes: &[u8]) -> Vec<usize> {
-        bytes.chunks_exact(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()) as usize).collect()
+        bytes.chunks_exact(8).map(|b| u64::from_le_bytes(bytes::arr(b)) as usize).collect()
     }
 }
 
@@ -308,7 +308,7 @@ impl SectionElem for f32 {
     fn decode(bytes: &[u8]) -> Vec<f32> {
         bytes
             .chunks_exact(4)
-            .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+            .map(|b| f32::from_bits(u32::from_le_bytes(bytes::arr(b))))
             .collect()
     }
 }
@@ -517,23 +517,23 @@ fn encode_v4(
     }
     let total = cursor;
     let mut out = vec![0u8; total];
-    out[..8].copy_from_slice(MAGIC);
-    out[8..12].copy_from_slice(&VERSION.to_le_bytes());
-    out[12..20].copy_from_slice(&((total - HEADER_BYTES) as u64).to_le_bytes());
-    out[28..36].copy_from_slice(&(count as u64).to_le_bytes());
-    out[36..44].copy_from_slice(&(structured.len() as u64).to_le_bytes());
+    bytes::write_at(&mut out, 0, MAGIC);
+    bytes::write_at(&mut out, 8, &VERSION.to_le_bytes());
+    bytes::write_at(&mut out, 12, &((total - HEADER_BYTES) as u64).to_le_bytes());
+    bytes::write_at(&mut out, 28, &(count as u64).to_le_bytes());
+    bytes::write_at(&mut out, 36, &(structured.len() as u64).to_le_bytes());
     for (i, (dtype, elems, packed)) in acc.blobs.iter().enumerate() {
         let at = HEADER_BYTES + V3_PREFIX_BYTES + i * SECTION_ENTRY_BYTES;
-        out[at..at + 8].copy_from_slice(&(offsets[i] as u64).to_le_bytes());
-        out[at + 8..at + 16].copy_from_slice(&(packed.len() as u64).to_le_bytes());
-        out[at + 16..at + 24].copy_from_slice(&elems.to_le_bytes());
-        out[at + 24..at + 32].copy_from_slice(&fnv1a64(packed).to_le_bytes());
+        bytes::write_at(&mut out, at, &(offsets[i] as u64).to_le_bytes());
+        bytes::write_at(&mut out, at + 8, &(packed.len() as u64).to_le_bytes());
+        bytes::write_at(&mut out, at + 16, &elems.to_le_bytes());
+        bytes::write_at(&mut out, at + 24, &fnv1a64(packed).to_le_bytes());
         out[at + 32] = *dtype;
         out[at + 33] = SECTION_ALIGN as u8;
     }
     out[table_end..structured_end].copy_from_slice(&structured);
     let checksum = fnv1a64(&out[HEADER_BYTES..structured_end]);
-    out[20..28].copy_from_slice(&checksum.to_le_bytes());
+    bytes::write_at(&mut out, 20, &checksum.to_le_bytes());
     for (i, (_, _, packed)) in acc.blobs.iter().enumerate() {
         out[offsets[i]..offsets[i] + packed.len()].copy_from_slice(packed);
     }
@@ -635,7 +635,7 @@ fn take_csr_v3(s: &Sections, r: &mut ByteReader, verify: bool) -> Result<Csr> {
     if indptr.len() != n_rows + 1 || indices.len() != data.len() {
         bail!("bundle CSR shape is inconsistent ({n_rows} rows, {} indptr)", indptr.len());
     }
-    if indptr[0] != 0 || indptr[n_rows] != indices.len() {
+    if indptr.first() != Some(&0) || indptr.last() != Some(&indices.len()) {
         bail!("bundle CSR indptr does not cover its {} entries", indices.len());
     }
     let m = Csr { n_rows, n_cols, indptr, indices, data };
@@ -901,9 +901,9 @@ fn decode_v4(source: V3Source, version: u32) -> Result<ModelBundle> {
         bail!("bundle truncated before the v3 section table");
     }
     let head = source.bytes();
-    let want = u64::from_le_bytes(head[20..28].try_into().unwrap());
-    let count = u64::from_le_bytes(head[28..36].try_into().unwrap()) as usize;
-    let structured_len = u64::from_le_bytes(head[36..44].try_into().unwrap()) as usize;
+    let want = bytes::u64_at(head, 20);
+    let count = bytes::u64_at(head, 28) as usize;
+    let structured_len = bytes::u64_at(head, 36) as usize;
     let table_end_wide = (HEADER_BYTES + V3_PREFIX_BYTES) as u128
         + count as u128 * SECTION_ENTRY_BYTES as u128;
     let structured_end_wide = table_end_wide + structured_len as u128;
@@ -919,10 +919,10 @@ fn decode_v4(source: V3Source, version: u32) -> Result<ModelBundle> {
     let mut entries = Vec::with_capacity(count);
     for i in 0..count {
         let at = HEADER_BYTES + V3_PREFIX_BYTES + i * SECTION_ENTRY_BYTES;
-        let offset = u64::from_le_bytes(head[at..at + 8].try_into().unwrap());
-        let byte_len = u64::from_le_bytes(head[at + 8..at + 16].try_into().unwrap());
-        let elem_count = u64::from_le_bytes(head[at + 16..at + 24].try_into().unwrap());
-        let checksum = u64::from_le_bytes(head[at + 24..at + 32].try_into().unwrap());
+        let offset = bytes::u64_at(head, at);
+        let byte_len = bytes::u64_at(head, at + 8);
+        let elem_count = bytes::u64_at(head, at + 16);
+        let checksum = bytes::u64_at(head, at + 24);
         let dtype = head[at + 32];
         let align = head[at + 33];
         let size = dtype_size(dtype)
@@ -1327,7 +1327,7 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 }
 
 fn check_payload_len(buf: &[u8], path: &Path) -> Result<()> {
-    let payload_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    let payload_len = bytes::u64_at(buf, 12) as usize;
     if buf.len() as u128 != (HEADER_BYTES as u128) + payload_len as u128 {
         bail!(
             "{}: {} bytes on disk, header claims {}",
@@ -1368,10 +1368,10 @@ impl ModelBundle {
                 .read_exact(&mut head)
                 .map_err(|_| anyhow!("{}: not an fk-bundle file (too short)", path.display()))?;
         }
-        if head[..8] != MAGIC[..] {
+        if head.get(..8) != Some(&MAGIC[..]) {
             bail!("{}: not an fk-bundle file (bad magic)", path.display());
         }
-        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let version = bytes::u32_at(&head, 8);
         if version == 0 || version > VERSION {
             bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
         }
@@ -1406,10 +1406,10 @@ impl ModelBundle {
             .with_context(|| format!("reading model bundle {}", path.display()))?;
         // Re-validate from the full read: saves are rename-atomic, so
         // the file may legitimately have been swapped since the peek.
-        if buf.len() < HEADER_BYTES || buf[..8] != MAGIC[..] {
+        if buf.len() < HEADER_BYTES || buf.get(..8) != Some(&MAGIC[..]) {
             bail!("{}: not an fk-bundle file (bad magic)", path.display());
         }
-        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let version = bytes::u32_at(&buf, 8);
         if version == 0 || version > VERSION {
             bail!("{}: unsupported bundle version {version} (expected <= {VERSION})", path.display());
         }
@@ -1419,7 +1419,7 @@ impl ModelBundle {
                 .with_context(|| format!("decoding model bundle {}", path.display()))?
         } else {
             let payload = &buf[HEADER_BYTES..];
-            let want = u64::from_le_bytes(buf[20..28].try_into().unwrap());
+            let want = bytes::u64_at(&buf, 20);
             let got = fnv1a64(payload);
             if got != want {
                 bail!("{}: checksum mismatch (header {want:016x}, payload {got:016x})", path.display());

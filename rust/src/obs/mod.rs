@@ -28,8 +28,8 @@ pub use trace::{
 };
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
-use std::time::Instant;
+use std::sync::{Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 use crate::bail;
 use crate::bench_support::json_escape;
@@ -157,6 +157,70 @@ fn registry() -> &'static Mutex<Vec<Entry>> {
     REG.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+/// Lock the registry, recovering from poisoning *silently*: the
+/// entries are append-only handle records, valid after any panic.
+/// This must not go through [`lock_recover`] — that helper registers
+/// a metric, which locks the registry, which would recurse right
+/// back here.
+fn reg_lock() -> MutexGuard<'static, Vec<Entry>> {
+    registry().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// For shared serve/obs state whose contents stay valid across a
+/// panic (plain counters, caches, reservoir rings): the replica must
+/// degrade, not die, so poisoning is recorded — the
+/// `fk_lock_poisoned_total` counter plus a `lock.poisoned` trace
+/// event — and the guard is handed back.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        note_poisoned();
+        poisoned.into_inner()
+    })
+}
+
+/// [`lock_recover`] for `RwLock` read guards.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| {
+        note_poisoned();
+        poisoned.into_inner()
+    })
+}
+
+/// [`lock_recover`] for `RwLock` write guards.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| {
+        note_poisoned();
+        poisoned.into_inner()
+    })
+}
+
+fn note_poisoned() {
+    crate::metric!(
+        counter "fk_lock_poisoned_total",
+        "Poisoned shared-state locks recovered instead of panicking."
+    )
+    .inc();
+    event_logged("lock.poisoned", Vec::new());
+}
+
+/// An opaque monotonic timer. Kernel-math modules are forbidden (by
+/// fk-lint's `determinism` rule) from naming `Instant::now` — timing
+/// is an observability concern — so instrumentation there starts one
+/// of these instead.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+/// Start a [`Stopwatch`].
+pub fn stopwatch() -> Stopwatch {
+    Stopwatch(Instant::now())
+}
+
 fn process_start() -> Instant {
     static T0: OnceLock<Instant> = OnceLock::new();
     *T0.get_or_init(Instant::now)
@@ -202,7 +266,7 @@ fn lookup_or_insert(
     make: impl FnOnce() -> MetricRef,
 ) -> MetricRef {
     let labels = owned_labels(labels);
-    let mut reg = registry().lock().unwrap();
+    let mut reg = reg_lock();
     if let Some(e) = reg.iter().find(|e| e.name == name && e.labels == labels) {
         return match e.metric {
             MetricRef::Counter(c) => MetricRef::Counter(c),
@@ -424,7 +488,7 @@ pub fn render_prometheus() -> String {
         &[("version", build_version()), ("git_sha", build_sha())],
     )
     .set(1.0);
-    let reg = registry().lock().unwrap();
+    let reg = reg_lock();
     let mut out = String::new();
     let mut seen: Vec<&str> = Vec::new();
     for e in reg.iter() {
@@ -495,13 +559,18 @@ impl Scrape {
     }
 }
 
-fn valid_metric_name(s: &str) -> bool {
+/// The Prometheus metric-name grammar [`parse_prometheus`] enforces on
+/// scrapes. Public so fk-lint's `metric-hygiene` rule checks
+/// registration-site literals against the *same* predicate.
+pub fn valid_metric_name(s: &str) -> bool {
     !s.is_empty()
         && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
         && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
 }
 
-fn valid_label_name(s: &str) -> bool {
+/// Prometheus label-name grammar; public for the same reason as
+/// [`valid_metric_name`].
+pub fn valid_label_name(s: &str) -> bool {
     !s.is_empty()
         && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
         && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')

@@ -143,10 +143,12 @@ fn best_prox_in<'a>(
     for name in names {
         if let Some(rest) = name.strip_prefix("prox_") {
             let dims: Vec<usize> = rest.split('x').filter_map(|p| p.parse().ok()).collect();
-            if dims.len() == 3 && dims[0] >= bq && dims[1] >= br && dims[2] >= t {
-                let cand = (dims[0], dims[1], dims[2]);
-                if best.map_or(true, |b| cand.0 * cand.1 * cand.2 < b.0 * b.1 * b.2) {
-                    best = Some(cand);
+            if let [d0, d1, d2] = dims[..] {
+                if d0 >= bq && d1 >= br && d2 >= t {
+                    let cand = (d0, d1, d2);
+                    if best.map_or(true, |b| cand.0 * cand.1 * cand.2 < b.0 * b.1 * b.2) {
+                        best = Some(cand);
+                    }
                 }
             }
         }
@@ -211,6 +213,7 @@ impl Runtime {
             }
             literals.push(t.to_literal(&ts.shape)?);
         }
+        // fk-lint: allow(no-panic-in-serve) -- PJRT execute() yields exactly one buffer per replica/partition for these single-device AOT artifacts
         let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
         let out = result.to_tuple1()?; // aot.py lowers with return_tuple=True
         Ok(out.to_vec::<f32>()?)

@@ -382,7 +382,8 @@ impl HttpClient {
         if self.conn.is_none() {
             self.conn = Some((connect(&self.addr)?, ConnReader::new()));
         }
-        let (stream, reader) = self.conn.as_mut().unwrap();
+        let (stream, reader) =
+            self.conn.as_mut().ok_or_else(|| anyhow!("pooled connection vanished"))?;
         let addr = self.addr;
         send_request(stream, &addr, method, path, body, true, rid)?;
         let (status, resp, server_keeps) = read_response(stream, reader)?;
@@ -479,15 +480,12 @@ impl ClientPool {
         rid: RequestIdFwd<'_>,
         retry_on_reuse: bool,
     ) -> Result<(u16, String)> {
-        let mut client = self
-            .idle
-            .lock()
-            .unwrap()
+        let mut client = crate::obs::lock_recover(&self.idle)
             .pop()
             .unwrap_or_else(|| HttpClient::new(self.addr));
         let out = client.request_fwd(method, path, body, rid, retry_on_reuse);
         if out.is_ok() {
-            self.idle.lock().unwrap().push(client);
+            crate::obs::lock_recover(&self.idle).push(client);
         }
         out
     }

@@ -189,7 +189,7 @@ impl ShardCache {
         // Fast path: copy out of the cached stripe under the lock —
         // the copy is a few hundred bytes, the read it avoids is disk.
         {
-            let g = self.last.lock().unwrap();
+            let g = obs::lock_recover(&self.last);
             if let Some((s, stripe)) = g.as_ref() {
                 if *s == si {
                     let (c, v) = stripe.rows.row(i - stripe.row_start);
@@ -214,7 +214,7 @@ impl ShardCache {
         let stripe = self.reader.read_stripe(si)?;
         let (c, v) = stripe.rows.row(i - stripe.row_start);
         let out = (c.to_vec(), v.to_vec());
-        *self.last.lock().unwrap() = Some((si, stripe));
+        *obs::lock_recover(&self.last) = Some((si, stripe));
         Ok(out)
     }
 }
@@ -276,7 +276,7 @@ impl ServerState {
     /// The current model snapshot (an `Arc` clone under a momentary
     /// read lock).
     pub fn model(&self) -> Arc<ModelState> {
-        self.model.read().unwrap().clone()
+        obs::read_recover(&self.model).clone()
     }
 }
 
@@ -449,6 +449,9 @@ mod sighup {
         extern "C" {
             fn signal(signum: c_int, handler: usize) -> usize;
         }
+        // SAFETY: signal(2) with a handler that only stores into a
+        // static AtomicBool — async-signal-safe, no allocation, no
+        // locks; the handler address outlives the process.
         unsafe {
             signal(SIGHUP, on_sighup as extern "C" fn(c_int) as usize);
         }
@@ -478,11 +481,10 @@ fn batch_loop(st: Arc<ServerState>) {
             groups[slot].push(job);
         }
         for group in groups {
-            if group.is_empty() {
-                continue;
-            }
-            let kind = group[0].kind;
-            let tier = group[0].tier;
+            let (kind, tier) = match group.first() {
+                Some(job) => (job.kind, job.tier),
+                None => continue,
+            };
             match run_tile(&ms, kind, tier, &group) {
                 Ok(replies) => {
                     for (job, reply) in group.into_iter().zip(replies) {
@@ -725,6 +727,18 @@ pub(crate) fn connection_loop(
                             "Requests answered with an error response."
                         )
                         .inc();
+                        // Attribute the failure to the request so an
+                        // operator can chase a 4xx/5xx from the trace
+                        // ring straight to the offending request id.
+                        let detail = format!("{e:#}");
+                        obs::event(
+                            "http.error",
+                            crate::kv! {
+                                request_id: req.request_id.as_deref().unwrap_or(""),
+                                path: req.path.as_str(),
+                                error: detail.as_str()
+                            },
+                        );
                         Response::bad_request(e)
                     }
                 };
@@ -739,6 +753,10 @@ pub(crate) fn connection_loop(
                     "Requests answered with an error response."
                 )
                 .inc();
+                // Framing failure: no request was parsed, so there is
+                // no id to attribute — log the transport error itself.
+                let detail = format!("{e:#}");
+                obs::event("http.error", crate::kv! { path: "", error: detail.as_str() });
                 (Response::bad_request(e), false, None)
             }
         };
@@ -825,7 +843,7 @@ fn route(st: &ServerState, req: &http::Request) -> Result<Response> {
                 obs::uptime_secs() as u64,
                 json_escape(obs::build_version()),
                 json_escape(obs::build_sha()),
-                &counters[1..],
+                counters.strip_prefix('{').unwrap_or(&counters),
             )))
         }
         ("GET", "/metrics") => Ok(Response::ok(obs::render_prometheus())),
@@ -872,7 +890,7 @@ fn parse_queries(j: &Json, d: usize) -> Result<Vec<Vec<f32>>> {
     if arr.is_empty() {
         bail!("\"x\" is empty");
     }
-    let rows: Vec<Vec<f32>> = if matches!(arr[0], Json::Arr(_)) {
+    let rows: Vec<Vec<f32>> = if matches!(arr.first(), Some(Json::Arr(_))) {
         arr.iter()
             .map(|row| {
                 row.as_arr()
@@ -993,7 +1011,7 @@ fn reload_endpoint(st: &ServerState) -> Response {
         };
     };
     // One reload at a time; queries never touch this lock.
-    let _g = st.reload.lock().unwrap();
+    let _g = obs::lock_recover(&st.reload);
     let old = st.model();
     let (bundle, load_mode) = match ModelBundle::load_with_mode(path, *mode) {
         Ok(v) => v,
@@ -1034,7 +1052,7 @@ fn reload_endpoint(st: &ServerState) -> Response {
     }
     let next = Arc::new(ModelState::build(bundle, &st.cfg, old.generation + 1, load_mode));
     let generation = next.generation;
-    *st.model.write().unwrap() = next;
+    *obs::write_recover(&st.model) = next;
     note_reload("ok", &format!("generation {generation} ({load_mode})"));
     Response::ok(format!(
         "{{\"status\": \"reloaded\", \"model_generation\": {generation}, \
@@ -1259,8 +1277,8 @@ fn neighbors_endpoint(st: &ServerState, req: &http::Request) -> Result<String> {
         bail!("k={k} exceeds the {n}-row gallery");
     }
     let replies = submit(st, JobKind::Neighbors, Tier::Full, rows, k)?;
-    match &replies[0] {
-        (gen, Reply::Neighbors { ids, proximities, dists }) => Ok(format!(
+    match replies.first() {
+        Some((gen, Reply::Neighbors { ids, proximities, dists })) => Ok(format!(
             "{{\"k\": {k}, \"ids\": {}, \"proximities\": {}, \"dists\": {}, \
              \"source\": \"factors\", \"model_generation\": {gen}}}",
             json_u32_array(ids),

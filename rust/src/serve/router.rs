@@ -156,7 +156,7 @@ impl Router {
                     bail!(
                         "backend {b} serves n={n} kind={kind} but {} serves n={n0} \
                          kind={k0} — replicas must share one bundle",
-                        cfg.backends[0]
+                        cfg.backends.first().map_or("?", String::as_str)
                     );
                 }
             } else {
@@ -164,7 +164,8 @@ impl Router {
             }
             resolved.push(addr);
         }
-        let (n, kind) = n_kind.unwrap();
+        let (n, kind) =
+            n_kind.ok_or_else(|| anyhow!("router needs at least one resolvable backend"))?;
         let ranges = row_ranges(n, resolved.len());
         let backends = resolved
             .into_iter()

@@ -33,7 +33,7 @@ impl Reservoir {
     /// Record one latency sample (seconds).
     pub fn record(&self, secs: f64) {
         self.total.fetch_add(1, Ordering::Relaxed);
-        let mut ring = self.ring.lock().unwrap();
+        let mut ring = crate::obs::lock_recover(&self.ring);
         if ring.samples.len() < RESERVOIR {
             ring.samples.push(secs);
         } else {
@@ -50,7 +50,7 @@ impl Reservoir {
 
     /// `(p50, p95, p99)` over the reservoir, `None` when empty.
     pub fn percentiles(&self) -> Option<(f64, f64, f64)> {
-        let ring = self.ring.lock().unwrap();
+        let ring = crate::obs::lock_recover(&self.ring);
         if ring.samples.is_empty() {
             return None;
         }

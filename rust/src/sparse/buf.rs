@@ -21,6 +21,32 @@
 //! erasure keeps `sparse` independent of `model`). Cloning a mapped
 //! buffer is an `Arc` bump, never a data copy — which is why a
 //! symmetric kernel's `w = q.clone()` stays O(1) on a mapped bundle.
+//!
+//! # Aliasing and lifetime contract (what the Miri CI job checks)
+//!
+//! The mapped variant is a `(ptr, len, anchor)` triple built by the
+//! `unsafe` [`Buf::from_anchor`] constructor. Its soundness rests on
+//! exactly three caller obligations, stated here once because every
+//! in-tree constructor (`model::mod`'s section binder and the test
+//! helper below) must uphold them:
+//!
+//! 1. **Validity + alignment**: `ptr..ptr + len` is a readable
+//!    allocation of properly aligned `T` for as long as `anchor` is
+//!    alive — the section table enforces 64-byte alignment on disk
+//!    precisely so this holds for every supported dtype.
+//! 2. **Lifetime**: the type-erased `anchor` Arc is the *only* thing
+//!    keeping that allocation alive, and `Buf` drops the pointer
+//!    strictly before the anchor (field order + no `Drop` impl that
+//!    reads `ptr`), so the borrow can never dangle.
+//! 3. **Immutability**: nothing writes through the mapping while any
+//!    `Buf` borrows it. Shared reads are the only access — mutation
+//!    goes through `DerefMut`'s copy-on-write, which materializes an
+//!    owned `Vec` and never touches the mapped bytes.
+//!
+//! The nightly Miri job runs this module's unit tests (with a heap
+//! allocation standing in for the `mmap(2)` region, which Miri cannot
+//! map) to check the pointer discipline above; the mmap-backed
+//! integration paths are exercised natively in the regular test jobs.
 
 use std::any::Any;
 use std::ops::{Deref, DerefMut};
@@ -194,6 +220,10 @@ mod tests {
         let anchor: Arc<Vec<u32>> = Arc::new(v);
         let ptr = anchor.as_ptr();
         let len = anchor.len();
+        // SAFETY: `ptr/len` describe the Arc'd Vec's own allocation,
+        // which the anchor keeps alive and nothing mutates — the
+        // module-level contract, with a heap Vec standing in for a
+        // file mapping (so Miri can execute this test).
         unsafe { Buf::from_anchor(ptr, len, anchor as Arc<dyn Any + Send + Sync>) }
     }
 

@@ -82,7 +82,12 @@ impl SpaScratch {
     pub(crate) fn accumulate(&mut self, row_stamp: u32, cols: &[u32], vals: &[f32], alpha: f32) {
         for (&bc, &bv) in cols.iter().zip(vals) {
             let c = bc as usize;
+            // SAFETY: both scratch arrays were sized to the product's
+            // column count in `new`, and every `bc` comes from a CSR
+            // whose `check()`-verified column indices are < n_cols —
+            // so `c` is in bounds for both vectors.
             let st = unsafe { self.stamp.get_unchecked_mut(c) };
+            // SAFETY: same bound as `stamp` above.
             let slot = unsafe { self.scratch.get_unchecked_mut(c) };
             if *st != row_stamp {
                 *st = row_stamp;
@@ -167,7 +172,7 @@ pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
 pub fn spgemm_with_threads(a: &Csr, b: &Csr, n_threads: usize) -> Csr {
     assert_eq!(a.n_cols, b.n_rows, "spgemm dim mismatch");
     assert!(a.n_rows < u32::MAX as usize);
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::stopwatch();
     let blocks = exec::parallel_ranges(a.n_rows, n_threads.max(1), |_, rows| {
         let mut spa = SpaScratch::new(b.n_cols);
         spgemm_rows(a, b, rows, &mut spa)

@@ -1,0 +1,158 @@
+//! Hammer the serve plane with malformed input over real TCP and
+//! assert the replica never dies: every well-framed request gets a
+//! structured 4xx/5xx answer, unframeable garbage gets a 400-and-close
+//! or a clean disconnect, and afterwards the same server still answers
+//! a valid `/predict` and `/healthz` — zero replica deaths, which is
+//! the behavioural contract the `no-panic-in-serve` lint rule exists
+//! to keep true.
+
+use forest_kernels::data::synth;
+use forest_kernels::forest::{Forest, TrainConfig};
+use forest_kernels::model::{BundleMeta, ModelBundle};
+use forest_kernels::serve::{http, ServeConfig, Server};
+use forest_kernels::swlc::{ForestKernel, ProximityKind};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+const N: usize = 160;
+const D: usize = 5;
+const TREES: usize = 12;
+
+fn fixture(seed: u64) -> ModelBundle {
+    let data = synth::gaussian_blobs(N, D, 3, 2.2, seed);
+    let forest =
+        Forest::train(&data, &TrainConfig { n_trees: TREES, seed, ..Default::default() });
+    let kernel = ForestKernel::fit(&forest, &data, ProximityKind::Kerf);
+    let meta = BundleMeta { dataset: "blobs".into(), n: data.n, seed, trees: TREES };
+    ModelBundle { forest, kernel, meta, companion: None }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        embed_dims: 4,
+        embed_iters: 20,
+        embed_seed: 9,
+        ..Default::default()
+    }
+}
+
+/// Send one raw, possibly non-UTF8 request body with correct HTTP
+/// framing and `Connection: close`, then read whatever comes back.
+/// Returns the status line's code, or `None` when the server closed
+/// the connection without a response (acceptable only for unframeable
+/// garbage — the caller decides).
+fn raw_request(addr: &SocketAddr, head: &str, body: &[u8]) -> Option<u16> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+    let mut req = head.as_bytes().to_vec();
+    req.extend_from_slice(body);
+    stream.write_all(&req).ok()?;
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp).ok()?;
+    let text = String::from_utf8_lossy(&resp);
+    let status = text.strip_prefix("HTTP/1.1 ")?.get(..3)?.parse::<u16>().ok()?;
+    Some(status)
+}
+
+fn framed_post(addr: &SocketAddr, path: &str, body: &[u8]) -> Option<u16> {
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: fk\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    raw_request(addr, &head, body)
+}
+
+#[test]
+fn malformed_bodies_never_kill_a_replica() {
+    let server = Server::bind(fixture(1), None, serve_cfg()).unwrap();
+    let addr = server.addr();
+    let handle = server.spawn();
+
+    // Bodies that are invalid for *every* POST endpoint: no valid
+    // `"x"` (so the query routes reject them) and no loadable
+    // `"path"` (so `/admin/reload` does too).
+    let shared: &[&str] = &[
+        "",
+        "not json at all",
+        "{",
+        "[1, 2, 3",
+        "null",
+        "{}",
+        "{\"x\": 5}",
+        "{\"x\": \"strings are not rows\"}",
+        "{\"x\": []}",
+        "{\"x\": [1.0]}",                   // wrong dims
+        "{\"x\": [[1, 2, 3, 4, 5], [1]]}",  // ragged batch
+        "{\"x\": [[\"a\", \"b\"]]}",        // non-numeric row
+        "{\"x\": [[[1, 2], [3, 4]]]}",      // over-nested
+        "{\"row\": 1e9, \"k\": 5}",         // row lookup out of range
+        "{\"path\": 42}",
+    ];
+    // Valid `"x"` but broken endpoint-specific knobs: these would be
+    // accepted by a laxer endpoint, so each goes only where it must
+    // be rejected.
+    let per_endpoint: &[(&str, &str)] = &[
+        ("/predict", "{\"x\": [1, 2, 3, 4, 5], \"budget\": \"mystery\"}"),
+        ("/predict", "{\"x\": [1, 2, 3, 4, 5], \"budget\": 7}"),
+        ("/neighbors", "{\"x\": [1, 2, 3, 4, 5], \"k\": 0}"),
+        ("/neighbors", "{\"x\": [1, 2, 3, 4, 5], \"k\": 999999}"),
+        ("/neighbors", "{\"x\": [1, 2, 3, 4, 5], \"k\": -3}"),
+        ("/neighbors", "{\"x\": [[1, 2, 3, 4, 5], [5, 4, 3, 2, 1]]}"),
+        ("/admin/reload", "{\"path\": \"/definitely/not/a/bundle\"}"),
+    ];
+    let endpoints = ["/predict", "/neighbors", "/embed", "/admin/reload"];
+    let mut cases: Vec<(&str, &str)> = Vec::new();
+    for path in endpoints {
+        for body in shared {
+            cases.push((path, body));
+        }
+    }
+    cases.extend_from_slice(per_endpoint);
+    for (path, body) in &cases {
+        let status = framed_post(&addr, path, body.as_bytes())
+            .unwrap_or_else(|| panic!("{path} with body {body:?}: server vanished"));
+        assert!(
+            (400..600).contains(&status),
+            "{path} with body {body:?}: expected an error status, got {status}"
+        );
+    }
+
+    // Non-UTF8 bytes with honest framing: still a structured error.
+    let junk: Vec<u8> = vec![0xFF, 0xFE, 0x80, 0x00, 0xC3, 0x28, 0xF0, 0x9F];
+    for path in endpoints {
+        let status = framed_post(&addr, path, &junk)
+            .unwrap_or_else(|| panic!("{path} with non-UTF8 body: server vanished"));
+        assert!((400..600).contains(&status), "{path} non-UTF8: got {status}");
+    }
+
+    // Framing-level garbage: lying Content-Length and raw non-HTTP
+    // noise. A 400 or a clean close are both fine; a dead server is
+    // not — which the recovery probes below establish.
+    let lying = "POST /predict HTTP/1.1\r\nHost: fk\r\nContent-Length: nope\r\n\r\n";
+    if let Some(status) = raw_request(&addr, lying, b"{}") {
+        assert!((400..600).contains(&status), "lying Content-Length: got {status}");
+    }
+    raw_request(&addr, "\x01\x02\x03 total garbage\r\n\r\n", b"");
+    raw_request(&addr, "GET /predict HTTP/1.1\r\n\r\n", b""); // wrong method
+
+    // Recovery probes: the same process still answers correctly.
+    let data = synth::gaussian_blobs(N, D, 3, 2.2, 1);
+    let mut row = String::from("{\"x\": [");
+    for f in 0..D {
+        if f > 0 {
+            row.push_str(", ");
+        }
+        row.push_str(&format!("{}", data.x(0, f)));
+    }
+    row.push_str("]}");
+    let (status, resp) = http::http_request(&addr, "POST", "/predict", &row).unwrap();
+    assert_eq!(status, 200, "post-hammer /predict failed: {resp}");
+    let (status, _) = http::http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200, "post-hammer /healthz failed");
+
+    handle.stop();
+}
